@@ -1,0 +1,66 @@
+//! Quickstart: generate a small Medline-shaped corpus, train a logistic
+//! model with elastic net via lazy FoBoS updates, and evaluate it.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lazyreg::eval::evaluate;
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A synthetic sparse corpus: 5k documents, 20k vocabulary, ~80
+    //    distinct tokens per document (Medline shape, scaled down).
+    let spec = BowSpec {
+        n_examples: 5_000,
+        n_features: 20_000,
+        avg_nnz: 80.0,
+        ..Default::default()
+    };
+    let data = generate(&spec, 42);
+    let stats = data.stats();
+    println!(
+        "corpus: n={} d={} p={:.1} (ideal lazy speedup {:.0}x)",
+        fmt::count(stats.n_examples as u64),
+        fmt::count(stats.n_features as u64),
+        stats.avg_nnz,
+        stats.ideal_speedup
+    );
+    let (train, test) = data.split(0.2, 7);
+
+    // 2. Train: FoBoS + elastic net + 1/sqrt(t) learning rate, O(p) per
+    //    example thanks to lazy closed-form catch-up updates.
+    let opts = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-5, 1e-5),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 5,
+        ..Default::default()
+    };
+    let report = train_lazy(&train, &opts)?;
+    for e in &report.epochs {
+        println!("epoch {}: mean online loss {:.5}", e.epoch, e.mean_loss);
+    }
+    println!(
+        "trained {} examples at {}",
+        fmt::count(report.examples),
+        fmt::rate(report.throughput, "ex")
+    );
+
+    // 3. Evaluate on the held-out split.
+    let (at_half, best) = evaluate(&report.model, &test);
+    let sp = report.model.sparsity();
+    println!(
+        "test: acc={:.4} f1@0.5={:.4} f1*={:.4} (threshold {:.3})",
+        at_half.accuracy, at_half.f1, best.f1, best.threshold
+    );
+    println!(
+        "model: {} of {} weights non-zero ({:.2}% dense)",
+        fmt::count(sp.nnz as u64),
+        fmt::count(sp.total as u64),
+        sp.density * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Serving: train a model, expose it over the TCP prediction service, and
+//! drive it with concurrent clients, reporting latency and throughput.
+//! When the AOT artifacts are present, also scores a dense batch through
+//! the compiled `predict` graph (Layer 2/1 via PJRT) and cross-checks the
+//! numbers against native scoring.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_predictions
+//! ```
+
+use std::time::Instant;
+
+use lazyreg::data::BatchIter;
+use lazyreg::prelude::*;
+use lazyreg::runtime::Runtime;
+use lazyreg::serve::{Client, Server};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::util::{fmt, Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_clients: usize = args.get_parse("clients", 4);
+    let requests_per_client: usize = args.get_parse("requests", 2_000);
+
+    // Train a quick model.
+    let spec = BowSpec { n_examples: 4_000, n_features: 20_000, avg_nnz: 60.0, ..Default::default() };
+    let data = generate(&spec, 3);
+    let opts = TrainOptions { epochs: 2, ..Default::default() };
+    let report = train_lazy(&data, &opts)?;
+    eprintln!("model trained ({} weights non-zero)", report.model.sparsity().nnz);
+
+    // Serve it.
+    let server = Server::spawn(report.model.clone(), "127.0.0.1:0")?;
+    let addr = server.addr();
+    println!("serving on {addr}");
+
+    // Concurrent clients replay real examples.
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let data = &data;
+            handles.push(scope.spawn(move || -> anyhow::Result<f64> {
+                let mut client = Client::connect(addr)?;
+                let mut sum = 0.0;
+                for i in 0..requests_per_client {
+                    let row = data.x().row((c * 7919 + i) % data.n_examples());
+                    let feats: Vec<(u32, f32)> = row.iter().collect();
+                    sum += client.predict(&feats)?;
+                }
+                client.quit()?;
+                Ok(sum)
+            }));
+        }
+        for h in handles {
+            h.join().expect("client panicked")?;
+        }
+        Ok(())
+    })?;
+    let total = (n_clients * requests_per_client) as f64;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{} requests in {:.2}s -> {}",
+        fmt::count(total as u64),
+        secs,
+        fmt::rate(total / secs, "req")
+    );
+    let mut probe = Client::connect(addr)?;
+    println!("server latency: {}", probe.stats()?);
+    probe.quit()?;
+    server.shutdown();
+
+    // Optional: batch scoring through the AOT predict artifact.
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            let meta = rt.meta();
+            let batch = BatchIter::new(&data, meta.batch, meta.dim).next().unwrap();
+            let w32: Vec<f32> = report.model.weights[..meta.dim.min(report.model.dim())]
+                .iter()
+                .map(|&w| w as f32)
+                .chain(std::iter::repeat(0.0))
+                .take(meta.dim)
+                .collect();
+            let t0 = Instant::now();
+            let probs = rt.predict(&batch.x, &w32, report.model.bias as f32)?;
+            let dt = t0.elapsed();
+            // Cross-check against native scoring (features < meta.dim only).
+            let mut max_diff = 0.0f64;
+            for b in 0..batch.len {
+                let mut z = report.model.bias;
+                for j in 0..meta.dim {
+                    z += f64::from(batch.x[b * meta.dim + j]) * report.model.weights[j];
+                }
+                let p_native = lazyreg::loss::sigmoid(z);
+                max_diff = max_diff.max((p_native - f64::from(probs[b])).abs());
+            }
+            println!(
+                "XLA batch predict: {} examples in {} (max |Δp| vs native = {:.2e})",
+                batch.len,
+                fmt::duration(dt),
+                max_diff
+            );
+        }
+        Err(e) => println!("(XLA batch scoring skipped: {e})"),
+    }
+    Ok(())
+}

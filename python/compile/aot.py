@@ -1,0 +1,148 @@
+"""AOT lowering: jax (L2) + pallas (L1) -> HLO text artifacts for Rust.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Run via ``make artifacts``: ``python -m compile.aot --out-dir ../artifacts``.
+Emits one ``<name>.hlo.txt`` per entrypoint plus ``meta.json`` recording
+the concrete shapes the Rust runtime must feed.
+
+Python runs ONCE here, at build time, and never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default concrete shapes for the AOT artifacts.  The Rust runtime reads
+# these back from meta.json; benches that want other shapes re-run this
+# module with flags.
+DEFAULT_BATCH = 256          # mini-batch rows for the dense path
+DEFAULT_DIM = 16384          # dense feature dim for the XLA baseline
+DEFAULT_CATCHUP_DIM = 65536  # weight-slab size for the catch-up artifact
+DEFAULT_TABLE = 8192         # DP-table capacity (T+1 slots)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax.stages.Lowered to XLA HLO text (tupled outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_entrypoints(batch: int, dim: int, catchup_dim: int, table: int):
+    """Return {name: (fn, arg_specs, meta)} for every artifact."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+
+    x = s((batch, dim), f32)
+    y = s((batch,), f32)
+    w = s((dim,), f32)
+    b = s((), f32)
+    scalar = s((), f32)
+
+    wc = s((catchup_dim,), f32)
+    psi = s((catchup_dim,), i32)
+    pt = s((table,), f32)
+    bt = s((table,), f32)
+    k1 = s((1,), i32)
+    lam1_1 = s((1,), f32)
+
+    return {
+        "predict": (
+            model.predict_proba,
+            (x, w, b),
+            {"inputs": ["x[B,D] f32", "w[D] f32", "b f32"],
+             "outputs": ["p[B] f32"]},
+        ),
+        "grad": (
+            model.loss_and_grad,
+            (x, y, w, b),
+            {"inputs": ["x[B,D] f32", "y[B] f32", "w[D] f32", "b f32"],
+             "outputs": ["loss f32", "gw[D] f32", "gb f32"]},
+        ),
+        "fobos_step": (
+            model.fobos_enet_step,
+            (x, y, w, b, scalar, scalar, scalar),
+            {"inputs": ["x[B,D] f32", "y[B] f32", "w[D] f32", "b f32",
+                        "eta f32", "lam1 f32", "lam2 f32"],
+             "outputs": ["w'[D] f32", "b' f32", "loss f32"]},
+        ),
+        "catchup": (
+            lambda w_, psi_, pt_, bt_, k_, l1_: (
+                model.lazy_catchup(w_, psi_, pt_, bt_, k_, l1_),
+            ),
+            (wc, psi, pt, bt, k1, lam1_1),
+            {"inputs": ["w[DC] f32", "psi[DC] i32", "pt[T] f32",
+                        "bt[T] f32", "k[1] i32", "lam1[1] f32"],
+             "outputs": ["w'[DC] f32"]},
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--dim", type=int, default=DEFAULT_DIM)
+    ap.add_argument("--catchup-dim", type=int, default=DEFAULT_CATCHUP_DIM)
+    ap.add_argument("--table", type=int, default=DEFAULT_TABLE)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of entrypoints")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = build_entrypoints(args.batch, args.dim, args.catchup_dim,
+                                args.table)
+    only = set(args.only.split(",")) if args.only else None
+
+    meta = {
+        "batch": args.batch,
+        "dim": args.dim,
+        "catchup_dim": args.catchup_dim,
+        "table": args.table,
+        "entrypoints": {},
+    }
+    for name, (fn, specs, info) in entries.items():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["entrypoints"][name] = info
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+    # Flat INI twin of meta.json for the Rust runtime (which has no JSON
+    # dependency offline; see rust/src/runtime/artifact.rs).
+    ini = os.path.join(args.out_dir, "meta.ini")
+    with open(ini, "w") as f:
+        f.write("[shapes]\n")
+        f.write(f"batch = {args.batch}\n")
+        f.write(f"dim = {args.dim}\n")
+        f.write(f"catchup_dim = {args.catchup_dim}\n")
+        f.write(f"table = {args.table}\n")
+    print(f"wrote {ini}")
+
+
+if __name__ == "__main__":
+    main()

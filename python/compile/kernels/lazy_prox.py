@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: vectorized lazy elastic-net catch-up.
+
+This is the paper's closed-form constant-time update (Theorem 1 for SGD,
+Theorem 2 for FoBoS — identical once expressed over the shifted DP tables,
+see ref.py) applied to a *block* of weights at once:
+
+    w'_j = sgn(w_j) * [ |w_j| * pt[k]/pt[psi_j] - lam1 * pt[k] * (bt[k] - bt[psi_j]) ]_+
+
+The kernel is a gather + elementwise pipeline:
+
+  * the DP tables ``pt``/``bt`` (size T+1, a few KiB) live whole in VMEM —
+    they play the role of the scalar-prefetch lookup tables;
+  * the weight vector is tiled over the grid with a ``BlockSpec`` of
+    ``(BLOCK_D,)`` so arbitrarily large models stream HBM -> VMEM;
+  * per element we gather two table entries (psi_j), then do 5 flops.
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation): this is a VPU-bound
+elementwise kernel, not an MXU kernel; the natural layout is lane-major
+blocks of 128*8.  We run it with ``interpret=True`` so it lowers to plain
+HLO the CPU PJRT client can execute; on real TPU the same BlockSpec
+schedule applies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default weight-block size: 8 sublanes * 128 lanes * 2 — a comfortable VPU
+# tile that keeps VMEM use tiny (block + 2 gathered vectors ~ 24 KiB).
+BLOCK_D = 2048
+
+
+def _catchup_kernel(k_ref, lam1_ref, w_ref, psi_ref, pt_ref, bt_ref, o_ref):
+    """One grid step: bring a BLOCK_D slab of weights current."""
+    k = k_ref[0]
+    lam1 = lam1_ref[0]
+    pt = pt_ref[...]
+    bt = bt_ref[...]
+    w = w_ref[...]
+    psi = psi_ref[...]
+
+    pk = jnp.take(pt, k)                 # P(k-1), scalar
+    bk = jnp.take(bt, k)                 # B(k-1), scalar
+    p_psi = jnp.take(pt, psi)            # P(psi-1), gathered per element
+    b_psi = jnp.take(bt, psi)            # B(psi-1)
+
+    mag = jnp.abs(w) * (pk / p_psi) - lam1 * pk * (bk - b_psi)
+    o_ref[...] = jnp.sign(w) * jnp.maximum(mag, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def lazy_catchup(w, psi, pt, bt, k, lam1, *, block_d=BLOCK_D, interpret=True):
+    """Bring every weight current from iteration ``psi[j]`` to ``k``.
+
+    Args:
+      w:    f32[d]  stale weights.
+      psi:  i32[d]  last-updated iteration per weight (shifted convention).
+      pt:   f32[T]  shifted partial products, pt[i] = P(i-1).
+      bt:   f32[T]  shifted partial sums,     bt[i] = B(i-1).
+      k:    i32[1]  current iteration.
+      lam1: f32[1]  l1 strength.
+    Returns f32[d] current weights.
+    """
+    d = w.shape[0]
+    block = min(block_d, d)
+    pad = (-d) % block
+    if pad:
+        w = jnp.pad(w, (0, pad))
+        psi = jnp.pad(psi, (0, pad))  # psi=0 -> gathers pt[0]=1, harmless
+    grid = (w.shape[0] // block,)
+    out = pl.pallas_call(
+        _catchup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),          # k (scalar)
+            pl.BlockSpec((1,), lambda i: (0,)),          # lam1 (scalar)
+            pl.BlockSpec((block,), lambda i: (i,)),      # w slab
+            pl.BlockSpec((block,), lambda i: (i,)),      # psi slab
+            pl.BlockSpec(pt.shape, lambda i: (0,)),      # full pt table
+            pl.BlockSpec(bt.shape, lambda i: (0,)),      # full bt table
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(k, lam1, w, psi, pt, bt)
+    return out[:d]

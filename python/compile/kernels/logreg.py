@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernels: fused logistic-regression tile compute.
+
+Two kernels cover the dense mini-batch hot path used by the XLA-dense
+baseline and the prediction service:
+
+  * ``logits``   — z[B] = X[B,D] @ w[D], accumulated across a grid of
+    D-tiles (the classic Pallas accumulation-matmul schedule: the output
+    block is revisited on every grid step, initialized on step 0).
+  * ``grad_w``   — gw[D] = X^T r for the residual r = (p - y)/B, tiled
+    over D so each grid step owns one gw slab.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the contraction is MXU-
+shaped — X tiles of (B, BLOCK_D) against weight slabs of (BLOCK_D,); with
+B = 256 and BLOCK_D = 512 a tile pass is a 256x512 matmul feeding the
+128x128 systolic array at high occupancy, and VMEM holds
+256*512*4 B = 512 KiB per X tile plus negligible vectors.  Kernels run
+with ``interpret=True`` for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 512
+
+
+def _logits_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def logits(x, w, *, block_d=BLOCK_D, interpret=True):
+    """z[B] = X[B,D] @ w[D] via D-tiled accumulation."""
+    b, d = x.shape
+    block = min(block_d, d)
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, (0, pad))
+    grid = (x.shape[1] // block,)
+    return pl.pallas_call(
+        _logits_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def _grad_w_kernel(x_ref, r_ref, o_ref):
+    # gw slab = r[B] contracted against the X tile: (B,) @ (B, BLOCK) -> (BLOCK,)
+    o_ref[...] = r_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def grad_w(x, r, *, block_d=BLOCK_D, interpret=True):
+    """gw[D] = X[B,D]^T @ r[B], tiled over D."""
+    b, d = x.shape
+    block = min(block_d, d)
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    grid = (x.shape[1] // block,)
+    out = pl.pallas_call(
+        _grad_w_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, block), lambda i: (0, i)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[1],), x.dtype),
+        interpret=interpret,
+    )(x, r)
+    return out[:d]

@@ -1,0 +1,157 @@
+"""Pure-jnp / pure-python reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must agree with the functions here (pytest + hypothesis sweep
+shapes, dtypes and parameter ranges).
+
+Table convention (shared with the Rust side, see rust/src/optim/dp.rs):
+the partial-product / partial-sum tables are stored *shifted by one* so
+that slot ``i`` holds the value at time ``i - 1``::
+
+    pt[i] = P(i-1)   with  pt[0] = P(-1) = 1.0
+    bt[i] = B(i-1)   with  bt[0] = B(-1) = 0.0
+
+With this convention the paper's lazy elastic-net catch-up from iteration
+``psi`` to ``k`` (Eq. 10 for SGD, Eq. 16 for FoBoS — identical in table
+form) is::
+
+    w' = sgn(w) * [ |w| * pt[k]/pt[psi] - lam1 * pt[k] * (bt[k] - bt[psi]) ]_+
+
+For SGD   : P(t) = prod_{tau<=t} (1 - eta(tau)*lam2),   B(t) = sum eta(tau)/P(tau-1)
+For FoBoS : P(t) = prod_{tau<=t} 1/(1 + eta(tau)*lam2), B(t) = sum eta(tau)/P(tau-1)
+Pure l1   : lam2 = 0  ->  pt == 1 everywhere, the update degenerates to Eq. 4.
+Pure l2^2 : lam1 = 0  ->  the subtraction vanishes, Eq. 6 / Eq. 15.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# lazy catch-up (the paper's Theorem 1 / Theorem 2)
+# --------------------------------------------------------------------------
+
+def catchup_ref(w, psi, k, pt, bt, lam1):
+    """Vectorized closed-form lazy catch-up, Eq. 10 / Eq. 16.
+
+    Args:
+      w:    f32[d]  weights, stale as of iteration ``psi[j]``.
+      psi:  i32[d]  per-weight last-updated iteration index.
+      k:    scalar i32, current iteration (bring weights current to k).
+      pt:   f32[T]  shifted partial products, pt[i] = P(i-1).
+      bt:   f32[T]  shifted partial sums,     bt[i] = B(i-1).
+      lam1: scalar f32, l1 strength.
+    Returns:
+      f32[d] current weights w^(k).
+    """
+    pk = pt[k]
+    bk = bt[k]
+    p_psi = pt[psi]
+    b_psi = bt[psi]
+    mag = jnp.abs(w) * (pk / p_psi) - lam1 * pk * (bk - b_psi)
+    return jnp.sign(w) * jnp.maximum(mag, 0.0)
+
+
+def catchup_sequential_ref(w, n_steps, etas, lam1, lam2, algo="sgd"):
+    """Apply n_steps per-step dense regularization updates one at a time.
+
+    The ground-truth semantics the closed form must reproduce.  Pure
+    python/numpy loop; etas[t] is the learning rate at step t.
+
+    algo='sgd'   : w <- sgn(w) [ (1 - eta*lam2)|w| - eta*lam1 ]_+     (Eq. 9)
+    algo='fobos' : w <- sgn(w) [ (|w| - eta*lam1) / (1 + eta*lam2) ]_+
+    """
+    w = np.asarray(w, dtype=np.float64).copy()
+    for t in range(n_steps):
+        eta = float(etas[t])
+        if algo == "sgd":
+            mag = (1.0 - eta * lam2) * np.abs(w) - eta * lam1
+        elif algo == "fobos":
+            mag = (np.abs(w) - eta * lam1) / (1.0 + eta * lam2)
+        else:
+            raise ValueError(algo)
+        w = np.sign(w) * np.maximum(mag, 0.0)
+    return w
+
+
+def build_tables(etas, lam2, algo="sgd"):
+    """Build the shifted DP tables (pt, bt) for a schedule ``etas``.
+
+    Mirrors rust/src/optim/dp.rs.  Returns float64 numpy arrays of length
+    len(etas) + 1 following the shifted convention documented above.
+
+    ERRATUM (documented in DESIGN.md): the paper defines the SGD inner sum
+    as B(t) = sum eta(tau)/P(tau-1) (Theorem 1), but expanding the SGD
+    recursion w' = a_t|w| - eta_t*lam1 shows the coefficient of the tau-th
+    shrinkage term is P(k-1)/P(tau) — shrinkage at step tau is *not*
+    multiplied by a_tau itself.  The correct SGD sum is
+    B(t) = sum eta(tau)/P(tau).  For FoBoS the shrinkage happens inside
+    the product (w' = a_t(|w| - eta_t*lam1)), so the paper's
+    beta(t) = sum eta(tau)/Phi(tau-1) is correct as printed.  Both forms
+    coincide in shape; property tests against the sequential reference
+    verify each exactly.
+    """
+    T = len(etas)
+    pt = np.ones(T + 1, dtype=np.float64)
+    bt = np.zeros(T + 1, dtype=np.float64)
+    for t in range(T):
+        eta = float(etas[t])
+        if algo == "sgd":
+            a = 1.0 - eta * lam2
+            pt[t + 1] = a * pt[t]
+            bt[t + 1] = bt[t] + eta / pt[t + 1]   # eta(t)/P(t)
+        elif algo == "fobos":
+            a = 1.0 / (1.0 + eta * lam2)
+            pt[t + 1] = a * pt[t]
+            bt[t + 1] = bt[t] + eta / pt[t]       # eta(t)/P(t-1)
+        else:
+            raise ValueError(algo)
+    return pt, bt
+
+
+# --------------------------------------------------------------------------
+# logistic regression tile (forward + gradient)
+# --------------------------------------------------------------------------
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def logits_ref(x, w, b):
+    """f32[B,D] @ f32[D] + b -> f32[B]."""
+    return x @ w + b
+
+
+def predict_ref(x, w, b):
+    return sigmoid(logits_ref(x, w, b))
+
+
+def loss_grad_ref(x, y, w, b):
+    """Mean logistic loss + gradient wrt (w, b).
+
+    Returns (loss f32[], gw f32[D], gb f32[]).  No regularization — the
+    regularizer is applied by the proximal/lazy step, as in the paper.
+    """
+    n = x.shape[0]
+    p = predict_ref(x, w, b)
+    eps = 1e-12
+    loss = -jnp.mean(y * jnp.log(p + eps) + (1.0 - y) * jnp.log(1.0 - p + eps))
+    r = (p - y) / n
+    gw = x.T @ r
+    gb = jnp.sum(r)
+    return loss, gw, gb
+
+
+def fobos_enet_step_ref(x, y, w, b, eta, lam1, lam2):
+    """One dense FoBoS elastic-net step (Eq. 2 + Eq. 3 solution).
+
+    Returns (w', b', loss).  Bias is conventionally unregularized.
+    """
+    loss, gw, gb = loss_grad_ref(x, y, w, b)
+    wh = w - eta * gw
+    bh = b - eta * gb
+    mag = (jnp.abs(wh) - eta * lam1) / (1.0 + eta * lam2)
+    w_new = jnp.sign(wh) * jnp.maximum(mag, 0.0)
+    return w_new, bh, loss

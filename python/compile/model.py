@@ -1,0 +1,62 @@
+"""Layer-2: the jax compute graph for dense mini-batch logistic regression.
+
+Composes the Layer-1 Pallas kernels (``kernels.logreg``, ``kernels.
+lazy_prox``) into the three entrypoints the Rust runtime executes:
+
+  * ``predict_proba``    — batch scoring for the prediction service.
+  * ``loss_and_grad``    — forward + gradient (used by the XLA-dense
+                           baseline when composing its own update).
+  * ``fobos_enet_step``  — one full dense FoBoS elastic-net training step
+                           (Eq. 2 forward step + the Eq. 3 closed-form
+                           prox), fused into a single HLO module.
+  * ``lazy_catchup``     — re-export of the L1 catch-up kernel, so the
+                           finalization pass can be offloaded wholesale.
+
+Everything here is build-time only: ``aot.py`` lowers these with concrete
+shapes to HLO text under artifacts/, and Python is never imported by the
+serving/training path again.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import logreg
+from .kernels.lazy_prox import lazy_catchup  # noqa: F401  (re-export for aot)
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def predict_proba(x, w, b):
+    """p[B] = sigma(X w + b) using the Pallas logits kernel."""
+    return (sigmoid(logreg.logits(x, w) + b),)
+
+
+def loss_and_grad(x, y, w, b):
+    """Mean logistic loss and its gradient wrt (w, b)."""
+    n = x.shape[0]
+    p = sigmoid(logreg.logits(x, w) + b)
+    eps = 1e-12
+    loss = -jnp.mean(y * jnp.log(p + eps) + (1.0 - y) * jnp.log(1.0 - p + eps))
+    r = (p - y) / n
+    gw = logreg.grad_w(x, r)
+    gb = jnp.sum(r)
+    return loss, gw, gb
+
+
+def fobos_enet_step(x, y, w, b, eta, lam1, lam2):
+    """One dense FoBoS elastic-net step; returns (w', b', loss).
+
+    Forward: w_half = w - eta * grad L  (Eq. 2)
+    Backward (prox, Eq. 3 solution):
+        w' = sgn(w_half) [ (|w_half| - eta*lam1) / (1 + eta*lam2) ]_+
+    The bias is unregularized by convention.
+    """
+    loss, gw, gb = loss_and_grad(x, y, w, b)
+    wh = w - eta * gw
+    bh = b - eta * gb
+    mag = (jnp.abs(wh) - eta * lam1) / (1.0 + eta * lam2)
+    w_new = jnp.sign(wh) * jnp.maximum(mag, 0.0)
+    return w_new, bh, loss

@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes, dtypes-adjacent ranges, schedules and lambda
+settings; every property asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lazy_prox, logreg, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def schedules(T, kind, eta0):
+    t = np.arange(T, dtype=np.float64)
+    if kind == "const":
+        return np.full(T, eta0)
+    if kind == "inv_t":
+        return eta0 / (1.0 + t)
+    if kind == "inv_sqrt":
+        return eta0 / np.sqrt(1.0 + t)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# lazy catch-up kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(1, 700),
+    T=st.integers(1, 60),
+    algo=st.sampled_from(["sgd", "fobos"]),
+    kind=st.sampled_from(["const", "inv_t", "inv_sqrt"]),
+    lam1=st.floats(0.0, 0.02),
+    lam2=st.floats(0.0, 0.2),
+    eta0=st.floats(0.01, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_catchup_kernel_matches_sequential(d, T, algo, kind, lam1, lam2,
+                                           eta0, seed):
+    """Pallas closed-form catch-up == step-by-step dense regularization."""
+    rng = np.random.default_rng(seed)
+    w0 = rng.normal(0, 1, d).astype(np.float32)
+    etas = schedules(T, kind, eta0)
+    pt, bt = ref.build_tables(etas, lam2, algo=algo)
+
+    # every weight stale since a random iteration psi_j; current time k = T
+    psi = rng.integers(0, T + 1, d).astype(np.int32)
+    out = lazy_prox.lazy_catchup(
+        jnp.asarray(w0), jnp.asarray(psi),
+        jnp.asarray(pt, jnp.float32), jnp.asarray(bt, jnp.float32),
+        jnp.asarray([T], jnp.int32), jnp.asarray([lam1], jnp.float32),
+        block_d=128,
+    )
+    expected = np.stack([
+        ref.catchup_sequential_ref(w0[j:j + 1], T - int(psi[j]),
+                                   etas[int(psi[j]):], lam1, lam2, algo=algo)[0]
+        for j in range(d)
+    ])
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 512),
+    T=st.integers(1, 100),
+    lam1=st.floats(0.0, 0.05),
+    lam2=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_catchup_kernel_matches_jnp_ref(d, T, lam1, lam2, seed):
+    """Pallas kernel == vectorized jnp oracle on identical tables."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, d).astype(np.float32)
+    etas = schedules(T, "inv_sqrt", 0.2)
+    pt, bt = ref.build_tables(etas, lam2, algo="fobos")
+    psi = rng.integers(0, T + 1, d).astype(np.int32)
+
+    got = lazy_prox.lazy_catchup(
+        jnp.asarray(w), jnp.asarray(psi),
+        jnp.asarray(pt, jnp.float32), jnp.asarray(bt, jnp.float32),
+        jnp.asarray([T], jnp.int32), jnp.asarray([lam1], jnp.float32),
+        block_d=256,
+    )
+    want = ref.catchup_ref(
+        jnp.asarray(w), jnp.asarray(psi), T,
+        jnp.asarray(pt, jnp.float32), jnp.asarray(bt, jnp.float32), lam1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_catchup_pure_l1_reduces_to_eq4():
+    """lam2 = 0: catch-up is the truncated-gradient update (Eq. 4)."""
+    T = 50
+    etas = schedules(T, "inv_t", 0.3)
+    pt, bt = ref.build_tables(etas, 0.0, algo="sgd")
+    assert np.all(pt == 1.0)
+    w = np.array([0.5, -0.5, 0.01, -0.01, 0.0], dtype=np.float32)
+    psi = np.zeros(5, dtype=np.int32)
+    lam1 = 0.01
+    got = lazy_prox.lazy_catchup(
+        jnp.asarray(w), jnp.asarray(psi),
+        jnp.asarray(pt, jnp.float32), jnp.asarray(bt, jnp.float32),
+        jnp.asarray([T], jnp.int32), jnp.asarray([lam1], jnp.float32))
+    shrink = lam1 * (bt[T] - bt[0])  # = lam1 * (S(T-1) - S(-1))
+    want = np.sign(w) * np.maximum(np.abs(w) - shrink, 0.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-7)
+
+
+def test_catchup_zero_steps_is_identity():
+    pt, bt = ref.build_tables(np.full(10, 0.1), 0.1, algo="sgd")
+    w = np.linspace(-1, 1, 33).astype(np.float32)
+    psi = np.full(33, 4, dtype=np.int32)
+    got = lazy_prox.lazy_catchup(
+        jnp.asarray(w), jnp.asarray(psi),
+        jnp.asarray(pt, jnp.float32), jnp.asarray(bt, jnp.float32),
+        jnp.asarray([4], jnp.int32), jnp.asarray([0.01], jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), w, rtol=1e-6, atol=1e-7)
+
+
+def test_catchup_clipping_is_absorbing():
+    """Once a weight hits 0 under l1/enet it must stay 0 (per-step), and the
+    closed form must agree even when it would go 'negative' internally."""
+    T = 30
+    etas = np.full(T, 0.4)
+    lam1, lam2 = 0.05, 0.1
+    pt, bt = ref.build_tables(etas, lam2, algo="fobos")
+    w = np.array([0.02, -0.02], dtype=np.float32)  # dies after ~1 step
+    psi = np.zeros(2, dtype=np.int32)
+    got = lazy_prox.lazy_catchup(
+        jnp.asarray(w), jnp.asarray(psi),
+        jnp.asarray(pt, jnp.float32), jnp.asarray(bt, jnp.float32),
+        jnp.asarray([T], jnp.int32), jnp.asarray([lam1], jnp.float32))
+    assert np.all(np.asarray(got) == 0.0)
+    seq = ref.catchup_sequential_ref(w, T, etas, lam1, lam2, algo="fobos")
+    assert np.all(seq == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# logistic-regression kernels
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    d=st.integers(1, 900),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logits_kernel(b, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (b, d)).astype(np.float32)
+    w = rng.normal(0, 1, d).astype(np.float32)
+    got = logreg.logits(jnp.asarray(x), jnp.asarray(w), block_d=128)
+    want = x @ w
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    d=st.integers(1, 900),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grad_w_kernel(b, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (b, d)).astype(np.float32)
+    r = rng.normal(0, 1, b).astype(np.float32)
+    got = logreg.grad_w(jnp.asarray(x), jnp.asarray(r), block_d=128)
+    want = x.T @ r
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,74 @@
+"""L2 model correctness: composed jax graph vs jnp reference (ref.py) and
+vs a hand-written numpy FoBoS implementation."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _data(b, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (b, d)).astype(np.float32)
+    y = (rng.random(b) < 0.5).astype(np.float32)
+    w = rng.normal(0, 0.3, d).astype(np.float32)
+    bias = np.float32(rng.normal(0, 0.1))
+    return x, y, w, bias
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 48), d=st.integers(2, 700),
+       seed=st.integers(0, 2**31 - 1))
+def test_predict_matches_ref(b, d, seed):
+    x, _, w, bias = _data(b, d, seed)
+    (got,) = model.predict_proba(jnp.asarray(x), jnp.asarray(w), bias)
+    want = ref.predict_ref(jnp.asarray(x), jnp.asarray(w), bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 48), d=st.integers(2, 700),
+       seed=st.integers(0, 2**31 - 1))
+def test_loss_grad_matches_ref(b, d, seed):
+    x, y, w, bias = _data(b, d, seed)
+    loss, gw, gb = model.loss_and_grad(jnp.asarray(x), jnp.asarray(y),
+                                       jnp.asarray(w), bias)
+    rloss, rgw, rgb = ref.loss_grad_ref(jnp.asarray(x), jnp.asarray(y),
+                                        jnp.asarray(w), bias)
+    np.testing.assert_allclose(float(loss), float(rloss), rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rgw),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(gb), float(rgb), rtol=2e-4, atol=2e-5)
+
+
+def _numpy_fobos_step(x, y, w, b, eta, lam1, lam2):
+    """Independent numpy implementation of one FoBoS elastic-net step."""
+    z = x @ w + b
+    p = 1.0 / (1.0 + np.exp(-z))
+    n = x.shape[0]
+    r = (p - y) / n
+    gw = x.T @ r
+    gb = r.sum()
+    wh = w - eta * gw
+    bh = b - eta * gb
+    mag = (np.abs(wh) - eta * lam1) / (1.0 + eta * lam2)
+    return np.sign(wh) * np.maximum(mag, 0.0), bh
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 48), d=st.integers(2, 500),
+       eta=st.floats(0.01, 0.5), lam1=st.floats(0.0, 0.05),
+       lam2=st.floats(0.0, 0.5), seed=st.integers(0, 2**31 - 1))
+def test_fobos_step_matches_numpy(b, d, eta, lam1, lam2, seed):
+    x, y, w, bias = _data(b, d, seed)
+    w2, b2, _loss = model.fobos_enet_step(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(w), bias,
+        jnp.float32(eta), jnp.float32(lam1), jnp.float32(lam2))
+    ew, eb = _numpy_fobos_step(x.astype(np.float64), y.astype(np.float64),
+                               w.astype(np.float64), float(bias),
+                               eta, lam1, lam2)
+    np.testing.assert_allclose(np.asarray(w2), ew, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(float(b2), eb, rtol=3e-4, atol=3e-5)

@@ -1,0 +1,90 @@
+//! E8 — the lazy catch-up operator itself: native Rust scalar path
+//! (the trainer hot path) vs the vectorized Layer-1 Pallas kernel
+//! executed through PJRT (`catchup.hlo.txt`).
+//!
+//! Also verifies the two produce identical results on random state, i.e.
+//! the L1 kernel is a faithful implementation of Eq. 10/16.
+
+use lazyreg::bench::{black_box, Bench};
+use lazyreg::optim::{Algo, DpCache, Regularizer, Schedule};
+use lazyreg::runtime::Runtime;
+use lazyreg::util::{fmt, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(4);
+    // A cache with a deep table.
+    let steps = 4_000u32;
+    let mut cache = DpCache::new(
+        Algo::Fobos,
+        Regularizer::elastic_net(1e-4, 1e-3),
+        Schedule::InvSqrtT { eta0: 0.5 },
+    );
+    for _ in 0..steps {
+        cache.step();
+    }
+
+    // Random stale weights + psi.
+    let d = 65_536usize;
+    let w: Vec<f64> = (0..d).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+    let psi: Vec<u32> = (0..d).map(|_| rng.index(steps as usize + 1) as u32).collect();
+
+    let mut bench = Bench::new(3, 30);
+    bench.run("native catchup (65,536 weights)", || {
+        let mut acc = 0.0;
+        for j in 0..d {
+            acc += cache.catchup(w[j], psi[j]);
+        }
+        black_box(acc);
+    });
+    let native = bench.results().last().unwrap();
+    println!("\n## E8 — lazy catch-up operator");
+    println!(
+        "native: {} for 65,536 weights = {}",
+        fmt::duration(native.mean()),
+        fmt::rate(native.throughput(d as f64), "weight")
+    );
+
+    // XLA artifact path (if available).
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => {
+            let meta = rt.meta();
+            if meta.catchup_dim != d || (steps as usize + 1) > meta.table {
+                println!("(XLA comparison skipped: artifact shapes {}≠{d})", meta.catchup_dim);
+                return Ok(());
+            }
+            let (pt, bt) = cache.tables();
+            let mut pt32: Vec<f32> = pt.iter().map(|&x| x as f32).collect();
+            let mut bt32: Vec<f32> = bt.iter().map(|&x| x as f32).collect();
+            pt32.resize(meta.table, 1.0);
+            bt32.resize(meta.table, 0.0);
+            let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+            let psi32: Vec<i32> = psi.iter().map(|&p| p as i32).collect();
+            let lam1 = cache.reg().lam1 as f32;
+
+            // correctness cross-check
+            let got = rt.catchup(&w32, &psi32, &pt32, &bt32, steps as i32, lam1)?;
+            let mut max_diff = 0.0f64;
+            for j in 0..d {
+                let want = cache.catchup(w[j], psi[j]);
+                max_diff = max_diff.max((want - f64::from(got[j])).abs());
+            }
+            println!("XLA kernel max |Δw| vs native: {max_diff:.2e} (f32 artifact)");
+            assert!(max_diff < 1e-4, "catchup kernel mismatch");
+
+            bench.run("xla catchup artifact (65,536 weights)", || {
+                let _ = rt
+                    .catchup(&w32, &psi32, &pt32, &bt32, steps as i32, lam1)
+                    .unwrap();
+            });
+            let xla = bench.results().last().unwrap();
+            println!(
+                "xla:    {} for 65,536 weights = {} (includes host<->device copies)",
+                fmt::duration(xla.mean()),
+                fmt::rate(xla.throughput(d as f64), "weight")
+            );
+        }
+        Err(e) => println!("(XLA comparison skipped: {e})"),
+    }
+    println!("\n{}", bench.render_table());
+    Ok(())
+}

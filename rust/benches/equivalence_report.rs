@@ -1,0 +1,77 @@
+//! E2 — the paper's §7 correctness check: lazy and dense training produce
+//! identical weights (paper: "identical ... up to 4 significant figures";
+//! in f64 we demand far tighter). Reports max |Δw| for every
+//! (algo × regularizer × schedule) cell plus the 4-sig-fig verdict.
+
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::testing::agrees_to_sig_figs;
+use lazyreg::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let data = generate(
+        &BowSpec { n_examples: 2_000, n_features: 5_000, avg_nnz: 40.0, ..Default::default() },
+        13,
+    );
+
+    let algos = [Algo::Sgd, Algo::Fobos];
+    let regs = [
+        ("none", Regularizer::none()),
+        ("l1", Regularizer::l1(1e-4)),
+        ("l22", Regularizer::l22(1e-3)),
+        ("enet", Regularizer::elastic_net(1e-4, 1e-3)),
+    ];
+    // Note the constant-schedule rate: at eta0 = 0.3 the SGD dynamics on
+    // count-valued features are non-contractive, and 1e-15 rounding
+    // differences between the closed-form product and sequential
+    // multiplication get amplified chaotically through the *gradient*
+    // feedback to O(1) after ~4000 steps — for every trainer pair, not
+    // just lazy-vs-dense. The per-update closed forms are exact to 1e-10
+    // regardless (see optim::lazy property tests); equivalence of whole
+    // training runs additionally needs stable dynamics, which decaying
+    // rates (the paper's setting) provide.
+    let schedules = [
+        ("const", Schedule::Constant { eta0: 0.05 }),
+        ("inv_t", Schedule::InvT { eta0: 0.5 }),
+        ("inv_sqrt", Schedule::InvSqrtT { eta0: 0.5 }),
+    ];
+
+    println!("\n## E2 — lazy vs dense weight equivalence (2 epochs, n=2,000, d=5,000)");
+    let mut table = fmt::Table::new(["algo", "reg", "schedule", "max |Δw|", "4 sig figs?"]);
+    let mut worst: f64 = 0.0;
+    for algo in algos {
+        for (rname, reg) in regs {
+            for (sname, schedule) in schedules {
+                let opts = TrainOptions {
+                    algo,
+                    reg,
+                    schedule,
+                    epochs: 2,
+                    shuffle: false,
+                    ..Default::default()
+                };
+                let lazy = train_lazy(&data, &opts)?;
+                let dense = train_dense(&data, &opts)?;
+                let diff = lazy.model.max_weight_diff(&dense.model);
+                worst = worst.max(diff);
+                let sig4 = lazy
+                    .model
+                    .weights
+                    .iter()
+                    .zip(dense.model.weights.iter())
+                    .all(|(a, b)| agrees_to_sig_figs(*a, *b, 4));
+                table.row([
+                    algo.name().to_string(),
+                    rname.to_string(),
+                    sname.to_string(),
+                    format!("{diff:.2e}"),
+                    if sig4 { "yes".into() } else { "NO".to_string() },
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!("worst max |Δw| across all cells: {worst:.2e} (paper criterion: 4 sig figs)");
+    assert!(worst < 1e-8, "equivalence regression: {worst}");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! E3 — speedup vs sparsity (the paper's §7 claim that the lazy speedup
+//! tracks the zeros/nonzeros ratio up to a constant factor).
+//!
+//! Sweeps the nominal dimensionality d at fixed p̄ ≈ 90 and measures
+//! lazy and dense throughput; the speedup column should scale ~linearly
+//! with d/p̄ and the constant factor stay roughly flat.
+
+use std::time::Instant;
+
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::train::DenseTrainer;
+use lazyreg::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::var("LAZYREG_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4_000);
+    let dims = [1_000usize, 4_000, 16_000, 65_000, 260_941];
+
+    let opts = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-6, 1e-6),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 1,
+        shuffle: false,
+        ..Default::default()
+    };
+
+    println!("\n## E3 — speedup vs d/p (n={n}, p~90, FoBoS elastic net)");
+    let mut table = fmt::Table::new([
+        "d", "p", "d/p ideal", "lazy ex/s", "dense ex/s", "speedup", "const factor",
+    ]);
+    for &d in &dims {
+        eprintln!("[sparsity] d={d} ...");
+        let spec = BowSpec {
+            n_examples: n,
+            n_features: d,
+            avg_nnz: 90.0_f64.min(d as f64 / 4.0),
+            ..Default::default()
+        };
+        let data = generate(&spec, 7);
+        let stats = data.stats();
+
+        let lazy = train_lazy(&data, &opts)?;
+
+        // Dense under a wall-clock budget (large d is brutally slow — the
+        // paper's point).
+        let mut dense = DenseTrainer::new(d, &opts);
+        let t0 = Instant::now();
+        let mut count = 0u64;
+        'outer: loop {
+            for r in 0..data.n_examples() {
+                dense.process_example(data.x().row(r), f64::from(data.labels()[r]));
+                count += 1;
+                if t0.elapsed().as_secs_f64() > 5.0 {
+                    break 'outer;
+                }
+            }
+            break;
+        }
+        let dense_rate = count as f64 / t0.elapsed().as_secs_f64();
+        let speedup = lazy.throughput / dense_rate;
+        table.row([
+            fmt::count(d as u64),
+            format!("{:.1}", stats.avg_nnz),
+            format!("{:.1}", stats.ideal_speedup),
+            fmt::rate(lazy.throughput, "ex"),
+            fmt::rate(dense_rate, "ex"),
+            format!("{speedup:.1}x"),
+            format!("{:.2}", stats.ideal_speedup / speedup),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

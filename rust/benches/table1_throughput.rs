@@ -1,0 +1,87 @@
+//! E1 — the paper's Table 1: lazy vs dense FoBoS elastic-net throughput
+//! on a Medline-shaped corpus.
+//!
+//! Paper (Python, n=1M, d=260,941, p=88.54):
+//!   lazy 1893 ex/s vs dense 3.086 ex/s -> 612.2x (ideal 2947.2x).
+//! We reproduce the *shape*: lazy wins by hundreds of x, within a small
+//! constant factor of the zeros/nonzeros ratio.
+//!
+//! `cargo bench --bench table1_throughput` (env LAZYREG_BENCH_N to scale).
+
+use std::time::Instant;
+
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::train::DenseTrainer;
+use lazyreg::util::fmt;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("LAZYREG_BENCH_N", 20_000);
+    let dense_budget = env_usize("LAZYREG_BENCH_DENSE_SECONDS", 15) as f64;
+
+    eprintln!("[table1] generating corpus n={n} d=260,941 p~88.5 ...");
+    let data = generate(&BowSpec { n_examples: n, ..Default::default() }, 42);
+    let stats = data.stats();
+
+    let opts = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-6, 1e-6),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 1,
+        shuffle: false,
+        ..Default::default()
+    };
+
+    eprintln!("[table1] lazy pass ...");
+    let lazy = train_lazy(&data, &opts)?;
+
+    eprintln!("[table1] dense pass (budget {dense_budget}s) ...");
+    let mut dense = DenseTrainer::new(data.n_features(), &opts);
+    let t0 = Instant::now();
+    let mut dense_examples = 0u64;
+    'outer: loop {
+        for r in 0..data.n_examples() {
+            dense.process_example(data.x().row(r), f64::from(data.labels()[r]));
+            dense_examples += 1;
+            if t0.elapsed().as_secs_f64() > dense_budget {
+                break 'outer;
+            }
+        }
+        break;
+    }
+    let dense_rate = dense_examples as f64 / t0.elapsed().as_secs_f64();
+    let speedup = lazy.throughput / dense_rate;
+
+    println!("\n## E1 / Table 1 — FoBoS elastic net, n={n}, d={}, p={:.2}", stats.n_features, stats.avg_nnz);
+    let mut t = fmt::Table::new(["metric", "lazy updates (ours)", "dense updates", "paper (lazy/dense)"]);
+    t.row([
+        "examples / second".to_string(),
+        fmt::rate(lazy.throughput, "ex"),
+        fmt::rate(dense_rate, "ex"),
+        "1893 / 3.086".to_string(),
+    ]);
+    t.row([
+        "speedup".to_string(),
+        format!("{speedup:.1}x"),
+        "1.0x".to_string(),
+        "612.2x".to_string(),
+    ]);
+    t.row([
+        "ideal (zeros/nonzeros)".to_string(),
+        format!("{:.1}x", stats.ideal_speedup),
+        String::new(),
+        "2947.2x".to_string(),
+    ]);
+    t.row([
+        "constant factor vs ideal".to_string(),
+        format!("{:.2}", stats.ideal_speedup / speedup),
+        String::new(),
+        format!("{:.2}", 2947.1528 / 612.2),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}

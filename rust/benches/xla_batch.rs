@@ -1,0 +1,97 @@
+//! E7 — the three-layer integration benchmark: the XLA-dense baseline
+//! (mini-batch FoBoS elastic net running entirely inside the AOT Layer-2
+//! graph via PJRT) vs the native lazy trainer, plus batch-scoring latency
+//! through the `predict` artifact.
+//!
+//! Requires `make artifacts`. Skips gracefully when artifacts are absent.
+
+use std::time::Instant;
+
+use lazyreg::bench::Bench;
+use lazyreg::data::BatchIter;
+use lazyreg::prelude::*;
+use lazyreg::runtime::{Runtime, XlaDenseTrainer};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("## E7 — SKIPPED (artifacts unavailable: {e})");
+            println!("run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let meta = rt.meta();
+    println!(
+        "## E7 — XLA dense path (platform={}, batch={}, dim={})",
+        rt.platform(),
+        meta.batch,
+        meta.dim
+    );
+
+    // Corpus bounded to the artifact dim so the dense path sees all
+    // features.
+    let data = generate(
+        &BowSpec {
+            n_examples: 4_000,
+            n_features: meta.dim,
+            avg_nnz: 80.0,
+            ..Default::default()
+        },
+        17,
+    );
+    let stats = data.stats();
+
+    // Native lazy trainer (same corpus, per-example).
+    let opts = TrainOptions { epochs: 1, shuffle: false, ..Default::default() };
+    let lazy = train_lazy(&data, &opts)?;
+
+    // XLA dense trainer (mini-batch FoBoS inside the compiled graph).
+    let mut xla = XlaDenseTrainer::new(&rt, 1e-6, 1e-6, 0.05);
+    let report = xla.train(&data, 1)?;
+
+    let mut t = fmt::Table::new(["trainer", "granularity", "examples/s", "loss proxy"]);
+    t.row([
+        "lazy rust (ours, O(p))".to_string(),
+        "per-example".to_string(),
+        fmt::rate(lazy.throughput, "ex"),
+        format!("{:.4}", lazy.final_loss()),
+    ]);
+    t.row([
+        "XLA dense (L2 graph, O(d))".to_string(),
+        format!("batch={}", meta.batch),
+        fmt::rate(report.examples_per_sec, "ex"),
+        format!("{:.4}", report.final_loss),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "corpus d={} p={:.1}; XLA amortizes O(d) over batches but still does {}x more weight-update work per example",
+        stats.n_features,
+        stats.avg_nnz,
+        (stats.n_features as f64 / stats.avg_nnz) as u64,
+    );
+
+    // Batch scoring latency through the predict artifact.
+    let mut bench = Bench::new(3, 20);
+    let batch = BatchIter::new(&data, meta.batch, meta.dim).next().unwrap();
+    let w = xla.weights.clone();
+    let b = xla.bias;
+    bench.run("predict artifact (1 batch)", || {
+        let _ = rt.predict(&batch.x, &w, b).unwrap();
+    });
+    let r = bench.results().last().unwrap();
+    println!("\nbatch scoring: mean {} per {}-example batch ({})",
+        fmt::duration(r.mean()),
+        meta.batch,
+        fmt::rate(r.throughput(meta.batch as f64), "ex"),
+    );
+
+    // One grad + one fobos_step call timing.
+    let t0 = Instant::now();
+    let _ = rt.grad(&batch.x, &batch.y, &w, b)?;
+    println!("grad artifact: {}", fmt::duration(t0.elapsed()));
+    Ok(())
+}

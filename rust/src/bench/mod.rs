@@ -1,0 +1,176 @@
+//! From-scratch micro-benchmark harness (criterion is unavailable
+//! offline).
+//!
+//! Each [`Bench`] runs warmup iterations, then timed iterations, and
+//! reports mean / p50 / p99 / min plus derived throughput. Bench binaries
+//! (`rust/benches/*.rs`, `harness = false`) use this to print the markdown
+//! tables recorded in EXPERIMENTS.md.
+//!
+//! `LAZYREG_BENCH_FAST=1` shrinks iteration counts for smoke runs (used by
+//! `cargo test`-adjacent CI so `cargo bench` stays meaningful).
+
+use std::time::{Duration, Instant};
+
+use crate::util::fmt;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Per-iteration samples.
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    fn sorted(&self) -> Vec<Duration> {
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        s
+    }
+
+    /// Mean per-iteration time.
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    /// Quantile (q in [0,1]) of per-iteration time.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let s = self.sorted();
+        if s.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((q * (s.len() - 1) as f64).round() as usize).min(s.len() - 1);
+        s[idx]
+    }
+
+    /// Minimum per-iteration time.
+    pub fn min(&self) -> Duration {
+        self.sorted().first().copied().unwrap_or(Duration::ZERO)
+    }
+
+    /// Items/sec given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        let m = self.mean().as_secs_f64();
+        if m <= 0.0 {
+            0.0
+        } else {
+            items / m
+        }
+    }
+}
+
+/// Benchmark runner with warmup and sample collection.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    /// Create with explicit warmup/timed iteration counts
+    /// (both clamped to >= 1; FAST mode divides by 5).
+    pub fn new(warmup: usize, iters: usize) -> Bench {
+        let fast = std::env::var("LAZYREG_BENCH_FAST").is_ok();
+        let scale = if fast { 5 } else { 1 };
+        Bench {
+            warmup: (warmup / scale).max(1),
+            iters: (iters / scale).max(1),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (called once per iteration) under `name`.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        self.results.push(BenchResult { name: name.to_string(), iters: self.iters, samples });
+        self.results.last().unwrap()
+    }
+
+    /// Time a whole-workload closure once per iteration, but give it an
+    /// iteration index (useful when state must vary per iteration).
+    pub fn run_indexed<F: FnMut(usize)>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for i in 0..self.warmup {
+            f(i);
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            f(i);
+            samples.push(t0.elapsed());
+        }
+        self.results.push(BenchResult { name: name.to_string(), iters: self.iters, samples });
+        self.results.last().unwrap()
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render a markdown summary table of all results.
+    pub fn render_table(&self) -> String {
+        let mut t = fmt::Table::new(["case", "iters", "mean", "p50", "p99", "min"]);
+        for r in &self.results {
+            t.row([
+                r.name.clone(),
+                r.iters.to_string(),
+                fmt::duration(r.mean()),
+                fmt::duration(r.quantile(0.5)),
+                fmt::duration(r.quantile(0.99)),
+                fmt::duration(r.min()),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value
+/// (std::hint::black_box is stable; thin wrapper for discoverability).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = Bench::new(2, 10);
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert_eq!(r.samples.len(), r.iters);
+        assert!(r.mean() >= r.min());
+        assert!(r.quantile(0.99) >= r.quantile(0.5));
+        assert!(r.throughput(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn table_lists_all_cases() {
+        let mut b = Bench::new(1, 2);
+        b.run("a", || {});
+        b.run("b", || {});
+        let table = b.render_table();
+        assert!(table.contains("| a"));
+        assert!(table.contains("| b"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Typed experiment configuration: the bridge from config files / CLI
+//! flags to `TrainOptions` + a corpus spec.
+
+use anyhow::Result;
+
+use crate::loss::Loss;
+use crate::optim::{Algo, Regularizer, Schedule};
+use crate::synth::{BowSpec, LabelSpec};
+use crate::train::TrainOptions;
+
+use super::parser::ConfigDoc;
+
+/// A full experiment: corpus + training setup.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Experiment name (reports).
+    pub name: String,
+    /// Synthetic corpus spec (ignored when `data_path` is set).
+    pub corpus: BowSpec,
+    /// Optional libsvm file to train on instead of synthetic data.
+    pub data_path: Option<String>,
+    /// Training options.
+    pub train: TrainOptions,
+    /// Held-out fraction for evaluation.
+    pub test_frac: f64,
+    /// Corpus generation seed.
+    pub data_seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            corpus: BowSpec::default(),
+            data_path: None,
+            train: TrainOptions::default(),
+            test_frac: 0.1,
+            data_seed: 42,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a config document. Sections: `[data]`, `[train]`.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig {
+            name: doc.get("", "name").unwrap_or("experiment").to_string(),
+            ..Default::default()
+        };
+
+        // [data]
+        cfg.corpus.n_examples = doc.get_parse("data", "n_examples", cfg.corpus.n_examples)?;
+        cfg.corpus.n_features = doc.get_parse("data", "n_features", cfg.corpus.n_features)?;
+        cfg.corpus.avg_nnz = doc.get_parse("data", "avg_nnz", cfg.corpus.avg_nnz)?;
+        cfg.corpus.zipf_exponent =
+            doc.get_parse("data", "zipf_exponent", cfg.corpus.zipf_exponent)?;
+        let labels = LabelSpec {
+            teacher_nnz: doc.get_parse("data", "teacher_nnz", 200usize)?,
+            noise: doc.get_parse("data", "label_noise", 0.05f64)?,
+            ..Default::default()
+        };
+        cfg.corpus.labels = labels;
+        cfg.data_path = doc.get("data", "path").map(str::to_string);
+        cfg.data_seed = doc.get_parse("data", "seed", cfg.data_seed)?;
+        cfg.test_frac = doc.get_parse("data", "test_frac", cfg.test_frac)?;
+
+        // [train]
+        if let Some(a) = doc.get("train", "algo") {
+            cfg.train.algo = Algo::parse(a)?;
+        }
+        if let Some(r) = doc.get("train", "reg") {
+            cfg.train.reg = Regularizer::parse(r)?;
+        }
+        if let Some(s) = doc.get("train", "schedule") {
+            cfg.train.schedule = Schedule::parse(s)?;
+        }
+        if let Some(l) = doc.get("train", "loss") {
+            cfg.train.loss = Loss::parse(l)?;
+        }
+        cfg.train.epochs = doc.get_parse("train", "epochs", cfg.train.epochs)?;
+        cfg.train.shuffle = doc.get_bool("train", "shuffle", cfg.train.shuffle)?;
+        cfg.train.seed = doc.get_parse("train", "seed", cfg.train.seed)?;
+        if let Some(b) = doc.get("train", "space_budget") {
+            cfg.train.space_budget = Some(b.parse()?);
+        }
+
+        cfg.train.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<ExperimentConfig> {
+        Self::from_doc(&ConfigDoc::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"
+name = "medline-scale"
+[data]
+n_examples = 1000
+n_features = 5000
+avg_nnz = 30
+teacher_nnz = 50
+test_frac = 0.2
+seed = 7
+[train]
+algo = "sgd"
+reg = "enet:0.001:0.01"
+schedule = "inv_t:0.5"
+loss = "logistic"
+epochs = 2
+shuffle = false
+space_budget = 1024
+"#;
+        let doc = ConfigDoc::parse(text).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "medline-scale");
+        assert_eq!(cfg.corpus.n_examples, 1000);
+        assert_eq!(cfg.corpus.labels.teacher_nnz, 50);
+        assert_eq!(cfg.train.algo, Algo::Sgd);
+        assert_eq!(cfg.train.reg, Regularizer::elastic_net(0.001, 0.01));
+        assert_eq!(cfg.train.schedule, Schedule::InvT { eta0: 0.5 });
+        assert_eq!(cfg.train.epochs, 2);
+        assert!(!cfg.train.shuffle);
+        assert_eq!(cfg.train.space_budget, Some(1024));
+        assert_eq!(cfg.test_frac, 0.2);
+    }
+
+    #[test]
+    fn empty_config_gives_defaults() {
+        let cfg = ExperimentConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.corpus.n_features, 260_941);
+        assert_eq!(cfg.train.epochs, 1);
+    }
+
+    #[test]
+    fn invalid_train_combo_rejected() {
+        let text = "[train]\nalgo = \"sgd\"\nreg = \"l22:10\"\nschedule = \"const:0.5\"\n";
+        let doc = ConfigDoc::parse(text).unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment configuration: a TOML-subset parser (offline-safe, no serde)
+//! plus typed experiment configs used by the CLI and the bench harness.
+
+pub mod experiment;
+pub mod parser;
+
+pub use experiment::ExperimentConfig;
+pub use parser::ConfigDoc;

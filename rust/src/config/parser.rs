@@ -1,0 +1,179 @@
+//! Minimal TOML-subset config parser.
+//!
+//! Supports the subset experiments need: `[section]` headers, `key = value`
+//! with string / integer / float / bool scalars, `#` comments, and quoted
+//! strings. Flat sections only (no nested tables or arrays) — configs in
+//! `configs/` stay within this subset by construction.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed config document: `section -> key -> raw value`.
+/// Keys outside any section land in the "" (root) section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ConfigDoc {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<ConfigDoc> {
+        let mut doc = ConfigDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim();
+                if key.is_empty() {
+                    bail!("line {}: empty key", lineno + 1);
+                }
+                let value = unquote(v.trim())
+                    .with_context(|| format!("line {}: bad value", lineno + 1))?;
+                doc.sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(key.to_string(), value);
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<ConfigDoc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|s| s.get(key)).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("[{section}] {key} = {v:?}: {e}")),
+        }
+    }
+
+    /// Boolean lookup ("true"/"false").
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => bail!("[{section}] {key} = {v:?}: expected true/false"),
+        }
+    }
+
+    /// Section names present.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Keys in a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside quotes is content; track a simple in-string flag.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> Result<String> {
+    if let Some(inner) = v.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        Ok(inner.replace("\\\"", "\"").replace("\\\\", "\\"))
+    } else if v.is_empty() {
+        bail!("empty value");
+    } else {
+        Ok(v.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 42
+[train]
+algo = "fobos"      # comment after value
+lam1 = 1e-5
+epochs = 3
+verbose = true
+[data]
+name = "medline # synthetic"
+"#;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "seed"), Some("42"));
+        assert_eq!(doc.get("train", "algo"), Some("fobos"));
+        assert_eq!(doc.get_parse("train", "lam1", 0.0f64).unwrap(), 1e-5);
+        assert_eq!(doc.get_parse("train", "epochs", 0usize).unwrap(), 3);
+        assert!(doc.get_bool("train", "verbose", false).unwrap());
+        // '#' inside quotes preserved
+        assert_eq!(doc.get("data", "name"), Some("medline # synthetic"));
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let doc = ConfigDoc::parse("").unwrap();
+        assert_eq!(doc.get_parse("x", "y", 9u32).unwrap(), 9);
+        assert!(!doc.get_bool("x", "y", false).unwrap());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ConfigDoc::parse("[unterminated\n").is_err());
+        assert!(ConfigDoc::parse("just a line\n").is_err());
+        assert!(ConfigDoc::parse("= novalue\n").is_err());
+        assert!(ConfigDoc::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let doc = ConfigDoc::parse("k = abc\n").unwrap();
+        assert!(doc.get_parse("", "k", 0u32).is_err());
+        assert!(doc.get_bool("", "k", false).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 orchestration: multi-worker training and streaming pipelines.
+//!
+//! Two coordination patterns cover the paper's motivating workload
+//! (document auto-tagging over millions of sparse documents, §1):
+//!
+//! * [`tagger`] — one-vs-rest multi-label training: K binary elastic-net
+//!   models trained concurrently by a worker pool over a shared corpus.
+//! * [`pipeline`] — a bounded-queue producer/consumer pipeline that
+//!   streams examples (e.g. parsed from libsvm on disk) into a trainer
+//!   with backpressure, so corpora need not fit in memory.
+
+pub mod pipeline;
+pub mod tagger;
+
+pub use pipeline::{train_streaming, BoundedQueue, SparseExample, StreamStats};
+pub use tagger::{predict_tags, train_one_vs_rest, TaggerReport};

@@ -1,0 +1,309 @@
+//! Bounded-queue streaming pipeline with backpressure.
+//!
+//! A reader thread parses examples (libsvm text, a generator, …) and
+//! pushes them into a [`BoundedQueue`]; the training thread pops and
+//! feeds the lazy trainer. When the trainer falls behind, the queue fills
+//! and the reader blocks — classic backpressure, no unbounded buffering.
+
+use std::collections::VecDeque;
+use std::io::BufRead;
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::data::RowView;
+use crate::train::{LazyTrainer, TrainOptions};
+
+/// An owned sparse example flowing through the pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseExample {
+    /// Sorted feature indices.
+    pub indices: Vec<u32>,
+    /// Values parallel to `indices`.
+    pub values: Vec<f32>,
+    /// Label.
+    pub label: f32,
+}
+
+impl SparseExample {
+    /// Borrow as a `RowView` for the trainers.
+    pub fn view(&self) -> RowView<'_> {
+        RowView { indices: &self.indices, values: &self.values }
+    }
+}
+
+/// A blocking MPMC bounded queue (Mutex + Condvar; crossbeam channels are
+/// unavailable offline).
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create with a positive capacity.
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(QueueState { items: VecDeque::with_capacity(capacity), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Push, blocking while full. Returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        while st.items.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Pop, blocking while empty. `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close: producers stop, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Current queue length (snapshot).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty (snapshot).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Statistics from a streaming-training run.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    /// Examples trained on.
+    pub examples: u64,
+    /// Mean online loss.
+    pub mean_loss: f64,
+    /// Lines the reader rejected as malformed.
+    pub parse_errors: u64,
+}
+
+/// Parse one libsvm line into an example (1-based indices assumed).
+fn parse_line(line: &str) -> Option<SparseExample> {
+    let body = line.split('#').next().unwrap_or("").trim();
+    if body.is_empty() {
+        return None;
+    }
+    let mut parts = body.split_ascii_whitespace();
+    let label: f32 = parts.next()?.parse().ok()?;
+    let mut pairs: Vec<(u32, f32)> = Vec::new();
+    for tok in parts {
+        let (i, v) = tok.split_once(':')?;
+        let idx: u32 = i.parse().ok()?;
+        let val: f32 = v.parse().ok()?;
+        pairs.push((idx.checked_sub(1)?, val));
+    }
+    pairs.sort_unstable_by_key(|p| p.0);
+    pairs.dedup_by(|a, b| {
+        if a.0 == b.0 {
+            b.1 += a.1;
+            true
+        } else {
+            false
+        }
+    });
+    let (indices, values) = pairs.into_iter().unzip();
+    Some(SparseExample { indices, values, label })
+}
+
+/// Stream libsvm text through a bounded queue into a lazy trainer.
+///
+/// `dim` must bound all feature indices; out-of-range features are
+/// dropped (counted as parse errors). Returns the trained model report.
+pub fn train_streaming<R: BufRead + Send>(
+    reader: R,
+    dim: usize,
+    opts: &TrainOptions,
+    queue_capacity: usize,
+) -> Result<(crate::model::LinearModel, StreamStats)> {
+    opts.validate()?;
+    let queue: BoundedQueue<SparseExample> = BoundedQueue::new(queue_capacity);
+    let mut trainer = LazyTrainer::new(dim, opts);
+    let mut stats = StreamStats { examples: 0, mean_loss: 0.0, parse_errors: 0 };
+    let mut loss_sum = 0.0f64;
+
+    std::thread::scope(|scope| {
+        let q = &queue;
+        let producer = scope.spawn(move || {
+            let mut errors = 0u64;
+            for line in reader.lines() {
+                let Ok(line) = line else {
+                    errors += 1;
+                    continue;
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse_line(&line) {
+                    Some(mut ex) => {
+                        // Drop features outside the model dimension.
+                        let before = ex.indices.len();
+                        let keep: Vec<usize> = (0..ex.indices.len())
+                            .filter(|&i| (ex.indices[i] as usize) < dim)
+                            .collect();
+                        if keep.len() != before {
+                            errors += 1;
+                            ex.indices = keep.iter().map(|&i| ex.indices[i]).collect();
+                            ex.values = keep.iter().map(|&i| ex.values[i]).collect();
+                        }
+                        if !q.push(ex) {
+                            break;
+                        }
+                    }
+                    None => errors += 1,
+                }
+            }
+            q.close();
+            errors
+        });
+
+        while let Some(ex) = queue.pop() {
+            loss_sum += trainer.process_example(ex.view(), f64::from(ex.label));
+            stats.examples += 1;
+        }
+        stats.parse_errors = producer.join().expect("producer panicked");
+    });
+
+    stats.mean_loss = if stats.examples > 0 { loss_sum / stats.examples as f64 } else { 0.0 };
+    Ok((trainer.into_model(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn queue_fifo_order() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        q.close();
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_applies_backpressure() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let q2 = q.clone();
+        let p2 = pushed.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                q2.push(i);
+                p2.fetch_add(1, Ordering::SeqCst);
+            }
+            q2.close();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // Producer must be blocked well short of 100 (capacity 2).
+        let so_far = pushed.load(Ordering::SeqCst);
+        assert!(so_far <= 3, "no backpressure: pushed {so_far}");
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.close();
+        assert!(!q.push(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn parse_line_handles_variants() {
+        let ex = parse_line("1 3:2.5 1:1").unwrap();
+        assert_eq!(ex.indices, vec![0, 2]);
+        assert_eq!(ex.values, vec![1.0, 2.5]);
+        assert_eq!(ex.label, 1.0);
+        assert!(parse_line("# just a comment").is_none());
+        assert!(parse_line("bad 1:1").is_none());
+        // duplicate features merge
+        let ex2 = parse_line("0 2:1 2:2").unwrap();
+        assert_eq!(ex2.values, vec![3.0]);
+    }
+
+    #[test]
+    fn streaming_trains_a_model() {
+        let mut text = String::new();
+        for i in 0..200 {
+            if i % 2 == 0 {
+                text.push_str("1 1:2 3:1\n");
+            } else {
+                text.push_str("0 2:2 4:1\n");
+            }
+        }
+        let opts = TrainOptions::default();
+        let (model, stats) =
+            train_streaming(text.as_bytes(), 8, &opts, 16).unwrap();
+        assert_eq!(stats.examples, 200);
+        assert_eq!(stats.parse_errors, 0);
+        // feature 0 (index "1") predicts positive, feature 1 negative
+        assert!(model.weights[0] > 0.0);
+        assert!(model.weights[1] < 0.0);
+    }
+
+    #[test]
+    fn streaming_counts_parse_errors_and_out_of_range() {
+        let text = "1 1:1\ngarbage\n0 99:1\n";
+        let opts = TrainOptions::default();
+        let (_, stats) = train_streaming(text.as_bytes(), 4, &opts, 4).unwrap();
+        // bad line skipped entirely; out-of-range feature dropped but the
+        // example still trains
+        assert_eq!(stats.examples, 2);
+        assert_eq!(stats.parse_errors, 2);
+    }
+}

@@ -1,0 +1,126 @@
+//! Mini-batch iteration + densification for the XLA dense path.
+//!
+//! The lazy trainer consumes examples one at a time (the paper's setting);
+//! the XLA-dense baseline and the prediction service consume fixed-shape
+//! dense batches matching the AOT artifact shapes (`artifacts/meta.json`).
+
+use super::dataset::SparseDataset;
+
+/// A dense, fixed-shape batch: row-major `x[batch * dim]` and `y[batch]`.
+/// Short final batches are zero-padded; `len` is the real example count.
+#[derive(Debug, Clone)]
+pub struct DenseBatch {
+    /// Row-major features, `batch * dim` long.
+    pub x: Vec<f32>,
+    /// Labels, `batch` long (padding rows have label 0 and are ignored).
+    pub y: Vec<f32>,
+    /// Number of real (non-padding) examples.
+    pub len: usize,
+    /// Batch capacity (artifact batch size).
+    pub batch: usize,
+    /// Dense feature dimension (artifact dim; features >= dim are dropped).
+    pub dim: usize,
+}
+
+/// Iterator producing `DenseBatch`es over a dataset in a fixed or given
+/// order.
+pub struct BatchIter<'a> {
+    data: &'a SparseDataset,
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    dim: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    /// Iterate in natural order.
+    pub fn new(data: &'a SparseDataset, batch: usize, dim: usize) -> Self {
+        let order = (0..data.n_examples()).collect();
+        BatchIter { data, order, pos: 0, batch, dim }
+    }
+
+    /// Iterate in a caller-provided order (e.g. a shuffled epoch).
+    pub fn with_order(data: &'a SparseDataset, order: Vec<usize>, batch: usize, dim: usize) -> Self {
+        BatchIter { data, order, pos: 0, batch, dim }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = DenseBatch;
+
+    fn next(&mut self) -> Option<DenseBatch> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let take = (self.order.len() - self.pos).min(self.batch);
+        let mut x = vec![0.0f32; self.batch * self.dim];
+        let mut y = vec![0.0f32; self.batch];
+        for b in 0..take {
+            let r = self.order[self.pos + b];
+            let row = self.data.x().row(r);
+            let dst = &mut x[b * self.dim..(b + 1) * self.dim];
+            for (j, v) in row.iter() {
+                if (j as usize) < self.dim {
+                    dst[j as usize] = v;
+                }
+            }
+            y[b] = self.data.labels()[r];
+        }
+        self.pos += take;
+        Some(DenseBatch { x, y, len: take, batch: self.batch, dim: self.dim })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csr::CsrMatrix;
+
+    fn data(n: usize, d: usize) -> SparseDataset {
+        let mut x = CsrMatrix::empty(d);
+        let mut labels = Vec::new();
+        for i in 0..n {
+            x.push_row(vec![((i % d) as u32, (i + 1) as f32)]);
+            labels.push(i as f32);
+        }
+        SparseDataset::new(x, labels).unwrap()
+    }
+
+    #[test]
+    fn batches_cover_all_examples() {
+        let d = data(10, 4);
+        let batches: Vec<_> = BatchIter::new(&d, 4, 4).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].len, 4);
+        assert_eq!(batches[2].len, 2);
+        // padding rows are zero
+        assert!(batches[2].x[2 * 4..].iter().all(|&v| v == 0.0));
+        let total: usize = batches.iter().map(|b| b.len).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn densification_places_values() {
+        let d = data(3, 4);
+        let b = BatchIter::new(&d, 3, 4).next().unwrap();
+        assert_eq!(b.x[0], 1.0); // example 0, feature 0
+        assert_eq!(b.x[4 + 1], 2.0); // example 1, feature 1
+        assert_eq!(b.y, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn features_beyond_dim_are_dropped() {
+        let mut x = CsrMatrix::empty(10);
+        x.push_row(vec![(1, 1.0), (9, 5.0)]);
+        let d = SparseDataset::new(x, vec![1.0]).unwrap();
+        let b = BatchIter::new(&d, 1, 4).next().unwrap();
+        assert_eq!(b.x, vec![0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn custom_order_respected() {
+        let d = data(4, 4);
+        let b = BatchIter::with_order(&d, vec![3, 0], 2, 4).next().unwrap();
+        assert_eq!(b.y, vec![3.0, 0.0]);
+    }
+}

@@ -1,0 +1,287 @@
+//! Compressed Sparse Row matrix — the storage format for every corpus.
+//!
+//! Invariants (checked by `validate`, fuzzed by property tests):
+//!   * `indptr.len() == n_rows + 1`, `indptr[0] == 0`, non-decreasing;
+//!   * `indices.len() == values.len() == indptr[n_rows]`;
+//!   * column indices within each row are strictly increasing and < n_cols.
+
+use anyhow::{bail, Result};
+
+/// A read-only view of one sparse row: parallel (indices, values) slices.
+#[derive(Debug, Clone, Copy)]
+pub struct RowView<'a> {
+    /// Column indices, strictly increasing.
+    pub indices: &'a [u32],
+    /// Values parallel to `indices`.
+    pub values: &'a [f32],
+}
+
+impl<'a> RowView<'a> {
+    /// Number of stored (non-zero) entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Iterate `(column, value)` pairs.
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + 'a {
+        self.indices.iter().copied().zip(self.values.iter().copied())
+    }
+
+    /// Sparse dot product against a dense vector.
+    #[inline]
+    pub fn dot(&self, dense: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for (j, v) in self.iter() {
+            acc += f64::from(v) * f64::from(dense[j as usize]);
+        }
+        acc
+    }
+}
+
+/// CSR sparse matrix with `f32` values and `u32` column indices.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CsrMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    indptr: Vec<u64>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from raw parts, validating all invariants.
+    pub fn from_parts(
+        n_rows: usize,
+        n_cols: usize,
+        indptr: Vec<u64>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<CsrMatrix> {
+        let m = CsrMatrix { n_rows, n_cols, indptr, indices, values };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// An empty matrix with a fixed column count.
+    pub fn empty(n_cols: usize) -> CsrMatrix {
+        CsrMatrix { n_rows: 0, n_cols, indptr: vec![0], indices: vec![], values: vec![] }
+    }
+
+    /// Check all structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.len() != self.n_rows + 1 {
+            bail!("indptr.len()={} != n_rows+1={}", self.indptr.len(), self.n_rows + 1);
+        }
+        if self.indptr[0] != 0 {
+            bail!("indptr[0] != 0");
+        }
+        if self.indices.len() != self.values.len() {
+            bail!("indices/values length mismatch");
+        }
+        if *self.indptr.last().unwrap() != self.indices.len() as u64 {
+            bail!("indptr tail != nnz");
+        }
+        for w in self.indptr.windows(2) {
+            if w[1] < w[0] {
+                bail!("indptr decreasing");
+            }
+        }
+        for r in 0..self.n_rows {
+            let row = self.row(r);
+            for pair in row.indices.windows(2) {
+                if pair[1] <= pair[0] {
+                    bail!("row {r}: column indices not strictly increasing");
+                }
+            }
+            if let Some(&last) = row.indices.last() {
+                if last as usize >= self.n_cols {
+                    bail!("row {r}: column {last} >= n_cols {}", self.n_cols);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Append a row given `(column, value)` pairs (will be sorted; duplicate
+    /// columns are summed; zero values dropped).
+    pub fn push_row(&mut self, mut entries: Vec<(u32, f32)>) {
+        entries.sort_unstable_by_key(|e| e.0);
+        let mut merged: Vec<(u32, f32)> = Vec::with_capacity(entries.len());
+        for (j, v) in entries {
+            match merged.last_mut() {
+                Some(last) if last.0 == j => last.1 += v,
+                _ => merged.push((j, v)),
+            }
+        }
+        for (j, v) in merged {
+            if v != 0.0 {
+                debug_assert!((j as usize) < self.n_cols);
+                self.indices.push(j);
+                self.values.push(v);
+            }
+        }
+        self.n_rows += 1;
+        self.indptr.push(self.indices.len() as u64);
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Number of columns (nominal dimensionality `d`).
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Total stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Average non-zeros per row (the paper's `p`).
+    pub fn avg_nnz(&self) -> f64 {
+        if self.n_rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows as f64
+        }
+    }
+
+    /// View of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> RowView<'_> {
+        let lo = self.indptr[r] as usize;
+        let hi = self.indptr[r + 1] as usize;
+        RowView { indices: &self.indices[lo..hi], values: &self.values[lo..hi] }
+    }
+
+    /// Iterate all rows.
+    pub fn rows(&self) -> impl Iterator<Item = RowView<'_>> {
+        (0..self.n_rows).map(move |r| self.row(r))
+    }
+
+    /// Densify row `r` into a caller-provided buffer of length `n_cols`
+    /// (zeroed first). Used by the XLA dense path.
+    pub fn densify_row_into(&self, r: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n_cols);
+        out.fill(0.0);
+        for (j, v) in self.row(r).iter() {
+            out[j as usize] = v;
+        }
+    }
+
+    /// Per-column document frequency (number of rows where the column is
+    /// non-zero). Used for corpus statistics and the sparsity benches.
+    pub fn column_frequencies(&self) -> Vec<u32> {
+        let mut df = vec![0u32; self.n_cols];
+        for &j in &self.indices {
+            df[j as usize] += 1;
+        }
+        df
+    }
+
+    /// Select a subset of rows into a new matrix (e.g. train/test split).
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut out = CsrMatrix::empty(self.n_cols);
+        for &r in rows {
+            let row = self.row(r);
+            out.indices.extend_from_slice(row.indices);
+            out.values.extend_from_slice(row.values);
+            out.n_rows += 1;
+            out.indptr.push(out.indices.len() as u64);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        let mut m = CsrMatrix::empty(5);
+        m.push_row(vec![(0, 1.0), (3, 2.0)]);
+        m.push_row(vec![]);
+        m.push_row(vec![(4, -1.0), (1, 0.5)]);
+        m
+    }
+
+    #[test]
+    fn push_and_read_rows() {
+        let m = sample();
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(0).indices, &[0, 3]);
+        assert_eq!(m.row(1).nnz(), 0);
+        // entries got sorted by column
+        assert_eq!(m.row(2).indices, &[1, 4]);
+        assert_eq!(m.row(2).values, &[0.5, -1.0]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_columns_are_summed_zero_dropped() {
+        let mut m = CsrMatrix::empty(3);
+        m.push_row(vec![(1, 2.0), (1, 3.0), (2, 0.0)]);
+        assert_eq!(m.row(0).indices, &[1]);
+        assert_eq!(m.row(0).values, &[5.0]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn dot_product() {
+        let m = sample();
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(m.row(0).dot(&w), 1.0 + 8.0);
+        assert_eq!(m.row(1).dot(&w), 0.0);
+        assert_eq!(m.row(2).dot(&w), 1.0 - 5.0);
+    }
+
+    #[test]
+    fn densify_round_trip() {
+        let m = sample();
+        let mut buf = vec![9.0f32; 5];
+        m.densify_row_into(2, &mut buf);
+        assert_eq!(buf, vec![0.0, 0.5, 0.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_indptr() {
+        let r = CsrMatrix::from_parts(2, 3, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_column() {
+        let r = CsrMatrix::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_columns() {
+        let r = CsrMatrix::from_parts(1, 5, vec![0, 2], vec![3, 1], vec![1.0, 1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.row(0).indices, m.row(2).indices);
+        assert_eq!(s.row(1).indices, m.row(0).indices);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn column_frequencies_counts() {
+        let m = sample();
+        assert_eq!(m.column_frequencies(), vec![1, 1, 0, 1, 1]);
+    }
+}

@@ -1,0 +1,173 @@
+//! `SparseDataset`: a CSR feature matrix plus labels, with splits,
+//! shuffled index orders, and corpus statistics.
+
+use anyhow::{ensure, Result};
+
+use super::csr::CsrMatrix;
+use crate::util::Rng;
+
+/// A labeled sparse dataset (binary labels stored as f32 in {0, 1} for
+/// logistic loss; {-1, +1} and regression targets are also accepted —
+/// the loss decides how to interpret them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseDataset {
+    x: CsrMatrix,
+    labels: Vec<f32>,
+}
+
+/// Summary statistics of a corpus (the numbers §7 of the paper reports).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    /// Number of examples `n`.
+    pub n_examples: usize,
+    /// Nominal dimensionality `d`.
+    pub n_features: usize,
+    /// Total non-zero entries.
+    pub nnz: usize,
+    /// Average non-zeros per example (the paper's `p` = 88.54 on Medline).
+    pub avg_nnz: f64,
+    /// Ratio of zeros to non-zeros per example = (d - p)/p; the paper's
+    /// "pure speedup" bound (2947.15 on Medline).
+    pub ideal_speedup: f64,
+    /// Fraction of positive labels (y > 0).
+    pub positive_rate: f64,
+}
+
+impl SparseDataset {
+    /// Build from matrix + labels; lengths must agree.
+    pub fn new(x: CsrMatrix, labels: Vec<f32>) -> Result<SparseDataset> {
+        ensure!(
+            x.n_rows() == labels.len(),
+            "rows ({}) != labels ({})",
+            x.n_rows(),
+            labels.len()
+        );
+        Ok(SparseDataset { x, labels })
+    }
+
+    /// The feature matrix.
+    #[inline]
+    pub fn x(&self) -> &CsrMatrix {
+        &self.x
+    }
+
+    /// The label vector.
+    #[inline]
+    pub fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    /// Number of examples.
+    #[inline]
+    pub fn n_examples(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    /// Nominal dimensionality `d`.
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// Corpus statistics.
+    pub fn stats(&self) -> DatasetStats {
+        let n = self.n_examples();
+        let d = self.n_features();
+        let p = self.x.avg_nnz();
+        let pos = self.labels.iter().filter(|&&y| y > 0.0).count();
+        DatasetStats {
+            n_examples: n,
+            n_features: d,
+            nnz: self.x.nnz(),
+            avg_nnz: p,
+            ideal_speedup: if p > 0.0 { (d as f64 - p) / p } else { f64::INFINITY },
+            positive_rate: if n == 0 { 0.0 } else { pos as f64 / n as f64 },
+        }
+    }
+
+    /// Deterministic shuffled train/test split (`test_frac` of examples
+    /// held out).
+    pub fn split(&self, test_frac: f64, seed: u64) -> (SparseDataset, SparseDataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let n = self.n_examples();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut order);
+        let n_test = ((n as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = order.split_at(n_test);
+        (self.select(train_idx), self.select(test_idx))
+    }
+
+    /// Subset by example indices.
+    pub fn select(&self, rows: &[usize]) -> SparseDataset {
+        let x = self.x.select_rows(rows);
+        let labels = rows.iter().map(|&r| self.labels[r]).collect();
+        SparseDataset { x, labels }
+    }
+
+    /// A freshly shuffled visit order for one epoch.
+    pub fn shuffled_order(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.n_examples()).collect();
+        rng.shuffle(&mut order);
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize, d: usize) -> SparseDataset {
+        let mut x = CsrMatrix::empty(d);
+        let mut labels = Vec::new();
+        for i in 0..n {
+            x.push_row(vec![((i % d) as u32, 1.0), (((i + 1) % d) as u32, 2.0)]);
+            labels.push((i % 2) as f32);
+        }
+        SparseDataset::new(x, labels).unwrap()
+    }
+
+    #[test]
+    fn stats_match_shape() {
+        let d = sample(10, 50);
+        let s = d.stats();
+        assert_eq!(s.n_examples, 10);
+        assert_eq!(s.n_features, 50);
+        assert_eq!(s.nnz, 20);
+        assert!((s.avg_nnz - 2.0).abs() < 1e-12);
+        assert!((s.ideal_speedup - 24.0).abs() < 1e-9);
+        assert!((s.positive_rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mismatched_labels_rejected() {
+        let x = CsrMatrix::empty(3);
+        assert!(SparseDataset::new(x, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn split_partitions_examples() {
+        let d = sample(100, 20);
+        let (train, test) = d.split(0.25, 7);
+        assert_eq!(test.n_examples(), 25);
+        assert_eq!(train.n_examples(), 75);
+        assert_eq!(train.n_features(), 20);
+        // deterministic
+        let (train2, test2) = d.split(0.25, 7);
+        assert_eq!(train, train2);
+        assert_eq!(test, test2);
+        // different seed differs
+        let (_, test3) = d.split(0.25, 8);
+        assert_ne!(test, test3);
+    }
+
+    #[test]
+    fn shuffled_order_is_permutation() {
+        let d = sample(64, 8);
+        let mut rng = Rng::new(3);
+        let ord = d.shuffled_order(&mut rng);
+        let mut sorted = ord.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,164 @@
+//! libsvm / svmlight text format reader and writer.
+//!
+//! Format: one example per line, `label idx:val idx:val ...` with
+//! 1-based or 0-based feature indices (auto-detected on read, 1-based on
+//! write, matching the ecosystem default). `#` starts a comment.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::csr::CsrMatrix;
+use super::dataset::SparseDataset;
+
+/// Parse libsvm text from a reader. `n_features = None` infers the
+/// dimensionality from the max index seen.
+pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<SparseDataset> {
+    let mut labels: Vec<f32> = Vec::new();
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut max_idx: i64 = -1;
+    let mut min_idx: i64 = i64::MAX;
+
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.with_context(|| format!("line {}", lineno + 1))?;
+        let body = line.split('#').next().unwrap_or("").trim();
+        if body.is_empty() {
+            continue;
+        }
+        let mut parts = body.split_ascii_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f32 = label_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
+        let mut entries = Vec::new();
+        for tok in parts {
+            let (i_str, v_str) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let idx: i64 = i_str
+                .parse()
+                .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
+            let val: f32 = v_str
+                .parse()
+                .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
+            anyhow::ensure!(idx >= 0, "line {}: negative index {idx}", lineno + 1);
+            max_idx = max_idx.max(idx);
+            min_idx = min_idx.min(idx);
+            entries.push((idx, val));
+        }
+        labels.push(label);
+        rows.push(entries.into_iter().map(|(i, v)| (i as u32, v)).collect());
+    }
+
+    // Detect 1-based indexing: if no zero index ever appears, shift by -1
+    // (the svmlight convention). Explicit n_features suppresses guessing
+    // only for dimension, not base.
+    let one_based = min_idx >= 1;
+    let shift = if one_based { 1 } else { 0 };
+    let inferred = if max_idx < 0 { 0 } else { (max_idx as usize + 1) - shift };
+    let d = n_features.unwrap_or(inferred).max(inferred);
+
+    let mut x = CsrMatrix::empty(d);
+    for row in rows {
+        x.push_row(row.into_iter().map(|(i, v)| (i - shift as u32, v)).collect());
+    }
+    SparseDataset::new(x, labels)
+}
+
+/// Read a libsvm file from disk.
+pub fn read_file<P: AsRef<Path>>(path: P, n_features: Option<usize>) -> Result<SparseDataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read(f, n_features)
+}
+
+/// Write a dataset in 1-based libsvm format.
+pub fn write<W: std::io::Write>(w: W, data: &SparseDataset) -> Result<()> {
+    let mut out = BufWriter::new(w);
+    for i in 0..data.n_examples() {
+        let label = data.labels()[i];
+        // Integral labels (the common case) print without decimals.
+        if label.fract() == 0.0 {
+            write!(out, "{}", label as i64)?;
+        } else {
+            write!(out, "{label}")?;
+        }
+        for (j, v) in data.x().row(i).iter() {
+            if v.fract() == 0.0 && v.abs() < 1e7 {
+                write!(out, " {}:{}", j + 1, v as i64)?;
+            } else {
+                write!(out, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(out)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Write a dataset to a file in 1-based libsvm format.
+pub fn write_file<P: AsRef<Path>>(path: P, data: &SparseDataset) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    write(f, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_one_based() {
+        let text = "1 1:0.5 4:2\n-1 2:1 # comment\n0 \n";
+        let d = read(text.as_bytes(), None).unwrap();
+        assert_eq!(d.n_examples(), 3);
+        assert_eq!(d.n_features(), 4);
+        assert_eq!(d.x().row(0).indices, &[0, 3]);
+        assert_eq!(d.labels(), &[1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn reads_zero_based() {
+        let text = "1 0:1 3:1\n0 1:2\n";
+        let d = read(text.as_bytes(), None).unwrap();
+        assert_eq!(d.n_features(), 4);
+        assert_eq!(d.x().row(0).indices, &[0, 3]);
+    }
+
+    #[test]
+    fn explicit_dimension_extends() {
+        let d = read("1 1:1\n".as_bytes(), Some(100)).unwrap();
+        assert_eq!(d.n_features(), 100);
+    }
+
+    #[test]
+    fn round_trip() {
+        let text = "1 1:0.5 4:2\n0 2:1.25\n";
+        let d = read(text.as_bytes(), None).unwrap();
+        let mut buf = Vec::new();
+        write(&mut buf, &d).unwrap();
+        let d2 = read(buf.as_slice(), Some(d.n_features())).unwrap();
+        assert_eq!(d.x(), d2.x());
+        assert_eq!(d.labels(), d2.labels());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read("notalabel 1:1\n".as_bytes(), None).is_err());
+        assert!(read("1 nocolon\n".as_bytes(), None).is_err());
+        assert!(read("1 1:xyz\n".as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("lazyreg_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.svm");
+        let d = read("1 1:1 3:2\n0 2:5\n".as_bytes(), None).unwrap();
+        write_file(&path, &d).unwrap();
+        let d2 = read_file(&path, None).unwrap();
+        assert_eq!(d.x(), d2.x());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse data substrate: CSR matrices, libsvm IO, datasets and batching.
+
+pub mod batch;
+pub mod csr;
+pub mod dataset;
+pub mod libsvm;
+
+pub use batch::{BatchIter, DenseBatch};
+pub use csr::{CsrMatrix, RowView};
+pub use dataset::{DatasetStats, SparseDataset};

@@ -1,0 +1,257 @@
+//! Evaluation metrics: accuracy, log-loss, precision/recall/F1, and the
+//! optimal-F1 threshold sweep (the paper's companion work, Lipton et al.
+//! 2014 [8], motivates thresholding classifiers to maximize F1).
+
+use crate::data::SparseDataset;
+use crate::model::LinearModel;
+
+/// Binary-classification metrics at a fixed threshold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    /// Decision threshold on the predicted probability/score.
+    pub threshold: f64,
+    /// Fraction correct.
+    pub accuracy: f64,
+    /// TP / (TP + FP); 1.0 when no positives predicted.
+    pub precision: f64,
+    /// TP / (TP + FN); 1.0 when no positives exist.
+    pub recall: f64,
+    /// Harmonic mean of precision and recall.
+    pub f1: f64,
+    /// Mean negative log-likelihood (logistic predictions).
+    pub log_loss: f64,
+    /// Example count.
+    pub n: usize,
+}
+
+/// Compute metrics for predictions `p` (probabilities) against labels
+/// `y ∈ {0,1}` at `threshold`.
+pub fn metrics_at(p: &[f64], y: &[f32], threshold: f64) -> Metrics {
+    assert_eq!(p.len(), y.len());
+    let n = p.len();
+    let (mut tp, mut fp, mut tn, mut fneg) = (0usize, 0usize, 0usize, 0usize);
+    let mut ll = 0.0f64;
+    for (&pi, &yi) in p.iter().zip(y.iter()) {
+        let pos = pi >= threshold;
+        let truth = yi > 0.5;
+        match (pos, truth) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, false) => tn += 1,
+            (false, true) => fneg += 1,
+        }
+        let eps = 1e-12;
+        let pc = pi.clamp(eps, 1.0 - eps);
+        ll -= if truth { pc.ln() } else { (1.0 - pc).ln() };
+    }
+    let precision = if tp + fp == 0 { 1.0 } else { tp as f64 / (tp + fp) as f64 };
+    let recall = if tp + fneg == 0 { 1.0 } else { tp as f64 / (tp + fneg) as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    Metrics {
+        threshold,
+        accuracy: if n == 0 { 0.0 } else { (tp + tn) as f64 / n as f64 },
+        precision,
+        recall,
+        f1,
+        log_loss: if n == 0 { 0.0 } else { ll / n as f64 },
+        n,
+    }
+}
+
+/// Sweep all meaningful thresholds and return the F1-optimal metrics
+/// (O(n log n): sort by score, evaluate F1 at every cut).
+pub fn optimal_f1(p: &[f64], y: &[f32]) -> Metrics {
+    assert_eq!(p.len(), y.len());
+    let mut idx: Vec<usize> = (0..p.len()).collect();
+    idx.sort_unstable_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+    let total_pos = y.iter().filter(|&&v| v > 0.5).count();
+
+    // Walk thresholds from high to low; at each prefix the predicted
+    // positives are exactly the prefix.
+    let mut tp = 0usize;
+    let mut best_f1 = -1.0;
+    let mut best_threshold = 1.0;
+    let mut i = 0;
+    while i < idx.len() {
+        // advance over ties so the threshold stays well-defined
+        let cut = p[idx[i]];
+        while i < idx.len() && p[idx[i]] == cut {
+            if y[idx[i]] > 0.5 {
+                tp += 1;
+            }
+            i += 1;
+        }
+        let predicted_pos = i;
+        let precision = tp as f64 / predicted_pos as f64;
+        let recall = if total_pos == 0 { 1.0 } else { tp as f64 / total_pos as f64 };
+        let f1 = if precision + recall == 0.0 {
+            0.0
+        } else {
+            2.0 * precision * recall / (precision + recall)
+        };
+        if f1 > best_f1 {
+            best_f1 = f1;
+            best_threshold = cut;
+        }
+    }
+    metrics_at(p, y, best_threshold)
+}
+
+/// Area under the ROC curve via the rank-sum (Mann–Whitney) formulation,
+/// with midrank tie handling. Returns 0.5 for degenerate label sets.
+pub fn auc(p: &[f64], y: &[f32]) -> f64 {
+    assert_eq!(p.len(), y.len());
+    let n_pos = y.iter().filter(|&&v| v > 0.5).count();
+    let n_neg = y.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..p.len()).collect();
+    idx.sort_unstable_by(|&a, &b| p[a].partial_cmp(&p[b]).unwrap());
+    // midranks
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j < idx.len() && p[idx[j]] == p[idx[i]] {
+            j += 1;
+        }
+        let midrank = (i + 1 + j) as f64 / 2.0; // average of ranks i+1..=j
+        for &k in &idx[i..j] {
+            if y[k] > 0.5 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j;
+    }
+    (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos * n_neg) as f64
+}
+
+/// Evaluate a model on a dataset at threshold 0.5 plus the optimal-F1
+/// sweep. Returns (at_half, at_optimal_f1).
+pub fn evaluate(model: &LinearModel, data: &SparseDataset) -> (Metrics, Metrics) {
+    let p: Vec<f64> = (0..data.n_examples())
+        .map(|r| model.predict(data.x().row(r)))
+        .collect();
+    (metrics_at(&p, data.labels(), 0.5), optimal_f1(&p, data.labels()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let p = [0.9, 0.8, 0.1, 0.2];
+        let y = [1.0, 1.0, 0.0, 0.0];
+        let m = metrics_at(&p, &y, 0.5);
+        assert_eq!(m.accuracy, 1.0);
+        assert_eq!(m.f1, 1.0);
+        assert!(m.log_loss < 0.25);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        // no predicted positives
+        let m = metrics_at(&[0.1, 0.2], &[1.0, 0.0], 0.5);
+        assert_eq!(m.precision, 1.0);
+        assert_eq!(m.recall, 0.0);
+        assert_eq!(m.f1, 0.0);
+        // no actual positives
+        let m2 = metrics_at(&[0.9, 0.8], &[0.0, 0.0], 0.5);
+        assert_eq!(m2.recall, 1.0);
+        assert_eq!(m2.accuracy, 0.0);
+    }
+
+    #[test]
+    fn optimal_f1_beats_default_threshold() {
+        // Scores are well-ranked but mis-calibrated (all < 0.5): the 0.5
+        // threshold predicts nothing, optimal-F1 finds the right cut.
+        let p = [0.40, 0.35, 0.30, 0.10, 0.05];
+        let y = [1.0, 1.0, 1.0, 0.0, 0.0];
+        let at_half = metrics_at(&p, &y, 0.5);
+        let best = optimal_f1(&p, &y);
+        assert_eq!(at_half.f1, 0.0);
+        assert_eq!(best.f1, 1.0);
+        assert!(best.threshold <= 0.30 && best.threshold > 0.10);
+    }
+
+    #[test]
+    fn optimal_f1_handles_ties_and_all_negative() {
+        let p = [0.5, 0.5, 0.5];
+        let y = [1.0, 0.0, 1.0];
+        let best = optimal_f1(&p, &y);
+        assert!(best.f1 > 0.0);
+        let none = optimal_f1(&[0.3, 0.4], &[0.0, 0.0]);
+        assert!(none.f1 >= 0.0); // no panic
+    }
+
+    #[test]
+    fn auc_basics() {
+        // perfect ranking
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &[1.0, 1.0, 0.0, 0.0]), 1.0);
+        // inverted ranking
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &[1.0, 1.0, 0.0, 0.0]), 0.0);
+        // all tied -> 0.5 by midranks
+        assert!((auc(&[0.5, 0.5, 0.5, 0.5], &[1.0, 0.0, 1.0, 0.0]) - 0.5).abs() < 1e-12);
+        // degenerate labels
+        assert_eq!(auc(&[0.3, 0.7], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn auc_matches_pairwise_definition() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(10);
+        for _ in 0..20 {
+            let n = 2 + rng.index(60);
+            let p: Vec<f64> = (0..n).map(|_| (rng.index(10) as f64) / 10.0).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.index(2) as f32).collect();
+            let n_pos = y.iter().filter(|&&v| v > 0.5).count();
+            if n_pos == 0 || n_pos == n {
+                continue;
+            }
+            // brute-force pairwise: P(score_pos > score_neg) + 0.5 ties
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for i in 0..n {
+                if y[i] <= 0.5 {
+                    continue;
+                }
+                for j in 0..n {
+                    if y[j] > 0.5 {
+                        continue;
+                    }
+                    den += 1.0;
+                    if p[i] > p[j] {
+                        num += 1.0;
+                    } else if p[i] == p[j] {
+                        num += 0.5;
+                    }
+                }
+            }
+            let want = num / den;
+            let got = auc(&p, &y);
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn evaluate_wires_model_and_data() {
+        use crate::data::CsrMatrix;
+        use crate::loss::Loss;
+        let mut x = CsrMatrix::empty(2);
+        x.push_row(vec![(0, 1.0)]);
+        x.push_row(vec![(1, 1.0)]);
+        let data = SparseDataset::new(x, vec![1.0, 0.0]).unwrap();
+        let mut m = LinearModel::zeros(2, Loss::Logistic);
+        m.weights[0] = 5.0;
+        m.weights[1] = -5.0;
+        let (at_half, best) = evaluate(&m, &data);
+        assert_eq!(at_half.accuracy, 1.0);
+        assert!(best.f1 >= at_half.f1);
+    }
+}

@@ -1,0 +1,73 @@
+//! # lazyreg
+//!
+//! A production-quality training framework for **sparse linear models**
+//! implementing *Efficient Elastic Net Regularization for Sparse Linear
+//! Models* (Lipton & Elkan, 2015).
+//!
+//! The paper's contribution — and this crate's hot path — is **O(p)
+//! per-example training under dense regularizers** (ℓ1, ℓ2², elastic net):
+//! stochastic updates touch only the weights of *non-zero* features, and
+//! stale weights are brought current on demand by closed-form, constant
+//! time *lazy catch-up* updates backed by a dynamic-programming cache of
+//! learning-rate partial sums/products ([`optim::dp`]).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the training coordinator: sparse data
+//!   pipeline ([`data`]), synthetic corpus generation ([`synth`]), the
+//!   lazy update engine ([`optim`], [`train`]), multi-worker
+//!   orchestration ([`coordinator`]), evaluation ([`eval`]), a prediction
+//!   service ([`serve`]) and CLI (`src/main.rs`).
+//! * **Layer 2 (JAX, build-time)** — dense mini-batch logistic-regression
+//!   graphs lowered once to HLO text (`python/compile/`), executed from
+//!   Rust through PJRT by [`runtime`].
+//! * **Layer 1 (Pallas, build-time)** — the catch-up and logistic-tile
+//!   kernels called inside the Layer-2 graph.
+//!
+//! Python never runs on the training/request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lazyreg::prelude::*;
+//!
+//! // A Medline-shaped synthetic corpus (scaled down).
+//! let spec = lazyreg::synth::BowSpec { n_examples: 5_000, n_features: 20_000,
+//!     avg_nnz: 80.0, ..Default::default() };
+//! let data = lazyreg::synth::generate(&spec, 42);
+//!
+//! let opts = TrainOptions {
+//!     algo: Algo::Fobos,
+//!     reg: Regularizer::elastic_net(1e-5, 1e-5),
+//!     schedule: Schedule::InvSqrtT { eta0: 0.5 },
+//!     epochs: 3,
+//!     ..Default::default()
+//! };
+//! let report = train_lazy(&data, &opts).unwrap();
+//! println!("{} examples/s", report.throughput);
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod loss;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod serve;
+pub mod synth;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::data::{CsrMatrix, SparseDataset};
+    pub use crate::loss::Loss;
+    pub use crate::model::LinearModel;
+    pub use crate::optim::{Algo, Regularizer, Schedule};
+    pub use crate::train::{train_dense, train_lazy, TrainOptions, TrainReport};
+}

@@ -1,0 +1,159 @@
+//! Loss functions for linear models.
+//!
+//! Each loss maps a margin/prediction to a value and the derivative with
+//! respect to the *raw score* z = w·x + b, which is all the trainers need
+//! (the chain rule through the sparse features happens in the trainer).
+
+/// A pointwise loss over (score z, label y).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Loss {
+    /// Logistic loss with y ∈ {0, 1}: log(1 + e^z) − yz.
+    Logistic,
+    /// Squared error ½(z − y)²: linear regression.
+    Squared,
+    /// Hinge loss max(0, 1 − ỹz) with ỹ = 2y − 1 ∈ {−1, +1}: linear SVM
+    /// (subgradient).
+    Hinge,
+}
+
+impl Loss {
+    /// Loss value at score `z`, label `y`.
+    #[inline]
+    pub fn value(&self, z: f64, y: f64) -> f64 {
+        match self {
+            Loss::Logistic => {
+                // log(1 + e^z) - y z, computed stably for large |z|.
+                let soft = if z > 30.0 {
+                    z
+                } else if z < -30.0 {
+                    0.0
+                } else {
+                    (1.0 + z.exp()).ln()
+                };
+                soft - y * z
+            }
+            Loss::Squared => 0.5 * (z - y) * (z - y),
+            Loss::Hinge => {
+                let yy = 2.0 * y - 1.0;
+                (1.0 - yy * z).max(0.0)
+            }
+        }
+    }
+
+    /// d loss / d z at score `z`, label `y`.
+    #[inline]
+    pub fn dz(&self, z: f64, y: f64) -> f64 {
+        match self {
+            Loss::Logistic => sigmoid(z) - y,
+            Loss::Squared => z - y,
+            Loss::Hinge => {
+                let yy = 2.0 * y - 1.0;
+                if yy * z < 1.0 {
+                    -yy
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Map a score to a prediction in the label's units
+    /// (probability for logistic, identity otherwise).
+    #[inline]
+    pub fn predict(&self, z: f64) -> f64 {
+        match self {
+            Loss::Logistic => sigmoid(z),
+            Loss::Squared | Loss::Hinge => z,
+        }
+    }
+
+    /// Parse from CLI/config text.
+    pub fn parse(s: &str) -> anyhow::Result<Loss> {
+        match s.to_ascii_lowercase().as_str() {
+            "logistic" | "logloss" => Ok(Loss::Logistic),
+            "squared" | "l2" | "mse" => Ok(Loss::Squared),
+            "hinge" | "svm" => Ok(Loss::Hinge),
+            other => anyhow::bail!("unknown loss {other:?}"),
+        }
+    }
+
+    /// Name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::Logistic => "logistic",
+            Loss::Squared => "squared",
+            Loss::Hinge => "hinge",
+        }
+    }
+}
+
+/// Numerically-stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, property};
+
+    #[test]
+    fn sigmoid_basics() {
+        assert_close(sigmoid(0.0), 0.5, 1e-15, 0.0);
+        assert!(sigmoid(40.0) > 0.999999);
+        assert!(sigmoid(-40.0) < 1e-6);
+        assert!(sigmoid(800.0).is_finite());
+        assert!(sigmoid(-800.0).is_finite());
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        property("loss dz == finite diff", 200, |g| {
+            let loss = *g.choose(&[Loss::Logistic, Loss::Squared, Loss::Hinge]);
+            let z = g.f64_in(-5.0, 5.0);
+            let y = if g.bool(0.5) { 1.0 } else { 0.0 };
+            if loss == Loss::Hinge {
+                // skip the kink
+                let yy = 2.0 * y - 1.0;
+                if (1.0 - yy * z).abs() < 1e-3 {
+                    return;
+                }
+            }
+            let h = 1e-6;
+            let fd = (loss.value(z + h, y) - loss.value(z - h, y)) / (2.0 * h);
+            assert_close(loss.dz(z, y), fd, 1e-4, 1e-6);
+        });
+    }
+
+    #[test]
+    fn logistic_loss_is_nonnegative_and_calibrated() {
+        for &(z, y) in &[(0.0, 1.0), (3.0, 1.0), (-3.0, 0.0), (10.0, 0.0)] {
+            assert!(Loss::Logistic.value(z, y) >= 0.0);
+        }
+        // perfect confident prediction -> ~0 loss
+        assert!(Loss::Logistic.value(30.0, 1.0) < 1e-9);
+        assert!(Loss::Logistic.value(-30.0, 0.0) < 1e-9);
+    }
+
+    #[test]
+    fn hinge_zero_beyond_margin() {
+        assert_eq!(Loss::Hinge.value(2.0, 1.0), 0.0);
+        assert_eq!(Loss::Hinge.dz(2.0, 1.0), 0.0);
+        assert!(Loss::Hinge.value(0.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for l in [Loss::Logistic, Loss::Squared, Loss::Hinge] {
+            assert_eq!(Loss::parse(l.name()).unwrap(), l);
+        }
+        assert!(Loss::parse("zero_one").is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! `lazyreg` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   gen       generate a synthetic Medline-like corpus to libsvm
+//!   train     train a model (lazy by default; --dense / --xla baselines)
+//!   eval      evaluate a saved model on a libsvm dataset
+//!   serve     run the TCP prediction service
+//!   bench     quick Table-1-style lazy-vs-dense throughput comparison
+//!   info      print artifact + corpus statistics
+//!
+//! Run `lazyreg <cmd> --help` conceptually via README; flags are parsed by
+//! the from-scratch `util::args` (clap is unavailable offline).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use lazyreg::config::ExperimentConfig;
+use lazyreg::data::libsvm;
+use lazyreg::eval::evaluate;
+use lazyreg::loss::Loss;
+use lazyreg::optim::{Algo, Regularizer, Schedule};
+use lazyreg::serve::Server;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::train::{train_dense, train_lazy, TrainOptions};
+use lazyreg::util::fmt;
+use lazyreg::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("gen") => cmd_gen(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: lazyreg <gen|train|eval|serve|bench|info> [--flags]\n\
+                 see README.md for the full flag reference"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Build train options from flags (or a --config file, flags overriding).
+fn options_from(args: &Args) -> Result<(TrainOptions, BowSpec, f64, u64)> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ExperimentConfig::load(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(a) = args.opt("algo") {
+        cfg.train.algo = Algo::parse(a)?;
+    }
+    if let Some(r) = args.opt("reg") {
+        cfg.train.reg = Regularizer::parse(r)?;
+    }
+    if let Some(s) = args.opt("schedule") {
+        cfg.train.schedule = Schedule::parse(s)?;
+    }
+    if let Some(l) = args.opt("loss") {
+        cfg.train.loss = Loss::parse(l)?;
+    }
+    if let Some(e) = args.try_parse::<usize>("epochs")? {
+        cfg.train.epochs = e;
+    }
+    if let Some(s) = args.try_parse::<u64>("seed")? {
+        cfg.train.seed = s;
+    }
+    if let Some(b) = args.try_parse::<usize>("space-budget")? {
+        cfg.train.space_budget = Some(b);
+    }
+    if let Some(n) = args.try_parse::<usize>("n")? {
+        cfg.corpus.n_examples = n;
+    }
+    if let Some(d) = args.try_parse::<usize>("d")? {
+        cfg.corpus.n_features = d;
+    }
+    if let Some(p) = args.try_parse::<f64>("p")? {
+        cfg.corpus.avg_nnz = p;
+    }
+    cfg.train.validate()?;
+    Ok((cfg.train, cfg.corpus, cfg.test_frac, cfg.data_seed))
+}
+
+fn load_or_generate(args: &Args, corpus: &BowSpec, data_seed: u64) -> Result<lazyreg::data::SparseDataset> {
+    match args.opt("data") {
+        Some(path) => libsvm::read_file(path, args.try_parse::<usize>("dims")?)
+            .with_context(|| format!("load {path}")),
+        None => {
+            eprintln!(
+                "generating synthetic corpus: n={} d={} p~{}",
+                corpus.n_examples, corpus.n_features, corpus.avg_nnz
+            );
+            Ok(generate(corpus, data_seed))
+        }
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let (_, corpus, _, data_seed) = options_from(args)?;
+    let out = args.get("out", "data.svm");
+    let data = generate(&corpus, args.get_parse("seed", data_seed));
+    libsvm::write_file(&out, &data)?;
+    let s = data.stats();
+    println!(
+        "wrote {out}: n={} d={} nnz={} p={:.2} ideal-speedup={:.1}x",
+        fmt::count(s.n_examples as u64),
+        fmt::count(s.n_features as u64),
+        fmt::count(s.nnz as u64),
+        s.avg_nnz,
+        s.ideal_speedup
+    );
+    Ok(())
+}
+
+fn save_model(path: &str, model: &lazyreg::model::LinearModel) -> Result<()> {
+    lazyreg::model::io::save(path, model)
+}
+
+fn load_model(path: &str, _loss: Loss) -> Result<lazyreg::model::LinearModel> {
+    lazyreg::model::io::load(path)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (opts, corpus, test_frac, data_seed) = options_from(args)?;
+    let data = load_or_generate(args, &corpus, data_seed)?;
+    let (train, test) = data.split(test_frac, EVAL_SPLIT_SEED());
+    eprintln!(
+        "training on {} examples ({} held out), d={}",
+        train.n_examples(),
+        test.n_examples(),
+        train.n_features()
+    );
+    let report = if args.flag("dense") {
+        train_dense(&train, &opts)?
+    } else {
+        train_lazy(&train, &opts)?
+    };
+    for e in &report.epochs {
+        eprintln!(
+            "epoch {}: loss={:.5} ({:.1}s, {})",
+            e.epoch,
+            e.mean_loss,
+            e.seconds,
+            fmt::rate(e.examples as f64 / e.seconds.max(1e-9), "ex")
+        );
+    }
+    let (at_half, best) = evaluate(&report.model, &test);
+    let sp = report.model.sparsity();
+    println!(
+        "throughput={} loss={:.5} acc={:.4} f1@0.5={:.4} f1*={:.4} nnz(w)={} ({:.3}% dense) rebases={}",
+        fmt::rate(report.throughput, "ex"),
+        report.final_loss(),
+        at_half.accuracy,
+        at_half.f1,
+        best.f1,
+        fmt::count(sp.nnz as u64),
+        sp.density * 100.0,
+        report.rebases
+    );
+    if let Some(path) = args.opt("save") {
+        save_model(path, &report.model)?;
+        eprintln!("saved model to {path}");
+    }
+    Ok(())
+}
+
+#[allow(non_snake_case)]
+fn EVAL_SPLIT_SEED() -> u64 {
+    0x5EED_5EED
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model_path = args.opt("model").context("--model required")?;
+    let data_path = args.opt("data").context("--data required")?;
+    let model = load_model(model_path, Loss::Logistic)?;
+    let data = libsvm::read_file(data_path, Some(model.dim()))?;
+    let (at_half, best) = evaluate(&model, &data);
+    let p: Vec<f64> = (0..data.n_examples()).map(|r| model.predict(data.x().row(r))).collect();
+    let auc = lazyreg::eval::auc(&p, data.labels());
+    println!(
+        "n={} acc={:.4} p={:.4} r={:.4} f1@0.5={:.4} | f1*={:.4} @ threshold {:.4} auc={:.4} logloss={:.5}",
+        at_half.n, at_half.accuracy, at_half.precision, at_half.recall, at_half.f1,
+        best.f1, best.threshold, auc, at_half.log_loss
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args.opt("model").context("--model required")?;
+    let model = load_model(model_path, Loss::Logistic)?;
+    let addr = args.get("addr", "127.0.0.1:7878");
+    let server = Server::spawn(model, &addr)?;
+    println!("serving predictions on {}", server.addr());
+    println!("protocol: `predict idx:val ...` | `stats` | `quit`");
+    // Run until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let (opts, mut corpus, _, data_seed) = options_from(args)?;
+    if args.opt("n").is_none() {
+        corpus.n_examples = 2_000; // keep the dense baseline tolerable
+    }
+    let data = load_or_generate(args, &corpus, data_seed)?;
+    let s = data.stats();
+    let mut o = opts;
+    o.epochs = 1;
+    o.shuffle = false;
+    eprintln!("lazy pass...");
+    let lazy = train_lazy(&data, &o)?;
+    eprintln!("dense pass...");
+    let dense = train_dense(&data, &o)?;
+    let mut t = fmt::Table::new(["trainer", "examples/s", "relative"]);
+    t.row(["lazy (ours)".into(), fmt::rate(lazy.throughput, "ex"), format!("{:.1}x", lazy.throughput / dense.throughput)]);
+    t.row(["dense".into(), fmt::rate(dense.throughput, "ex"), "1.0x".into()]);
+    println!("{}", t.render());
+    println!(
+        "d/p ideal speedup: {:.1}x | weights agree to {:.2e}",
+        s.ideal_speedup,
+        lazy.model.max_weight_diff(&dense.model)
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("data") {
+        let data = libsvm::read_file(path, None)?;
+        let s = data.stats();
+        println!(
+            "{path}: n={} d={} nnz={} p={:.2} pos-rate={:.3} ideal-speedup={:.1}x",
+            fmt::count(s.n_examples as u64),
+            fmt::count(s.n_features as u64),
+            fmt::count(s.nnz as u64),
+            s.avg_nnz,
+            s.positive_rate,
+            s.ideal_speedup
+        );
+    }
+    let dir = lazyreg::runtime::Runtime::default_dir();
+    match lazyreg::runtime::Runtime::load(&dir) {
+        Ok(rt) => {
+            let m = rt.meta();
+            println!(
+                "artifacts[{}]: platform={} batch={} dim={} catchup_dim={} table={}",
+                dir.display(),
+                rt.platform(),
+                m.batch,
+                m.dim,
+                m.catchup_dim,
+                m.table
+            );
+        }
+        Err(e) => println!("artifacts[{}]: unavailable ({e})", dir.display()),
+    }
+    Ok(())
+}

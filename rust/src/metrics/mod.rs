@@ -1,0 +1,228 @@
+//! Runtime metrics: wall-clock timers, throughput meters and latency
+//! histograms used by the trainers, the coordinator and the serving path.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop stopwatch accumulating total elapsed time.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    total: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// A stopped stopwatch at zero.
+    pub fn new() -> Stopwatch {
+        Stopwatch { started: None, total: Duration::ZERO }
+    }
+
+    /// Start (idempotent).
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop and accumulate (idempotent).
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Total accumulated time (including a running interval).
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.total + t0.elapsed(),
+            None => self.total,
+        }
+    }
+}
+
+/// Throughput meter: counts events over a wall-clock window.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    t0: Instant,
+    events: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    /// Start a fresh meter.
+    pub fn new() -> Throughput {
+        Throughput { t0: Instant::now(), events: 0 }
+    }
+
+    /// Record `n` events.
+    #[inline]
+    pub fn add(&mut self, n: u64) {
+        self.events += n;
+    }
+
+    /// Events recorded.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Events per second since construction.
+    pub fn per_sec(&self) -> f64 {
+        let secs = self.t0.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / secs
+        }
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (1µs .. ~17s, 64 buckets of
+/// quarter-powers-of-two).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: Duration,
+    max: Duration,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: vec![0; 96], count: 0, sum: Duration::ZERO, max: Duration::ZERO }
+    }
+
+    fn bucket_of(d: Duration) -> usize {
+        let us = d.as_micros().max(1) as f64;
+        // 4 buckets per doubling, offset so 1µs -> bucket 0.
+        ((us.log2() * 4.0) as usize).min(95)
+    }
+
+    fn bucket_upper_bound(i: usize) -> Duration {
+        Duration::from_secs_f64(2f64.powf((i + 1) as f64 / 4.0) * 1e-6)
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, d: Duration) {
+        self.buckets[Self::bucket_of(d)] += 1;
+        self.count += 1;
+        self.sum += d;
+        if d > self.max {
+            self.max = d;
+        }
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.sum / self.count as u32
+        }
+    }
+
+    /// Maximum observed latency.
+    pub fn max(&self) -> Duration {
+        self.max
+    }
+
+    /// Approximate quantile (bucket upper bound), q in [0, 1].
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_upper_bound(i);
+            }
+        }
+        self.max
+    }
+
+    /// One-line summary: count, mean, p50, p99, max.
+    pub fn summary(&self) -> String {
+        use crate::util::fmt::duration;
+        format!(
+            "n={} mean={} p50={} p99={} max={}",
+            self.count,
+            duration(self.mean()),
+            duration(self.quantile(0.50)),
+            duration(self.quantile(0.99)),
+            duration(self.max)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let t1 = sw.elapsed();
+        assert!(t1 >= Duration::from_millis(4));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > t1);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.events(), 15);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 40, 50, 1000, 2000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.max() * 2);
+        assert!(h.mean() >= Duration::from_micros(10));
+        assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn histogram_bucket_monotone() {
+        let b1 = LatencyHistogram::bucket_of(Duration::from_micros(1));
+        let b2 = LatencyHistogram::bucket_of(Duration::from_micros(100));
+        let b3 = LatencyHistogram::bucket_of(Duration::from_millis(100));
+        assert!(b1 <= b2 && b2 <= b3);
+    }
+}

@@ -1,0 +1,156 @@
+//! Model persistence: a sparse text format (only non-zero weights are
+//! stored, so elastic-net models serialize compactly).
+//!
+//! ```text
+//! lazyreg-model v1
+//! loss logistic
+//! dim 260941
+//! bias -0.0123
+//! 17:0.442
+//! 204:-1.73
+//! ```
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::loss::Loss;
+
+use super::LinearModel;
+
+/// Serialize a model (non-zero weights only).
+pub fn write<W: std::io::Write>(w: W, model: &LinearModel) -> Result<()> {
+    let mut out = BufWriter::new(w);
+    writeln!(out, "lazyreg-model v1")?;
+    writeln!(out, "loss {}", model.loss.name())?;
+    writeln!(out, "dim {}", model.dim())?;
+    writeln!(out, "bias {}", model.bias)?;
+    for (j, &wj) in model.weights.iter().enumerate() {
+        if wj != 0.0 {
+            writeln!(out, "{j}:{wj}")?;
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Deserialize a model written by [`write`].
+pub fn read<R: std::io::Read>(r: R) -> Result<LinearModel> {
+    let mut lines = BufReader::new(r).lines();
+    let mut next = || -> Result<String> {
+        lines
+            .next()
+            .context("model file truncated")?
+            .context("model file read error")
+    };
+    let magic = next()?;
+    if magic.trim() != "lazyreg-model v1" {
+        bail!("not a lazyreg model file (bad magic {magic:?})");
+    }
+    let loss_line = next()?;
+    let loss = Loss::parse(
+        loss_line
+            .strip_prefix("loss ")
+            .with_context(|| format!("expected `loss ...`, got {loss_line:?}"))?,
+    )?;
+    let dim_line = next()?;
+    let dim: usize = dim_line
+        .strip_prefix("dim ")
+        .with_context(|| format!("expected `dim ...`, got {dim_line:?}"))?
+        .trim()
+        .parse()?;
+    let bias_line = next()?;
+    let bias: f64 = bias_line
+        .strip_prefix("bias ")
+        .with_context(|| format!("expected `bias ...`, got {bias_line:?}"))?
+        .trim()
+        .parse()?;
+
+    let mut model = LinearModel::zeros(dim, loss);
+    model.bias = bias;
+    for line in lines {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (j, wj) = line
+            .split_once(':')
+            .with_context(|| format!("bad weight line {line:?}"))?;
+        let j: usize = j.parse()?;
+        anyhow::ensure!(j < dim, "weight index {j} >= dim {dim}");
+        model.weights[j] = wj.parse()?;
+    }
+    Ok(model)
+}
+
+/// Save to a file path.
+pub fn save<P: AsRef<Path>>(path: P, model: &LinearModel) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    write(f, model)
+}
+
+/// Load from a file path.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<LinearModel> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> LinearModel {
+        let mut m = LinearModel::zeros(100, Loss::Logistic);
+        m.bias = -0.5;
+        m.weights[3] = 1.25;
+        m.weights[97] = -2.5e-7;
+        m
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let m = model();
+        let mut buf = Vec::new();
+        write(&mut buf, &m).unwrap();
+        let m2 = read(buf.as_slice()).unwrap();
+        assert_eq!(m, m2);
+        // sparse: only 2 weight lines
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text.lines().count(), 4 + 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read("nonsense".as_bytes()).is_err());
+        assert!(read("lazyreg-model v1\nloss wat\ndim 4\nbias 0\n".as_bytes()).is_err());
+        assert!(
+            read("lazyreg-model v1\nloss logistic\ndim 4\nbias 0\n9:1\n".as_bytes()).is_err(),
+            "out-of-range index must fail"
+        );
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let path = std::env::temp_dir().join("lazyreg_model_io_test.model");
+        let m = model();
+        save(&path, &m).unwrap();
+        let m2 = load(&path).unwrap();
+        assert_eq!(m, m2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn preserves_loss_kind() {
+        for loss in [Loss::Logistic, Loss::Squared, Loss::Hinge] {
+            let mut m = LinearModel::zeros(3, loss);
+            m.weights[1] = 1.0;
+            let mut buf = Vec::new();
+            write(&mut buf, &m).unwrap();
+            assert_eq!(read(buf.as_slice()).unwrap().loss, loss);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! The linear model: a dense weight vector + bias with sparse scoring.
+//!
+//! Weights are stored in f64 for exact lazy-vs-dense equivalence tests;
+//! the XLA artifacts use f32 and conversions happen at the runtime
+//! boundary.
+
+pub mod io;
+
+use crate::data::RowView;
+use crate::loss::Loss;
+
+/// A linear model `z = w·x + b`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearModel {
+    /// Dense weights, length = nominal dimensionality d.
+    pub weights: Vec<f64>,
+    /// Intercept (conventionally unregularized).
+    pub bias: f64,
+    /// The loss used to interpret scores.
+    pub loss: Loss,
+}
+
+/// Weight-sparsity summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparsityStats {
+    /// Total weights.
+    pub total: usize,
+    /// Non-zero weights.
+    pub nnz: usize,
+    /// nnz / total.
+    pub density: f64,
+    /// Maximum |w|.
+    pub max_abs: f64,
+    /// ℓ1 norm.
+    pub l1_norm: f64,
+    /// ℓ2 norm.
+    pub l2_norm: f64,
+}
+
+impl LinearModel {
+    /// Zero-initialized model of dimension `d`.
+    pub fn zeros(d: usize, loss: Loss) -> LinearModel {
+        LinearModel { weights: vec![0.0; d], bias: 0.0, loss }
+    }
+
+    /// Dimensionality.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Raw score for a sparse row.
+    #[inline]
+    pub fn score(&self, row: RowView<'_>) -> f64 {
+        let mut z = self.bias;
+        for (j, v) in row.iter() {
+            z += f64::from(v) * self.weights[j as usize];
+        }
+        z
+    }
+
+    /// Prediction in label units (probability for logistic).
+    #[inline]
+    pub fn predict(&self, row: RowView<'_>) -> f64 {
+        self.loss.predict(self.score(row))
+    }
+
+    /// Per-example loss.
+    #[inline]
+    pub fn example_loss(&self, row: RowView<'_>, y: f64) -> f64 {
+        self.loss.value(self.score(row), y)
+    }
+
+    /// Weight-sparsity summary (the elastic-net selling point).
+    pub fn sparsity(&self) -> SparsityStats {
+        let total = self.weights.len();
+        let mut nnz = 0usize;
+        let mut max_abs = 0.0f64;
+        let mut l1 = 0.0f64;
+        let mut l2 = 0.0f64;
+        for &w in &self.weights {
+            if w != 0.0 {
+                nnz += 1;
+            }
+            max_abs = max_abs.max(w.abs());
+            l1 += w.abs();
+            l2 += w * w;
+        }
+        SparsityStats {
+            total,
+            nnz,
+            density: if total == 0 { 0.0 } else { nnz as f64 / total as f64 },
+            max_abs,
+            l1_norm: l1,
+            l2_norm: l2.sqrt(),
+        }
+    }
+
+    /// f32 copy of the weights (for the XLA runtime boundary).
+    pub fn weights_f32(&self) -> Vec<f32> {
+        self.weights.iter().map(|&w| w as f32).collect()
+    }
+
+    /// Maximum absolute weight difference vs another model (equivalence
+    /// reports).
+    pub fn max_weight_diff(&self, other: &LinearModel) -> f64 {
+        assert_eq!(self.dim(), other.dim());
+        let mut m: f64 = (self.bias - other.bias).abs();
+        for (a, b) in self.weights.iter().zip(other.weights.iter()) {
+            m = m.max((a - b).abs());
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CsrMatrix;
+
+    fn row_fixture() -> CsrMatrix {
+        let mut x = CsrMatrix::empty(4);
+        x.push_row(vec![(0, 1.0), (2, 2.0)]);
+        x
+    }
+
+    #[test]
+    fn score_and_predict() {
+        let x = row_fixture();
+        let mut m = LinearModel::zeros(4, Loss::Logistic);
+        m.weights[0] = 0.5;
+        m.weights[2] = -0.25;
+        m.bias = 0.1;
+        let z = m.score(x.row(0));
+        assert!((z - (0.5 - 0.5 + 0.1)).abs() < 1e-12);
+        let p = m.predict(x.row(0));
+        assert!((p - crate::loss::sigmoid(z)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sparsity_stats() {
+        let mut m = LinearModel::zeros(5, Loss::Logistic);
+        m.weights[1] = 3.0;
+        m.weights[3] = -4.0;
+        let s = m.sparsity();
+        assert_eq!(s.total, 5);
+        assert_eq!(s.nnz, 2);
+        assert!((s.density - 0.4).abs() < 1e-12);
+        assert_eq!(s.max_abs, 4.0);
+        assert_eq!(s.l1_norm, 7.0);
+        assert!((s.l2_norm - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_weight_diff_includes_bias() {
+        let mut a = LinearModel::zeros(3, Loss::Logistic);
+        let mut b = a.clone();
+        assert_eq!(a.max_weight_diff(&b), 0.0);
+        b.weights[2] = 0.5;
+        assert_eq!(a.max_weight_diff(&b), 0.5);
+        a.bias = -1.0;
+        assert_eq!(a.max_weight_diff(&b), 1.0);
+    }
+}

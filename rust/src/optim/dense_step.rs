@@ -1,0 +1,136 @@
+//! Per-step dense regularization updates — the baseline semantics the
+//! closed-form lazy updates must reproduce exactly.
+//!
+//! Dense training applies, at every iteration and to **every** weight:
+//!
+//! * SGD (paper Eq. 9, truncated/clipped subgradient):
+//!   `w ← sgn(w)[(1 − ηλ₂)|w| − ηλ₁]₊`
+//! * FoBoS (solution of the paper's Eq. 3 prox problem):
+//!   `w ← sgn(w)[(|w| − ηλ₁)/(1 + ηλ₂)]₊`
+//!
+//! For features present in the current example the loss-gradient step is
+//! applied *first*, then this regularization map — the standard truncated
+//! gradient / FoBoS ordering. The lazy trainer composes the identical maps,
+//! so lazy ≡ dense bit-for-bit up to float rounding.
+
+use super::Algo;
+
+/// Sign with `sign(0) = 0` (note: `f64::signum(+0.0)` is `1.0`, which
+/// would be wrong here).
+#[inline]
+pub fn sign(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// One SGD regularization-only update (Eq. 9).
+#[inline]
+pub fn sgd_reg_update(w: f64, eta: f64, lam1: f64, lam2: f64) -> f64 {
+    debug_assert!(eta * lam2 < 1.0, "eta*lam2 >= 1 flips signs (paper §5.2)");
+    let mag = (1.0 - eta * lam2) * w.abs() - eta * lam1;
+    sign(w) * mag.max(0.0)
+}
+
+/// One FoBoS proximal regularization update (Eq. 3 solution).
+#[inline]
+pub fn fobos_reg_update(w: f64, eta: f64, lam1: f64, lam2: f64) -> f64 {
+    let mag = (w.abs() - eta * lam1) / (1.0 + eta * lam2);
+    sign(w) * mag.max(0.0)
+}
+
+/// One regularization-only update for `algo`.
+#[inline]
+pub fn reg_update(algo: Algo, w: f64, eta: f64, lam1: f64, lam2: f64) -> f64 {
+    match algo {
+        Algo::Sgd => sgd_reg_update(w, eta, lam1, lam2),
+        Algo::Fobos => fobos_reg_update(w, eta, lam1, lam2),
+    }
+}
+
+/// Apply `n` successive regularization updates step by step with a
+/// schedule slice `etas[0..n]` (ground truth for the lazy closed form).
+pub fn sequential_reg_updates(algo: Algo, mut w: f64, etas: &[f64], lam1: f64, lam2: f64) -> f64 {
+    for &eta in etas {
+        w = reg_update(algo, w, eta, lam1, lam2);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_of_zero_is_zero() {
+        assert_eq!(sign(0.0), 0.0);
+        assert_eq!(sign(-0.0), 0.0);
+        assert_eq!(sign(3.0), 1.0);
+        assert_eq!(sign(-3.0), -1.0);
+    }
+
+    #[test]
+    fn sgd_shrinks_toward_zero_and_clips() {
+        let w = sgd_reg_update(1.0, 0.1, 0.5, 0.5);
+        // (1 - 0.05)*1 - 0.05 = 0.90
+        assert!((w - 0.90).abs() < 1e-12);
+        // symmetric for negative weights
+        assert!((sgd_reg_update(-1.0, 0.1, 0.5, 0.5) + 0.90).abs() < 1e-12);
+        // clipping: small weight dies
+        assert_eq!(sgd_reg_update(0.01, 0.1, 0.5, 0.0), 0.0);
+        // zero stays zero
+        assert_eq!(sgd_reg_update(0.0, 0.1, 0.5, 0.5), 0.0);
+    }
+
+    #[test]
+    fn fobos_shrinks_toward_zero_and_clips() {
+        let w = fobos_reg_update(1.0, 0.1, 0.5, 0.5);
+        // (1 - 0.05)/(1.05)
+        assert!((w - 0.95 / 1.05).abs() < 1e-12);
+        assert_eq!(fobos_reg_update(0.02, 0.1, 0.5, 0.5), 0.0);
+        assert_eq!(fobos_reg_update(0.0, 0.1, 0.5, 0.5), 0.0);
+    }
+
+    #[test]
+    fn pure_l2_never_crosses_zero() {
+        // Paper §5.2: with eta*lam2 < 1 the SGD l2 update cannot flip sign.
+        let mut w = 1e-8;
+        for _ in 0..1000 {
+            w = sgd_reg_update(w, 0.5, 0.0, 1.9);
+            assert!(w >= 0.0);
+        }
+        let mut w = -1e-8;
+        for _ in 0..1000 {
+            w = fobos_reg_update(w, 0.5, 0.0, 10.0);
+            assert!(w <= 0.0);
+        }
+    }
+
+    #[test]
+    fn clipping_is_absorbing() {
+        // Once a weight hits exactly 0 under l1/enet it stays 0 forever.
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            let w = sequential_reg_updates(algo, 0.05, &[0.3; 50], 0.01, 0.1);
+            assert_eq!(w, 0.0);
+            let w2 = reg_update(algo, w, 0.3, 0.01, 0.1);
+            assert_eq!(w2, 0.0);
+        }
+    }
+
+    #[test]
+    fn sequential_matches_manual_composition() {
+        let etas = [0.3, 0.2, 0.1];
+        let mut w = 0.8;
+        for &e in &etas {
+            w = fobos_reg_update(w, e, 0.01, 0.05);
+        }
+        assert_eq!(
+            w,
+            sequential_reg_updates(Algo::Fobos, 0.8, &etas, 0.01, 0.05)
+        );
+    }
+}

@@ -1,0 +1,460 @@
+//! The dynamic-programming cache of learning-rate partial sums/products —
+//! the data structure that makes every lazy update O(1) (paper §5–6).
+//!
+//! One O(1) append per stochastic iteration maintains the shifted tables
+//!
+//! ```text
+//! pt[i] = P(i−1) = Π_{τ<i} a_τ        pt[0] = 1
+//! bt[i] = B(i−1)                       bt[0] = 0
+//! ```
+//!
+//! with `a_τ = 1 − η(τ)λ₂` for SGD and `a_τ = 1/(1 + η(τ)λ₂)` for FoBoS,
+//! and the inner sums `B` as documented in [`super::lazy`] (including the
+//! SGD erratum correction).
+//!
+//! ## Space budget + numerical rebase
+//!
+//! The tables grow O(T) (paper footnote 1). Worse, `P(t)` decays
+//! geometrically and underflows f64 around 10⁻³⁰⁸ while `B(t)` grows as
+//! its inverse. [`DpCache::needs_rebase`] fires when either the space
+//! budget fills or the tail product crosses a safety threshold; the
+//! trainer then brings **all** weights current (amortized O(1) per
+//! iteration, exactly the paper's suggested flush) and calls
+//! [`DpCache::rebase`], which resets the tables to `[1]`/`[0]` while the
+//! *global* step count keeps advancing the schedule.
+
+use super::{dense_step, lazy, Algo, Regularizer, Schedule};
+
+/// Default maximum table length before a flush is requested (entries are
+/// two f64s; 1M entries = 16 MB).
+pub const DEFAULT_SPACE_BUDGET: usize = 1 << 20;
+
+/// Rebase when the tail partial product falls below this (long before
+/// f64 underflow at ~1e−308; keeps `bt` well-conditioned too).
+pub const MIN_TAIL_PRODUCT: f64 = 1e-100;
+
+/// DP cache over one training run.
+#[derive(Debug, Clone)]
+pub struct DpCache {
+    algo: Algo,
+    reg: Regularizer,
+    schedule: Schedule,
+    /// Global step count (never resets; drives the schedule).
+    global_t: u64,
+    /// Shifted partial products relative to the current rebase epoch.
+    pt: Vec<f64>,
+    /// Reciprocals 1/pt — turns the per-feature division in the catch-up
+    /// hot path into a multiply (division is ~5x the latency).
+    inv_pt: Vec<f64>,
+    /// Shifted inner sums relative to the current rebase epoch.
+    bt: Vec<f64>,
+    /// Rebase epoch counter (diagnostics; trainers assert against it).
+    epoch: u64,
+    space_budget: usize,
+}
+
+impl DpCache {
+    /// Create a cache. Panics if the schedule/λ₂ combination violates the
+    /// SGD validity condition η(0)·λ₂ < 1 (paper §5.2: sign flips).
+    pub fn new(algo: Algo, reg: Regularizer, schedule: Schedule) -> DpCache {
+        Self::with_budget(algo, reg, schedule, DEFAULT_SPACE_BUDGET)
+    }
+
+    /// Create with an explicit space budget (table slots before flush).
+    pub fn with_budget(
+        algo: Algo,
+        reg: Regularizer,
+        schedule: Schedule,
+        space_budget: usize,
+    ) -> DpCache {
+        assert!(space_budget >= 2, "budget must allow at least one step");
+        if algo == Algo::Sgd {
+            // Schedules are non-increasing, so eta(0) is the max rate.
+            assert!(
+                schedule.eta(0) * reg.lam2 < 1.0,
+                "SGD requires eta0*lam2 < 1 (got {} * {})",
+                schedule.eta(0),
+                reg.lam2
+            );
+        }
+        DpCache {
+            algo,
+            reg,
+            schedule,
+            global_t: 0,
+            pt: vec![1.0],
+            inv_pt: vec![1.0],
+            bt: vec![0.0],
+            epoch: 0,
+            space_budget,
+        }
+    }
+
+    /// Current local index `k` — weights with `psi == k` are current.
+    #[inline]
+    pub fn k(&self) -> u32 {
+        (self.pt.len() - 1) as u32
+    }
+
+    /// Global iteration count across rebases.
+    #[inline]
+    pub fn global_t(&self) -> u64 {
+        self.global_t
+    }
+
+    /// Rebase epoch (incremented by each [`DpCache::rebase`]).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The learning rate the *next* [`DpCache::step`] will use.
+    #[inline]
+    pub fn eta_now(&self) -> f64 {
+        self.schedule.eta(self.global_t)
+    }
+
+    /// Append the entry for the current iteration; O(1).
+    /// Returns the learning rate used.
+    #[inline]
+    pub fn step(&mut self) -> f64 {
+        let eta = self.schedule.eta(self.global_t);
+        let i = self.pt.len() - 1;
+        let (a, b_inc) = match self.algo {
+            Algo::Sgd => {
+                let a = 1.0 - eta * self.reg.lam2;
+                debug_assert!(a > 0.0, "eta*lam2 >= 1 at t={}", self.global_t);
+                // erratum-corrected: B(t) += eta(t)/P(t)
+                (a, eta / (a * self.pt[i]))
+            }
+            Algo::Fobos => {
+                let a = 1.0 / (1.0 + eta * self.reg.lam2);
+                // as printed:          beta(t) += eta(t)/Phi(t-1)
+                (a, eta / self.pt[i])
+            }
+        };
+        let p_next = a * self.pt[i];
+        self.pt.push(p_next);
+        self.inv_pt.push(1.0 / p_next);
+        self.bt.push(self.bt[i] + b_inc);
+        self.global_t += 1;
+        eta
+    }
+
+    /// Per-example snapshot of the catch-up constants: hoists the table
+    /// tail loads and the λ₁-scaled terms out of the per-feature loop.
+    #[inline]
+    pub fn snapshot(&self) -> CatchupSnapshot<'_> {
+        let k = self.pt.len() - 1;
+        let pk = self.pt[k];
+        CatchupSnapshot {
+            k: k as u32,
+            pk,
+            c2: self.reg.lam1 * pk,
+            c1: self.reg.lam1 * pk * self.bt[k],
+            inv_pt: &self.inv_pt,
+            bt: &self.bt,
+            pure_scale: self.reg.lam1 == 0.0,
+        }
+    }
+
+    /// Bring a weight current from `psi` to `k` in O(1)
+    /// (Eq. 4 / 6 / 10 / 15 / 16, depending on λ and algo).
+    #[inline]
+    pub fn catchup(&self, w: f64, psi: u32) -> f64 {
+        let k = self.pt.len() - 1;
+        let psi = psi as usize;
+        debug_assert!(psi <= k, "psi {psi} beyond k {k} (missed rebase reset?)");
+        if psi == k {
+            return w;
+        }
+        if w == 0.0 {
+            // 0 stays 0 under every family: clipping is absorbing and the
+            // multiplicative factors never flip signs.
+            return 0.0;
+        }
+        if self.reg.lam1 == 0.0 {
+            return lazy::catchup_l22(w, self.pt[k], self.pt[psi]);
+        }
+        lazy::catchup(w, self.pt[k], self.pt[psi], self.bt[k], self.bt[psi], self.reg.lam1)
+    }
+
+    /// One per-step regularization update at the *current* rate (used by
+    /// the trainer right after a gradient step; equals the dense map).
+    #[inline]
+    pub fn reg_update_now(&self, w: f64) -> f64 {
+        dense_step::reg_update(self.algo, w, self.eta_now(), self.reg.lam1, self.reg.lam2)
+    }
+
+    /// Should the trainer flush all weights and rebase now?
+    #[inline]
+    pub fn needs_rebase(&self) -> bool {
+        self.pt.len() >= self.space_budget || self.pt[self.pt.len() - 1] < MIN_TAIL_PRODUCT
+    }
+
+    /// Reset tables after the trainer brought every weight current.
+    /// All ψ values must be reset to 0 by the caller.
+    pub fn rebase(&mut self) {
+        self.pt.clear();
+        self.pt.push(1.0);
+        self.inv_pt.clear();
+        self.inv_pt.push(1.0);
+        self.bt.clear();
+        self.bt.push(0.0);
+        self.epoch += 1;
+    }
+
+    /// Table views (for the XLA catch-up artifact and diagnostics).
+    pub fn tables(&self) -> (&[f64], &[f64]) {
+        (&self.pt, &self.bt)
+    }
+
+    /// Number of live table slots (diagnostics).
+    pub fn table_len(&self) -> usize {
+        self.pt.len()
+    }
+
+    /// The algo this cache serves.
+    pub fn algo(&self) -> Algo {
+        self.algo
+    }
+
+    /// The regularizer this cache serves.
+    pub fn reg(&self) -> Regularizer {
+        self.reg
+    }
+
+    /// The schedule this cache serves.
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+}
+
+/// Per-example view of the catch-up constants (see [`DpCache::snapshot`]).
+///
+/// Algebra: Eq. 10/16 rearranged so the per-feature work is one gather
+/// pair, one fused multiply-add shape, and a clamp:
+///
+/// ```text
+/// mag = |w| * pk * inv_pt[ψ] - (c1 - c2 * bt[ψ])
+///   where c2 = λ₁·pk, c1 = λ₁·pk·bt[k]
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct CatchupSnapshot<'a> {
+    /// Current table index.
+    pub k: u32,
+    pk: f64,
+    c1: f64,
+    c2: f64,
+    inv_pt: &'a [f64],
+    bt: &'a [f64],
+    pure_scale: bool,
+}
+
+impl<'a> CatchupSnapshot<'a> {
+    /// O(1) catch-up of one weight from `psi` to `k` (hot-path variant of
+    /// [`DpCache::catchup`]; identical semantics, fewer loads/branches).
+    #[inline(always)]
+    pub fn catchup(&self, w: f64, psi: u32) -> f64 {
+        if psi == self.k {
+            return w;
+        }
+        let scale = self.pk * self.inv_pt[psi as usize];
+        if self.pure_scale {
+            return w * scale;
+        }
+        if w == 0.0 {
+            return 0.0;
+        }
+        let shrink = self.c1 - self.c2 * self.bt[psi as usize];
+        let mag = w.abs() * scale - shrink;
+        dense_step::sign(w) * mag.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::dense_step::sequential_reg_updates;
+    use crate::testing::{assert_close, property};
+
+    fn etas(s: &Schedule, n: usize) -> Vec<f64> {
+        (0..n as u64).map(|t| s.eta(t)).collect()
+    }
+
+    #[test]
+    fn cache_catchup_equals_sequential_for_all_families() {
+        property("DpCache catch-up == sequential", 250, |g| {
+            let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+            let reg = *g.choose(&[
+                Regularizer::none(),
+                Regularizer::l1(0.01),
+                Regularizer::l22(0.4),
+                Regularizer::elastic_net(0.02, 0.3),
+            ]);
+            let schedule = *g.choose(&[
+                Schedule::Constant { eta0: 0.3 },
+                Schedule::InvT { eta0: 0.8 },
+                Schedule::InvSqrtT { eta0: 0.6 },
+            ]);
+            let n = g.usize_in(1, 150);
+            let mut cache = DpCache::new(algo, reg, schedule);
+            for _ in 0..n {
+                cache.step();
+            }
+            let psi = g.usize_in(0, n) as u32;
+            let w0 = g.f64_in(-2.0, 2.0);
+            let lazy = cache.catchup(w0, psi);
+            let all = etas(&schedule, n);
+            let seq = sequential_reg_updates(algo, w0, &all[psi as usize..], reg.lam1, reg.lam2);
+            assert_close(lazy, seq, 1e-10, 1e-12);
+        });
+    }
+
+    #[test]
+    fn snapshot_catchup_matches_cache_catchup() {
+        property("snapshot == cache catch-up", 200, |g| {
+            let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+            let reg = *g.choose(&[
+                Regularizer::none(),
+                Regularizer::l1(0.01),
+                Regularizer::l22(0.3),
+                Regularizer::elastic_net(0.01, 0.2),
+            ]);
+            let mut cache = DpCache::new(algo, reg, Schedule::InvSqrtT { eta0: 0.6 });
+            let n = g.usize_in(1, 200);
+            for _ in 0..n {
+                cache.step();
+            }
+            let snap = cache.snapshot();
+            for _ in 0..20 {
+                let w = g.f64_in(-2.0, 2.0);
+                let psi = g.usize_in(0, n) as u32;
+                assert_close(snap.catchup(w, psi), cache.catchup(w, psi), 1e-12, 1e-14);
+            }
+        });
+    }
+
+    #[test]
+    fn k_tracks_steps() {
+        let mut c = DpCache::new(
+            Algo::Fobos,
+            Regularizer::elastic_net(0.01, 0.1),
+            Schedule::Constant { eta0: 0.1 },
+        );
+        assert_eq!(c.k(), 0);
+        for i in 1..=10 {
+            c.step();
+            assert_eq!(c.k(), i);
+        }
+        assert_eq!(c.global_t(), 10);
+    }
+
+    #[test]
+    fn step_returns_schedule_rate() {
+        let mut c = DpCache::new(
+            Algo::Sgd,
+            Regularizer::l1(0.01),
+            Schedule::InvT { eta0: 1.0 },
+        );
+        assert_close(c.step(), 1.0, 1e-15, 0.0);
+        assert_close(c.step(), 0.5, 1e-15, 0.0);
+        assert_close(c.eta_now(), 1.0 / 3.0, 1e-15, 0.0);
+    }
+
+    #[test]
+    fn rebase_preserves_semantics_across_flush() {
+        // Train "virtually": weight untouched for n1 steps, flushed
+        // mid-way, then n2 more steps. Result must equal the no-flush run.
+        property("rebase-equivalence", 150, |g| {
+            let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+            let reg = Regularizer::elastic_net(g.f64_in(0.0, 0.02), g.f64_in(0.0, 0.5));
+            let schedule = Schedule::InvSqrtT { eta0: 0.5 };
+            let n1 = g.usize_in(1, 60);
+            let n2 = g.usize_in(1, 60);
+            let w0 = g.f64_in(-1.5, 1.5);
+
+            // continuous run
+            let mut c = DpCache::new(algo, reg, schedule);
+            for _ in 0..(n1 + n2) {
+                c.step();
+            }
+            let no_flush = c.catchup(w0, 0);
+
+            // flushed run: catch up at n1, rebase, continue
+            let mut c2 = DpCache::new(algo, reg, schedule);
+            for _ in 0..n1 {
+                c2.step();
+            }
+            let w_mid = c2.catchup(w0, 0);
+            c2.rebase();
+            assert_eq!(c2.k(), 0);
+            assert_eq!(c2.global_t(), n1 as u64); // schedule keeps advancing
+            for _ in 0..n2 {
+                c2.step();
+            }
+            let flushed = c2.catchup(w_mid, 0);
+            assert_close(no_flush, flushed, 1e-10, 1e-12);
+        });
+    }
+
+    #[test]
+    fn needs_rebase_on_budget() {
+        let mut c = DpCache::with_budget(
+            Algo::Fobos,
+            Regularizer::l22(0.5),
+            Schedule::Constant { eta0: 0.5 },
+            16,
+        );
+        assert!(!c.needs_rebase());
+        for _ in 0..15 {
+            c.step();
+        }
+        assert!(c.needs_rebase());
+        c.rebase();
+        assert!(!c.needs_rebase());
+        assert_eq!(c.epoch(), 1);
+    }
+
+    #[test]
+    fn needs_rebase_on_underflow_risk() {
+        // Huge lam2 under FoBoS: P decays by ~1/3 per step; 1e-100 is hit
+        // after ~210 steps, long before the 2^20 budget.
+        let mut c = DpCache::new(
+            Algo::Fobos,
+            Regularizer::l22(4.0),
+            Schedule::Constant { eta0: 0.5 },
+        );
+        let mut steps = 0;
+        while !c.needs_rebase() {
+            c.step();
+            steps += 1;
+            assert!(steps < 1000, "rebase never triggered");
+        }
+        let (pt, _) = c.tables();
+        assert!(pt[pt.len() - 1] >= f64::MIN_POSITIVE, "underflowed before rebase");
+    }
+
+    #[test]
+    #[should_panic(expected = "eta0*lam2")]
+    fn sgd_validity_enforced() {
+        DpCache::new(
+            Algo::Sgd,
+            Regularizer::l22(3.0),
+            Schedule::Constant { eta0: 0.5 },
+        );
+    }
+
+    #[test]
+    fn zero_weight_stays_zero_under_l1() {
+        let mut c = DpCache::new(
+            Algo::Sgd,
+            Regularizer::elastic_net(0.01, 0.1),
+            Schedule::Constant { eta0: 0.3 },
+        );
+        for _ in 0..50 {
+            c.step();
+        }
+        assert_eq!(c.catchup(0.0, 3), 0.0);
+    }
+}

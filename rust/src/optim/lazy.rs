@@ -1,0 +1,189 @@
+//! The closed-form constant-time lazy catch-up (paper Eq. 4, 6, 10, 15,
+//! 16) expressed over the shifted DP tables of [`super::dp`].
+//!
+//! With tables `pt[i] = P(i−1)` (so `pt[0] = P(−1) = 1`) and
+//! `bt[i] = B(i−1)` (`bt[0] = 0`), bringing a weight current from
+//! iteration ψ to k — i.e. applying regularization steps ψ, ψ+1, …, k−1 —
+//! is the single expression
+//!
+//! ```text
+//! w ← sgn(w) · [ |w| · pt[k]/pt[ψ]  −  λ₁ · pt[k] · (bt[k] − bt[ψ]) ]₊
+//! ```
+//!
+//! Every update family in the paper is this one formula under the right
+//! tables:
+//!
+//! | family | a_t (product term) | inner-sum term | paper eq. |
+//! |---|---|---|---|
+//! | SGD ℓ1            | 1                  | η(t)          | Eq. 4  |
+//! | SGD ℓ2²           | 1 − η(t)λ₂         | —             | Eq. 6  |
+//! | SGD elastic net   | 1 − η(t)λ₂         | η(t)/P(t)     | Eq. 10 (erratum: paper prints η(t)/P(t−1)) |
+//! | FoBoS ℓ2²         | 1/(1 + η(t)λ₂)     | —             | Eq. 15 |
+//! | FoBoS elastic net | 1/(1 + η(t)λ₂)     | η(t)/Φ(t−1)   | Eq. 16 |
+//!
+//! The SGD erratum: expanding `w ← a_t|w| − η_t λ₁` shows the shrinkage
+//! applied at step τ is *not* multiplied by `a_τ` itself, so its
+//! coefficient is `P(k−1)/P(τ)`, giving `B(t) = Σ η(τ)/P(τ)`. For FoBoS
+//! the shrinkage sits inside the product — `w ← a_t(|w| − η_t λ₁)` — and
+//! the paper's `β(t) = Σ η(τ)/Φ(τ−1)` is correct as printed. The property
+//! tests below verify both against step-by-step application.
+
+use super::dense_step::sign;
+
+/// Core closed-form catch-up given gathered table entries.
+///
+/// * `pk = pt[k]`, `p_psi = pt[ψ]` — shifted partial products;
+/// * `bk = bt[k]`, `b_psi = bt[ψ]` — shifted inner sums;
+/// * `lam1` — ℓ1 strength.
+#[inline]
+pub fn catchup(w: f64, pk: f64, p_psi: f64, bk: f64, b_psi: f64, lam1: f64) -> f64 {
+    let mag = w.abs() * (pk / p_psi) - lam1 * pk * (bk - b_psi);
+    sign(w) * mag.max(0.0)
+}
+
+/// ℓ2²-only fast path (no clipping possible since every a_t > 0).
+#[inline]
+pub fn catchup_l22(w: f64, pk: f64, p_psi: f64) -> f64 {
+    w * (pk / p_psi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::dense_step::{reg_update, sequential_reg_updates};
+    use crate::optim::{Algo, Schedule};
+    use crate::testing::{assert_close, property};
+
+    /// Build shifted tables for an explicit eta sequence (mirrors dp.rs,
+    /// duplicated here deliberately as an independent oracle).
+    fn tables(algo: Algo, etas: &[f64], lam2: f64) -> (Vec<f64>, Vec<f64>) {
+        let mut pt = vec![1.0f64];
+        let mut bt = vec![0.0f64];
+        for (t, &eta) in etas.iter().enumerate() {
+            let a = match algo {
+                Algo::Sgd => 1.0 - eta * lam2,
+                Algo::Fobos => 1.0 / (1.0 + eta * lam2),
+            };
+            pt.push(a * pt[t]);
+            let denom = match algo {
+                Algo::Sgd => pt[t + 1], // eta(t)/P(t)   (erratum-corrected)
+                Algo::Fobos => pt[t],   // eta(t)/P(t-1) (as printed)
+            };
+            bt.push(bt[t] + eta / denom);
+        }
+        (pt, bt)
+    }
+
+    fn schedule_etas(s: &Schedule, n: usize) -> Vec<f64> {
+        (0..n as u64).map(|t| s.eta(t)).collect()
+    }
+
+    #[test]
+    fn closed_form_equals_sequential_everywhere() {
+        // The paper's core claim, swept over algo x schedule x lambdas x
+        // (psi, k) pairs x weight magnitudes.
+        property("lazy catch-up == sequential dense updates", 300, |g| {
+            let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+            let schedule = *g.choose(&[
+                Schedule::Constant { eta0: 0.4 },
+                Schedule::InvT { eta0: 0.9 },
+                Schedule::InvSqrtT { eta0: 0.7 },
+                Schedule::Exponential { eta0: 0.5, gamma: 0.97 },
+                Schedule::Step { eta0: 0.5, every: 7, factor: 0.5 },
+            ]);
+            let lam1 = if g.bool(0.3) { 0.0 } else { g.f64_in(0.0, 0.05) };
+            // Keep eta0*lam2 < 1 for SGD validity (paper §5.2).
+            let lam2 = if g.bool(0.3) { 0.0 } else { g.f64_in(0.0, 0.9) };
+            let n = g.usize_in(1, 120);
+            let etas = schedule_etas(&schedule, n);
+            let (pt, bt) = tables(algo, &etas, lam2);
+
+            let psi = g.usize_in(0, n);
+            let k = g.usize_in(psi, n);
+            let w0 = g.f64_in(-2.0, 2.0);
+
+            let lazy = catchup(w0, pt[k], pt[psi], bt[k], bt[psi], lam1);
+            let seq = sequential_reg_updates(algo, w0, &etas[psi..k], lam1, lam2);
+            assert_close(lazy, seq, 1e-10, 1e-12);
+        });
+    }
+
+    #[test]
+    fn closed_form_is_transitive() {
+        // catch-up psi->m then m->k == catch-up psi->k directly.
+        property("catch-up composes transitively", 200, |g| {
+            let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+            let lam1 = g.f64_in(0.0, 0.03);
+            let lam2 = g.f64_in(0.0, 0.5);
+            let n = g.usize_in(2, 100);
+            let etas: Vec<f64> = (0..n).map(|t| 0.5 / (1.0 + t as f64).sqrt()).collect();
+            let (pt, bt) = tables(algo, &etas, lam2);
+            let psi = g.usize_in(0, n - 2);
+            let m = g.usize_in(psi, n - 1);
+            let k = g.usize_in(m, n);
+            let w0 = g.f64_in(-1.5, 1.5);
+
+            let direct = catchup(w0, pt[k], pt[psi], bt[k], bt[psi], lam1);
+            let mid = catchup(w0, pt[m], pt[psi], bt[m], bt[psi], lam1);
+            let two_hop = catchup(mid, pt[k], pt[m], bt[k], bt[m], lam1);
+            assert_close(direct, two_hop, 1e-10, 1e-12);
+        });
+    }
+
+    #[test]
+    fn degenerate_l1_matches_eq4() {
+        // lam2 = 0: pt == 1, bt = cumulative eta sums; catch-up must equal
+        // sgn(w)[|w| - lam1*(S(k-1) - S(psi-1))]_+ (Eq. 4).
+        let etas: Vec<f64> = (0..50u64).map(|t| 0.3 / (1.0 + t as f64)).collect();
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            let (pt, bt) = tables(algo, &etas, 0.0);
+            assert!(pt.iter().all(|&p| p == 1.0));
+            let lam1 = 0.01;
+            let (psi, k) = (3usize, 37usize);
+            let s: f64 = etas[psi..k].iter().sum();
+            for &w0 in &[0.5, -0.5, 0.05, 0.0] {
+                let lazy = catchup(w0, pt[k], pt[psi], bt[k], bt[psi], lam1);
+                let eq4 = sign(w0) * (w0.abs() - lam1 * s).max(0.0);
+                assert_close(lazy, eq4, 1e-12, 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_l22_matches_eq6_and_eq15() {
+        // lam1 = 0: pure multiplicative decay, Eq. 6 (SGD) / Eq. 15 (FoBoS).
+        let etas = [0.5, 0.25, 0.125, 0.1];
+        let lam2 = 0.8;
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            let (pt, bt) = tables(algo, &etas, lam2);
+            let w0 = -0.7;
+            let lazy = catchup(w0, pt[4], pt[1], bt[4], bt[1], 0.0);
+            let fast = catchup_l22(w0, pt[4], pt[1]);
+            let seq = sequential_reg_updates(algo, w0, &etas[1..4], 0.0, lam2);
+            assert_close(lazy, seq, 1e-12, 1e-15);
+            assert_close(fast, seq, 1e-12, 1e-15);
+        }
+    }
+
+    #[test]
+    fn paper_printed_sgd_form_differs_demonstrably() {
+        // Document the erratum: with the paper's B(t) = sum eta/P(tau-1)
+        // the SGD closed form does NOT match sequential application.
+        let etas = [0.5];
+        let (lam1, lam2) = (0.1, 0.5);
+        let a0 = 1.0 - etas[0] * lam2; // 0.75
+        // paper-printed tables
+        let pt = [1.0, a0];
+        let bt_paper = [0.0, etas[0] / 1.0];
+        let w0 = 1.0;
+        let printed = catchup(w0, pt[1], pt[0], bt_paper[1], bt_paper[0], lam1);
+        let seq = reg_update(Algo::Sgd, w0, etas[0], lam1, lam2);
+        // printed: a0 - lam1*a0*eta = 0.75 - 0.0375 = 0.7125
+        // correct: a0 - lam1*eta    = 0.75 - 0.05   = 0.70
+        assert!((printed - seq).abs() > 1e-3, "erratum no longer reproduces?");
+        // and the corrected table matches:
+        let bt_fixed = [0.0, etas[0] / a0];
+        let fixed = catchup(w0, pt[1], pt[0], bt_fixed[1], bt_fixed[0], lam1);
+        assert_close(fixed, seq, 1e-12, 1e-15);
+    }
+}

@@ -1,0 +1,62 @@
+//! The paper's optimization core: learning-rate schedules, the
+//! dynamic-programming caches of partial sums/products, the closed-form
+//! lazy catch-up updates (Eq. 4, 6, 10, 15, 16), and the per-step dense
+//! baselines they must match.
+
+pub mod dense_step;
+pub mod dp;
+pub mod lazy;
+pub mod reg;
+pub mod schedule;
+
+pub use dp::DpCache;
+pub use reg::Regularizer;
+pub use schedule::Schedule;
+
+/// Which stochastic update family to use.
+///
+/// * [`Algo::Sgd`] — plain subgradient steps with heuristic clipping
+///   (paper §5): the regularization-only update for an absent feature is
+///   `w ← sgn(w)[(1 − ηλ₂)|w| − ηλ₁]₊` (Eq. 9).
+/// * [`Algo::Fobos`] — forward-backward splitting (paper §6, Duchi &
+///   Singer): gradient step then the proximal update
+///   `w ← sgn(w)[(|w| − ηλ₁)/(1 + ηλ₂)]₊`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Stochastic gradient descent with truncated (clipped) updates.
+    Sgd,
+    /// Forward-backward splitting (proximal updates).
+    Fobos,
+}
+
+impl Algo {
+    /// Parse from CLI/config text.
+    pub fn parse(s: &str) -> anyhow::Result<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Ok(Algo::Sgd),
+            "fobos" => Ok(Algo::Fobos),
+            other => anyhow::bail!("unknown algo {other:?} (expected sgd|fobos)"),
+        }
+    }
+
+    /// Name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Sgd => "sgd",
+            Algo::Fobos => "fobos",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_parse_round_trip() {
+        assert_eq!(Algo::parse("sgd").unwrap(), Algo::Sgd);
+        assert_eq!(Algo::parse("FoBoS").unwrap(), Algo::Fobos);
+        assert!(Algo::parse("adam").is_err());
+        assert_eq!(Algo::parse(Algo::Fobos.name()).unwrap(), Algo::Fobos);
+    }
+}

@@ -1,0 +1,112 @@
+//! Regularizer configuration: λ₁‖w‖₁ + (λ₂/2)‖w‖₂².
+//!
+//! Pure ℓ1 (lasso), pure ℓ2² (ridge) and elastic net are all points in
+//! this two-parameter family; the lazy machinery handles every point with
+//! the same closed form (λ₂ = 0 degenerates the products to 1, λ₁ = 0
+//! removes the shrinkage sum).
+
+/// An elastic-net-family regularizer.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Regularizer {
+    /// ℓ1 strength λ₁ ≥ 0.
+    pub lam1: f64,
+    /// ℓ2² strength λ₂ ≥ 0.
+    pub lam2: f64,
+}
+
+impl Regularizer {
+    /// No regularization.
+    pub fn none() -> Regularizer {
+        Regularizer { lam1: 0.0, lam2: 0.0 }
+    }
+
+    /// Pure lasso.
+    pub fn l1(lam1: f64) -> Regularizer {
+        assert!(lam1 >= 0.0);
+        Regularizer { lam1, lam2: 0.0 }
+    }
+
+    /// Pure ridge (ℓ2²).
+    pub fn l22(lam2: f64) -> Regularizer {
+        assert!(lam2 >= 0.0);
+        Regularizer { lam1: 0.0, lam2 }
+    }
+
+    /// Elastic net.
+    pub fn elastic_net(lam1: f64, lam2: f64) -> Regularizer {
+        assert!(lam1 >= 0.0 && lam2 >= 0.0);
+        Regularizer { lam1, lam2 }
+    }
+
+    /// Is this the zero regularizer?
+    pub fn is_none(&self) -> bool {
+        self.lam1 == 0.0 && self.lam2 == 0.0
+    }
+
+    /// Penalty value R(w) = λ₁‖w‖₁ + (λ₂/2)‖w‖₂² (for objective logging).
+    pub fn penalty(&self, w: &[f64]) -> f64 {
+        let mut l1 = 0.0;
+        let mut l2 = 0.0;
+        for &x in w {
+            l1 += x.abs();
+            l2 += x * x;
+        }
+        self.lam1 * l1 + 0.5 * self.lam2 * l2
+    }
+
+    /// Parse `"none"`, `"l1:Λ"`, `"l22:Λ"`, `"enet:Λ1:Λ2"`.
+    pub fn parse(s: &str) -> anyhow::Result<Regularizer> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let need = |i: usize| -> anyhow::Result<f64> {
+            let v: f64 = parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("regularizer {s:?}: missing field {i}"))?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("regularizer {s:?}: {e}"))?;
+            anyhow::ensure!(v >= 0.0, "regularizer {s:?}: negative strength");
+            Ok(v)
+        };
+        match parts[0] {
+            "none" => Ok(Regularizer::none()),
+            "l1" => Ok(Regularizer::l1(need(1)?)),
+            "l22" | "l2sq" | "ridge" => Ok(Regularizer::l22(need(1)?)),
+            "enet" | "elastic_net" => Ok(Regularizer::elastic_net(need(1)?, need(2)?)),
+            other => anyhow::bail!("unknown regularizer kind {other:?}"),
+        }
+    }
+
+    /// Name for reports.
+    pub fn name(&self) -> String {
+        match (self.lam1 == 0.0, self.lam2 == 0.0) {
+            (true, true) => "none".into(),
+            (false, true) => format!("l1:{}", self.lam1),
+            (true, false) => format!("l22:{}", self.lam2),
+            (false, false) => format!("enet:{}:{}", self.lam1, self.lam2),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_formula() {
+        let r = Regularizer::elastic_net(0.5, 2.0);
+        let w = [1.0, -2.0];
+        // 0.5*(1+2) + 1.0*(1+4) = 1.5 + 5.0
+        assert!((r.penalty(&w) - 6.5).abs() < 1e-12);
+        assert_eq!(Regularizer::none().penalty(&w), 0.0);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for text in ["none", "l1:0.1", "l22:0.2", "enet:0.1:0.2"] {
+            let r = Regularizer::parse(text).unwrap();
+            assert_eq!(Regularizer::parse(&r.name()).unwrap(), r);
+        }
+        assert!(Regularizer::parse("l1:-1").is_err());
+        assert!(Regularizer::parse("enet:0.1").is_err());
+        assert!(Regularizer::parse("l3:0.1").is_err());
+    }
+}

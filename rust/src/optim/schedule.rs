@@ -1,0 +1,162 @@
+//! Learning-rate schedules.
+//!
+//! The paper's lazy updates must hold for *any* time-based schedule
+//! (constant, η₀/t, η₀/√t, …) — that is precisely what the DP caches
+//! enable. Per-weight adaptive schedules (AdaGrad-style) are explicitly
+//! out of scope (paper §3).
+
+/// A deterministic time-based learning-rate schedule η(t), t = 0, 1, 2, …
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// η(t) = η₀.
+    Constant {
+        /// Base rate.
+        eta0: f64,
+    },
+    /// η(t) = η₀ / (1 + t): satisfies Ση = ∞, Ση² < ∞ (Bottou).
+    InvT {
+        /// Base rate.
+        eta0: f64,
+    },
+    /// η(t) = η₀ / √(1 + t).
+    InvSqrtT {
+        /// Base rate.
+        eta0: f64,
+    },
+    /// η(t) = η₀ · γ^t (exponential decay).
+    Exponential {
+        /// Base rate.
+        eta0: f64,
+        /// Per-step decay γ ∈ (0, 1].
+        gamma: f64,
+    },
+    /// η(t) = η₀ · factor^(t / every): stepwise drops.
+    Step {
+        /// Base rate.
+        eta0: f64,
+        /// Steps between drops.
+        every: u64,
+        /// Multiplicative drop per stage, ∈ (0, 1].
+        factor: f64,
+    },
+}
+
+impl Schedule {
+    /// The learning rate at step `t` (0-based).
+    #[inline]
+    pub fn eta(&self, t: u64) -> f64 {
+        match *self {
+            Schedule::Constant { eta0 } => eta0,
+            Schedule::InvT { eta0 } => eta0 / (1.0 + t as f64),
+            Schedule::InvSqrtT { eta0 } => eta0 / (1.0 + t as f64).sqrt(),
+            Schedule::Exponential { eta0, gamma } => eta0 * gamma.powf(t as f64),
+            Schedule::Step { eta0, every, factor } => {
+                eta0 * factor.powi((t / every.max(1)) as i32)
+            }
+        }
+    }
+
+    /// Base rate η₀.
+    pub fn eta0(&self) -> f64 {
+        match *self {
+            Schedule::Constant { eta0 }
+            | Schedule::InvT { eta0 }
+            | Schedule::InvSqrtT { eta0 }
+            | Schedule::Exponential { eta0, .. }
+            | Schedule::Step { eta0, .. } => eta0,
+        }
+    }
+
+    /// Whether the rate varies with t (drives the DP-cache requirement).
+    pub fn is_attenuated(&self) -> bool {
+        !matches!(self, Schedule::Constant { .. })
+    }
+
+    /// Parse `"const:0.5"`, `"inv_t:0.5"`, `"inv_sqrt:0.5"`,
+    /// `"exp:0.5:0.999"`, `"step:0.5:1000:0.5"`.
+    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let need = |i: usize| -> anyhow::Result<f64> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("schedule {s:?}: missing field {i}"))?
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("schedule {s:?}: {e}"))
+        };
+        match parts[0] {
+            "const" | "constant" => Ok(Schedule::Constant { eta0: need(1)? }),
+            "inv_t" | "1/t" => Ok(Schedule::InvT { eta0: need(1)? }),
+            "inv_sqrt" | "1/sqrt" => Ok(Schedule::InvSqrtT { eta0: need(1)? }),
+            "exp" => Ok(Schedule::Exponential { eta0: need(1)?, gamma: need(2)? }),
+            "step" => Ok(Schedule::Step {
+                eta0: need(1)?,
+                every: need(2)? as u64,
+                factor: need(3)?,
+            }),
+            other => anyhow::bail!("unknown schedule kind {other:?}"),
+        }
+    }
+
+    /// Name for reports.
+    pub fn name(&self) -> String {
+        match *self {
+            Schedule::Constant { eta0 } => format!("const:{eta0}"),
+            Schedule::InvT { eta0 } => format!("inv_t:{eta0}"),
+            Schedule::InvSqrtT { eta0 } => format!("inv_sqrt:{eta0}"),
+            Schedule::Exponential { eta0, gamma } => format!("exp:{eta0}:{gamma}"),
+            Schedule::Step { eta0, every, factor } => format!("step:{eta0}:{every}:{factor}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_match_formulas() {
+        assert_eq!(Schedule::Constant { eta0: 0.5 }.eta(100), 0.5);
+        assert_eq!(Schedule::InvT { eta0: 1.0 }.eta(0), 1.0);
+        assert_eq!(Schedule::InvT { eta0: 1.0 }.eta(3), 0.25);
+        assert!((Schedule::InvSqrtT { eta0: 1.0 }.eta(3) - 0.5).abs() < 1e-12);
+        assert!((Schedule::Exponential { eta0: 1.0, gamma: 0.5 }.eta(3) - 0.125).abs() < 1e-12);
+        let st = Schedule::Step { eta0: 1.0, every: 10, factor: 0.1 };
+        assert_eq!(st.eta(9), 1.0);
+        assert!((st.eta(10) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rates_are_non_increasing() {
+        for s in [
+            Schedule::Constant { eta0: 0.3 },
+            Schedule::InvT { eta0: 0.3 },
+            Schedule::InvSqrtT { eta0: 0.3 },
+            Schedule::Exponential { eta0: 0.3, gamma: 0.99 },
+            Schedule::Step { eta0: 0.3, every: 7, factor: 0.5 },
+        ] {
+            let mut prev = f64::INFINITY;
+            for t in 0..100 {
+                let e = s.eta(t);
+                assert!(e > 0.0 && e <= prev, "{s:?} at t={t}");
+                prev = e;
+            }
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for text in ["const:0.5", "inv_t:0.1", "inv_sqrt:0.2", "exp:0.5:0.99", "step:1:100:0.5"] {
+            let s = Schedule::parse(text).unwrap();
+            let s2 = Schedule::parse(&s.name()).unwrap();
+            assert_eq!(s, s2);
+        }
+        assert!(Schedule::parse("bogus:1").is_err());
+        assert!(Schedule::parse("exp:1").is_err());
+    }
+
+    #[test]
+    fn attenuation_flag() {
+        assert!(!Schedule::Constant { eta0: 1.0 }.is_attenuated());
+        assert!(Schedule::InvT { eta0: 1.0 }.is_attenuated());
+    }
+}

@@ -1,0 +1,193 @@
+//! Artifact loading + typed execution wrappers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::ConfigDoc;
+
+/// Shapes the artifacts were lowered with (from `artifacts/meta.ini`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Mini-batch rows of the dense graphs.
+    pub batch: usize,
+    /// Dense feature dimension of the dense graphs.
+    pub dim: usize,
+    /// Weight-slab length of the catch-up kernel artifact.
+    pub catchup_dim: usize,
+    /// DP-table capacity (slots) of the catch-up artifact.
+    pub table: usize,
+}
+
+impl ArtifactMeta {
+    /// Read from `artifacts/meta.ini`.
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let doc = ConfigDoc::load(&dir.join("meta.ini"))
+            .context("artifacts/meta.ini missing — run `make artifacts`")?;
+        Ok(ArtifactMeta {
+            batch: doc.get_parse("shapes", "batch", 0usize)?,
+            dim: doc.get_parse("shapes", "dim", 0usize)?,
+            catchup_dim: doc.get_parse("shapes", "catchup_dim", 0usize)?,
+            table: doc.get_parse("shapes", "table", 0usize)?,
+        })
+    }
+}
+
+/// A PJRT CPU client with the compiled artifact executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Default artifacts directory: `$LAZYREG_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("LAZYREG_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile all artifacts in `dir` (compile-once, reuse).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let meta = ArtifactMeta::load(dir)?;
+        let mut rt = Runtime { client, exes: HashMap::new(), meta, dir: dir.to_path_buf() };
+        for name in ["predict", "grad", "fobos_step", "catchup"] {
+            rt.compile(name)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Artifact shape metadata.
+    pub fn meta(&self) -> ArtifactMeta {
+        self.meta
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))
+    }
+
+    fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe(name)?.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// `predict`: p[B] = σ(X·w + b). `x` is row-major `batch×dim`.
+    pub fn predict(&self, x: &[f32], w: &[f32], b: f32) -> Result<Vec<f32>> {
+        let m = self.meta;
+        anyhow::ensure!(x.len() == m.batch * m.dim, "x shape");
+        anyhow::ensure!(w.len() == m.dim, "w shape");
+        let args = [
+            xla::Literal::vec1(x).reshape(&[m.batch as i64, m.dim as i64])?,
+            xla::Literal::vec1(w),
+            xla::Literal::scalar(b),
+        ];
+        let out = self.execute("predict", &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// `grad`: (loss, gw[D], gb) of the mean logistic loss.
+    pub fn grad(&self, x: &[f32], y: &[f32], w: &[f32], b: f32) -> Result<(f32, Vec<f32>, f32)> {
+        let m = self.meta;
+        anyhow::ensure!(x.len() == m.batch * m.dim && y.len() == m.batch && w.len() == m.dim);
+        let args = [
+            xla::Literal::vec1(x).reshape(&[m.batch as i64, m.dim as i64])?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(w),
+            xla::Literal::scalar(b),
+        ];
+        let out = self.execute("grad", &args)?;
+        Ok((
+            out[0].get_first_element::<f32>()?,
+            out[1].to_vec::<f32>()?,
+            out[2].get_first_element::<f32>()?,
+        ))
+    }
+
+    /// `fobos_step`: one dense FoBoS elastic-net step on a mini-batch;
+    /// returns (w', b', loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fobos_step(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        b: f32,
+        eta: f32,
+        lam1: f32,
+        lam2: f32,
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        let m = self.meta;
+        anyhow::ensure!(x.len() == m.batch * m.dim && y.len() == m.batch && w.len() == m.dim);
+        let args = [
+            xla::Literal::vec1(x).reshape(&[m.batch as i64, m.dim as i64])?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(w),
+            xla::Literal::scalar(b),
+            xla::Literal::scalar(eta),
+            xla::Literal::scalar(lam1),
+            xla::Literal::scalar(lam2),
+        ];
+        let out = self.execute("fobos_step", &args)?;
+        Ok((
+            out[0].to_vec::<f32>()?,
+            out[1].get_first_element::<f32>()?,
+            out[2].get_first_element::<f32>()?,
+        ))
+    }
+
+    /// `catchup`: the Layer-1 Pallas lazy catch-up over a weight slab.
+    /// `pt`/`bt` are the shifted DP tables padded/truncated to the
+    /// artifact's table capacity; `k` indexes into them.
+    pub fn catchup(
+        &self,
+        w: &[f32],
+        psi: &[i32],
+        pt: &[f32],
+        bt: &[f32],
+        k: i32,
+        lam1: f32,
+    ) -> Result<Vec<f32>> {
+        let m = self.meta;
+        anyhow::ensure!(w.len() == m.catchup_dim && psi.len() == m.catchup_dim, "slab shape");
+        anyhow::ensure!(pt.len() == m.table && bt.len() == m.table, "table shape");
+        anyhow::ensure!((k as usize) < m.table, "k out of table range");
+        let args = [
+            xla::Literal::vec1(w),
+            xla::Literal::vec1(psi),
+            xla::Literal::vec1(pt),
+            xla::Literal::vec1(bt),
+            xla::Literal::vec1(&[k]),
+            xla::Literal::vec1(&[lam1]),
+        ];
+        let out = self.execute("catchup", &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+// Runtime tests live in rust/tests/runtime_integration.rs (they need the
+// artifacts built by `make artifacts`).

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (Layer 2 + Layer 1,
+//! lowered by `python/compile/aot.py`) and execute them from Rust.
+//!
+//! Python is build-time only; at run time this module is the *only*
+//! bridge to the compiled graphs. Artifacts are HLO **text** — the
+//! xla_extension 0.5.1 behind the published `xla` crate rejects jax ≥ 0.5
+//! serialized protos (64-bit instruction ids), while the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod xla_dense;
+
+pub use artifact::{ArtifactMeta, Runtime};
+pub use xla_dense::XlaDenseTrainer;

@@ -1,0 +1,93 @@
+//! XLA-dense baseline trainer: mini-batch FoBoS elastic net where the
+//! entire step (forward + gradient + prox over all `dim` weights) runs in
+//! the AOT-compiled Layer-2 graph.
+//!
+//! This is the "what a dense accelerator pipeline looks like" comparator
+//! for E7 (`cargo bench --bench xla_batch`): the regularization cost is
+//! O(dim) per step no matter the sparsity, while the lazy Rust trainer is
+//! O(p). It is also the integration proof that all three layers compose.
+
+use anyhow::Result;
+
+use crate::data::{BatchIter, SparseDataset};
+use crate::metrics::Throughput;
+
+use super::artifact::Runtime;
+
+/// Mini-batch FoBoS elastic-net trainer executing on PJRT.
+pub struct XlaDenseTrainer<'rt> {
+    rt: &'rt Runtime,
+    /// f32 weights of length `meta().dim`.
+    pub weights: Vec<f32>,
+    /// Bias.
+    pub bias: f32,
+    lam1: f32,
+    lam2: f32,
+    eta0: f32,
+    step: u64,
+}
+
+/// Report of an XLA-dense training run.
+#[derive(Debug, Clone)]
+pub struct XlaTrainReport {
+    /// Mean per-batch loss of the final epoch.
+    pub final_loss: f32,
+    /// Examples per second (includes host<->device transfers).
+    pub examples_per_sec: f64,
+    /// Batches executed.
+    pub batches: u64,
+}
+
+impl<'rt> XlaDenseTrainer<'rt> {
+    /// Fresh trainer over `rt`'s artifact shapes.
+    pub fn new(rt: &'rt Runtime, lam1: f32, lam2: f32, eta0: f32) -> XlaDenseTrainer<'rt> {
+        let dim = rt.meta().dim;
+        XlaDenseTrainer { rt, weights: vec![0.0; dim], bias: 0.0, lam1, lam2, eta0, step: 0 }
+    }
+
+    /// One mini-batch step (η = η₀/√(1+t)); returns the batch loss.
+    pub fn step_batch(&mut self, x: &[f32], y: &[f32]) -> Result<f32> {
+        let eta = self.eta0 / ((1.0 + self.step as f32).sqrt());
+        let (w, b, loss) =
+            self.rt
+                .fobos_step(x, y, &self.weights, self.bias, eta, self.lam1, self.lam2)?;
+        self.weights = w;
+        self.bias = b;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Train for `epochs` passes over `data` (features beyond the
+    /// artifact `dim` are dropped by densification).
+    pub fn train(&mut self, data: &SparseDataset, epochs: usize) -> Result<XlaTrainReport> {
+        let meta = self.rt.meta();
+        let mut throughput = Throughput::new();
+        let mut batches = 0u64;
+        let mut last_epoch_loss = 0.0f32;
+        for _ in 0..epochs {
+            let mut loss_sum = 0.0f32;
+            let mut nb = 0u32;
+            for batch in BatchIter::new(data, meta.batch, meta.dim) {
+                let loss = self.step_batch(&batch.x, &batch.y)?;
+                loss_sum += loss;
+                nb += 1;
+                batches += 1;
+                throughput.add(batch.len as u64);
+            }
+            last_epoch_loss = if nb > 0 { loss_sum / nb as f32 } else { 0.0 };
+        }
+        Ok(XlaTrainReport {
+            final_loss: last_epoch_loss,
+            examples_per_sec: throughput.per_sec(),
+            batches,
+        })
+    }
+
+    /// Batch scoring through the `predict` artifact.
+    pub fn predict_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        self.rt.predict(x, &self.weights, self.bias)
+    }
+}
+
+// Integration tests (needing built artifacts) live in
+// rust/tests/runtime_integration.rs.

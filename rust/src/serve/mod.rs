@@ -1,0 +1,265 @@
+//! Prediction service: a line-protocol TCP server scoring sparse examples
+//! with a trained model, plus a client. Python-free request path: scoring
+//! is either the native sparse dot product or (batched) the AOT `predict`
+//! artifact via [`crate::runtime`].
+//!
+//! Protocol (text, one message per line):
+//!
+//! ```text
+//! -> predict 3:1 17:2.5 204:1
+//! <- ok 0.8731
+//! -> stats
+//! <- ok n=12 mean=18.21µs p50=16.00µs p99=64.00µs max=81.00µs
+//! -> quit
+//! <- ok bye
+//! ```
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::RowView;
+use crate::metrics::LatencyHistogram;
+use crate::model::LinearModel;
+
+/// A running prediction server.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn a server for `model` on `addr` (use port 0 for ephemeral).
+    pub fn spawn(model: LinearModel, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let model = Arc::new(model);
+        let hist = Arc::new(Mutex::new(LatencyHistogram::new()));
+
+        let handle = std::thread::spawn(move || {
+            let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let m = model.clone();
+                        let h = hist.clone();
+                        let s = stop2.clone();
+                        workers.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &m, &h, &s);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn parse_features(tokens: &str, dim: usize) -> Option<(Vec<u32>, Vec<f32>)> {
+    let mut pairs: Vec<(u32, f32)> = Vec::new();
+    for tok in tokens.split_ascii_whitespace() {
+        let (i, v) = tok.split_once(':')?;
+        let idx: u32 = i.parse().ok()?;
+        if idx as usize >= dim {
+            return None;
+        }
+        pairs.push((idx, v.parse().ok()?));
+    }
+    pairs.sort_unstable_by_key(|p| p.0);
+    Some(pairs.into_iter().unzip())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    model: &LinearModel,
+    hist: &Mutex<LatencyHistogram>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    // Bounded reads so a shutdown can't be blocked by an idle client.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(50)))?;
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(peer);
+    let mut writer = BufWriter::new(stream);
+    let mut acc = String::new();
+    loop {
+        match reader.read_line(&mut acc) {
+            Ok(0) => break, // client closed
+            Ok(_) if acc.ends_with('\n') => {}
+            Ok(_) => continue, // partial line, keep accumulating
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // acc keeps any partial line across the timeout
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let line = std::mem::take(&mut acc);
+        let line = line.trim();
+        let reply = if let Some(rest) = line.strip_prefix("predict") {
+            let t0 = Instant::now();
+            match parse_features(rest, model.dim()) {
+                Some((indices, values)) => {
+                    let p = model.predict(RowView { indices: &indices, values: &values });
+                    hist.lock().unwrap().record(t0.elapsed());
+                    format!("ok {p:.6}")
+                }
+                None => "err bad-features".to_string(),
+            }
+        } else if line == "stats" {
+            format!("ok {}", hist.lock().unwrap().summary())
+        } else if line == "quit" {
+            writeln!(writer, "ok bye")?;
+            writer.flush()?;
+            break;
+        } else {
+            "err unknown-command".to_string()
+        };
+        writeln!(writer, "{reply}")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// A blocking client for the line protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: BufWriter::new(stream) })
+    }
+
+    fn round_trip(&mut self, msg: &str) -> Result<String> {
+        writeln!(self.writer, "{msg}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let line = line.trim().to_string();
+        anyhow::ensure!(line.starts_with("ok "), "server error: {line}");
+        Ok(line[3..].to_string())
+    }
+
+    /// Score one sparse example.
+    pub fn predict(&mut self, features: &[(u32, f32)]) -> Result<f64> {
+        let body: Vec<String> = features.iter().map(|(i, v)| format!("{i}:{v}")).collect();
+        let reply = self.round_trip(&format!("predict {}", body.join(" ")))?;
+        Ok(reply.parse::<f64>()?)
+    }
+
+    /// Fetch the server's latency summary.
+    pub fn stats(&mut self) -> Result<String> {
+        self.round_trip("stats")
+    }
+
+    /// Close politely.
+    pub fn quit(mut self) -> Result<()> {
+        let _ = self.round_trip("quit")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Loss;
+
+    fn model() -> LinearModel {
+        let mut m = LinearModel::zeros(10, Loss::Logistic);
+        m.weights[3] = 2.0;
+        m.weights[7] = -2.0;
+        m.bias = 0.0;
+        m
+    }
+
+    #[test]
+    fn predict_round_trip() {
+        let server = Server::spawn(model(), "127.0.0.1:0").unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let p_pos = c.predict(&[(3, 1.0)]).unwrap();
+        let p_neg = c.predict(&[(7, 1.0)]).unwrap();
+        let p_zero = c.predict(&[]).unwrap();
+        assert!(p_pos > 0.8, "{p_pos}");
+        assert!(p_neg < 0.2, "{p_neg}");
+        assert!((p_zero - 0.5).abs() < 1e-6);
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("n=3"), "{stats}");
+        c.quit().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let server = Server::spawn(model(), "127.0.0.1:0").unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        // out-of-range feature index
+        assert!(c.predict(&[(99, 1.0)]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = Server::spawn(model(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..20 {
+                    let p = c.predict(&[(3, 1.0)]).unwrap();
+                    assert!(p > 0.8);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

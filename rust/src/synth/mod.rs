@@ -1,0 +1,17 @@
+//! Synthetic corpus generation — the substitution for the paper's Medline
+//! bag-of-words dataset (1,000,000 abstracts, 260,941 features, p̄ = 88.54),
+//! which is not redistributable.
+//!
+//! The lazy-update speedup depends only on the *sparsity statistics* of the
+//! corpus (dimensionality d, mean non-zeros p̄, and the document-frequency
+//! distribution), not on token semantics, so a Zipfian bag-of-words
+//! generator with matched statistics exercises exactly the same code paths
+//! (see DESIGN.md §Substitutions).
+
+pub mod bow;
+pub mod labels;
+pub mod zipf;
+
+pub use bow::{generate, BowSpec};
+pub use labels::{GroundTruth, LabelSpec};
+pub use zipf::Zipf;

@@ -1,0 +1,171 @@
+//! Zipfian (power-law) rank sampler.
+//!
+//! Word frequencies in natural-language corpora follow Zipf's law:
+//! P(rank = r) ∝ 1 / r^s.  We implement the rejection-inversion sampler of
+//! Hörmann & Derflinger (1996) — O(1) expected time per draw for any
+//! exponent s > 0 (the s = 1 harmonic case included) — so generating
+//! million-document corpora stays fast.
+
+use crate::util::Rng;
+
+/// Zipf distribution over ranks `1..=n` with exponent `s > 0`.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    q: f64,
+    // Precomputed constants for rejection-inversion (Hörmann–Derflinger).
+    h_x1: f64,
+    h_n: f64,
+    accept_s: f64,
+}
+
+impl Zipf {
+    /// Create a sampler over `1..=n` with exponent `s`.
+    pub fn new(n: u64, s: f64) -> Zipf {
+        assert!(n >= 1, "Zipf needs n >= 1");
+        assert!(s > 0.0, "Zipf needs s > 0");
+        let q = s;
+        let h_x1 = Self::h(1.5, q) - 1.0; // H(1.5) - 1^{-q}
+        let h_n = Self::h(n as f64 + 0.5, q);
+        let accept_s = 2.0 - Self::h_inv(Self::h(2.5, q) - Self::pow_neg_q(2.0, q), q);
+        Zipf { n, q, h_x1, h_n, accept_s }
+    }
+
+    /// H(x) = ∫ x^{-q} dx = (x^{1-q} - 1)/(1-q), with the q = 1 limit ln(x).
+    #[inline]
+    fn h(x: f64, q: f64) -> f64 {
+        if (q - 1.0).abs() < 1e-9 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - q) - 1.0) / (1.0 - q)
+        }
+    }
+
+    /// Inverse of `h`.
+    #[inline]
+    fn h_inv(x: f64, q: f64) -> f64 {
+        if (q - 1.0).abs() < 1e-9 {
+            x.exp()
+        } else {
+            (1.0 + x * (1.0 - q)).powf(1.0 / (1.0 - q))
+        }
+    }
+
+    #[inline]
+    fn pow_neg_q(x: f64, q: f64) -> f64 {
+        (-q * x.ln()).exp()
+    }
+
+    /// Draw a rank in `1..=n`.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.n == 1 {
+            return 1;
+        }
+        loop {
+            // u uniform in [H(1.5) - 1, H(n + 0.5)); inverting H gives a
+            // draw from the continuous envelope.
+            let u = self.h_x1 + rng.f64() * (self.h_n - self.h_x1);
+            let x = Self::h_inv(u, self.q);
+            let k = x.round().clamp(1.0, self.n as f64);
+            // Accept: either the squeeze (k close enough to x) or the
+            // exact test against the envelope mass on [k-0.5, k+0.5].
+            if k - x <= self.accept_s
+                || u >= Self::h(k + 0.5, self.q) - Self::pow_neg_q(k, self.q)
+            {
+                return k as u64;
+            }
+        }
+    }
+
+    /// The distribution's support size.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// The exponent.
+    pub fn exponent(&self) -> f64 {
+        self.q
+    }
+
+    /// Exact pmf (for tests): P(r) = r^-s / H_{n,s}. O(n) normalization.
+    pub fn pmf(&self, r: u64) -> f64 {
+        assert!(r >= 1 && r <= self.n);
+        let z: f64 = (1..=self.n).map(|i| (i as f64).powf(-self.q)).sum();
+        (r as f64).powf(-self.q) / z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(1000, 1.07);
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let r = z.sample(&mut rng);
+            assert!((1..=1000).contains(&r));
+        }
+    }
+
+    #[test]
+    fn low_ranks_dominate() {
+        let z = Zipf::new(10_000, 1.1);
+        let mut rng = Rng::new(2);
+        let n = 50_000;
+        let top10 = (0..n).filter(|_| z.sample(&mut rng) <= 10).count();
+        // With s=1.1 over 10k ranks, top-10 mass is ~40-60%.
+        assert!(top10 as f64 / n as f64 > 0.3, "top10 frac {}", top10 as f64 / n as f64);
+    }
+
+    #[test]
+    fn empirical_matches_pmf_small_support() {
+        for &s in &[0.7, 1.0, 1.3] {
+            let z = Zipf::new(5, s);
+            let mut rng = Rng::new(3);
+            let n = 200_000;
+            let mut counts = [0usize; 6];
+            for _ in 0..n {
+                counts[z.sample(&mut rng) as usize] += 1;
+            }
+            for r in 1..=5u64 {
+                let expect = z.pmf(r) * n as f64;
+                let got = counts[r as usize] as f64;
+                assert!(
+                    (got - expect).abs() < expect * 0.05 + 50.0,
+                    "s={s} rank {r}: got {got} expect {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_matches_pmf_large_support() {
+        let z = Zipf::new(100_000, 1.07);
+        let mut rng = Rng::new(5);
+        let n = 100_000;
+        let mut c1 = 0usize;
+        for _ in 0..n {
+            if z.sample(&mut rng) == 1 {
+                c1 += 1;
+            }
+        }
+        let expect = z.pmf(1) * n as f64;
+        assert!(
+            (c1 as f64 - expect).abs() < expect * 0.1 + 30.0,
+            "rank1: got {c1} expect {expect}"
+        );
+    }
+
+    #[test]
+    fn handles_exponent_one_and_small_n() {
+        let z = Zipf::new(1, 1.0);
+        let mut rng = Rng::new(4);
+        assert_eq!(z.sample(&mut rng), 1);
+        let z2 = Zipf::new(2, 0.5);
+        for _ in 0..100 {
+            assert!((1..=2).contains(&z2.sample(&mut rng)));
+        }
+    }
+}

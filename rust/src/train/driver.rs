@@ -1,0 +1,212 @@
+//! Epoch driver: runs a trainer over a dataset for `epochs` passes,
+//! recording per-epoch loss, throughput and rebase counts — the numbers
+//! EXPERIMENTS.md reports.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::SparseDataset;
+use crate::model::LinearModel;
+use crate::util::Rng;
+
+use super::dense_trainer::DenseTrainer;
+use super::lazy_trainer::LazyTrainer;
+use super::options::TrainOptions;
+
+/// Per-epoch statistics.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    /// 0-based epoch index.
+    pub epoch: usize,
+    /// Mean online (pre-update) loss over the epoch.
+    pub mean_loss: f64,
+    /// Examples processed this epoch.
+    pub examples: usize,
+    /// Wall-clock seconds for the epoch.
+    pub seconds: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// The finalized model.
+    pub model: LinearModel,
+    /// Total examples processed (n × epochs).
+    pub examples: u64,
+    /// Total wall-clock seconds in the training loop.
+    pub seconds: f64,
+    /// Examples per second.
+    pub throughput: f64,
+    /// Per-epoch loss curve.
+    pub epochs: Vec<EpochStats>,
+    /// Number of amortized DP-cache flushes (lazy only; 0 for dense).
+    pub rebases: u64,
+}
+
+impl TrainReport {
+    /// Final epoch's mean loss.
+    pub fn final_loss(&self) -> f64 {
+        self.epochs.last().map(|e| e.mean_loss).unwrap_or(f64::NAN)
+    }
+}
+
+fn epoch_order(data: &SparseDataset, opts: &TrainOptions, rng: &mut Rng) -> Vec<usize> {
+    if opts.shuffle {
+        data.shuffled_order(rng)
+    } else {
+        (0..data.n_examples()).collect()
+    }
+}
+
+/// Train with the paper's lazy Algorithm 1 — O(p) per example.
+pub fn train_lazy(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainReport> {
+    opts.validate()?;
+    let mut trainer = LazyTrainer::new(data.n_features(), opts);
+    let mut rng = Rng::new(opts.seed);
+    let mut epochs = Vec::with_capacity(opts.epochs);
+    let t0 = Instant::now();
+    for epoch in 0..opts.epochs {
+        let order = epoch_order(data, opts, &mut rng);
+        let e0 = Instant::now();
+        let mut loss_sum = 0.0;
+        for &r in &order {
+            loss_sum += trainer.process_example(data.x().row(r), f64::from(data.labels()[r]));
+        }
+        epochs.push(EpochStats {
+            epoch,
+            mean_loss: loss_sum / order.len().max(1) as f64,
+            examples: order.len(),
+            seconds: e0.elapsed().as_secs_f64(),
+        });
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    let rebases = trainer.rebases;
+    let examples = (data.n_examples() * opts.epochs) as u64;
+    let model = trainer.into_model();
+    Ok(TrainReport {
+        model,
+        examples,
+        seconds,
+        throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
+        epochs,
+        rebases,
+    })
+}
+
+/// Train with dense regularization updates — O(d) per example
+/// (the Table 1 baseline).
+pub fn train_dense(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainReport> {
+    opts.validate()?;
+    let mut trainer = DenseTrainer::new(data.n_features(), opts);
+    let mut rng = Rng::new(opts.seed);
+    let mut epochs = Vec::with_capacity(opts.epochs);
+    let t0 = Instant::now();
+    for epoch in 0..opts.epochs {
+        let order = epoch_order(data, opts, &mut rng);
+        let e0 = Instant::now();
+        let mut loss_sum = 0.0;
+        for &r in &order {
+            loss_sum += trainer.process_example(data.x().row(r), f64::from(data.labels()[r]));
+        }
+        epochs.push(EpochStats {
+            epoch,
+            mean_loss: loss_sum / order.len().max(1) as f64,
+            examples: order.len(),
+            seconds: e0.elapsed().as_secs_f64(),
+        });
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    let examples = (data.n_examples() * opts.epochs) as u64;
+    Ok(TrainReport {
+        model: trainer.into_model(),
+        examples,
+        seconds,
+        throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
+        epochs,
+        rebases: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Algo, Regularizer, Schedule};
+    use crate::synth::{generate, BowSpec};
+
+    fn tiny_opts() -> TrainOptions {
+        TrainOptions {
+            algo: Algo::Fobos,
+            reg: Regularizer::elastic_net(1e-5, 1e-5),
+            schedule: Schedule::InvSqrtT { eta0: 0.5 },
+            epochs: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn loss_curve_trends_down_on_learnable_data() {
+        let data = generate(&BowSpec::tiny(), 5);
+        let report = train_lazy(&data, &tiny_opts()).unwrap();
+        assert_eq!(report.epochs.len(), 3);
+        let first = report.epochs[0].mean_loss;
+        let last = report.final_loss();
+        assert!(
+            last < first,
+            "loss did not improve: {first} -> {last}"
+        );
+        assert!(report.throughput > 0.0);
+        assert_eq!(report.examples, 3 * 500);
+    }
+
+    #[test]
+    fn lazy_and_dense_reports_match_weights_same_order() {
+        let data = generate(&BowSpec::tiny(), 6);
+        let mut opts = tiny_opts();
+        opts.shuffle = false; // identical visit order
+        opts.epochs = 2;
+        let lazy = train_lazy(&data, &opts).unwrap();
+        let dense = train_dense(&data, &opts).unwrap();
+        let diff = lazy.model.max_weight_diff(&dense.model);
+        assert!(diff < 1e-9, "diff {diff}");
+        // loss curves agree too
+        for (a, b) in lazy.epochs.iter().zip(dense.epochs.iter()) {
+            assert!((a.mean_loss - b.mean_loss).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn shuffle_changes_visit_order_but_both_learn() {
+        let data = generate(&BowSpec::tiny(), 7);
+        let mut o1 = tiny_opts();
+        o1.shuffle = true;
+        o1.seed = 1;
+        let mut o2 = tiny_opts();
+        o2.shuffle = true;
+        o2.seed = 2;
+        let a = train_lazy(&data, &o1).unwrap();
+        let b = train_lazy(&data, &o2).unwrap();
+        assert!(a.model.max_weight_diff(&b.model) > 0.0);
+        assert!(a.final_loss() < a.epochs[0].mean_loss);
+        assert!(b.final_loss() < b.epochs[0].mean_loss);
+    }
+
+    #[test]
+    fn elastic_net_model_is_sparse() {
+        let data = generate(&BowSpec::tiny(), 8);
+        let mut unreg = tiny_opts();
+        unreg.reg = Regularizer::none();
+        unreg.epochs = 2;
+        let mut enet = unreg;
+        enet.reg = Regularizer::elastic_net(5e-3, 1e-3);
+        let base = train_lazy(&data, &unreg).unwrap().model.sparsity();
+        let sp = train_lazy(&data, &enet).unwrap().model.sparsity();
+        // elastic net prunes a large fraction of the touched weights
+        assert!(
+            sp.nnz * 2 < base.nnz,
+            "expected sparser model: enet nnz {} vs unreg nnz {}",
+            sp.nnz,
+            base.nnz
+        );
+    }
+}

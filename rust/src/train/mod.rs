@@ -1,0 +1,12 @@
+//! Trainers: the paper's lazy Algorithm 1 and the dense baseline, plus the
+//! epoch driver that produces loss curves and throughput reports.
+
+pub mod dense_trainer;
+pub mod driver;
+pub mod lazy_trainer;
+pub mod options;
+
+pub use dense_trainer::DenseTrainer;
+pub use driver::{train_dense, train_lazy, EpochStats, TrainReport};
+pub use lazy_trainer::LazyTrainer;
+pub use options::TrainOptions;

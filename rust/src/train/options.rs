@@ -1,0 +1,89 @@
+//! Training options shared by every trainer and the coordinator.
+
+use crate::loss::Loss;
+use crate::optim::{Algo, Regularizer, Schedule};
+
+/// Options controlling a training run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainOptions {
+    /// Update family (SGD or FoBoS).
+    pub algo: Algo,
+    /// Regularizer (λ₁, λ₂).
+    pub reg: Regularizer,
+    /// Learning-rate schedule.
+    pub schedule: Schedule,
+    /// Loss function.
+    pub loss: Loss,
+    /// Number of passes over the data.
+    pub epochs: usize,
+    /// Shuffle the visit order each epoch.
+    pub shuffle: bool,
+    /// RNG seed for shuffling.
+    pub seed: u64,
+    /// DP-cache space budget (table slots before an amortized flush);
+    /// `None` = [`crate::optim::dp::DEFAULT_SPACE_BUDGET`].
+    pub space_budget: Option<usize>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            algo: Algo::Fobos,
+            reg: Regularizer::elastic_net(1e-6, 1e-6),
+            schedule: Schedule::InvSqrtT { eta0: 0.5 },
+            loss: Loss::Logistic,
+            epochs: 1,
+            shuffle: true,
+            seed: 0x1a2b_3c4d,
+            space_budget: None,
+        }
+    }
+}
+
+impl TrainOptions {
+    /// Validate option consistency (mirrors the DpCache constructor
+    /// asserts, but returns an error for CLI-friendly reporting).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.epochs > 0, "epochs must be >= 1");
+        anyhow::ensure!(self.schedule.eta0() > 0.0, "eta0 must be positive");
+        if self.algo == Algo::Sgd {
+            anyhow::ensure!(
+                self.schedule.eta(0) * self.reg.lam2 < 1.0,
+                "SGD requires eta0*lam2 < 1 (got {}*{})",
+                self.schedule.eta(0),
+                self.reg.lam2
+            );
+        }
+        if let Some(b) = self.space_budget {
+            anyhow::ensure!(b >= 2, "space budget must be >= 2");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_are_valid() {
+        TrainOptions::default().validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_combinations_rejected() {
+        let mut o = TrainOptions::default();
+        o.epochs = 0;
+        assert!(o.validate().is_err());
+
+        let mut o = TrainOptions::default();
+        o.algo = Algo::Sgd;
+        o.reg = Regularizer::l22(10.0);
+        o.schedule = Schedule::Constant { eta0: 0.5 };
+        assert!(o.validate().is_err());
+
+        let mut o = TrainOptions::default();
+        o.space_budget = Some(1);
+        assert!(o.validate().is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` syntax
+//! with typed getters, defaults, and usage-error reporting.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, options and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token, if any (e.g. `train`, `bench`).
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs. Bare `--flag` stores "true".
+    pub options: BTreeMap<String, String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of tokens.
+    pub fn parse<I, S>(tokens: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    args.options
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(rest.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.options.insert(rest.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Bare-flag presence (`--verbose`), also true for `--verbose=true`.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed getter with default; exits with a usage error on parse failure.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => match v.parse::<T>() {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("error: invalid value for --{key}: {v:?} ({e})");
+                    std::process::exit(2);
+                }
+            },
+        }
+    }
+
+    /// Typed getter returning a Result (for library use; no exit).
+    pub fn try_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid --{key}={v}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_positional() {
+        // Note: a bare flag greedily consumes a following non-flag token
+        // as its value, so positionals go before flags (or use --flag=true).
+        let a = Args::parse(["train", "file.svm", "--epochs", "5", "--lam1=0.1", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_parse("epochs", 0usize), 5);
+        assert_eq!(a.get("lam1", "0"), "0.1");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.svm"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(["bench"]);
+        assert_eq!(a.get_parse("iters", 10u32), 10);
+        assert!(!a.flag("full"));
+        assert_eq!(a.get("out", "-"), "-");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(["--dry-run", "--seed", "9"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_parse("seed", 0u64), 9);
+        assert_eq!(a.subcommand, None);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--bias -0.5`: "-0.5" doesn't start with "--" so it's a value.
+        let a = Args::parse(["--bias", "-0.5"]);
+        assert_eq!(a.get_parse("bias", 0.0f64), -0.5);
+    }
+
+    #[test]
+    fn try_parse_errors_cleanly() {
+        let a = Args::parse(["--epochs", "abc"]);
+        assert!(a.try_parse::<usize>("epochs").is_err());
+        assert!(a.try_parse::<usize>("missing").unwrap().is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! Human-readable formatting helpers: durations, counts, rates, and a
+//! small markdown table builder used by the bench harness and reports.
+
+use std::time::Duration;
+
+/// Format a duration adaptively: ns / µs / ms / s.
+pub fn duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Format a count with thousands separators: 1234567 -> "1,234,567".
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format a rate like "1,893 ex/s" or "3.09 ex/s" depending on magnitude.
+pub fn rate(per_sec: f64, unit: &str) -> String {
+    if per_sec >= 1000.0 {
+        format!("{} {unit}/s", count(per_sec.round() as u64))
+    } else if per_sec >= 10.0 {
+        format!("{per_sec:.1} {unit}/s")
+    } else {
+        format!("{per_sec:.3} {unit}/s")
+    }
+}
+
+/// Simple markdown table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create with a header row.
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a data row (padded/truncated to header width).
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let mut r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        r.resize(self.header.len(), String::new());
+        self.rows.push(r);
+        self
+    }
+
+    /// Render as aligned GitHub-flavored markdown.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(duration(Duration::from_secs(2)), "2.00s");
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1,000");
+        assert_eq!(count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn rate_magnitudes() {
+        assert_eq!(rate(1893.4, "ex"), "1,893 ex/s");
+        assert_eq!(rate(3.086, "ex"), "3.086 ex/s");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["name", "value"]);
+        t.row(["lazy", "1893"]).row(["dense", "3.086"]);
+        let s = t.render();
+        assert!(s.contains("| name  | value |"));
+        assert!(s.lines().count() == 4);
+    }
+}

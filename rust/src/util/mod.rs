@@ -1,0 +1,9 @@
+//! Foundational utilities built from scratch for the offline environment:
+//! PRNG + distributions, a CLI argument parser, and human formatting.
+
+pub mod args;
+pub mod fmt;
+pub mod rng;
+
+pub use args::Args;
+pub use rng::Rng;

@@ -1,0 +1,142 @@
+//! Integration tests across the data → synth → train → eval stack
+//! (no artifacts required; see runtime_integration.rs for the PJRT path).
+
+use lazyreg::coordinator::{train_one_vs_rest, train_streaming};
+use lazyreg::data::libsvm;
+use lazyreg::eval::evaluate;
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::testing::agrees_to_sig_figs;
+
+fn medline_small() -> lazyreg::data::SparseDataset {
+    generate(
+        &BowSpec { n_examples: 1_500, n_features: 8_000, avg_nnz: 50.0, ..Default::default() },
+        1234,
+    )
+}
+
+fn opts() -> TrainOptions {
+    TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-5, 1e-5),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 2,
+        shuffle: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn end_to_end_lazy_equals_dense_on_medline_shape() {
+    let data = medline_small();
+    let lazy = train_lazy(&data, &opts()).unwrap();
+    let dense = train_dense(&data, &opts()).unwrap();
+    let diff = lazy.model.max_weight_diff(&dense.model);
+    assert!(diff < 1e-9, "lazy vs dense diff {diff}");
+    for (a, b) in lazy.model.weights.iter().zip(dense.model.weights.iter()) {
+        assert!(agrees_to_sig_figs(*a, *b, 4), "{a} vs {b}"); // paper's criterion
+    }
+}
+
+#[test]
+fn end_to_end_learns_signal_above_chance() {
+    let data = medline_small();
+    let (train, test) = data.split(0.3, 5);
+    let mut o = opts();
+    o.epochs = 4;
+    o.shuffle = true;
+    let report = train_lazy(&train, &o).unwrap();
+    let (at_half, best) = evaluate(&report.model, &test);
+    // teacher-labeled corpus: must beat the majority-class baseline
+    let pos = test.stats().positive_rate;
+    let majority = pos.max(1.0 - pos);
+    assert!(
+        at_half.accuracy > majority + 0.03,
+        "acc {} <= majority {majority}",
+        at_half.accuracy
+    );
+    assert!(best.f1 > 0.5, "F1* {}", best.f1);
+    // loss curve decreasing
+    assert!(report.final_loss() < report.epochs[0].mean_loss);
+}
+
+#[test]
+fn libsvm_round_trip_preserves_training_result() {
+    let data = medline_small();
+    let mut buf: Vec<u8> = Vec::new();
+    libsvm::write(&mut buf, &data).unwrap();
+    let data2 = libsvm::read(buf.as_slice(), Some(data.n_features())).unwrap();
+    assert_eq!(data.x(), data2.x());
+    let a = train_lazy(&data, &opts()).unwrap();
+    let b = train_lazy(&data2, &opts()).unwrap();
+    assert_eq!(a.model.weights, b.model.weights);
+}
+
+#[test]
+fn streaming_pipeline_matches_in_memory_single_epoch() {
+    let data = medline_small();
+    let mut buf: Vec<u8> = Vec::new();
+    libsvm::write(&mut buf, &data).unwrap();
+
+    let mut o = opts();
+    o.epochs = 1;
+    o.shuffle = false;
+    let (stream_model, stats) =
+        train_streaming(buf.as_slice(), data.n_features(), &o, 64).unwrap();
+    assert_eq!(stats.examples as usize, data.n_examples());
+    assert_eq!(stats.parse_errors, 0);
+
+    let in_memory = train_lazy(&data, &o).unwrap();
+    let mut max_diff = (stream_model.bias - in_memory.model.bias).abs();
+    for (a, b) in stream_model.weights.iter().zip(in_memory.model.weights.iter()) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    // f32 values survive libsvm text exactly (printed via {}); training is
+    // identical modulo f64 ops on identical inputs.
+    assert!(max_diff < 1e-9, "stream vs memory diff {max_diff}");
+}
+
+#[test]
+fn one_vs_rest_coordinator_end_to_end() {
+    let data = medline_small();
+    let x = data.x();
+    // Two derived tags: presence of any feature < 100; original labels.
+    let tag0: Vec<f32> = (0..x.n_rows())
+        .map(|r| x.row(r).indices.iter().any(|&j| j < 100) as u8 as f32)
+        .collect();
+    let tag1: Vec<f32> = data.labels().to_vec();
+    let tags = vec![tag0.clone(), tag1];
+    let mut o = opts();
+    o.epochs = 3;
+    let report = train_one_vs_rest(x, &tags, &o, 2).unwrap();
+    assert_eq!(report.models.len(), 2);
+    // tag0 is perfectly predictable from features
+    let p: Vec<f64> = (0..x.n_rows()).map(|r| report.models[0].predict(x.row(r))).collect();
+    let m = lazyreg::eval::optimal_f1(&p, &tag0);
+    assert!(m.f1 > 0.9, "tag0 F1 {}", m.f1);
+}
+
+#[test]
+fn sgd_and_fobos_both_converge_same_data() {
+    let data = medline_small();
+    for algo in [Algo::Sgd, Algo::Fobos] {
+        let o = TrainOptions { algo, epochs: 3, ..opts() };
+        let report = train_lazy(&data, &o).unwrap();
+        assert!(
+            report.final_loss() < report.epochs[0].mean_loss,
+            "{algo:?} did not improve"
+        );
+    }
+}
+
+#[test]
+fn space_budget_flushes_do_not_change_end_to_end_result() {
+    let data = medline_small();
+    let baseline = train_lazy(&data, &opts()).unwrap();
+    let mut tiny = opts();
+    tiny.space_budget = Some(128); // ~23 flushes over 3000 iterations
+    let flushed = train_lazy(&data, &tiny).unwrap();
+    assert!(flushed.rebases > 5);
+    let diff = baseline.model.max_weight_diff(&flushed.model);
+    assert!(diff < 1e-9, "budget changed semantics: {diff}");
+}

@@ -1,0 +1,175 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts (Layer 2
+//! jax graph + Layer 1 Pallas kernels, compiled by `make artifacts`) must
+//! agree numerically with the native Rust implementations.
+//!
+//! These tests SKIP (pass trivially, with a note) when `artifacts/` is
+//! missing so `cargo test` works before the Python toolchain has run;
+//! `make test` always builds artifacts first.
+
+use lazyreg::data::BatchIter;
+use lazyreg::loss::sigmoid;
+use lazyreg::optim::{Algo, DpCache, Regularizer, Schedule};
+use lazyreg::runtime::{Runtime, XlaDenseTrainer};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn corpus(dim: usize) -> lazyreg::data::SparseDataset {
+    generate(
+        &BowSpec { n_examples: 600, n_features: dim, avg_nnz: 50.0, ..Default::default() },
+        77,
+    )
+}
+
+#[test]
+fn predict_artifact_matches_native_scoring() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta();
+    let data = corpus(meta.dim);
+    let mut rng = Rng::new(5);
+    let w: Vec<f32> = (0..meta.dim).map(|_| rng.normal_ms(0.0, 0.05) as f32).collect();
+    let bias = 0.125f32;
+
+    let batch = BatchIter::new(&data, meta.batch, meta.dim).next().unwrap();
+    let probs = rt.predict(&batch.x, &w, bias).unwrap();
+    assert_eq!(probs.len(), meta.batch);
+    for b in 0..batch.len {
+        let mut z = f64::from(bias);
+        for j in 0..meta.dim {
+            z += f64::from(batch.x[b * meta.dim + j]) * f64::from(w[j]);
+        }
+        let want = sigmoid(z);
+        assert!(
+            (want - f64::from(probs[b])).abs() < 1e-4,
+            "row {b}: native {want} vs xla {}",
+            probs[b]
+        );
+    }
+}
+
+#[test]
+fn grad_artifact_matches_finite_difference() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta();
+    let data = corpus(meta.dim);
+    let mut rng = Rng::new(6);
+    let w: Vec<f32> = (0..meta.dim).map(|_| rng.normal_ms(0.0, 0.02) as f32).collect();
+    let bias = 0.0f32;
+    let batch = BatchIter::new(&data, meta.batch, meta.dim).next().unwrap();
+
+    let (loss, gw, gb) = rt.grad(&batch.x, &batch.y, &w, bias).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(gw.len(), meta.dim);
+
+    // Finite-difference on the bias (cheap, O(1) artifact calls).
+    let h = 1e-3f32;
+    let (loss_p, _, _) = rt.grad(&batch.x, &batch.y, &w, bias + h).unwrap();
+    let (loss_m, _, _) = rt.grad(&batch.x, &batch.y, &w, bias - h).unwrap();
+    let fd = (f64::from(loss_p) - f64::from(loss_m)) / (2.0 * f64::from(h));
+    assert!(
+        (fd - f64::from(gb)).abs() < 5e-3,
+        "gb {gb} vs finite-diff {fd}"
+    );
+}
+
+#[test]
+fn fobos_step_artifact_matches_native_dense_math() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta();
+    let data = corpus(meta.dim);
+    let batch = BatchIter::new(&data, meta.batch, meta.dim).next().unwrap();
+    let mut rng = Rng::new(7);
+    let w: Vec<f32> = (0..meta.dim).map(|_| rng.normal_ms(0.0, 0.02) as f32).collect();
+    let (bias, eta, lam1, lam2) = (0.05f32, 0.1f32, 1e-3f32, 1e-2f32);
+
+    let (w2, b2, loss) = rt.fobos_step(&batch.x, &batch.y, &w, bias, eta, lam1, lam2).unwrap();
+    assert!(loss.is_finite());
+
+    // Native recomputation in f64.
+    let n = meta.batch as f64;
+    let mut gw = vec![0.0f64; meta.dim];
+    let mut gb = 0.0f64;
+    for b in 0..meta.batch {
+        let mut z = f64::from(bias);
+        for j in 0..meta.dim {
+            z += f64::from(batch.x[b * meta.dim + j]) * f64::from(w[j]);
+        }
+        let r = (sigmoid(z) - f64::from(batch.y[b])) / n;
+        for j in 0..meta.dim {
+            let x = f64::from(batch.x[b * meta.dim + j]);
+            if x != 0.0 {
+                gw[j] += x * r;
+            }
+        }
+        gb += r;
+    }
+    let mut max_diff = (f64::from(b2) - (f64::from(bias) - f64::from(eta) * gb)).abs();
+    for j in 0..meta.dim {
+        let wh = f64::from(w[j]) - f64::from(eta) * gw[j];
+        let mag = (wh.abs() - f64::from(eta) * f64::from(lam1))
+            / (1.0 + f64::from(eta) * f64::from(lam2));
+        let want = wh.signum() * mag.max(0.0);
+        let want = if wh == 0.0 { 0.0 } else { want };
+        max_diff = max_diff.max((want - f64::from(w2[j])).abs());
+    }
+    assert!(max_diff < 1e-4, "fobos_step max diff {max_diff}");
+}
+
+#[test]
+fn catchup_artifact_matches_dp_cache() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta();
+    let steps = (meta.table - 1).min(2_000);
+    let mut cache = DpCache::new(
+        Algo::Fobos,
+        Regularizer::elastic_net(1e-3, 1e-2),
+        Schedule::InvSqrtT { eta0: 0.5 },
+    );
+    for _ in 0..steps {
+        cache.step();
+    }
+    let (pt, bt) = cache.tables();
+    let mut pt32: Vec<f32> = pt.iter().map(|&x| x as f32).collect();
+    let mut bt32: Vec<f32> = bt.iter().map(|&x| x as f32).collect();
+    pt32.resize(meta.table, 1.0);
+    bt32.resize(meta.table, 0.0);
+
+    let mut rng = Rng::new(8);
+    let w: Vec<f64> = (0..meta.catchup_dim).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+    let psi: Vec<u32> = (0..meta.catchup_dim).map(|_| rng.index(steps + 1) as u32).collect();
+    let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+    let psi32: Vec<i32> = psi.iter().map(|&p| p as i32).collect();
+
+    let got = rt
+        .catchup(&w32, &psi32, &pt32, &bt32, steps as i32, cache.reg().lam1 as f32)
+        .unwrap();
+    let mut max_diff = 0.0f64;
+    for j in 0..meta.catchup_dim {
+        let want = cache.catchup(w[j], psi[j]);
+        max_diff = max_diff.max((want - f64::from(got[j])).abs());
+    }
+    assert!(max_diff < 1e-4, "catchup artifact max diff {max_diff} (f32)");
+}
+
+#[test]
+fn xla_dense_trainer_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta();
+    let data = corpus(meta.dim);
+    // Modest eta0: with count-valued BoW features the logistic gradients
+    // are large and eta0 = 0.5 diverges on 256-example batches.
+    let mut t = XlaDenseTrainer::new(&rt, 1e-6, 1e-6, 0.05);
+    let r1 = t.train(&data, 1).unwrap();
+    let r2 = t.train(&data, 1).unwrap();
+    assert!(r2.final_loss < r1.final_loss, "{} -> {}", r1.final_loss, r2.final_loss);
+    assert!(r1.examples_per_sec > 0.0);
+}
