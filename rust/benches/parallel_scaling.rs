@@ -1,0 +1,81 @@
+//! E9 — data-parallel scaling: sharded lazy training throughput vs
+//! worker count on the Medline-shaped synthetic corpus.
+//!
+//! The lazy trainer is O(p) per example on one core; this bench measures
+//! how close the sharded engine gets to linear scaling when the epoch is
+//! split across N workers synchronized by model averaging (the merge is
+//! O(d·N) per sync — amortized away at epoch-synchronous cadence).
+//!
+//! `cargo bench --bench parallel_scaling`
+//! (env LAZYREG_BENCH_N / LAZYREG_BENCH_WORKERS=1,2,4,8 to scale).
+
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::train::train_parallel;
+use lazyreg::util::fmt;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn worker_counts() -> Vec<usize> {
+    match std::env::var("LAZYREG_BENCH_WORKERS") {
+        Ok(v) => v
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .filter(|&w| w >= 1)
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("LAZYREG_BENCH_N", 16_000);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+
+    eprintln!("[parallel] generating Medline-shaped corpus n={n} d=260,941 p~88.5 ...");
+    let data = generate(&BowSpec { n_examples: n, ..Default::default() }, 42);
+    let stats = data.stats();
+
+    let base = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-6, 1e-6),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 2,
+        shuffle: false,
+        ..Default::default()
+    };
+
+    println!(
+        "\n## E9 — parallel scaling (n={}, d={}, p={:.1}, {} cores, epoch-synchronous sync)",
+        fmt::count(stats.n_examples as u64),
+        fmt::count(stats.n_features as u64),
+        stats.avg_nnz,
+        cores
+    );
+    let mut table =
+        fmt::Table::new(["workers", "examples/s", "speedup", "efficiency", "final loss"]);
+    let mut serial_rate = None;
+    for workers in worker_counts() {
+        eprintln!("[parallel] workers={workers} ...");
+        let opts = TrainOptions { workers, ..base };
+        let report = train_parallel(&data, &opts)?;
+        let rate = report.throughput;
+        let base_rate = *serial_rate.get_or_insert(rate);
+        let speedup = rate / base_rate;
+        table.row([
+            workers.to_string(),
+            fmt::rate(rate, "ex"),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", 100.0 * speedup / workers as f64),
+            format!("{:.5}", report.final_loss()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "workers=1 is the serial lazy trainer bit-for-bit; speedups are \
+         wall-clock over the same {}-example workload",
+        fmt::count((stats.n_examples * base.epochs) as u64)
+    );
+    Ok(())
+}

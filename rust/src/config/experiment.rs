@@ -83,6 +83,10 @@ impl ExperimentConfig {
         if let Some(b) = doc.get("train", "space_budget") {
             cfg.train.space_budget = Some(b.parse()?);
         }
+        cfg.train.workers = doc.get_parse("train", "workers", cfg.train.workers)?;
+        if let Some(m) = doc.get("train", "sync_interval") {
+            cfg.train.sync_interval = Some(m.parse()?);
+        }
 
         cfg.train.validate()?;
         Ok(cfg)
@@ -117,6 +121,8 @@ loss = "logistic"
 epochs = 2
 shuffle = false
 space_budget = 1024
+workers = 4
+sync_interval = 512
 "#;
         let doc = ConfigDoc::parse(text).unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
@@ -129,7 +135,22 @@ space_budget = 1024
         assert_eq!(cfg.train.epochs, 2);
         assert!(!cfg.train.shuffle);
         assert_eq!(cfg.train.space_budget, Some(1024));
+        assert_eq!(cfg.train.workers, 4);
+        assert_eq!(cfg.train.sync_interval, Some(512));
         assert_eq!(cfg.test_frac, 0.2);
+    }
+
+    #[test]
+    fn workers_default_to_serial() {
+        let cfg = ExperimentConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.train.workers, 1);
+        assert_eq!(cfg.train.sync_interval, None);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let doc = ConfigDoc::parse("[train]\nworkers = 0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]

@@ -7,10 +7,18 @@
 //!   models trained concurrently by a worker pool over a shared corpus.
 //! * [`pipeline`] — a bounded-queue producer/consumer pipeline that
 //!   streams examples (e.g. parsed from libsvm on disk) into a trainer
-//!   with backpressure, so corpora need not fit in memory.
+//!   with backpressure, so corpora need not fit in memory. With
+//!   `opts.workers > 1` the stream is dealt round-robin into per-worker
+//!   queues and the shard models merged by example-weighted averaging.
+//!
+//! Both patterns compose with the data-parallel sharded engine in
+//! [`crate::train::parallel`] via the `workers` / `sync_interval` fields
+//! of [`crate::train::TrainOptions`].
 
 pub mod pipeline;
 pub mod tagger;
 
-pub use pipeline::{train_streaming, BoundedQueue, SparseExample, StreamStats};
+pub use pipeline::{
+    train_streaming, train_streaming_sharded, BoundedQueue, SparseExample, StreamStats,
+};
 pub use tagger::{predict_tags, train_one_vs_rest, TaggerReport};

@@ -4,6 +4,13 @@
 //! pushes them into a [`BoundedQueue`]; the training thread pops and
 //! feeds the lazy trainer. When the trainer falls behind, the queue fills
 //! and the reader blocks — classic backpressure, no unbounded buffering.
+//!
+//! With `opts.workers > 1`, [`train_streaming`] shards the stream
+//! round-robin across per-worker queues; each worker trains its own
+//! [`LazyTrainer`] and the shard models are merged at end-of-stream by
+//! example-weighted averaging ([`crate::train::weighted_average`]).
+//! Shard assignment follows arrival order, so the result is a
+//! deterministic function of the input stream and options.
 
 use std::collections::VecDeque;
 use std::io::BufRead;
@@ -12,7 +19,7 @@ use std::sync::{Condvar, Mutex};
 use anyhow::Result;
 
 use crate::data::RowView;
-use crate::train::{LazyTrainer, TrainOptions};
+use crate::train::{weighted_average, LazyTrainer, TrainOptions};
 
 /// An owned sparse example flowing through the pipeline.
 #[derive(Debug, Clone, PartialEq)]
@@ -148,10 +155,52 @@ fn parse_line(line: &str) -> Option<SparseExample> {
     Some(SparseExample { indices, values, label })
 }
 
+/// Parse the stream line by line, handing each well-formed example to
+/// `sink` (which returns `false` to stop early, e.g. on queue close).
+/// Features `>= dim` are dropped and counted as parse errors; returns
+/// the error count.
+fn produce_examples<R: BufRead>(
+    reader: R,
+    dim: usize,
+    mut sink: impl FnMut(SparseExample) -> bool,
+) -> u64 {
+    let mut errors = 0u64;
+    for line in reader.lines() {
+        let Ok(line) = line else {
+            errors += 1;
+            continue;
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(&line) {
+            Some(mut ex) => {
+                // Drop features outside the model dimension.
+                let before = ex.indices.len();
+                let keep: Vec<usize> = (0..ex.indices.len())
+                    .filter(|&i| (ex.indices[i] as usize) < dim)
+                    .collect();
+                if keep.len() != before {
+                    errors += 1;
+                    ex.indices = keep.iter().map(|&i| ex.indices[i]).collect();
+                    ex.values = keep.iter().map(|&i| ex.values[i]).collect();
+                }
+                if !sink(ex) {
+                    break;
+                }
+            }
+            None => errors += 1,
+        }
+    }
+    errors
+}
+
 /// Stream libsvm text through a bounded queue into a lazy trainer.
 ///
 /// `dim` must bound all feature indices; out-of-range features are
-/// dropped (counted as parse errors). Returns the trained model report.
+/// dropped (counted as parse errors). With `opts.workers > 1` the stream
+/// is sharded round-robin across data-parallel workers (see
+/// [`train_streaming_sharded`]). Returns the trained model report.
 pub fn train_streaming<R: BufRead + Send>(
     reader: R,
     dim: usize,
@@ -159,6 +208,9 @@ pub fn train_streaming<R: BufRead + Send>(
     queue_capacity: usize,
 ) -> Result<(crate::model::LinearModel, StreamStats)> {
     opts.validate()?;
+    if opts.workers > 1 {
+        return train_streaming_sharded(reader, dim, opts, queue_capacity);
+    }
     let queue: BoundedQueue<SparseExample> = BoundedQueue::new(queue_capacity);
     let mut trainer = LazyTrainer::new(dim, opts);
     let mut stats = StreamStats { examples: 0, mean_loss: 0.0, parse_errors: 0 };
@@ -167,34 +219,7 @@ pub fn train_streaming<R: BufRead + Send>(
     std::thread::scope(|scope| {
         let q = &queue;
         let producer = scope.spawn(move || {
-            let mut errors = 0u64;
-            for line in reader.lines() {
-                let Ok(line) = line else {
-                    errors += 1;
-                    continue;
-                };
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match parse_line(&line) {
-                    Some(mut ex) => {
-                        // Drop features outside the model dimension.
-                        let before = ex.indices.len();
-                        let keep: Vec<usize> = (0..ex.indices.len())
-                            .filter(|&i| (ex.indices[i] as usize) < dim)
-                            .collect();
-                        if keep.len() != before {
-                            errors += 1;
-                            ex.indices = keep.iter().map(|&i| ex.indices[i]).collect();
-                            ex.values = keep.iter().map(|&i| ex.values[i]).collect();
-                        }
-                        if !q.push(ex) {
-                            break;
-                        }
-                    }
-                    None => errors += 1,
-                }
-            }
+            let errors = produce_examples(reader, dim, |ex| q.push(ex));
             q.close();
             errors
         });
@@ -208,6 +233,77 @@ pub fn train_streaming<R: BufRead + Send>(
 
     stats.mean_loss = if stats.examples > 0 { loss_sum / stats.examples as f64 } else { 0.0 };
     Ok((trainer.into_model(), stats))
+}
+
+/// Sharded streaming training: the reader deals examples round-robin
+/// into one [`BoundedQueue`] per worker (deterministic shard assignment
+/// by arrival order, with per-queue backpressure); each worker trains
+/// its own [`LazyTrainer`] over its shard, and the shard models are
+/// merged at end-of-stream by example-weighted averaging.
+///
+/// One merge per pass: a stream is consumed once, so the sync-interval
+/// knob of the in-memory engine does not apply here.
+pub fn train_streaming_sharded<R: BufRead + Send>(
+    reader: R,
+    dim: usize,
+    opts: &TrainOptions,
+    queue_capacity: usize,
+) -> Result<(crate::model::LinearModel, StreamStats)> {
+    opts.validate()?;
+    let workers = opts.workers.max(1);
+    let queues: Vec<BoundedQueue<SparseExample>> =
+        (0..workers).map(|_| BoundedQueue::new(queue_capacity)).collect();
+
+    let (results, parse_errors) = std::thread::scope(|scope| {
+        let qs = &queues;
+        let producer = scope.spawn(move || {
+            let mut next = 0usize;
+            let errors = produce_examples(reader, dim, |ex| {
+                let ok = qs[next % workers].push(ex);
+                next += 1;
+                ok
+            });
+            for q in qs.iter() {
+                q.close();
+            }
+            errors
+        });
+
+        let consumers: Vec<_> = qs
+            .iter()
+            .map(|q| {
+                scope.spawn(move || {
+                    let mut trainer = LazyTrainer::new(dim, opts);
+                    let mut count = 0u64;
+                    let mut loss_sum = 0.0f64;
+                    while let Some(ex) = q.pop() {
+                        loss_sum += trainer.process_example(ex.view(), f64::from(ex.label));
+                        count += 1;
+                    }
+                    (trainer.into_model(), count, loss_sum)
+                })
+            })
+            .collect();
+
+        let results: Vec<(crate::model::LinearModel, u64, f64)> = consumers
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect();
+        let parse_errors = producer.join().expect("producer panicked");
+        (results, parse_errors)
+    });
+
+    let examples: u64 = results.iter().map(|(_, c, _)| c).sum();
+    let loss_sum: f64 = results.iter().map(|(_, _, l)| l).sum();
+    let weighted: Vec<(&crate::model::LinearModel, u64)> =
+        results.iter().map(|(m, c, _)| (m, *c)).collect();
+    let model = weighted_average(&weighted);
+    let stats = StreamStats {
+        examples,
+        mean_loss: if examples > 0 { loss_sum / examples as f64 } else { 0.0 },
+        parse_errors,
+    };
+    Ok((model, stats))
 }
 
 #[cfg(test)]
@@ -294,6 +390,50 @@ mod tests {
         // feature 0 (index "1") predicts positive, feature 1 negative
         assert!(model.weights[0] > 0.0);
         assert!(model.weights[1] < 0.0);
+    }
+
+    #[test]
+    fn sharded_streaming_trains_and_counts_all_shards() {
+        let mut text = String::new();
+        for i in 0..300 {
+            if i % 2 == 0 {
+                text.push_str("1 1:2 3:1\n");
+            } else {
+                text.push_str("0 2:2 4:1\n");
+            }
+        }
+        let opts = TrainOptions { workers: 3, ..Default::default() };
+        let (model, stats) = train_streaming(text.as_bytes(), 8, &opts, 8).unwrap();
+        assert_eq!(stats.examples, 300);
+        assert_eq!(stats.parse_errors, 0);
+        // The merged model still carries the signal.
+        assert!(model.weights[0] > 0.0);
+        assert!(model.weights[1] < 0.0);
+    }
+
+    #[test]
+    fn sharded_streaming_is_deterministic() {
+        let mut text = String::new();
+        for i in 0..120 {
+            text.push_str(if i % 3 == 0 { "1 1:1 2:1\n" } else { "0 3:1 4:1\n" });
+        }
+        let opts = TrainOptions { workers: 4, ..Default::default() };
+        let (a, _) = train_streaming_sharded(text.as_bytes(), 8, &opts, 4).unwrap();
+        let (b, _) = train_streaming_sharded(text.as_bytes(), 8, &opts, 4).unwrap();
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.bias, b.bias);
+    }
+
+    #[test]
+    fn sharded_with_one_worker_matches_serial_streaming() {
+        let text = "1 1:2 3:1\n0 2:2 4:1\n1 1:1\n0 4:2\n".repeat(40);
+        let opts = TrainOptions::default();
+        let (serial, s1) = train_streaming(text.as_bytes(), 8, &opts, 8).unwrap();
+        let o = TrainOptions { workers: 1, ..opts };
+        let (sharded, s2) = train_streaming_sharded(text.as_bytes(), 8, &o, 8).unwrap();
+        assert_eq!(s1.examples, s2.examples);
+        assert_eq!(serial.weights, sharded.weights);
+        assert_eq!(serial.bias, sharded.bias);
     }
 
     #[test]

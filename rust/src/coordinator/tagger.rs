@@ -9,6 +9,12 @@
 //! Coordination: a worker pool pulls tag indices from a shared work queue
 //! (work stealing keeps skewed tags balanced); every worker shares the
 //! read-only corpus and trains its own [`LazyTrainer`].
+//!
+//! Orthogonally, `opts.workers > 1` shards *each tag's* training across
+//! data-parallel workers ([`crate::train::train_parallel_xy`]) — useful
+//! when tags are few but the corpus is large. The two axes multiply
+//! (`n_workers` tag slots × `opts.workers` shards), so pick one to scale
+//! unless cores abound.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
@@ -17,7 +23,7 @@ use anyhow::Result;
 
 use crate::data::CsrMatrix;
 use crate::model::LinearModel;
-use crate::train::{LazyTrainer, TrainOptions};
+use crate::train::{train_parallel_xy, LazyTrainer, TrainOptions};
 use crate::util::Rng;
 
 /// Report from a one-vs-rest training run.
@@ -70,20 +76,30 @@ pub fn train_one_vs_rest(
                         break;
                     }
                     let labels = &tags[k];
-                    let mut trainer = LazyTrainer::new(x.n_cols(), opts);
-                    // Per-tag deterministic shuffle stream.
-                    let mut rng = Rng::new(opts.seed ^ (k as u64).wrapping_mul(0x9E37));
-                    let mut order: Vec<usize> = (0..x.n_rows()).collect();
-                    for _ in 0..opts.epochs {
-                        if opts.shuffle {
-                            rng.shuffle(&mut order);
+                    let model = if opts.workers > 1 {
+                        // Shard this tag's examples across data-parallel
+                        // workers (per-tag seed keeps tags independent).
+                        let mut o = *opts;
+                        o.seed = opts.seed ^ (k as u64).wrapping_mul(0x9E37);
+                        train_parallel_xy(x, labels, &o)
+                            .expect("options validated above")
+                            .model
+                    } else {
+                        let mut trainer = LazyTrainer::new(x.n_cols(), opts);
+                        // Per-tag deterministic shuffle stream.
+                        let mut rng = Rng::new(opts.seed ^ (k as u64).wrapping_mul(0x9E37));
+                        let mut order: Vec<usize> = (0..x.n_rows()).collect();
+                        for _ in 0..opts.epochs {
+                            if opts.shuffle {
+                                rng.shuffle(&mut order);
+                            }
+                            for &r in &order {
+                                trainer.process_example(x.row(r), f64::from(labels[r]));
+                            }
                         }
-                        for &r in &order {
-                            trainer.process_example(x.row(r), f64::from(labels[r]));
-                        }
-                    }
+                        trainer.into_model()
+                    };
                     updates.fetch_add((x.n_rows() * opts.epochs) as u64, Ordering::Relaxed);
-                    let model = trainer.into_model();
                     slots_mutex.lock().unwrap()[k] = Some(model);
                 }
             });
@@ -177,6 +193,28 @@ mod tests {
         for (ma, mb) in a.models.iter().zip(b.models.iter()) {
             assert_eq!(ma.weights, mb.weights);
             assert_eq!(ma.bias, mb.bias);
+        }
+    }
+
+    #[test]
+    fn sharded_tag_training_still_learns_defining_features() {
+        let (x, tags) = tag_corpus(600, 12, 3);
+        let mut o = opts();
+        o.workers = 2; // shard each tag's corpus across 2 workers
+        let report = train_one_vs_rest(&x, &tags, &o, 2).unwrap();
+        for (k, m) in report.models.iter().enumerate() {
+            let wk = m.weights[k];
+            let max_other = m
+                .weights
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != k)
+                .map(|(_, w)| w.abs())
+                .fold(0.0f64, f64::max);
+            assert!(
+                wk > max_other,
+                "sharded tag {k}: defining weight {wk} <= max other {max_other}"
+            );
         }
     }
 

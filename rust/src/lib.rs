@@ -15,16 +15,30 @@
 //!
 //! * **Layer 3 (this crate)** — the training coordinator: sparse data
 //!   pipeline ([`data`]), synthetic corpus generation ([`synth`]), the
-//!   lazy update engine ([`optim`], [`train`]), multi-worker
-//!   orchestration ([`coordinator`]), evaluation ([`eval`]), a prediction
+//!   lazy update engine ([`optim`], [`train`]), the **data-parallel
+//!   sharded engine** ([`train::parallel`]: N lazy workers over disjoint
+//!   shards, synchronized by deterministic example-weighted model
+//!   averaging every `sync_interval` examples — epoch-synchronous by
+//!   default, `workers = 1` bit-identical to serial), multi-worker
+//!   orchestration ([`coordinator`]: one-vs-rest tagging and sharded
+//!   bounded-queue streaming), evaluation ([`eval`]), a prediction
 //!   service ([`serve`]) and CLI (`src/main.rs`).
 //! * **Layer 2 (JAX, build-time)** — dense mini-batch logistic-regression
 //!   graphs lowered once to HLO text (`python/compile/`), executed from
-//!   Rust through PJRT by [`runtime`].
+//!   Rust through PJRT by [`runtime`] (gated behind the `pjrt` cargo
+//!   feature; the default offline build ships a stub whose `load`
+//!   errors, so runtime-dependent tests and benches skip).
 //! * **Layer 1 (Pallas, build-time)** — the catch-up and logistic-tile
 //!   kernels called inside the Layer-2 graph.
 //!
 //! Python never runs on the training/request path.
+//!
+//! Trainers implement the [`train::Trainer`] trait; the drivers
+//! ([`train::train_lazy`], [`train::train_dense`],
+//! [`train::train_parallel`]) and coordinators are generic over it where
+//! they can be. Correctness is guarded by a from-scratch property-test
+//! harness ([`testing`]) proving lazy ≡ dense, flush-invisibility of the
+//! DP cache, and serial ≡ single-worker-parallel equivalence.
 //!
 //! ## Quickstart
 //!
@@ -69,5 +83,7 @@ pub mod prelude {
     pub use crate::loss::Loss;
     pub use crate::model::LinearModel;
     pub use crate::optim::{Algo, Regularizer, Schedule};
-    pub use crate::train::{train_dense, train_lazy, TrainOptions, TrainReport};
+    pub use crate::train::{
+        train_dense, train_lazy, train_parallel, TrainOptions, TrainReport, Trainer,
+    };
 }

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   gen       generate a synthetic Medline-like corpus to libsvm
-//!   train     train a model (lazy by default; --dense / --xla baselines)
+//!   train     train a model (lazy by default; --dense baseline;
+//!             --workers N shards across data-parallel workers, with
+//!             --sync-interval M examples between model-averaging syncs)
 //!   eval      evaluate a saved model on a libsvm dataset
 //!   serve     run the TCP prediction service
 //!   bench     quick Table-1-style lazy-vs-dense throughput comparison
@@ -22,7 +24,9 @@ use lazyreg::loss::Loss;
 use lazyreg::optim::{Algo, Regularizer, Schedule};
 use lazyreg::serve::Server;
 use lazyreg::synth::{generate, BowSpec};
-use lazyreg::train::{train_dense, train_lazy, TrainOptions};
+use lazyreg::train::{
+    train_dense, train_lazy, train_parallel, train_parallel_dense_xy, TrainOptions,
+};
 use lazyreg::util::fmt;
 use lazyreg::util::Args;
 
@@ -75,6 +79,12 @@ fn options_from(args: &Args) -> Result<(TrainOptions, BowSpec, f64, u64)> {
     }
     if let Some(b) = args.try_parse::<usize>("space-budget")? {
         cfg.train.space_budget = Some(b);
+    }
+    if let Some(w) = args.try_parse::<usize>("workers")? {
+        cfg.train.workers = w;
+    }
+    if let Some(m) = args.try_parse::<usize>("sync-interval")? {
+        cfg.train.sync_interval = Some(m);
     }
     if let Some(n) = args.try_parse::<usize>("n")? {
         cfg.corpus.n_examples = n;
@@ -133,15 +143,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let data = load_or_generate(args, &corpus, data_seed)?;
     let (train, test) = data.split(test_frac, EVAL_SPLIT_SEED());
     eprintln!(
-        "training on {} examples ({} held out), d={}",
+        "training on {} examples ({} held out), d={}, workers={}",
         train.n_examples(),
         test.n_examples(),
-        train.n_features()
+        train.n_features(),
+        opts.workers
     );
-    let report = if args.flag("dense") {
-        train_dense(&train, &opts)?
-    } else {
-        train_lazy(&train, &opts)?
+    let report = match (args.flag("dense"), opts.workers > 1) {
+        (true, true) => train_parallel_dense_xy(train.x(), train.labels(), &opts)?,
+        (true, false) => train_dense(&train, &opts)?,
+        (false, true) => train_parallel(&train, &opts)?,
+        (false, false) => train_lazy(&train, &opts)?,
     };
     for e in &report.epochs {
         eprintln!(

@@ -214,6 +214,15 @@ impl DpCache {
         self.pt.len()
     }
 
+    /// The configured space budget (table slots before a flush is
+    /// requested). Exposed so trainers and tests can reason about flush
+    /// cadence; the data-parallel broadcast
+    /// ([`crate::train::LazyTrainer::load_weights`]) reuses
+    /// [`DpCache::rebase`] with exactly the same semantics.
+    pub fn space_budget(&self) -> usize {
+        self.space_budget
+    }
+
     /// The algo this cache serves.
     pub fn algo(&self) -> Algo {
         self.algo

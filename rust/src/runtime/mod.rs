@@ -6,6 +6,11 @@
 //! xla_extension 0.5.1 behind the published `xla` crate rejects jax ≥ 0.5
 //! serialized protos (64-bit instruction ids), while the text parser
 //! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//!
+//! The PJRT client requires the external `xla` crate and is gated behind
+//! the `pjrt` cargo feature; the default (offline) build ships a stub
+//! [`Runtime`] whose `load` errors, so runtime-dependent tests and
+//! benches skip gracefully.
 
 pub mod artifact;
 pub mod xla_dense;

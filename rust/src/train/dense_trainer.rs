@@ -66,6 +66,19 @@ impl DenseTrainer {
         loss_val
     }
 
+    /// Overwrite all weights + bias with externally supplied values (the
+    /// broadcast half of the data-parallel merge step). The schedule
+    /// position `t` is preserved.
+    pub fn load_weights(&mut self, weights: &[f64], bias: f64) {
+        assert_eq!(
+            weights.len(),
+            self.model.weights.len(),
+            "load_weights: dimension mismatch"
+        );
+        self.model.weights.copy_from_slice(weights);
+        self.model.bias = bias;
+    }
+
     /// The model (always current — that's the point of dense updates).
     pub fn model(&self) -> &LinearModel {
         &self.model

@@ -6,7 +6,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::data::SparseDataset;
+use crate::data::{CsrMatrix, SparseDataset};
 use crate::model::LinearModel;
 use crate::util::Rng;
 
@@ -51,27 +51,44 @@ impl TrainReport {
     }
 }
 
-fn epoch_order(data: &SparseDataset, opts: &TrainOptions, rng: &mut Rng) -> Vec<usize> {
+/// Deterministic per-epoch visit order over `n` examples (shared by the
+/// serial drivers and the sharded parallel engine so `workers = 1` is
+/// bit-identical to serial training).
+pub(crate) fn epoch_order(n: usize, opts: &TrainOptions, rng: &mut Rng) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
     if opts.shuffle {
-        data.shuffled_order(rng)
-    } else {
-        (0..data.n_examples()).collect()
+        rng.shuffle(&mut order);
     }
+    order
 }
 
 /// Train with the paper's lazy Algorithm 1 — O(p) per example.
 pub fn train_lazy(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainReport> {
+    train_lazy_xy(data.x(), data.labels(), opts)
+}
+
+/// [`train_lazy`] over raw `(matrix, labels)` parts — the form the
+/// one-vs-rest coordinator and the parallel engine need (they hold K
+/// label vectors over one shared matrix).
+pub fn train_lazy_xy(x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -> Result<TrainReport> {
     opts.validate()?;
-    let mut trainer = LazyTrainer::new(data.n_features(), opts);
+    anyhow::ensure!(
+        x.n_rows() == labels.len(),
+        "rows ({}) != labels ({})",
+        x.n_rows(),
+        labels.len()
+    );
+    let n = x.n_rows();
+    let mut trainer = LazyTrainer::new(x.n_cols(), opts);
     let mut rng = Rng::new(opts.seed);
     let mut epochs = Vec::with_capacity(opts.epochs);
     let t0 = Instant::now();
     for epoch in 0..opts.epochs {
-        let order = epoch_order(data, opts, &mut rng);
+        let order = epoch_order(n, opts, &mut rng);
         let e0 = Instant::now();
         let mut loss_sum = 0.0;
         for &r in &order {
-            loss_sum += trainer.process_example(data.x().row(r), f64::from(data.labels()[r]));
+            loss_sum += trainer.process_example(x.row(r), f64::from(labels[r]));
         }
         epochs.push(EpochStats {
             epoch,
@@ -82,7 +99,7 @@ pub fn train_lazy(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainRepo
     }
     let seconds = t0.elapsed().as_secs_f64();
     let rebases = trainer.rebases;
-    let examples = (data.n_examples() * opts.epochs) as u64;
+    let examples = (n * opts.epochs) as u64;
     let model = trainer.into_model();
     Ok(TrainReport {
         model,
@@ -103,7 +120,7 @@ pub fn train_dense(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainRep
     let mut epochs = Vec::with_capacity(opts.epochs);
     let t0 = Instant::now();
     for epoch in 0..opts.epochs {
-        let order = epoch_order(data, opts, &mut rng);
+        let order = epoch_order(data.n_examples(), opts, &mut rng);
         let e0 = Instant::now();
         let mut loss_sum = 0.0;
         for &r in &order {

@@ -161,6 +161,33 @@ impl LazyTrainer {
         self.rebases += 1;
     }
 
+    /// Overwrite all weights + bias with externally supplied values — the
+    /// broadcast half of the data-parallel merge step
+    /// ([`crate::train::parallel`]). The DP tables are rebased so every
+    /// new weight is immediately current (ψ = 0 against fresh tables),
+    /// while the *global* step count is preserved so the learning-rate
+    /// schedule continues from where this trainer left off.
+    pub fn load_weights(&mut self, weights: &[f64], bias: f64) {
+        assert_eq!(
+            weights.len(),
+            self.slots.len(),
+            "load_weights: dimension mismatch"
+        );
+        self.cache.rebase();
+        for ((slot, &w), out) in self
+            .slots
+            .iter_mut()
+            .zip(weights.iter())
+            .zip(self.model.weights.iter_mut())
+        {
+            slot.w = w;
+            slot.psi = 0;
+            *out = w;
+        }
+        self.model.bias = bias;
+        self.finalized = true;
+    }
+
     /// Finalized model view ([`LazyTrainer::finalize`] must have run since
     /// the last update; enforced in debug builds).
     pub fn model(&self) -> &LinearModel {

@@ -1,12 +1,20 @@
-//! Trainers: the paper's lazy Algorithm 1 and the dense baseline, plus the
-//! epoch driver that produces loss curves and throughput reports.
+//! Trainers: the paper's lazy Algorithm 1, the dense baseline, the epoch
+//! driver that produces loss curves and throughput reports, and the
+//! data-parallel sharded engine that runs N lazy workers synchronized by
+//! deterministic model averaging.
 
 pub mod dense_trainer;
 pub mod driver;
 pub mod lazy_trainer;
 pub mod options;
+pub mod parallel;
+pub mod trainer;
 
 pub use dense_trainer::DenseTrainer;
-pub use driver::{train_dense, train_lazy, EpochStats, TrainReport};
+pub use driver::{train_dense, train_lazy, train_lazy_xy, EpochStats, TrainReport};
 pub use lazy_trainer::LazyTrainer;
 pub use options::TrainOptions;
+pub use parallel::{
+    train_parallel, train_parallel_dense_xy, train_parallel_xy, weighted_average,
+};
+pub use trainer::Trainer;

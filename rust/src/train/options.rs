@@ -23,6 +23,15 @@ pub struct TrainOptions {
     /// DP-cache space budget (table slots before an amortized flush);
     /// `None` = [`crate::optim::dp::DEFAULT_SPACE_BUDGET`].
     pub space_budget: Option<usize>,
+    /// Data-parallel worker count. `1` (the default) runs the serial
+    /// trainer bit-for-bit; `> 1` shards examples across workers that are
+    /// synchronized by deterministic model averaging
+    /// ([`crate::train::train_parallel`]).
+    pub workers: usize,
+    /// Examples each worker processes between model-averaging syncs.
+    /// `None` (the default) is epoch-synchronous: one merge per epoch.
+    /// Ignored when `workers == 1`.
+    pub sync_interval: Option<usize>,
 }
 
 impl Default for TrainOptions {
@@ -36,6 +45,8 @@ impl Default for TrainOptions {
             shuffle: true,
             seed: 0x1a2b_3c4d,
             space_budget: None,
+            workers: 1,
+            sync_interval: None,
         }
     }
 }
@@ -56,6 +67,10 @@ impl TrainOptions {
         }
         if let Some(b) = self.space_budget {
             anyhow::ensure!(b >= 2, "space budget must be >= 2");
+        }
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        if let Some(m) = self.sync_interval {
+            anyhow::ensure!(m >= 1, "sync interval must be >= 1");
         }
         Ok(())
     }
@@ -84,6 +99,14 @@ mod tests {
 
         let mut o = TrainOptions::default();
         o.space_budget = Some(1);
+        assert!(o.validate().is_err());
+
+        let mut o = TrainOptions::default();
+        o.workers = 0;
+        assert!(o.validate().is_err());
+
+        let mut o = TrainOptions::default();
+        o.sync_interval = Some(0);
         assert!(o.validate().is_err());
     }
 }

@@ -1,0 +1,157 @@
+//! The `Trainer` abstraction over the paper's lazy Algorithm 1 and the
+//! dense baseline.
+//!
+//! Everything downstream of per-example training — the epoch driver, the
+//! data-parallel sharded engine ([`super::parallel`]), the streaming
+//! pipeline and the one-vs-rest coordinator — only needs this small
+//! surface: feed one example, finalize, read/write the model. Extracting
+//! it lets the parallel engine (and future backends) stay generic over
+//! the update implementation.
+
+use crate::data::RowView;
+use crate::model::LinearModel;
+
+use super::dense_trainer::DenseTrainer;
+use super::lazy_trainer::LazyTrainer;
+
+/// A per-example online trainer for a linear model.
+pub trait Trainer {
+    /// Process one `(row, label)` example; returns the pre-update loss.
+    fn process_example(&mut self, row: RowView<'_>, y: f64) -> f64;
+
+    /// Bring the model fully current (no-op for eager trainers).
+    fn finalize(&mut self);
+
+    /// The current model. Callers must [`Trainer::finalize`] first if any
+    /// examples were processed since the last finalize.
+    fn model(&self) -> &LinearModel;
+
+    /// Consume into the finalized model.
+    fn into_model(self) -> LinearModel
+    where
+        Self: Sized;
+
+    /// Examples processed so far.
+    fn iterations(&self) -> u64;
+
+    /// Overwrite the model state with externally supplied weights — the
+    /// merge/broadcast step of data-parallel training. The learning-rate
+    /// schedule position is preserved; any lazy bookkeeping is reset so
+    /// the new weights are immediately current.
+    fn load_weights(&mut self, weights: &[f64], bias: f64);
+
+    /// Amortized DP-cache flushes performed (0 for eager trainers).
+    fn rebases(&self) -> u64 {
+        0
+    }
+}
+
+impl Trainer for LazyTrainer {
+    fn process_example(&mut self, row: RowView<'_>, y: f64) -> f64 {
+        LazyTrainer::process_example(self, row, y)
+    }
+
+    fn finalize(&mut self) {
+        LazyTrainer::finalize(self);
+    }
+
+    fn model(&self) -> &LinearModel {
+        LazyTrainer::model(self)
+    }
+
+    fn into_model(self) -> LinearModel {
+        LazyTrainer::into_model(self)
+    }
+
+    fn iterations(&self) -> u64 {
+        LazyTrainer::iterations(self)
+    }
+
+    fn load_weights(&mut self, weights: &[f64], bias: f64) {
+        LazyTrainer::load_weights(self, weights, bias);
+    }
+
+    fn rebases(&self) -> u64 {
+        self.rebases
+    }
+}
+
+impl Trainer for DenseTrainer {
+    fn process_example(&mut self, row: RowView<'_>, y: f64) -> f64 {
+        DenseTrainer::process_example(self, row, y)
+    }
+
+    fn finalize(&mut self) {
+        // Dense updates keep every weight current; nothing to do.
+    }
+
+    fn model(&self) -> &LinearModel {
+        DenseTrainer::model(self)
+    }
+
+    fn into_model(self) -> LinearModel {
+        DenseTrainer::into_model(self)
+    }
+
+    fn iterations(&self) -> u64 {
+        DenseTrainer::iterations(self)
+    }
+
+    fn load_weights(&mut self, weights: &[f64], bias: f64) {
+        DenseTrainer::load_weights(self, weights, bias);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CsrMatrix;
+    use crate::train::TrainOptions;
+
+    fn corpus() -> CsrMatrix {
+        let mut x = CsrMatrix::empty(5);
+        x.push_row(vec![(0, 1.0), (3, 2.0)]);
+        x.push_row(vec![(1, 1.0), (4, 1.0)]);
+        x
+    }
+
+    /// Generic over the trait — proves both impls satisfy it identically.
+    fn run<T: Trainer>(mut t: T) -> LinearModel {
+        let x = corpus();
+        for i in 0..10 {
+            let r = i % 2;
+            Trainer::process_example(&mut t, x.row(r), (r == 0) as u8 as f64);
+        }
+        Trainer::finalize(&mut t);
+        assert_eq!(Trainer::iterations(&t), 10);
+        Trainer::into_model(t)
+    }
+
+    #[test]
+    fn lazy_and_dense_agree_through_the_trait() {
+        let opts = TrainOptions::default();
+        let a = run(LazyTrainer::new(5, &opts));
+        let b = run(DenseTrainer::new(5, &opts));
+        assert!(a.max_weight_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn load_weights_round_trips_both_impls() {
+        let opts = TrainOptions::default();
+        let w = vec![0.5, -0.25, 0.0, 1.0, -1.5];
+        let mut lazy = LazyTrainer::new(5, &opts);
+        let mut dense = DenseTrainer::new(5, &opts);
+        Trainer::load_weights(&mut lazy, &w, 0.125);
+        Trainer::load_weights(&mut dense, &w, 0.125);
+        Trainer::finalize(&mut lazy);
+        assert_eq!(Trainer::model(&lazy).weights, w);
+        assert_eq!(Trainer::model(&dense).weights, w);
+        assert_eq!(Trainer::model(&lazy).bias, 0.125);
+
+        // Training continues correctly from the loaded state.
+        let x = corpus();
+        let l1 = Trainer::process_example(&mut lazy, x.row(0), 1.0);
+        let l2 = Trainer::process_example(&mut dense, x.row(0), 1.0);
+        assert!((l1 - l2).abs() < 1e-12);
+    }
+}

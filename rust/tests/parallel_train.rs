@@ -1,0 +1,160 @@
+//! Integration tests for the data-parallel sharded training engine on
+//! the Medline-shaped `medline_small` corpus — the lazy/dense/parallel
+//! equivalence triangle:
+//!
+//! * `workers = 1` must be **bit-identical** to the serial lazy trainer
+//!   (same code path by construction — asserted here).
+//! * For `workers ∈ {2, 4}`, the engine running **lazy** workers must
+//!   match the engine running **dense** workers far past the paper's
+//!   criterion (3 significant figures asserted per weight; the absolute
+//!   diff bound is orders of magnitude tighter): the per-worker update
+//!   maps are the paper's exact lazy ≡ dense equivalence and the shard +
+//!   merge schedule is identical.
+//! * Parallel averaging vs *serial* dense training is a statistical,
+//!   not numerical, equivalence (averaged shard trajectories move
+//!   ~1/workers as far per example), so against serial dense we assert
+//!   objective closeness with an honest loose bound, not sig-figs.
+
+use lazyreg::data::SparseDataset;
+use lazyreg::model::LinearModel;
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::testing::agrees_to_sig_figs;
+use lazyreg::train::{train_parallel, train_parallel_dense_xy};
+
+fn medline_small() -> SparseDataset {
+    generate(
+        &BowSpec { n_examples: 1_500, n_features: 8_000, avg_nnz: 50.0, ..Default::default() },
+        1234,
+    )
+}
+
+fn opts(workers: usize) -> TrainOptions {
+    TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-5, 1e-4),
+        schedule: Schedule::InvSqrtT { eta0: 0.3 },
+        epochs: 4,
+        shuffle: false,
+        workers,
+        sync_interval: Some(32),
+        ..Default::default()
+    }
+}
+
+/// Mean regularized objective of `model` over the corpus:
+/// (1/n) Σ loss + λ₁‖w‖₁ + (λ₂/2)‖w‖₂².
+fn objective(model: &LinearModel, data: &SparseDataset, reg: &Regularizer) -> f64 {
+    let n = data.n_examples();
+    let mut sum = 0.0f64;
+    for r in 0..n {
+        sum += model.example_loss(data.x().row(r), f64::from(data.labels()[r]));
+    }
+    sum / n as f64 + reg.penalty(&model.weights)
+}
+
+#[test]
+fn one_worker_is_bit_identical_to_serial_lazy() {
+    let data = medline_small();
+    let mut o = opts(1);
+    o.epochs = 3;
+    o.shuffle = true;
+    let serial = train_lazy(&data, &o).unwrap();
+    let par = train_parallel(&data, &o).unwrap();
+    assert_eq!(serial.model.weights, par.model.weights, "weights diverged");
+    assert_eq!(serial.model.bias, par.model.bias, "bias diverged");
+    assert_eq!(serial.rebases, par.rebases);
+    for (a, b) in serial.epochs.iter().zip(par.epochs.iter()) {
+        assert_eq!(a.mean_loss, b.mean_loss, "epoch {} loss diverged", a.epoch);
+    }
+}
+
+#[test]
+fn sharded_lazy_matches_sharded_dense_to_3_sig_figs() {
+    let data = medline_small();
+    for workers in [2usize, 4] {
+        let o = opts(workers);
+        let lazy = train_parallel(&data, &o).unwrap();
+        let dense = train_parallel_dense_xy(data.x(), data.labels(), &o).unwrap();
+
+        // Identical shard/merge schedule + the paper's per-update
+        // equivalence: the engines agree to float rounding.
+        let diff = lazy.model.max_weight_diff(&dense.model);
+        assert!(diff < 1e-8, "workers={workers}: lazy vs dense diff {diff}");
+        for (a, b) in lazy.model.weights.iter().zip(dense.model.weights.iter()) {
+            // Sig-fig (relative) comparison is meaningless for weights
+            // at the float-cancellation floor; those are covered by the
+            // absolute bound above.
+            if a.abs().max(b.abs()) < 1e-10 {
+                continue;
+            }
+            assert!(
+                agrees_to_sig_figs(*a, *b, 3),
+                "workers={workers}: weight {a} vs {b}"
+            );
+            // The paper's §7 criterion holds too, with room to spare.
+            assert!(agrees_to_sig_figs(*a, *b, 4), "4 sig figs: {a} vs {b}");
+        }
+        // Loss curves agree as well (pre-update losses over the same
+        // visit order).
+        for (a, b) in lazy.epochs.iter().zip(dense.epochs.iter()) {
+            assert!(
+                agrees_to_sig_figs(a.mean_loss, b.mean_loss, 3),
+                "workers={workers} epoch {}: {} vs {}",
+                a.epoch,
+                a.mean_loss,
+                b.mean_loss
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_workers_track_serial_dense_on_the_objective() {
+    // Model averaging is a different estimator from serial SGD, so this
+    // is a statistical-closeness bound, not a numerical one: both land
+    // near the same regularized optimum, with the parallel run lagging
+    // by roughly one factor-of-workers in effective steps.
+    let data = medline_small();
+    let base = opts(1);
+    let dense = train_dense(&data, &base).unwrap();
+    let obj_dense = objective(&dense.model, &data, &base.reg);
+
+    for workers in [2usize, 4] {
+        let par = train_parallel(&data, &opts(workers)).unwrap();
+        let obj_par = objective(&par.model, &data, &base.reg);
+        let rel = (obj_par - obj_dense).abs() / obj_dense.abs();
+        assert!(
+            rel < 0.5,
+            "workers={workers}: objective {obj_par} vs dense {obj_dense} (rel {rel:.3})"
+        );
+        // And it genuinely learns: final online loss well below the
+        // first epoch's.
+        assert!(par.final_loss() < par.epochs[0].mean_loss);
+    }
+}
+
+#[test]
+fn epoch_synchronous_default_also_converges() {
+    let data = medline_small();
+    let mut o = opts(4);
+    o.sync_interval = None; // one merge per epoch
+    let par = train_parallel(&data, &o).unwrap();
+    assert!(par.final_loss() < par.epochs[0].mean_loss);
+    assert!(par.final_loss().is_finite());
+}
+
+#[test]
+fn parallel_report_accounts_all_examples_and_epochs() {
+    let data = medline_small();
+    let mut o = opts(4);
+    o.epochs = 2;
+    let report = train_parallel(&data, &o).unwrap();
+    assert_eq!(report.examples, (data.n_examples() * 2) as u64);
+    assert_eq!(report.epochs.len(), 2);
+    for e in &report.epochs {
+        assert_eq!(e.examples, data.n_examples());
+        assert!(e.mean_loss.is_finite());
+    }
+    assert!(report.throughput > 0.0);
+}

@@ -1,0 +1,200 @@
+//! Property-test suite for the paper's equivalence claims, built on the
+//! from-scratch `testing::property` harness:
+//!
+//! * lazy O(p) training == dense O(d) training over random corpora,
+//!   schedules (all five families), regularizers (none / ℓ1 / ℓ2² /
+//!   elastic net) and both update algorithms (SGD, FoBoS), to the
+//!   paper's §7 criterion (4 significant figures) and far tighter in
+//!   absolute terms;
+//! * DP-cache rebase invisibility: a forced tiny space budget (4–64
+//!   slots, i.e. many amortized flushes) changes nothing about the final
+//!   model;
+//! * the data-parallel engine with `workers = 1` is bit-identical to the
+//!   serial lazy trainer.
+
+use lazyreg::data::CsrMatrix;
+use lazyreg::optim::{Algo, Regularizer, Schedule};
+use lazyreg::testing::{agrees_to_sig_figs, property, Gen};
+use lazyreg::train::{
+    train_parallel_dense_xy, train_parallel_xy, DenseTrainer, LazyTrainer, TrainOptions, Trainer,
+};
+use lazyreg::util::Rng;
+
+/// A random sparse corpus: `n` rows of up to `p` features out of `d`,
+/// values in {1, 2, 3} (bag-of-words-like counts), labels in {0, 1}.
+fn random_corpus(n: usize, d: usize, p: usize, rng: &mut Rng) -> (CsrMatrix, Vec<f32>) {
+    let mut x = CsrMatrix::empty(d);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = 1 + rng.index(p.min(d - 1));
+        let cols = rng.sample_distinct(d, k);
+        x.push_row(
+            cols.into_iter()
+                .map(|c| (c as u32, 1.0 + rng.index(3) as f32))
+                .collect(),
+        );
+        ys.push(rng.index(2) as f32);
+    }
+    (x, ys)
+}
+
+/// Draw a random schedule whose dynamics stay in the stable regime
+/// (large constant rates on count-valued features amplify 1e-15
+/// rounding chaotically — see the note in `benches/equivalence_report`).
+fn random_schedule(g: &mut Gen) -> Schedule {
+    match g.usize_in(0, 4) {
+        0 => Schedule::Constant { eta0: g.f64_in(0.02, 0.15) },
+        1 => Schedule::InvT { eta0: g.f64_in(0.3, 0.9) },
+        2 => Schedule::InvSqrtT { eta0: g.f64_in(0.3, 0.7) },
+        3 => Schedule::Exponential { eta0: g.f64_in(0.2, 0.5), gamma: 0.99 },
+        _ => Schedule::Step { eta0: g.f64_in(0.2, 0.5), every: 13, factor: 0.5 },
+    }
+}
+
+/// Draw a random regularizer; `eta0 * lam2 < 1` holds for every schedule
+/// above (max eta0 = 0.9, max lam2 = 0.4), so SGD stays valid.
+fn random_reg(g: &mut Gen) -> Regularizer {
+    let lam1 = if g.bool(0.25) { 0.0 } else { g.f64_in(0.0, 0.02) };
+    let lam2 = if g.bool(0.25) { 0.0 } else { g.f64_in(0.0, 0.4) };
+    Regularizer::elastic_net(lam1, lam2)
+}
+
+#[test]
+fn lazy_equals_dense_over_random_configurations() {
+    property("lazy == dense (random schedule x reg x algo)", 30, |g| {
+        let opts = TrainOptions {
+            algo: *g.choose(&[Algo::Sgd, Algo::Fobos]),
+            reg: random_reg(g),
+            schedule: random_schedule(g),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(0xE_9_u64.wrapping_add(g.case as u64 * 0x9E37));
+        let d = g.usize_in(8, 60);
+        let n = g.usize_in(10, 150);
+        let (x, ys) = random_corpus(n, d, 8, &mut rng);
+
+        let mut lazy = LazyTrainer::new(d, &opts);
+        let mut dense = DenseTrainer::new(d, &opts);
+        for (r, &y) in ys.iter().enumerate() {
+            let l1 = lazy.process_example(x.row(r), f64::from(y));
+            let l2 = dense.process_example(x.row(r), f64::from(y));
+            assert!(
+                agrees_to_sig_figs(l1, l2, 6),
+                "losses diverge at step {r}: {l1} vs {l2}"
+            );
+        }
+        lazy.finalize();
+        let diff = lazy.model().max_weight_diff(dense.model());
+        assert!(diff < 1e-7, "weight diff {diff} ({opts:?})");
+        // The paper's §7 criterion (relative comparison is meaningless at
+        // the float-cancellation floor; those weights are covered by the
+        // absolute bound above).
+        for (a, b) in lazy
+            .model()
+            .weights
+            .iter()
+            .zip(dense.model().weights.iter())
+        {
+            if a.abs().max(b.abs()) > 1e-10 {
+                assert!(agrees_to_sig_figs(*a, *b, 4), "{a} vs {b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn dp_cache_rebase_is_semantically_invisible() {
+    property("tiny space budget == default budget", 30, |g| {
+        let opts = TrainOptions {
+            algo: *g.choose(&[Algo::Sgd, Algo::Fobos]),
+            reg: random_reg(g),
+            schedule: random_schedule(g),
+            ..Default::default()
+        };
+        let mut tiny = opts;
+        tiny.space_budget = Some(g.usize_in(4, 64));
+
+        let mut rng = Rng::new(0xB0B_u64.wrapping_add(g.case as u64 * 0x5BD1));
+        let d = g.usize_in(10, 50);
+        let (x, ys) = random_corpus(200, d, 6, &mut rng);
+
+        let mut budgeted = LazyTrainer::new(d, &tiny);
+        let mut default = LazyTrainer::new(d, &opts);
+        for (r, &y) in ys.iter().enumerate() {
+            budgeted.process_example(x.row(r), f64::from(y));
+            default.process_example(x.row(r), f64::from(y));
+        }
+        // 200 steps against a <= 64-slot table must have flushed.
+        assert!(budgeted.rebases > 0, "no rebase with budget {:?}", tiny.space_budget);
+        assert_eq!(default.rebases, 0);
+        budgeted.finalize();
+        default.finalize();
+        let diff = budgeted.model().max_weight_diff(default.model());
+        assert!(diff < 1e-9, "rebase changed semantics: diff {diff}");
+    });
+}
+
+#[test]
+fn parallel_engine_lazy_equals_dense_workers() {
+    // The third side of the lazy/dense/parallel triangle: for any worker
+    // count and sync cadence, the sharded engine produces the same model
+    // whether workers run lazy or dense updates (identical shard + merge
+    // schedule; per-worker updates are the paper's exact equivalence).
+    property("sharded lazy workers == sharded dense workers", 15, |g| {
+        let opts = TrainOptions {
+            algo: *g.choose(&[Algo::Sgd, Algo::Fobos]),
+            reg: random_reg(g),
+            schedule: random_schedule(g),
+            epochs: g.usize_in(1, 2),
+            workers: g.usize_in(2, 4),
+            sync_interval: if g.bool(0.5) { Some(g.usize_in(1, 25)) } else { None },
+            ..Default::default()
+        };
+        let mut rng = Rng::new(0xD1CE_u64.wrapping_add(g.case as u64 * 0x6C62));
+        let d = g.usize_in(8, 40);
+        let (x, ys) = random_corpus(g.usize_in(12, 120), d, 6, &mut rng);
+
+        let lazy = train_parallel_xy(&x, &ys, &opts).unwrap();
+        let dense = train_parallel_dense_xy(&x, &ys, &opts).unwrap();
+        let diff = lazy.model.max_weight_diff(&dense.model);
+        assert!(diff < 1e-8, "parallel lazy vs dense diff {diff} ({opts:?})");
+    });
+}
+
+#[test]
+fn parallel_single_worker_is_bitwise_serial() {
+    property("train_parallel(workers=1) == serial lazy", 15, |g| {
+        let mut opts = TrainOptions {
+            algo: *g.choose(&[Algo::Sgd, Algo::Fobos]),
+            reg: random_reg(g),
+            schedule: random_schedule(g),
+            epochs: g.usize_in(1, 3),
+            workers: 1,
+            ..Default::default()
+        };
+        // sync_interval must be irrelevant when workers == 1.
+        if g.bool(0.5) {
+            opts.sync_interval = Some(g.usize_in(1, 20));
+        }
+        let mut rng = Rng::new(0xCAFE_u64.wrapping_add(g.case as u64 * 0x41C6));
+        let d = g.usize_in(8, 40);
+        let (x, ys) = random_corpus(g.usize_in(10, 100), d, 6, &mut rng);
+
+        let par = train_parallel_xy(&x, &ys, &opts).unwrap();
+
+        let mut serial = LazyTrainer::new(d, &opts);
+        let mut order_rng = Rng::new(opts.seed);
+        for _ in 0..opts.epochs {
+            let mut order: Vec<usize> = (0..x.n_rows()).collect();
+            if opts.shuffle {
+                order_rng.shuffle(&mut order);
+            }
+            for &r in &order {
+                Trainer::process_example(&mut serial, x.row(r), f64::from(ys[r]));
+            }
+        }
+        let serial_model = serial.into_model();
+        assert_eq!(par.model.weights, serial_model.weights);
+        assert_eq!(par.model.bias, serial_model.bias);
+    });
+}
