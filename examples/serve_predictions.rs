@@ -1,11 +1,14 @@
-//! Serving: train a model, expose it over the TCP prediction service, and
-//! drive it with concurrent clients, reporting latency and throughput.
+//! Serving: train a model, expose it over the TCP prediction service
+//! (optionally feature-sharded with `--shards N`), and drive it with
+//! concurrent clients — first one example per round trip, then through
+//! the `batch` protocol command — reporting latency and throughput.
 //! When the AOT artifacts are present, also scores a dense batch through
 //! the compiled `predict` graph (Layer 2/1 via PJRT) and cross-checks the
 //! numbers against native scoring.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_predictions
+//! make artifacts && cargo run --release --example serve_predictions -- \
+//!     --shards 2 --batch 64
 //! ```
 
 use std::time::Instant;
@@ -13,40 +16,57 @@ use std::time::Instant;
 use lazyreg::data::BatchIter;
 use lazyreg::prelude::*;
 use lazyreg::runtime::Runtime;
-use lazyreg::serve::{Client, Server};
+use lazyreg::serve::{Client, ServeOptions, Server};
 use lazyreg::synth::{generate, BowSpec};
 use lazyreg::util::{fmt, Args};
+
+/// One sparse request: `(feature, value)` pairs.
+type Example = Vec<(u32, f32)>;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_clients: usize = args.get_parse("clients", 4);
     let requests_per_client: usize = args.get_parse("requests", 2_000);
+    let batch: usize = args.get_parse("batch", 64).max(1);
+    let opts = ServeOptions {
+        shards: args.get_parse("shards", 1),
+        // One pool worker per persistent client, or queued clients would
+        // be shed once the first wave outlasts the queue-wait limit.
+        workers: args.get_parse("workers", n_clients.max(4)),
+        batch_max: batch.max(256),
+        ..Default::default()
+    };
 
     // Train a quick model.
-    let spec = BowSpec { n_examples: 4_000, n_features: 20_000, avg_nnz: 60.0, ..Default::default() };
+    let spec = BowSpec {
+        n_examples: 4_000,
+        n_features: 20_000,
+        avg_nnz: 60.0,
+        ..Default::default()
+    };
     let data = generate(&spec, 3);
-    let opts = TrainOptions { epochs: 2, ..Default::default() };
-    let report = train_lazy(&data, &opts)?;
+    let train_opts = TrainOptions { epochs: 2, ..Default::default() };
+    let report = train_lazy(&data, &train_opts)?;
     eprintln!("model trained ({} weights non-zero)", report.model.sparsity().nnz);
 
     // Serve it.
-    let server = Server::spawn(report.model.clone(), "127.0.0.1:0")?;
+    let server = Server::spawn_with(report.model.clone(), "127.0.0.1:0", opts)?;
     let addr = server.addr();
-    println!("serving on {addr}");
+    println!("serving on {addr} (shards={}, pool={})", opts.shards, opts.workers);
 
-    // Concurrent clients replay real examples.
+    let example = |i: usize| -> Example { data.x().row(i % data.n_examples()).iter().collect() };
+
+    // Phase 1: concurrent clients, one example per round trip.
     let t0 = Instant::now();
     std::thread::scope(|scope| -> anyhow::Result<()> {
         let mut handles = Vec::new();
         for c in 0..n_clients {
-            let data = &data;
+            let example = &example;
             handles.push(scope.spawn(move || -> anyhow::Result<f64> {
                 let mut client = Client::connect(addr)?;
                 let mut sum = 0.0;
                 for i in 0..requests_per_client {
-                    let row = data.x().row((c * 7919 + i) % data.n_examples());
-                    let feats: Vec<(u32, f32)> = row.iter().collect();
-                    sum += client.predict(&feats)?;
+                    sum += client.predict(&example(c * 7919 + i))?;
                 }
                 client.quit()?;
                 Ok(sum)
@@ -58,15 +78,49 @@ fn main() -> anyhow::Result<()> {
         Ok(())
     })?;
     let total = (n_clients * requests_per_client) as f64;
-    let secs = t0.elapsed().as_secs_f64();
+    let single_rate = total / t0.elapsed().as_secs_f64();
     println!(
-        "{} requests in {:.2}s -> {}",
+        "single-row: {} requests in {:.2}s -> {}",
         fmt::count(total as u64),
-        secs,
-        fmt::rate(total / secs, "req")
+        t0.elapsed().as_secs_f64(),
+        fmt::rate(single_rate, "req")
     );
+
+    // Phase 2: the same workload through `batch` (k examples/round trip).
+    let groups: Vec<Vec<Example>> = (0..requests_per_client.div_ceil(batch))
+        .map(|g| (0..batch).map(|k| example(g * batch + k)).collect())
+        .collect();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for _ in 0..n_clients {
+            let groups = &groups;
+            handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                let mut client = Client::connect(addr)?;
+                for g in groups {
+                    client.predict_batch(g)?;
+                }
+                client.quit()?;
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("client panicked")?;
+        }
+        Ok(())
+    })?;
+    let batched = (n_clients * groups.len() * batch) as f64;
+    let batch_rate = batched / t0.elapsed().as_secs_f64();
+    println!(
+        "batch({batch}): {} examples in {:.2}s -> {} ({:.1}x single-row)",
+        fmt::count(batched as u64),
+        t0.elapsed().as_secs_f64(),
+        fmt::rate(batch_rate, "ex"),
+        batch_rate / single_rate
+    );
+
     let mut probe = Client::connect(addr)?;
-    println!("server latency: {}", probe.stats()?);
+    println!("server stats: {}", probe.stats()?);
     probe.quit()?;
     server.shutdown();
 

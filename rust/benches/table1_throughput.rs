@@ -56,8 +56,12 @@ fn main() -> anyhow::Result<()> {
     let dense_rate = dense_examples as f64 / t0.elapsed().as_secs_f64();
     let speedup = lazy.throughput / dense_rate;
 
-    println!("\n## E1 / Table 1 — FoBoS elastic net, n={n}, d={}, p={:.2}", stats.n_features, stats.avg_nnz);
-    let mut t = fmt::Table::new(["metric", "lazy updates (ours)", "dense updates", "paper (lazy/dense)"]);
+    println!(
+        "\n## E1 / Table 1 — FoBoS elastic net, n={n}, d={}, p={:.2}",
+        stats.n_features, stats.avg_nnz
+    );
+    let mut t =
+        fmt::Table::new(["metric", "lazy updates (ours)", "dense updates", "paper (lazy/dense)"]);
     t.row([
         "examples / second".to_string(),
         fmt::rate(lazy.throughput, "ex"),

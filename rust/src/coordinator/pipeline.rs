@@ -58,7 +58,10 @@ impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> BoundedQueue<T> {
         assert!(capacity > 0);
         BoundedQueue {
-            inner: Mutex::new(QueueState { items: VecDeque::with_capacity(capacity), closed: false }),
+            inner: Mutex::new(QueueState {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,

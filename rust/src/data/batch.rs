@@ -40,7 +40,12 @@ impl<'a> BatchIter<'a> {
     }
 
     /// Iterate in a caller-provided order (e.g. a shuffled epoch).
-    pub fn with_order(data: &'a SparseDataset, order: Vec<usize>, batch: usize, dim: usize) -> Self {
+    pub fn with_order(
+        data: &'a SparseDataset,
+        order: Vec<usize>,
+        batch: usize,
+        dim: usize,
+    ) -> Self {
         BatchIter { data, order, pos: 0, batch, dim }
     }
 }

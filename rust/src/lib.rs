@@ -21,8 +21,13 @@
 //!   averaging every `sync_interval` examples — epoch-synchronous by
 //!   default, `workers = 1` bit-identical to serial), multi-worker
 //!   orchestration ([`coordinator`]: one-vs-rest tagging and sharded
-//!   bounded-queue streaming), evaluation ([`eval`]), a prediction
-//!   service ([`serve`]) and CLI (`src/main.rs`).
+//!   bounded-queue streaming), evaluation ([`eval`]), the **serving
+//!   layer** ([`predict`]: the [`predict::Predictor`] trait over native,
+//!   **feature-sharded** ([`predict::ShardedModel`] — the serving dual of
+//!   the example-sharded trainer, bitwise-identical scores for any shard
+//!   count via block-partial tree reduction), and `pjrt` artifact-batched
+//!   scoring; [`serve`]: a fixed-worker-pool TCP service with batched
+//!   requests and hot model reload) and CLI (`src/main.rs`).
 //! * **Layer 2 (JAX, build-time)** — dense mini-batch logistic-regression
 //!   graphs lowered once to HLO text (`python/compile/`), executed from
 //!   Rust through PJRT by [`runtime`] (gated behind the `pjrt` cargo
@@ -70,6 +75,7 @@ pub mod loss;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod predict;
 pub mod runtime;
 pub mod serve;
 pub mod synth;
@@ -83,6 +89,7 @@ pub mod prelude {
     pub use crate::loss::Loss;
     pub use crate::model::LinearModel;
     pub use crate::optim::{Algo, Regularizer, Schedule};
+    pub use crate::predict::Predictor;
     pub use crate::train::{
         train_dense, train_lazy, train_parallel, TrainOptions, TrainReport, Trainer,
     };

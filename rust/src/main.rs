@@ -6,7 +6,10 @@
 //!             --workers N shards across data-parallel workers, with
 //!             --sync-interval M examples between model-averaging syncs)
 //!   eval      evaluate a saved model on a libsvm dataset
-//!   serve     run the TCP prediction service
+//!   serve     run the TCP prediction service (--shards N feature-sharded
+//!             scoring, --workers K connection pool, --batch-max M,
+//!             --artifact to batch-score through the AOT predict graph;
+//!             hot-reloadable via the `reload` protocol command)
 //!   bench     quick Table-1-style lazy-vs-dense throughput comparison
 //!   info      print artifact + corpus statistics
 //!
@@ -22,7 +25,7 @@ use lazyreg::data::libsvm;
 use lazyreg::eval::evaluate;
 use lazyreg::loss::Loss;
 use lazyreg::optim::{Algo, Regularizer, Schedule};
-use lazyreg::serve::Server;
+use lazyreg::serve::{ServeOptions, Server};
 use lazyreg::synth::{generate, BowSpec};
 use lazyreg::train::{
     train_dense, train_lazy, train_parallel, train_parallel_dense_xy, TrainOptions,
@@ -99,7 +102,11 @@ fn options_from(args: &Args) -> Result<(TrainOptions, BowSpec, f64, u64)> {
     Ok((cfg.train, cfg.corpus, cfg.test_frac, cfg.data_seed))
 }
 
-fn load_or_generate(args: &Args, corpus: &BowSpec, data_seed: u64) -> Result<lazyreg::data::SparseDataset> {
+fn load_or_generate(
+    args: &Args,
+    corpus: &BowSpec,
+    data_seed: u64,
+) -> Result<lazyreg::data::SparseDataset> {
     match args.opt("data") {
         Some(path) => libsvm::read_file(path, args.try_parse::<usize>("dims")?)
             .with_context(|| format!("load {path}")),
@@ -141,7 +148,7 @@ fn load_model(path: &str, _loss: Loss) -> Result<lazyreg::model::LinearModel> {
 fn cmd_train(args: &Args) -> Result<()> {
     let (opts, corpus, test_frac, data_seed) = options_from(args)?;
     let data = load_or_generate(args, &corpus, data_seed)?;
-    let (train, test) = data.split(test_frac, EVAL_SPLIT_SEED());
+    let (train, test) = data.split(test_frac, EVAL_SPLIT_SEED);
     eprintln!(
         "training on {} examples ({} held out), d={}, workers={}",
         train.n_examples(),
@@ -167,7 +174,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (at_half, best) = evaluate(&report.model, &test);
     let sp = report.model.sparsity();
     println!(
-        "throughput={} loss={:.5} acc={:.4} f1@0.5={:.4} f1*={:.4} nnz(w)={} ({:.3}% dense) rebases={}",
+        "throughput={} loss={:.5} acc={:.4} f1@0.5={:.4} f1*={:.4} nnz(w)={} \
+         ({:.3}% dense) rebases={}",
         fmt::rate(report.throughput, "ex"),
         report.final_loss(),
         at_half.accuracy,
@@ -184,10 +192,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[allow(non_snake_case)]
-fn EVAL_SPLIT_SEED() -> u64 {
-    0x5EED_5EED
-}
+/// Fixed seed for the train/test split (reports stay comparable).
+const EVAL_SPLIT_SEED: u64 = 0x5EED_5EED;
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
@@ -198,7 +204,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let p: Vec<f64> = (0..data.n_examples()).map(|r| model.predict(data.x().row(r))).collect();
     let auc = lazyreg::eval::auc(&p, data.labels());
     println!(
-        "n={} acc={:.4} p={:.4} r={:.4} f1@0.5={:.4} | f1*={:.4} @ threshold {:.4} auc={:.4} logloss={:.5}",
+        "n={} acc={:.4} p={:.4} r={:.4} f1@0.5={:.4} | f1*={:.4} @ threshold {:.4} \
+         auc={:.4} logloss={:.5}",
         at_half.n, at_half.accuracy, at_half.precision, at_half.recall, at_half.f1,
         best.f1, best.threshold, auc, at_half.log_loss
     );
@@ -209,9 +216,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
     let model = load_model(model_path, Loss::Logistic)?;
     let addr = args.get("addr", "127.0.0.1:7878");
-    let server = Server::spawn(model, &addr)?;
-    println!("serving predictions on {}", server.addr());
-    println!("protocol: `predict idx:val ...` | `stats` | `quit`");
+    let opts = ServeOptions {
+        shards: args.get_parse("shards", 1usize),
+        workers: args.get_parse("workers", 4usize),
+        batch_max: args.get_parse("batch-max", 256usize),
+        artifact: args.flag("artifact"),
+    };
+    let server = Server::spawn_with(model, &addr, opts)?;
+    println!(
+        "serving predictions on {} (shards={} workers={} batch_max={} artifact={})",
+        server.addr(),
+        opts.shards,
+        opts.workers,
+        opts.batch_max,
+        opts.artifact
+    );
+    println!(
+        "protocol: `predict idx:val ...` | `batch ex;ex;...` | \
+         `reload <model-path>` | `stats` | `quit`"
+    );
     // Run until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -233,7 +256,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     eprintln!("dense pass...");
     let dense = train_dense(&data, &o)?;
     let mut t = fmt::Table::new(["trainer", "examples/s", "relative"]);
-    t.row(["lazy (ours)".into(), fmt::rate(lazy.throughput, "ex"), format!("{:.1}x", lazy.throughput / dense.throughput)]);
+    t.row([
+        "lazy (ours)".into(),
+        fmt::rate(lazy.throughput, "ex"),
+        format!("{:.1}x", lazy.throughput / dense.throughput),
+    ]);
     t.row(["dense".into(), fmt::rate(dense.throughput, "ex"), "1.0x".into()]);
     println!("{}", t.render());
     println!(

@@ -105,7 +105,12 @@ impl Default for LatencyHistogram {
 impl LatencyHistogram {
     /// Empty histogram.
     pub fn new() -> LatencyHistogram {
-        LatencyHistogram { buckets: vec![0; 96], count: 0, sum: Duration::ZERO, max: Duration::ZERO }
+        LatencyHistogram {
+            buckets: vec![0; 96],
+            count: 0,
+            sum: Duration::ZERO,
+            max: Duration::ZERO,
+        }
     }
 
     fn bucket_of(d: Duration) -> usize {
@@ -120,9 +125,19 @@ impl LatencyHistogram {
 
     /// Record one observation.
     pub fn record(&mut self, d: Duration) {
-        self.buckets[Self::bucket_of(d)] += 1;
-        self.count += 1;
-        self.sum += d;
+        self.record_n(d, 1);
+    }
+
+    /// Record `n` observations of the same duration — e.g. a batch
+    /// request's per-example latency, recorded once per example so the
+    /// percentiles stay in per-observation units.
+    pub fn record_n(&mut self, d: Duration, n: u32) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[Self::bucket_of(d)] += u64::from(n);
+        self.count += u64::from(n);
+        self.sum += d * n;
         if d > self.max {
             self.max = d;
         }
@@ -216,6 +231,22 @@ mod tests {
         assert!(h.quantile(0.99) <= h.max() * 2);
         assert!(h.mean() >= Duration::from_micros(10));
         assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let d = Duration::from_micros(25);
+        a.record_n(d, 5);
+        for _ in 0..5 {
+            b.record(d);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.quantile(0.99), b.quantile(0.99));
+        a.record_n(d, 0);
+        assert_eq!(a.count(), 5, "n=0 records nothing");
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Batch scoring through the AOT `predict` artifact (Layer 2/1 via PJRT).
+//!
+//! The artifact computes `p[B] = σ(X·w + b)` over fixed-shape dense
+//! mini-batches, so this predictor's hot path is [`Predictor::predict_batch`]:
+//! rows are densified into the artifact's `batch × dim` shape (features
+//! `>= dim` are dropped, mirroring [`crate::data::BatchIter`]) and scored
+//! in chunks. Single-row scoring falls back to the native blocked kernel
+//! over the same truncated weights, so both paths see identical feature
+//! sets — but **not identical arithmetic**: the artifact computes in f32
+//! (dot and sigmoid in-graph) while the native path is f64, so `predict`
+//! and `predict_batch` can disagree by f32-rounding scale (~1e-6 of
+//! probability, more for large-magnitude scores).
+//!
+//! Construction requires [`Runtime::load`] to succeed, which only happens
+//! in builds with the `pjrt` cargo feature — the default offline stub
+//! errors and this type is simply never instantiated (callers fall back
+//! to the native or sharded predictor).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::RowView;
+use crate::loss::Loss;
+use crate::model::LinearModel;
+use crate::runtime::Runtime;
+
+use super::{blocked_score, Predictor};
+
+/// A [`Predictor`] that scores dense mini-batches through the compiled
+/// `predict` artifact.
+pub struct ArtifactBatcher {
+    rt: Runtime,
+    batch: usize,
+    /// The artifact's dense feature dimension; features at or beyond it
+    /// are *dropped* when scoring, never rejected.
+    art_dim: usize,
+    /// The model's nominal dimensionality (what [`Predictor::dim`]
+    /// reports, so request validation is independent of artifact shape).
+    model_dim: usize,
+    /// f64 weights truncated/padded to the artifact dim (native path).
+    weights: Vec<f64>,
+    /// f32 copy handed to the artifact.
+    weights_f32: Vec<f32>,
+    bias: f64,
+    version: u64,
+}
+
+impl ArtifactBatcher {
+    /// Load the artifacts in `dir` and bind `model`'s weights to them.
+    ///
+    /// Fails when the runtime is unavailable (offline stub build), when
+    /// the artifacts are missing, or when the model's loss is not
+    /// logistic (the artifact bakes in the sigmoid).
+    pub fn load(dir: &Path, model: &LinearModel, version: u64) -> Result<ArtifactBatcher> {
+        ensure!(
+            model.loss == Loss::Logistic,
+            "predict artifact is logistic-only (model loss: {})",
+            model.loss.name()
+        );
+        let rt = Runtime::load(dir).context("load PJRT artifacts")?;
+        let meta = rt.meta();
+        ensure!(meta.batch > 0 && meta.dim > 0, "degenerate artifact shapes: {meta:?}");
+        let mut weights = vec![0.0f64; meta.dim];
+        for (j, &w) in model.weights.iter().take(meta.dim).enumerate() {
+            weights[j] = w;
+        }
+        let weights_f32 = weights.iter().map(|&w| w as f32).collect();
+        Ok(ArtifactBatcher {
+            rt,
+            batch: meta.batch,
+            art_dim: meta.dim,
+            model_dim: model.weights.len(),
+            weights,
+            weights_f32,
+            bias: model.bias,
+            version,
+        })
+    }
+
+    /// The artifact's fixed mini-batch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+impl Predictor for ArtifactBatcher {
+    fn dim(&self) -> usize {
+        self.model_dim
+    }
+
+    fn loss(&self) -> Loss {
+        Loss::Logistic
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn score(&self, row: RowView<'_>) -> f64 {
+        // Native fallback over the truncated weights; features >= the
+        // artifact dim contribute nothing, exactly as in the batch path.
+        let cut = row.indices.partition_point(|&j| (j as usize) < self.art_dim);
+        let slice = RowView { indices: &row.indices[..cut], values: &row.values[..cut] };
+        blocked_score(self.bias, slice, &self.weights)
+    }
+
+    fn predict_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(rows.len());
+        let mut x = vec![0.0f32; self.batch * self.art_dim];
+        for chunk in rows.chunks(self.batch) {
+            x.fill(0.0);
+            for (b, row) in chunk.iter().enumerate() {
+                let dst = &mut x[b * self.art_dim..(b + 1) * self.art_dim];
+                for (j, v) in row.iter() {
+                    if (j as usize) < self.art_dim {
+                        dst[j as usize] = v;
+                    }
+                }
+            }
+            match self.rt.predict(&x, &self.weights_f32, self.bias as f32) {
+                Ok(probs) => {
+                    out.extend(probs.iter().take(chunk.len()).map(|&p| f64::from(p)));
+                }
+                // Keep serving if the runtime hiccups: score natively.
+                Err(_) => out.extend(chunk.iter().map(|&r| self.predict(r))),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_build_cannot_construct() {
+        let model = LinearModel::zeros(8, Loss::Logistic);
+        let err = ArtifactBatcher::load(Path::new("artifacts"), &model, 1).unwrap_err();
+        assert!(err.to_string().contains("PJRT") || err.to_string().contains("artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_logistic_models() {
+        let model = LinearModel::zeros(8, Loss::Hinge);
+        let err = ArtifactBatcher::load(Path::new("artifacts"), &model, 1).unwrap_err();
+        assert!(err.to_string().contains("logistic"), "{err}");
+    }
+}

@@ -1,0 +1,374 @@
+//! The serving-side prediction API: the [`Predictor`] trait and its
+//! implementations.
+//!
+//! Training produces a [`LinearModel`]; *serving* needs an abstraction
+//! over the ways that model can be scored at request time:
+//!
+//! * [`LinearModel`] itself — the native in-process scorer (wrapped in
+//!   [`Versioned`] when the server needs reload version tracking);
+//! * [`ShardedModel`] — the weight vector partitioned by feature range
+//!   across N persistent worker threads, the serving dual of the
+//!   example-sharded training engine in [`crate::train::parallel`];
+//! * [`ArtifactBatcher`] — batch scoring through the AOT `predict`
+//!   artifact via [`crate::runtime`] (requires the `pjrt` feature at
+//!   runtime; the stub runtime's `load` errors and the batcher is never
+//!   constructed).
+//!
+//! ## The canonical blocked score
+//!
+//! Floating-point addition is not associative, so naively splitting a
+//! dot product across shards would change the result with the shard
+//! count. This module instead *defines* the serving score with a fixed
+//! reduction structure: per-feature products are accumulated
+//! sequentially inside [`SCORE_BLOCK`]-wide feature ranges ("blocks"),
+//! and the non-empty block partials are folded into the bias in
+//! ascending block order ([`fold_score`]). Shard boundaries always fall
+//! on block boundaries, and merging shards concatenates their ordered
+//! block-partial lists — an associative operation — so **every
+//! implementation produces bitwise-identical scores for any shard
+//! count** (asserted for shard counts {1, 2, 7} by the test suite).
+//!
+//! The blocked score differs from the fully-sequential
+//! [`LinearModel::score`] (which the trainers' hot paths use and whose
+//! rounding the lazy ≡ dense equivalence suite pins down) by at most a
+//! few ulps, only when a row spans multiple blocks.
+
+pub mod artifact;
+pub mod sharded;
+
+pub use artifact::ArtifactBatcher;
+pub use sharded::ShardedModel;
+
+use std::sync::Arc;
+
+use crate::data::{CsrMatrix, RowView};
+use crate::loss::Loss;
+use crate::model::LinearModel;
+
+/// Feature-range width of one reduction block of the canonical score.
+///
+/// Shard boundaries are always multiples of this, so within-block
+/// accumulation never crosses a shard.
+pub const SCORE_BLOCK: u32 = 4096;
+
+/// The canonical serving score: bias + blocked dot product.
+///
+/// `weights` is indexed by the row's global feature indices. Defined as
+/// [`block_partials`] + [`fold_score`] so there is exactly **one** copy
+/// of the rounding chain the bitwise sharding contract depends on.
+pub fn blocked_score(bias: f64, row: RowView<'_>, weights: &[f64]) -> f64 {
+    let mut partials = Vec::new();
+    block_partials(row, weights, 0, &mut partials);
+    fold_score(bias, &partials)
+}
+
+/// Append `row`'s non-empty `(block id, partial sum)` pairs, in ascending
+/// block order, to `out`.
+///
+/// `weights[0]` holds the weight of global feature `base` (shard workers
+/// pass their range offset; whole-vector callers pass 0). Within a block
+/// the accumulation order is ascending feature index — exactly the
+/// rounding chain [`blocked_score`] uses, so folding the pairs with
+/// [`fold_score`] reproduces it bitwise.
+pub fn block_partials(row: RowView<'_>, weights: &[f64], base: u32, out: &mut Vec<(u32, f64)>) {
+    let mut cur = 0u32;
+    let mut acc = 0.0f64;
+    let mut open = false;
+    for (j, v) in row.iter() {
+        let b = j / SCORE_BLOCK;
+        if open && b != cur {
+            out.push((cur, acc));
+            acc = 0.0;
+        }
+        cur = b;
+        open = true;
+        acc += f64::from(v) * weights[(j - base) as usize];
+    }
+    if open {
+        out.push((cur, acc));
+    }
+}
+
+/// Fold block partials (ascending block order) into the bias — the single
+/// rounding chain every [`Predictor`] implementation shares.
+pub fn fold_score(bias: f64, partials: &[(u32, f64)]) -> f64 {
+    let mut z = bias;
+    for &(_, p) in partials {
+        z += p;
+    }
+    z
+}
+
+/// A scoring engine the prediction service can serve from.
+///
+/// Implementations must be shareable across the server's connection
+/// workers (`Send + Sync`); the server holds the current predictor in an
+/// `Arc<RwLock<Arc<dyn Predictor>>>` slot so a `reload` can hot-swap it
+/// without dropping connections.
+///
+/// Rows must uphold the [`RowView`] invariant — **strictly increasing
+/// column indices** below [`Predictor::dim`]. Every in-tree producer
+/// ([`CsrMatrix`], the serve protocol parser) guarantees both halves;
+/// [`ShardedModel`] additionally `debug_assert`s them, since its range
+/// split binary-searches each row. Violations are a contract breach with
+/// impl-defined behavior: the native impl panics on an out-of-range
+/// index where a release-build sharded impl silently ignores it.
+pub trait Predictor: Send + Sync {
+    /// Nominal feature dimensionality (requests index below this).
+    fn dim(&self) -> usize;
+
+    /// The loss used to map raw scores to predictions.
+    fn loss(&self) -> Loss;
+
+    /// Monotonically increasing model version (bumped on hot reload;
+    /// freshly trained / directly constructed predictors report 0).
+    fn version(&self) -> u64;
+
+    /// Raw score `z = w·x + b` under the canonical blocked reduction.
+    fn score(&self, row: RowView<'_>) -> f64;
+
+    /// Raw scores for a batch of rows.
+    fn score_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+        rows.iter().map(|&r| self.score(r)).collect()
+    }
+
+    /// Prediction in label units (probability for logistic).
+    fn predict(&self, row: RowView<'_>) -> f64 {
+        self.loss().predict(self.score(row))
+    }
+
+    /// Predictions in label units for a batch of rows.
+    ///
+    /// Implementations with a genuine batch path ([`ArtifactBatcher`])
+    /// override this; the default maps the loss over [`Predictor::score_batch`].
+    fn predict_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+        let loss = self.loss();
+        self.score_batch(rows).into_iter().map(|z| loss.predict(z)).collect()
+    }
+
+    /// Raw scores for every row of a CSR matrix.
+    fn score_matrix(&self, x: &CsrMatrix) -> Vec<f64> {
+        let rows: Vec<RowView<'_>> = x.rows().collect();
+        self.score_batch(&rows)
+    }
+}
+
+/// The native in-process scorer.
+///
+/// Note: the trait methods use the canonical *blocked* score so that
+/// [`ShardedModel`] is bitwise-interchangeable with it; the inherent
+/// [`LinearModel::score`] keeps the trainers' fully-sequential rounding.
+/// The two agree to within a few ulps.
+impl Predictor for LinearModel {
+    fn dim(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn loss(&self) -> Loss {
+        self.loss
+    }
+
+    fn version(&self) -> u64 {
+        0
+    }
+
+    fn score(&self, row: RowView<'_>) -> f64 {
+        blocked_score(self.bias, row, &self.weights)
+    }
+}
+
+/// Attaches a reload version to any predictor (the server wraps the
+/// unsharded [`LinearModel`] in this so `stats` can report the version).
+pub struct Versioned<P> {
+    inner: P,
+    version: u64,
+}
+
+impl<P: Predictor> Versioned<P> {
+    /// Wrap `inner` with an explicit version.
+    pub fn new(inner: P, version: u64) -> Versioned<P> {
+        Versioned { inner, version }
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+}
+
+impl<P: Predictor> Predictor for Versioned<P> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn loss(&self) -> Loss {
+        self.inner.loss()
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn score(&self, row: RowView<'_>) -> f64 {
+        self.inner.score(row)
+    }
+
+    fn score_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+        self.inner.score_batch(rows)
+    }
+
+    fn predict_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+        self.inner.predict_batch(rows)
+    }
+}
+
+/// Build the serving predictor for `model`: in-process for `shards <= 1`,
+/// otherwise a feature-sharded worker pool. `version` is what
+/// [`Predictor::version`] reports (the server bumps it on each reload).
+pub fn build(model: LinearModel, shards: usize, version: u64) -> Arc<dyn Predictor> {
+    if shards <= 1 {
+        Arc::new(Versioned::new(model, version))
+    } else {
+        Arc::new(ShardedModel::spawn(&model, shards, version))
+    }
+}
+
+/// Like [`build`], but prefer batch scoring through the AOT `predict`
+/// artifact (from [`crate::runtime::Runtime::default_dir`]). Falls back
+/// to [`build`] — with the reason on stderr — when the artifacts or the
+/// `pjrt` runtime are unavailable, or the model's loss doesn't match.
+pub fn build_with_artifact(model: LinearModel, shards: usize, version: u64) -> Arc<dyn Predictor> {
+    let dir = crate::runtime::Runtime::default_dir();
+    match ArtifactBatcher::load(&dir, &model, version) {
+        Ok(batcher) => {
+            if shards > 1 {
+                eprintln!("predict: artifact batcher is unsharded; ignoring shards={shards}");
+            }
+            Arc::new(batcher)
+        }
+        Err(e) => {
+            eprintln!("predict: artifact batcher unavailable ({e:#}); serving natively");
+            build(model, shards, version)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row_from(entries: &[(u32, f32)]) -> (Vec<u32>, Vec<f32>) {
+        let indices: Vec<u32> = entries.iter().map(|e| e.0).collect();
+        let values: Vec<f32> = entries.iter().map(|e| e.1).collect();
+        (indices, values)
+    }
+
+    fn spanning_model_and_row() -> (LinearModel, Vec<u32>, Vec<f32>) {
+        let d = 3 * SCORE_BLOCK as usize + 17;
+        let mut m = LinearModel::zeros(d, Loss::Logistic);
+        let mut rng = crate::util::Rng::new(11);
+        for w in m.weights.iter_mut() {
+            if rng.bool(0.01) {
+                *w = rng.normal();
+            }
+        }
+        m.bias = 0.37;
+        let idx = rng.sample_distinct(d, 200);
+        let (indices, values): (Vec<u32>, Vec<f32>) = idx
+            .into_iter()
+            .map(|j| (j as u32, (rng.normal() * 1.5) as f32))
+            .unzip();
+        (m, indices, values)
+    }
+
+    #[test]
+    fn blocked_score_matches_sequential_within_one_block() {
+        let mut m = LinearModel::zeros(10, Loss::Logistic);
+        m.weights[3] = 2.0;
+        m.weights[7] = -0.5;
+        m.bias = 0.25;
+        let (indices, values) = row_from(&[(3, 1.0), (7, 2.0)]);
+        let row = RowView { indices: &indices, values: &values };
+        // dim 10 fits in one block: blocked == fully sequential, bitwise.
+        assert_eq!(Predictor::score(&m, row).to_bits(), m.score(row).to_bits());
+    }
+
+    #[test]
+    fn partials_fold_reproduces_blocked_score() {
+        let (m, indices, values) = spanning_model_and_row();
+        let row = RowView { indices: &indices, values: &values };
+        let mut partials = Vec::new();
+        block_partials(row, &m.weights, 0, &mut partials);
+        assert!(partials.windows(2).all(|w| w[0].0 < w[1].0), "ascending blocks");
+        let folded = fold_score(m.bias, &partials);
+        assert_eq!(folded.to_bits(), blocked_score(m.bias, row, &m.weights).to_bits());
+    }
+
+    #[test]
+    fn blocked_score_close_to_sequential_across_blocks() {
+        let (m, indices, values) = spanning_model_and_row();
+        let row = RowView { indices: &indices, values: &values };
+        let blocked = Predictor::score(&m, row);
+        let sequential = m.score(row);
+        assert!(
+            (blocked - sequential).abs() <= 1e-9 * (1.0 + sequential.abs()),
+            "blocked={blocked} sequential={sequential}"
+        );
+    }
+
+    #[test]
+    fn empty_row_scores_bias() {
+        let m = LinearModel::zeros(8, Loss::Logistic);
+        let row = RowView { indices: &[], values: &[] };
+        assert_eq!(Predictor::score(&m, row), m.bias);
+    }
+
+    #[test]
+    fn versioned_reports_version_and_delegates() {
+        let mut m = LinearModel::zeros(4, Loss::Logistic);
+        m.weights[1] = 1.0;
+        let (indices, values) = row_from(&[(1, 2.0)]);
+        let row = RowView { indices: &indices, values: &values };
+        let expect = Predictor::score(&m, row);
+        let v = Versioned::new(m, 7);
+        assert_eq!(v.version(), 7);
+        assert_eq!(v.score(row).to_bits(), expect.to_bits());
+        assert_eq!(v.dim(), 4);
+    }
+
+    #[test]
+    fn build_picks_implementation_by_shards() {
+        let m = LinearModel::zeros(16, Loss::Logistic);
+        let p1 = build(m.clone(), 1, 3);
+        let p2 = build(m, 2, 4);
+        assert_eq!(p1.version(), 3);
+        assert_eq!(p2.version(), 4);
+        let row = RowView { indices: &[], values: &[] };
+        assert_eq!(p1.score(row), 0.0);
+        assert_eq!(p2.score(row), 0.0);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn build_with_artifact_falls_back_without_runtime() {
+        // The stub runtime can't construct the batcher, so this must
+        // degrade to the native predictor at the requested version.
+        let m = LinearModel::zeros(8, Loss::Logistic);
+        let p = build_with_artifact(m, 2, 5);
+        assert_eq!(p.version(), 5);
+        assert_eq!(p.dim(), 8);
+    }
+
+    #[test]
+    fn score_matrix_covers_all_rows() {
+        let mut x = CsrMatrix::empty(8);
+        x.push_row(vec![(1, 1.0)]);
+        x.push_row(vec![]);
+        x.push_row(vec![(7, 2.0)]);
+        let mut m = LinearModel::zeros(8, Loss::Squared);
+        m.weights[1] = 0.5;
+        m.weights[7] = -1.0;
+        let scores = Predictor::score_matrix(&m, &x);
+        assert_eq!(scores, vec![0.5, 0.0, -2.0]);
+    }
+}

@@ -1,0 +1,312 @@
+//! Feature-sharded scoring: the weight vector partitioned by feature
+//! range across N persistent worker threads.
+//!
+//! The serving dual of the example-sharded training engine
+//! ([`crate::train::parallel`]): where training splits *examples* across
+//! workers, serving a model too large for one node's cache (or node)
+//! splits the *weight vector*. Each shard owns a contiguous range of
+//! [`SCORE_BLOCK`]-aligned features; a request broadcasts the (owned)
+//! rows to every shard, each computes the block partial dot products of
+//! its range, and the results are tree-reduced.
+//!
+//! ## Why the scores are bitwise-exact
+//!
+//! A shard's unit of work is an *ordered list* of `(block, partial)`
+//! pairs, not a single float. Merging two adjacent shards concatenates
+//! their lists (shard ranges ascend, so block order is preserved) —
+//! concatenation is associative, so the tree-reduce shape is irrelevant —
+//! and only the final [`fold_score`] performs the cross-block floating
+//! point additions, in exactly the canonical order. Hence
+//! `ShardedModel::score` equals the trait score of the unsharded
+//! [`LinearModel`] bit for bit, for **any** shard count.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::data::RowView;
+use crate::loss::Loss;
+use crate::model::LinearModel;
+
+use super::{block_partials, fold_score, Predictor, SCORE_BLOCK};
+
+/// Ordered `(block id, partial sum)` pairs for one row.
+type RowPartials = Vec<(u32, f64)>;
+
+/// A batch of owned rows, shared with every shard worker.
+///
+/// Deliberately *not* a [`crate::data::CsrMatrix`]: `push_row` re-sorts
+/// and merges every row, which the already-valid `RowView`s on this hot
+/// path don't need — this is a flat copy and nothing more.
+struct SharedRows {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SharedRows {
+    fn from_views(rows: &[RowView<'_>], dim: usize) -> SharedRows {
+        let nnz = rows.iter().map(|r| r.nnz()).sum();
+        let mut s = SharedRows {
+            indptr: Vec::with_capacity(rows.len() + 1),
+            indices: Vec::with_capacity(nnz),
+            values: Vec::with_capacity(nnz),
+        };
+        s.indptr.push(0);
+        for r in rows {
+            // The shard split binary-searches each row, so the RowView
+            // invariant (strictly increasing indices) is load-bearing.
+            debug_assert!(
+                r.indices.windows(2).all(|w| w[0] < w[1]),
+                "RowView indices must be strictly increasing"
+            );
+            // Release builds silently ignore out-of-range features (the
+            // range split excludes them), unlike the native impl's index
+            // panic — the assert keeps the divergence loud where it can.
+            debug_assert!(
+                r.indices.iter().all(|&j| (j as usize) < dim),
+                "RowView index out of range for dim {dim}"
+            );
+            s.indices.extend_from_slice(r.indices);
+            s.values.extend_from_slice(r.values);
+            s.indptr.push(s.indices.len());
+        }
+        s
+    }
+
+    fn len(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    fn row(&self, r: usize) -> RowView<'_> {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        RowView { indices: &self.indices[lo..hi], values: &self.values[lo..hi] }
+    }
+}
+
+/// One shard's answer for a batch.
+struct ShardResult {
+    shard: usize,
+    rows: Vec<RowPartials>,
+}
+
+enum Job {
+    Score { rows: Arc<SharedRows>, reply: mpsc::Sender<ShardResult> },
+    Stop,
+}
+
+struct ShardWorker {
+    /// The sender is wrapped in a `Mutex` so `ShardedModel` is `Sync`
+    /// without relying on `mpsc::Sender: Sync` (only true on newer
+    /// toolchains); a send is a few ns, so contention is immaterial.
+    tx: Mutex<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A [`Predictor`] whose weight vector lives in N shard worker threads,
+/// partitioned by contiguous block-aligned feature ranges.
+pub struct ShardedModel {
+    workers: Vec<ShardWorker>,
+    dim: usize,
+    bias: f64,
+    loss: Loss,
+    version: u64,
+}
+
+impl ShardedModel {
+    /// Spawn `n_shards` worker threads, each owning a contiguous
+    /// block-aligned slice of `model`'s weights (clamped to at least 1).
+    /// When shards outnumber blocks, the `s * n_blocks / n_shards`
+    /// partition leaves the *leading* shards empty — e.g. one block
+    /// across 7 shards puts everything on shard 6.
+    pub fn spawn(model: &LinearModel, n_shards: usize, version: u64) -> ShardedModel {
+        let n_shards = n_shards.max(1);
+        let dim = model.weights.len();
+        let block = SCORE_BLOCK as usize;
+        let n_blocks = dim.div_ceil(block);
+        let mut workers = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let lo = (s * n_blocks / n_shards * block).min(dim);
+            let hi = ((s + 1) * n_blocks / n_shards * block).min(dim);
+            let weights = model.weights[lo..hi].to_vec();
+            let (tx, rx) = mpsc::channel::<Job>();
+            let handle =
+                std::thread::spawn(move || shard_loop(s, lo as u32, hi as u32, weights, rx));
+            workers.push(ShardWorker { tx: Mutex::new(tx), handle: Some(handle) });
+        }
+        ShardedModel { workers, dim, bias: model.bias, loss: model.loss, version }
+    }
+
+    /// Number of shard workers.
+    pub fn n_shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Broadcast a batch to every shard and collect per-shard results,
+    /// indexed by shard.
+    fn broadcast(&self, rows: Arc<SharedRows>) -> Vec<Vec<RowPartials>> {
+        let (reply, results) = mpsc::channel();
+        for w in &self.workers {
+            let job = Job::Score { rows: rows.clone(), reply: reply.clone() };
+            let sent = w.tx.lock().unwrap().send(job);
+            // Panic *outside* the lock statement: a dead shard must not
+            // poison the sender Mutex (Drop still needs to lock it).
+            sent.expect("shard worker exited");
+        }
+        drop(reply);
+        let mut per_shard: Vec<Vec<RowPartials>> =
+            (0..self.workers.len()).map(|_| Vec::new()).collect();
+        for _ in 0..self.workers.len() {
+            // A shard dying mid-batch drops its reply sender, so this
+            // fails fast instead of hanging the caller.
+            let res = results.recv().expect("shard worker died mid-batch");
+            per_shard[res.shard] = res.rows;
+        }
+        per_shard
+    }
+}
+
+fn shard_loop(shard: usize, lo: u32, hi: u32, weights: Vec<f64>, rx: mpsc::Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Score { rows, reply } => {
+                let mut out = Vec::with_capacity(rows.len());
+                for r in 0..rows.len() {
+                    let row = rows.row(r);
+                    // Indices are sorted, so the shard's slice is found by
+                    // two binary searches.
+                    let a = row.indices.partition_point(|&j| j < lo);
+                    let b = row.indices.partition_point(|&j| j < hi);
+                    let mut partials = RowPartials::new();
+                    let idx = &row.indices[a..b];
+                    let val = &row.values[a..b];
+                    let slice = RowView { indices: idx, values: val };
+                    block_partials(slice, &weights, lo, &mut partials);
+                    out.push(partials);
+                }
+                let _ = reply.send(ShardResult { shard, rows: out });
+            }
+            Job::Stop => break,
+        }
+    }
+}
+
+impl Predictor for ShardedModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.loss
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn score(&self, row: RowView<'_>) -> f64 {
+        self.score_batch(&[row])[0]
+    }
+
+    fn score_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+        if rows.is_empty() {
+            return Vec::new();
+        }
+        let shared = Arc::new(SharedRows::from_views(rows, self.dim));
+        let mut layer = self.broadcast(shared);
+        // Tree-reduce: merging two shards concatenates each row's ordered
+        // block-partial list, so the tree shape cannot change the result.
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            let mut it = layer.into_iter();
+            while let Some(mut left) = it.next() {
+                if let Some(right) = it.next() {
+                    for (l, r) in left.iter_mut().zip(right) {
+                        l.extend(r);
+                    }
+                }
+                next.push(left);
+            }
+            layer = next;
+        }
+        let merged = layer.pop().expect("at least one shard");
+        merged.into_iter().map(|ps| fold_score(self.bias, &ps)).collect()
+    }
+}
+
+impl Drop for ShardedModel {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            // Tolerate a poisoned Mutex: panicking in Drop during an
+            // unwind would abort the process.
+            if let Ok(tx) = w.tx.lock() {
+                let _ = tx.send(Job::Stop);
+            }
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_model(d: usize, seed: u64) -> LinearModel {
+        let mut m = LinearModel::zeros(d, Loss::Logistic);
+        let mut rng = Rng::new(seed);
+        for w in m.weights.iter_mut() {
+            if rng.bool(0.05) {
+                *w = rng.normal();
+            }
+        }
+        m.bias = rng.normal();
+        m
+    }
+
+    fn random_row(d: usize, nnz: usize, rng: &mut Rng) -> (Vec<u32>, Vec<f32>) {
+        let idx = rng.sample_distinct(d, nnz);
+        idx.into_iter().map(|j| (j as u32, rng.normal() as f32)).unzip()
+    }
+
+    // The multi-block bitwise-parity property across shard counts
+    // {1, 2, 7} lives in tests/serve_protocol.rs (the ISSUE coverage
+    // item); the unit tests here keep the edge cases.
+
+    #[test]
+    fn more_shards_than_blocks_still_exact() {
+        // dim < one block: only the last shard owns a non-empty range.
+        let m = random_model(64, 9);
+        let mut rng = Rng::new(3);
+        let (indices, values) = random_row(64, 10, &mut rng);
+        let row = RowView { indices: &indices, values: &values };
+        let sm = ShardedModel::spawn(&m, 7, 0);
+        assert_eq!(sm.score(row).to_bits(), Predictor::score(&m, row).to_bits());
+    }
+
+    #[test]
+    fn empty_batch_and_empty_rows() {
+        let m = random_model(256, 1);
+        let sm = ShardedModel::spawn(&m, 3, 2);
+        assert!(sm.score_batch(&[]).is_empty());
+        let empty = RowView { indices: &[], values: &[] };
+        assert_eq!(sm.score(empty), m.bias);
+        assert_eq!(sm.version(), 2);
+        assert_eq!(sm.dim(), 256);
+    }
+
+    #[test]
+    fn predictions_apply_the_loss() {
+        let m = random_model(128, 8);
+        let mut rng = Rng::new(21);
+        let (indices, values) = random_row(128, 12, &mut rng);
+        let row = RowView { indices: &indices, values: &values };
+        let sm = ShardedModel::spawn(&m, 2, 0);
+        let p = sm.predict(row);
+        assert_eq!(p, crate::loss::sigmoid(sm.score(row)));
+    }
+}

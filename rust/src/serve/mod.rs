@@ -1,72 +1,191 @@
 //! Prediction service: a line-protocol TCP server scoring sparse examples
-//! with a trained model, plus a client. Python-free request path: scoring
-//! is either the native sparse dot product or (batched) the AOT `predict`
-//! artifact via [`crate::runtime`].
+//! with a hot-swappable [`Predictor`], plus a client.
+//!
+//! Architecture: an accept thread hands connections to a **fixed pool**
+//! of connection workers through a bounded queue (backpressure instead of
+//! the seed's unbounded thread-per-connection spawn), and every worker
+//! scores through the shared `Arc<RwLock<Arc<dyn Predictor>>>` slot, so a
+//! `reload` swaps the model for all connections without dropping any.
+//! The predictor is built by [`crate::predict::build`]: in-process native
+//! scoring, or feature-sharded across shard worker threads
+//! ([`ServeOptions::shards`]).
 //!
 //! Protocol (text, one message per line):
 //!
 //! ```text
 //! -> predict 3:1 17:2.5 204:1
 //! <- ok 0.8731
+//! -> batch 3:1 17:2.5;204:1;
+//! <- ok 0.8731 0.5120 0.5000
+//! -> reload /path/to/retrained.model
+//! <- ok version=2
 //! -> stats
-//! <- ok n=12 mean=18.21µs p50=16.00µs p99=64.00µs max=81.00µs
+//! <- ok version=2 conns=4 n=12 mean=18.21µs p50=16.00µs p99=64.00µs max=81.00µs
 //! -> quit
 //! <- ok bye
 //! ```
+//!
+//! `batch` scores up to [`ServeOptions::batch_max`] `;`-separated
+//! examples in one round trip (an empty segment is an empty example).
+//! A fixed pool must defend itself against client misbehavior the seed's
+//! thread-per-connection design merely leaked threads on: idle
+//! connections are dropped after [`IDLE_LIMIT`], a started line must
+//! finish within [`LINE_DEADLINE`] and a byte cap sized to `batch_max`
+//! ([`PER_EXAMPLE_LINE_BYTES`] per example), replies time out after
+//! [`WRITE_TIMEOUT`], and connections that outwait [`QUEUE_WAIT_LIMIT`]
+//! behind a saturated pool are shed.
+//!
+//! **Trust model:** the protocol is unauthenticated — anyone who can
+//! connect can score, read `stats`, and `reload` any model file readable
+//! by the server process. Bind loopback (the default) or a trusted
+//! network only.
 
+use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::BoundedQueue;
 use crate::data::RowView;
 use crate::metrics::LatencyHistogram;
 use crate::model::LinearModel;
+use crate::predict::{self, Predictor};
+
+/// Connections waiting for a worker before the accept loop blocks.
+const ACCEPT_QUEUE_DEPTH: usize = 128;
+
+/// Per-read timeout; also the granularity of stop/idle checks.
+const READ_TIMEOUT: std::time::Duration = std::time::Duration::from_millis(50);
+
+/// Reply writes that block longer than this drop the connection, so a
+/// client that never reads its replies can't pin a pool worker in
+/// `flush` (or hang shutdown).
+const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// A connection that sends nothing for this long is dropped, so idle
+/// clients can't pin down the fixed worker pool (the seed's
+/// thread-per-connection design was immune to this; a pool is not).
+const IDLE_LIMIT: std::time::Duration = std::time::Duration::from_secs(60);
+
+/// A line older than this must be arriving at at least
+/// [`MIN_LINE_BYTES_PER_SEC`] on average or the connection is dropped: a
+/// byte-trickling client would otherwise dodge both `IDLE_LIMIT` (it is
+/// never idle) and the read timeout, while a legal maximal batch on a
+/// slow-but-honest link (>= the threshold) still gets through.
+const LINE_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Minimum average throughput demanded of lines older than
+/// [`LINE_DEADLINE`].
+const MIN_LINE_BYTES_PER_SEC: usize = 128 << 10;
+
+/// Byte budget per example for the line cap: a full `batch` line may use
+/// up to `(batch_max + 1) * PER_EXAMPLE_LINE_BYTES` bytes, keeping a
+/// newline-free stream bounded. 64 KiB serializes ~4,000 features, so a
+/// count-legal batch of wider examples can still exceed the cap — such
+/// clients get `err line-too-long` and must split the batch.
+const PER_EXAMPLE_LINE_BYTES: usize = 64 << 10;
+
+/// Connections that waited in the accept queue longer than this are shed
+/// (closed) instead of served: their client has likely given up, and a
+/// clean close beats a silent stall.
+const QUEUE_WAIT_LIMIT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Feature shards of the weight vector (1 = in-process native).
+    pub shards: usize,
+    /// Connection worker pool size. Each worker serves one connection at
+    /// a time, so size this to the expected number of concurrent
+    /// *persistent* clients (unlike the seed's thread-per-connection
+    /// server, excess connections queue and are shed after
+    /// [`QUEUE_WAIT_LIMIT`] rather than served immediately).
+    pub workers: usize,
+    /// Maximum examples accepted per `batch` command.
+    pub batch_max: usize,
+    /// Score batches through the AOT `predict` artifact when available
+    /// ([`crate::predict::build_with_artifact`]; falls back to native).
+    pub artifact: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { shards: 1, workers: 4, batch_max: 256, artifact: false }
+    }
+}
+
+/// Build the predictor a server (or a `reload`) installs.
+fn build_predictor(model: LinearModel, opts: &ServeOptions, version: u64) -> Arc<dyn Predictor> {
+    if opts.artifact {
+        predict::build_with_artifact(model, opts.shards, version)
+    } else {
+        predict::build(model, opts.shards, version)
+    }
+}
+
+/// State shared by the accept loop and every connection worker.
+struct Shared {
+    predictor: RwLock<Arc<dyn Predictor>>,
+    /// Serializes `reload`s so versions stay strictly monotonic while the
+    /// (possibly slow) predictor build happens *outside* the RwLock.
+    reload_lock: Mutex<()>,
+    hist: Mutex<LatencyHistogram>,
+    /// Total connections handled (reported by `stats` as `conns=`).
+    conns: AtomicU64,
+    /// Accepted connections waiting for a worker, with enqueue time so
+    /// stale ones can be shed.
+    queue: BoundedQueue<(Instant, TcpStream)>,
+    stop: AtomicBool,
+    opts: ServeOptions,
+}
 
 /// A running prediction server.
 pub struct Server {
     addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn a server for `model` on `addr` (use port 0 for ephemeral).
+    /// Spawn a server for `model` on `addr` (use port 0 for ephemeral)
+    /// with default options.
     pub fn spawn(model: LinearModel, addr: &str) -> Result<Server> {
+        Server::spawn_with(model, addr, ServeOptions::default())
+    }
+
+    /// Spawn with explicit sharding / pool / batching options.
+    pub fn spawn_with(model: LinearModel, addr: &str, opts: ServeOptions) -> Result<Server> {
+        anyhow::ensure!(opts.workers >= 1, "serve: workers must be >= 1");
+        anyhow::ensure!(opts.shards >= 1, "serve: shards must be >= 1");
+        anyhow::ensure!(opts.batch_max >= 1, "serve: batch_max must be >= 1");
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let model = Arc::new(model);
-        let hist = Arc::new(Mutex::new(LatencyHistogram::new()));
-
-        let handle = std::thread::spawn(move || {
-            let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let m = model.clone();
-                        let h = hist.clone();
-                        let s = stop2.clone();
-                        workers.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &m, &h, &s);
-                        }));
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
-            for w in workers {
-                let _ = w.join();
-            }
+        let shared = Arc::new(Shared {
+            predictor: RwLock::new(build_predictor(model, &opts, 1)),
+            reload_lock: Mutex::new(()),
+            hist: Mutex::new(LatencyHistogram::new()),
+            conns: AtomicU64::new(0),
+            queue: BoundedQueue::new(ACCEPT_QUEUE_DEPTH),
+            stop: AtomicBool::new(false),
+            opts,
         });
-        Ok(Server { addr: local, stop, handle: Some(handle) })
+        let accept = {
+            let sh = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, &sh))
+        };
+        let workers = (0..opts.workers)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Ok(Server { addr: local, shared, accept: Some(accept), workers })
     }
 
     /// The bound address.
@@ -74,20 +193,81 @@ impl Server {
         self.addr
     }
 
-    /// Stop accepting and join the accept loop.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+    /// Size of the fixed connection worker pool.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Current model version (1 at spawn, bumped by each `reload`).
+    pub fn version(&self) -> u64 {
+        self.shared.predictor.read().unwrap().version()
+    }
+
+    fn stop_threads(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.queue.close();
+        if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, drain the pool, and join all threads.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        self.stop_threads();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Shared) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Blocks when the pool is saturated and the queue full —
+                // backpressure instead of unbounded thread spawn. Returns
+                // false once the queue is closed by shutdown.
+                if !shared.queue.push((Instant::now(), stream)) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => {
+                // Transient accept failures (ECONNABORTED from a client
+                // RST, EMFILE under fd pressure) must not kill the
+                // listener; back off and retry. The stop flag and queue
+                // closure are the only ways out of this loop.
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    // `pop` blocks until a connection arrives and returns `None` once the
+    // queue is closed and drained, so the pool reaps itself: no
+    // join-handle accumulation however many connections churn through.
+    while let Some((queued_at, stream)) = shared.queue.pop() {
+        if queued_at.elapsed() >= QUEUE_WAIT_LIMIT {
+            drop(stream); // shed stale load: a clean close, not a stall
+            continue;
+        }
+        shared.conns.fetch_add(1, Ordering::Relaxed);
+        // A panic while serving one connection must not shrink the fixed
+        // pool (the seed's per-connection threads lost only themselves).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = handle_conn(stream, shared);
+        }));
+        if outcome.is_err() {
+            eprintln!("serve: connection handler panicked; worker continues");
         }
     }
 }
@@ -103,61 +283,216 @@ fn parse_features(tokens: &str, dim: usize) -> Option<(Vec<u32>, Vec<f32>)> {
         pairs.push((idx, v.parse().ok()?));
     }
     pairs.sort_unstable_by_key(|p| p.0);
-    Some(pairs.into_iter().unzip())
+    // Merge duplicate indices (summed, like `CsrMatrix::push_row`) so the
+    // strictly-increasing `RowView` invariant holds for every predictor.
+    let mut merged: Vec<(u32, f32)> = Vec::with_capacity(pairs.len());
+    for (j, v) in pairs {
+        match merged.last_mut() {
+            Some(last) if last.0 == j => last.1 += v,
+            _ => merged.push((j, v)),
+        }
+    }
+    Some(merged.into_iter().unzip())
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    model: &LinearModel,
-    hist: &Mutex<LatencyHistogram>,
-    stop: &AtomicBool,
-) -> Result<()> {
-    // Bounded reads so a shutdown can't be blocked by an idle client.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(50)))?;
+/// Strip a command word; the prefix must be the whole line or be followed
+/// by a space, so `predictions ...` is unknown rather than `predict`.
+fn strip_cmd<'a>(line: &'a str, cmd: &str) -> Option<&'a str> {
+    let rest = line.strip_prefix(cmd)?;
+    if rest.is_empty() || rest.starts_with(' ') {
+        Some(rest)
+    } else {
+        None
+    }
+}
+
+/// Outcome of one protocol line.
+enum Dispatch {
+    Reply(String),
+    Quit,
+}
+
+fn dispatch(line: &str, shared: &Shared) -> Dispatch {
+    let reply = if let Some(rest) = strip_cmd(line, "predict") {
+        cmd_predict(rest, shared)
+    } else if let Some(rest) = strip_cmd(line, "batch") {
+        cmd_batch(rest, shared)
+    } else if let Some(rest) = strip_cmd(line, "reload") {
+        cmd_reload(rest.trim(), shared)
+    } else if line == "stats" {
+        let version = shared.predictor.read().unwrap().version();
+        let conns = shared.conns.load(Ordering::Relaxed);
+        format!("ok version={version} conns={conns} {}", shared.hist.lock().unwrap().summary())
+    } else if line == "quit" {
+        return Dispatch::Quit;
+    } else {
+        "err unknown-command".to_string()
+    };
+    Dispatch::Reply(reply)
+}
+
+fn cmd_predict(rest: &str, shared: &Shared) -> String {
+    let t0 = Instant::now();
+    let predictor = shared.predictor.read().unwrap().clone();
+    match parse_features(rest, predictor.dim()) {
+        Some((indices, values)) => {
+            let p = predictor.predict(RowView { indices: &indices, values: &values });
+            shared.hist.lock().unwrap().record(t0.elapsed());
+            format!("ok {p:.6}")
+        }
+        None => "err bad-features".to_string(),
+    }
+}
+
+fn cmd_batch(rest: &str, shared: &Shared) -> String {
+    let t0 = Instant::now();
+    let predictor = shared.predictor.read().unwrap().clone();
+    let dim = predictor.dim();
+    let mut parsed: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+    for seg in rest.split(';') {
+        // Enforce the cap *before* parsing each segment so an oversized
+        // batch is rejected after O(batch_max) work, not O(batch) work.
+        if parsed.len() >= shared.opts.batch_max {
+            return "err batch-too-large".to_string();
+        }
+        match parse_features(seg, dim) {
+            Some(example) => parsed.push(example),
+            None => return "err bad-features".to_string(),
+        }
+    }
+    let rows: Vec<RowView<'_>> =
+        parsed.iter().map(|(i, v)| RowView { indices: i, values: v }).collect();
+    let probs = predictor.predict_batch(&rows);
+    // Per-example latency, once per example: `stats` percentiles stay in
+    // "one prediction" units across the single-row and batch paths.
+    let n = rows.len().max(1) as u32;
+    shared.hist.lock().unwrap().record_n(t0.elapsed() / n, n);
+    let mut out = String::from("ok");
+    for p in probs {
+        let _ = write!(out, " {p:.6}"); // fmt::Write into a String is infallible
+    }
+    out
+}
+
+fn cmd_reload(path: &str, shared: &Shared) -> String {
+    match crate::model::io::load(path) {
+        Ok(model) => {
+            // The reload lock (not the predictor RwLock) serializes
+            // concurrent reloads, so versions are strictly monotonic and
+            // the build doesn't stall request traffic; the write lock is
+            // held only for the pointer swap. In-flight requests hold Arc
+            // clones of the old model; its real teardown (joining shard
+            // threads) runs on whichever thread drops the last clone —
+            // usually right here, at worst a one-off blip appended to an
+            // in-flight request.
+            let _serialized = shared.reload_lock.lock().unwrap();
+            let version = shared.predictor.read().unwrap().version() + 1;
+            let fresh = build_predictor(model, &shared.opts, version);
+            let old = std::mem::replace(&mut *shared.predictor.write().unwrap(), fresh);
+            drop(old);
+            format!("ok version={version}")
+        }
+        Err(e) => {
+            // Details go to the server log only: echoing io errors to the
+            // peer would turn `reload` into a filesystem-existence oracle.
+            eprintln!("serve: reload {path:?} failed: {e:#}");
+            "err reload-failed".to_string()
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
+    // Some platforms hand accepted sockets the listener's O_NONBLOCK;
+    // normalize so the read timeout below actually paces the loop.
+    stream.set_nonblocking(false)?;
+    // Bounded reads/writes so no client traffic pattern can block a pool
+    // worker (or shutdown) indefinitely.
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let peer = stream.try_clone()?;
     let mut reader = BufReader::new(peer);
     let mut writer = BufWriter::new(stream);
-    let mut acc = String::new();
+    let mut acc: Vec<u8> = Vec::new();
+    let mut last_activity = Instant::now();
+    let mut line_started: Option<Instant> = None;
+    let max_line_bytes =
+        PER_EXAMPLE_LINE_BYTES.saturating_mul(shared.opts.batch_max.saturating_add(1));
     loop {
-        match reader.read_line(&mut acc) {
-            Ok(0) => break, // client closed
-            Ok(_) if acc.ends_with('\n') => {}
-            Ok(_) => continue, // partial line, keep accumulating
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Lines are assembled from `fill_buf` chunks instead of
+        // `read_line` so every liveness policy (stop flag, idle limit,
+        // line deadline, byte cap) is enforced *between* reads — a
+        // byte-trickling client can't keep the loop from observing them.
+        let mut complete = false;
+        let consumed = match reader.fill_buf() {
+            Ok([]) => break, // client closed (possibly mid-line)
+            Ok(buf) => match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    acc.extend_from_slice(&buf[..pos]);
+                    complete = true;
+                    pos + 1
+                }
+                None => {
+                    acc.extend_from_slice(buf);
+                    buf.len()
+                }
+            },
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
             {
-                // acc keeps any partial line across the timeout
-                if stop.load(Ordering::Relaxed) {
-                    break;
+                // acc keeps any partial line across the timeout. Idleness
+                // is wall-clock, not an error count: spurious instant
+                // returns (EINTR, inherited O_NONBLOCK) must not add up.
+                if last_activity.elapsed() >= IDLE_LIMIT {
+                    break; // drop the idle client, free the pool worker
                 }
-                continue;
+                0
             }
             Err(e) => return Err(e.into()),
-        }
-        let line = std::mem::take(&mut acc);
-        let line = line.trim();
-        let reply = if let Some(rest) = line.strip_prefix("predict") {
-            let t0 = Instant::now();
-            match parse_features(rest, model.dim()) {
-                Some((indices, values)) => {
-                    let p = model.predict(RowView { indices: &indices, values: &values });
-                    hist.lock().unwrap().record(t0.elapsed());
-                    format!("ok {p:.6}")
-                }
-                None => "err bad-features".to_string(),
-            }
-        } else if line == "stats" {
-            format!("ok {}", hist.lock().unwrap().summary())
-        } else if line == "quit" {
-            writeln!(writer, "ok bye")?;
-            writer.flush()?;
-            break;
-        } else {
-            "err unknown-command".to_string()
         };
-        writeln!(writer, "{reply}")?;
-        writer.flush()?;
+        reader.consume(consumed);
+        if consumed > 0 {
+            // Any received bytes count as activity: IDLE_LIMIT measures
+            // true silence, not slow-but-live uploads (those answer to
+            // the throughput floor below instead).
+            last_activity = Instant::now();
+        }
+        if !complete {
+            if !acc.is_empty() {
+                let t0 = *line_started.get_or_insert_with(Instant::now);
+                if acc.len() > max_line_bytes {
+                    // Tell the client why before closing — an EOF alone
+                    // is indistinguishable from a crash.
+                    let _ = writeln!(writer, "err line-too-long");
+                    let _ = writer.flush();
+                    break;
+                }
+                let elapsed = t0.elapsed();
+                let floor = elapsed.as_secs_f64() * MIN_LINE_BYTES_PER_SEC as f64;
+                if elapsed >= LINE_DEADLINE && (acc.len() as f64) < floor {
+                    break; // trickled line (below the throughput floor)
+                }
+            }
+            continue;
+        }
+        line_started = None;
+        let line = String::from_utf8_lossy(&acc).into_owned();
+        acc.clear();
+        match dispatch(line.trim(), shared) {
+            Dispatch::Reply(reply) => {
+                writeln!(writer, "{reply}")?;
+                writer.flush()?;
+            }
+            Dispatch::Quit => {
+                writeln!(writer, "ok bye")?;
+                writer.flush()?;
+                break;
+            }
+        }
     }
     Ok(())
 }
@@ -186,14 +521,48 @@ impl Client {
         Ok(line[3..].to_string())
     }
 
+    fn features_body(features: &[(u32, f32)]) -> String {
+        let body: Vec<String> = features.iter().map(|(i, v)| format!("{i}:{v}")).collect();
+        body.join(" ")
+    }
+
     /// Score one sparse example.
     pub fn predict(&mut self, features: &[(u32, f32)]) -> Result<f64> {
-        let body: Vec<String> = features.iter().map(|(i, v)| format!("{i}:{v}")).collect();
-        let reply = self.round_trip(&format!("predict {}", body.join(" ")))?;
+        let reply = self.round_trip(&format!("predict {}", Self::features_body(features)))?;
         Ok(reply.parse::<f64>()?)
     }
 
-    /// Fetch the server's latency summary.
+    /// Score `examples.len()` sparse examples in one round trip
+    /// (`examples` must be non-empty and at most the server's
+    /// `batch_max`).
+    pub fn predict_batch(&mut self, examples: &[Vec<(u32, f32)>]) -> Result<Vec<f64>> {
+        anyhow::ensure!(!examples.is_empty(), "predict_batch: empty batch");
+        let body: Vec<String> = examples.iter().map(|ex| Self::features_body(ex)).collect();
+        let reply = self.round_trip(&format!("batch {}", body.join(";")))?;
+        let mut out = Vec::with_capacity(examples.len());
+        for tok in reply.split_ascii_whitespace() {
+            out.push(tok.parse::<f64>()?);
+        }
+        anyhow::ensure!(
+            out.len() == examples.len(),
+            "batch reply has {} predictions, expected {}",
+            out.len(),
+            examples.len()
+        );
+        Ok(out)
+    }
+
+    /// Hot-swap the server's model from a saved model file; returns the
+    /// new model version.
+    pub fn reload(&mut self, path: &str) -> Result<u64> {
+        let reply = self.round_trip(&format!("reload {path}"))?;
+        let v = reply
+            .strip_prefix("version=")
+            .with_context(|| format!("unexpected reload reply {reply:?}"))?;
+        Ok(v.parse::<u64>()?)
+    }
+
+    /// Fetch the server's version + latency summary.
     pub fn stats(&mut self) -> Result<String> {
         self.round_trip("stats")
     }
@@ -230,6 +599,7 @@ mod tests {
         assert!((p_zero - 0.5).abs() < 1e-6);
         let stats = c.stats().unwrap();
         assert!(stats.contains("n=3"), "{stats}");
+        assert!(stats.contains("version=1"), "{stats}");
         c.quit().unwrap();
         server.shutdown();
     }
@@ -260,6 +630,44 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn batch_matches_single_row_predictions() {
+        let opts = ServeOptions { shards: 2, ..Default::default() };
+        let server = Server::spawn_with(model(), "127.0.0.1:0", opts).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let examples: Vec<Vec<(u32, f32)>> =
+            vec![vec![(3, 1.0)], vec![(7, 2.0)], vec![], vec![(3, 1.0), (7, 1.0)]];
+        let batched = c.predict_batch(&examples).unwrap();
+        assert_eq!(batched.len(), examples.len());
+        for (ex, &p) in examples.iter().zip(batched.iter()) {
+            let single = c.predict(ex).unwrap();
+            assert_eq!(single, p, "{ex:?}");
+        }
+        c.quit().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn batch_size_limit_enforced() {
+        let opts = ServeOptions { batch_max: 2, ..Default::default() };
+        let server = Server::spawn_with(model(), "127.0.0.1:0", opts).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let ok: Vec<Vec<(u32, f32)>> = vec![vec![(3, 1.0)]; 2];
+        assert_eq!(c.predict_batch(&ok).unwrap().len(), 2);
+        let too_big: Vec<Vec<(u32, f32)>> = vec![vec![(3, 1.0)]; 3];
+        let err = c.predict_batch(&too_big).unwrap_err();
+        assert!(err.to_string().contains("batch-too-large"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn worker_pool_is_fixed_size() {
+        let opts = ServeOptions { workers: 2, ..Default::default() };
+        let server = Server::spawn_with(model(), "127.0.0.1:0", opts).unwrap();
+        assert_eq!(server.worker_count(), 2);
         server.shutdown();
     }
 }

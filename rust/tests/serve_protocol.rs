@@ -1,0 +1,201 @@
+//! Integration tests for the serving stack: protocol error paths,
+//! sharded-vs-native bitwise score parity, hot model reload, and
+//! connection-churn behavior of the fixed worker pool.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use lazyreg::data::RowView;
+use lazyreg::loss::Loss;
+use lazyreg::model::LinearModel;
+use lazyreg::predict::{Predictor, ShardedModel, SCORE_BLOCK};
+use lazyreg::serve::{Client, ServeOptions, Server};
+use lazyreg::util::Rng;
+
+fn model(dim: usize, seed: u64) -> LinearModel {
+    let mut m = LinearModel::zeros(dim, Loss::Logistic);
+    let mut rng = Rng::new(seed);
+    for w in m.weights.iter_mut() {
+        if rng.bool(0.05) {
+            *w = rng.normal();
+        }
+    }
+    m.bias = rng.normal() * 0.1;
+    m
+}
+
+/// Send one raw protocol line and read one reply line.
+fn raw_round_trip(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+#[test]
+fn sharded_scores_bitwise_match_native_across_shard_counts() {
+    let dim = 5 * SCORE_BLOCK as usize + 321;
+    let m = model(dim, 2);
+    let mut rng = Rng::new(40);
+    let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..32)
+        .map(|_| {
+            let nnz = 1 + rng.index(200);
+            let idx = rng.sample_distinct(dim, nnz);
+            idx.into_iter().map(|j| (j as u32, rng.normal() as f32)).unzip()
+        })
+        .collect();
+    let views: Vec<RowView<'_>> =
+        rows.iter().map(|(i, v)| RowView { indices: i, values: v }).collect();
+    let native = Predictor::score_batch(&m, &views);
+    for shards in [1usize, 2, 7] {
+        let sharded = ShardedModel::spawn(&m, shards, 1);
+        let got = sharded.score_batch(&views);
+        assert_eq!(got.len(), native.len());
+        for (r, (a, b)) in native.iter().zip(got.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "shards={shards} row={r}: native={a} sharded={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn protocol_error_paths() {
+    let server = Server::spawn(model(10, 3), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    // Unknown command.
+    assert_eq!(raw_round_trip(addr, "frobnicate"), "err unknown-command");
+    // A command prefix without its delimiter is not that command.
+    assert_eq!(raw_round_trip(addr, "predictions 3:1"), "err unknown-command");
+    assert_eq!(raw_round_trip(addr, "reloadable"), "err unknown-command");
+    // Out-of-range feature index.
+    assert_eq!(raw_round_trip(addr, "predict 99:1"), "err bad-features");
+    // Malformed value.
+    assert_eq!(raw_round_trip(addr, "predict 1:abc"), "err bad-features");
+    // Bad example inside a batch poisons the whole batch.
+    assert_eq!(raw_round_trip(addr, "batch 1:1;2:bad"), "err bad-features");
+    // Reload of a nonexistent file fails without killing the server.
+    let reply = raw_round_trip(addr, "reload /nonexistent/path.model");
+    assert!(reply.starts_with("err reload-failed"), "{reply}");
+    // Duplicate indices are merged (summed), upholding the sorted
+    // strictly-increasing RowView invariant even under --shards.
+    let dup = raw_round_trip(addr, "predict 3:1 3:1");
+    let merged = raw_round_trip(addr, "predict 3:2");
+    assert_eq!(dup, merged, "duplicates must score like their sum");
+    assert!(dup.starts_with("ok "), "{dup}");
+    // The server still answers after all of the above.
+    let mut c = Client::connect(addr).unwrap();
+    assert!(c.predict(&[]).is_ok());
+    c.quit().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn mid_line_disconnect_does_not_wedge_a_worker() {
+    // A single-worker pool: if the dropped connection wedged the worker,
+    // the follow-up client could never be served.
+    let opts = ServeOptions { workers: 1, ..Default::default() };
+    let server = Server::spawn_with(model(10, 4), "127.0.0.1:0", opts).unwrap();
+    let addr = server.addr();
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // Partial line: no trailing newline, then hang up.
+        stream.write_all(b"predict 1:1").unwrap();
+    }
+    let mut c = Client::connect(addr).unwrap();
+    assert!(c.predict(&[(1, 1.0)]).is_ok());
+    c.quit().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn hot_reload_bumps_version_and_swaps_weights() {
+    let dir = std::env::temp_dir();
+    let path_b = dir.join("lazyreg_serve_reload_b.model");
+    let mut a = LinearModel::zeros(10, Loss::Logistic);
+    a.weights[3] = 2.0;
+    let mut b = LinearModel::zeros(10, Loss::Logistic);
+    b.weights[3] = -2.0;
+    lazyreg::model::io::save(&path_b, &b).unwrap();
+
+    let opts = ServeOptions { shards: 2, ..Default::default() };
+    let server = Server::spawn_with(a, "127.0.0.1:0", opts).unwrap();
+    assert_eq!(server.version(), 1);
+    let mut c = Client::connect(server.addr()).unwrap();
+    assert!(c.stats().unwrap().contains("version=1"));
+    let before = c.predict(&[(3, 1.0)]).unwrap();
+    assert!(before > 0.8, "{before}");
+
+    let v = c.reload(path_b.to_str().unwrap()).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(server.version(), 2);
+    // The same connection now scores with the new weights.
+    let after = c.predict(&[(3, 1.0)]).unwrap();
+    assert!(after < 0.2, "{after}");
+    assert!(c.stats().unwrap().contains("version=2"));
+
+    // Reloads are monotonic.
+    assert_eq!(c.reload(path_b.to_str().unwrap()).unwrap(), 3);
+    c.quit().unwrap();
+    server.shutdown();
+    std::fs::remove_file(&path_b).ok();
+}
+
+#[test]
+fn connection_churn_is_reaped_by_the_fixed_pool() {
+    let opts = ServeOptions { workers: 2, ..Default::default() };
+    let server = Server::spawn_with(model(10, 5), "127.0.0.1:0", opts).unwrap();
+    assert_eq!(server.worker_count(), 2);
+    let addr = server.addr();
+    // 50 sequential connections: under the seed's thread-per-connection
+    // design this accumulated 50 JoinHandles; the pool handles them with
+    // 2 threads and stays responsive.
+    for i in 0..50 {
+        let mut c = Client::connect(addr).unwrap();
+        let p = c.predict(&[(1, i as f32)]).unwrap();
+        assert!((0.0..=1.0).contains(&p));
+        c.quit().unwrap();
+    }
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    // conns counts every accepted connection, proving the pool (not a
+    // thread spawn) served the churn.
+    let conns: u64 = stats
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("conns="))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    assert!(conns >= 50, "{stats}");
+    c.quit().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn batch_round_trip_matches_native_predictions() {
+    let dim = 2 * SCORE_BLOCK as usize + 7;
+    let m = model(dim, 6);
+    let mut rng = Rng::new(8);
+    let examples: Vec<Vec<(u32, f32)>> = (0..9)
+        .map(|_| {
+            let idx = rng.sample_distinct(dim, 30);
+            idx.into_iter().map(|j| (j as u32, rng.normal() as f32)).collect()
+        })
+        .collect();
+    let opts = ServeOptions { shards: 3, ..Default::default() };
+    let server = Server::spawn_with(m.clone(), "127.0.0.1:0", opts).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let got = c.predict_batch(&examples).unwrap();
+    for (ex, &p) in examples.iter().zip(got.iter()) {
+        let (indices, values): (Vec<u32>, Vec<f32>) = ex.iter().copied().unzip();
+        let native = Predictor::predict(&m, RowView { indices: &indices, values: &values });
+        // The wire format rounds to 6 decimals.
+        assert!((p - native).abs() < 1e-6, "p={p} native={native}");
+    }
+    c.quit().unwrap();
+    server.shutdown();
+}
