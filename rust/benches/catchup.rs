@@ -59,7 +59,8 @@ fn main() -> anyhow::Result<()> {
             bt32.resize(meta.table, 0.0);
             let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
             let psi32: Vec<i32> = psi.iter().map(|&p| p as i32).collect();
-            let lam1 = cache.reg().lam1 as f32;
+            // The XLA artifact implements the elastic-net tables only.
+            let lam1 = cache.penalty().as_elastic_net().expect("elastic-net cache").lam1 as f32;
 
             // correctness cross-check
             let got = rt.catchup(&w32, &psi32, &pt32, &bt32, steps as i32, lam1)?;

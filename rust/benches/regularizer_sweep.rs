@@ -1,8 +1,10 @@
 //! E5 — elastic net produces models as sparse as ℓ1 at comparable or
 //! better accuracy (the Zou–Hastie motivation the paper leans on, §2.1),
-//! and every family trains at the same O(p) lazy rate.
+//! and every family trains at the same O(p) lazy rate — including the
+//! penalty-API families (truncated gradient `tg:`, ℓ∞ ball `linf:`),
+//! which ride the identical lazy machinery.
 //!
-//! Sweeps regularizer family × strength on a teacher-labeled corpus and
+//! Sweeps penalty family × strength on a teacher-labeled corpus and
 //! reports held-out accuracy/F1, model sparsity and training throughput.
 
 use lazyreg::eval::evaluate;
@@ -22,6 +24,14 @@ fn main() -> anyhow::Result<()> {
         configs.push((format!("l1:{lam}"), Regularizer::l1(lam)));
         configs.push((format!("l22:{lam}"), Regularizer::l22(lam)));
         configs.push((format!("enet:{lam}:{lam}"), Regularizer::elastic_net(lam, lam)));
+        // Truncated gradient with the same per-step gravity, applied at
+        // K = 10 boundaries, no ceiling.
+        let tg = Regularizer::truncated_gradient(lam, 10, f64::INFINITY);
+        configs.push((tg.name(), tg));
+    }
+    for &r in &[0.5, 0.1, 0.05, 0.01] {
+        let li = Regularizer::linf(r);
+        configs.push((li.name(), li));
     }
 
     println!("\n## E5 — regularizer sweep (FoBoS, 3 epochs, n=6,000 train)");

@@ -166,4 +166,30 @@ sync_interval = 512
         let doc = ConfigDoc::parse(text).unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
+
+    #[test]
+    fn penalty_families_parse_from_config() {
+        let text = "[train]\nreg = \"tg:0.01:10:1.5\"\n";
+        let doc = ConfigDoc::parse(text).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.train.reg, Regularizer::truncated_gradient(0.01, 10, 1.5));
+
+        let text = "[train]\nreg = \"linf:0.25\"\n";
+        let doc = ConfigDoc::parse(text).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.train.reg, Regularizer::linf(0.25));
+    }
+
+    #[test]
+    fn invalid_schedule_parameters_rejected() {
+        for text in [
+            "[train]\nschedule = \"exp:0.5:2.0\"\n",
+            "[train]\nschedule = \"step:0.5:0:0.5\"\n",
+            "[train]\nschedule = \"const:0\"\n",
+            "[train]\nreg = \"l1:0.1:extra\"\n",
+        ] {
+            let doc = ConfigDoc::parse(text).unwrap();
+            assert!(ExperimentConfig::from_doc(&doc).is_err(), "{text:?}");
+        }
+    }
 }

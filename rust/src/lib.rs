@@ -5,29 +5,44 @@
 //! Models* (Lipton & Elkan, 2015).
 //!
 //! The paper's contribution — and this crate's hot path — is **O(p)
-//! per-example training under dense regularizers** (ℓ1, ℓ2², elastic net):
-//! stochastic updates touch only the weights of *non-zero* features, and
-//! stale weights are brought current on demand by closed-form, constant
-//! time *lazy catch-up* updates backed by a dynamic-programming cache of
+//! per-example training under dense regularizers**: stochastic updates
+//! touch only the weights of *non-zero* features, and stale weights are
+//! brought current on demand by closed-form, constant time *lazy
+//! catch-up* updates backed by a dynamic-programming cache of
 //! learning-rate partial sums/products ([`optim::dp`]).
+//!
+//! Regularization is **pluggable**: any family with a closed-form lazy
+//! update implements the [`optim::Penalty`] trait (per-step dense
+//! oracle + DP state + O(1) catch-up), and the whole stack — cache,
+//! trainers, config, CLI, serving provenance — is generic over it. The
+//! registered families are the paper's elastic net (with ℓ1/ℓ2²/none as
+//! degenerate points), Langford–Li–Zhang **truncated gradient**
+//! (`tg:λ:K:θ`), and **ℓ∞-ball** projection (`linf:r`); trainers store
+//! them behind the `Copy` enum [`optim::Regularizer`]. The generic law
+//! suite ([`testing::penalty_laws`]) proves catch-up ≡ sequential dense,
+//! transitivity and rebase-invisibility once for every family.
 //!
 //! ## Architecture (three layers)
 //!
 //! * **Layer 3 (this crate)** — the training coordinator: sparse data
 //!   pipeline ([`data`]), synthetic corpus generation ([`synth`]), the
-//!   lazy update engine ([`optim`], [`train`]), the **data-parallel
-//!   sharded engine** ([`train::parallel`]: N lazy workers over disjoint
-//!   shards, synchronized by deterministic example-weighted model
-//!   averaging every `sync_interval` examples — epoch-synchronous by
-//!   default, `workers = 1` bit-identical to serial), multi-worker
-//!   orchestration ([`coordinator`]: one-vs-rest tagging and sharded
-//!   bounded-queue streaming), evaluation ([`eval`]), the **serving
-//!   layer** ([`predict`]: the [`predict::Predictor`] trait over native,
-//!   **feature-sharded** ([`predict::ShardedModel`] — the serving dual of
-//!   the example-sharded trainer, bitwise-identical scores for any shard
-//!   count via block-partial tree reduction), and `pjrt` artifact-batched
-//!   scoring; [`serve`]: a fixed-worker-pool TCP service with batched
-//!   requests and hot model reload) and CLI (`src/main.rs`).
+//!   lazy update engine ([`optim`]: the [`optim::Penalty`] families,
+//!   [`optim::DpCache`], the closed forms in [`optim::lazy`]; [`train`]:
+//!   lazy/dense trainers behind the [`train::Trainer`] trait), the
+//!   **data-parallel sharded engine** ([`train::parallel`]: N lazy
+//!   workers over disjoint shards, synchronized by deterministic
+//!   example-weighted model averaging every `sync_interval` examples —
+//!   epoch-synchronous by default, `workers = 1` bit-identical to
+//!   serial), multi-worker orchestration ([`coordinator`]: one-vs-rest
+//!   tagging and sharded bounded-queue streaming), evaluation
+//!   ([`eval`]), the **serving layer** ([`predict`]: the
+//!   [`predict::Predictor`] trait over native, **feature-sharded**
+//!   ([`predict::ShardedModel`] — the serving dual of the
+//!   example-sharded trainer, bitwise-identical scores for any shard
+//!   count via block-partial tree reduction), and `pjrt`
+//!   artifact-batched scoring; [`serve`]: a fixed-worker-pool TCP
+//!   service with batched requests, hot model reload, and per-model
+//!   penalty provenance in `stats`) and CLI (`src/main.rs`).
 //! * **Layer 2 (JAX, build-time)** — dense mini-batch logistic-regression
 //!   graphs lowered once to HLO text (`python/compile/`), executed from
 //!   Rust through PJRT by [`runtime`] (gated behind the `pjrt` cargo
@@ -50,20 +65,25 @@
 //! ```no_run
 //! use lazyreg::prelude::*;
 //!
+//! # fn main() -> anyhow::Result<()> {
 //! // A Medline-shaped synthetic corpus (scaled down).
 //! let spec = lazyreg::synth::BowSpec { n_examples: 5_000, n_features: 20_000,
 //!     avg_nnz: 80.0, ..Default::default() };
 //! let data = lazyreg::synth::generate(&spec, 42);
 //!
+//! // Any registered penalty family parses from its config name:
+//! // "enet:λ1:λ2", "tg:λ:K:θ" (truncated gradient), "linf:r" (ℓ∞ ball).
 //! let opts = TrainOptions {
 //!     algo: Algo::Fobos,
-//!     reg: Regularizer::elastic_net(1e-5, 1e-5),
+//!     reg: "enet:1e-5:1e-5".parse()?,
 //!     schedule: Schedule::InvSqrtT { eta0: 0.5 },
 //!     epochs: 3,
 //!     ..Default::default()
 //! };
-//! let report = train_lazy(&data, &opts).unwrap();
-//! println!("{} examples/s", report.throughput);
+//! let report = train_lazy(&data, &opts)?;
+//! println!("{} examples/s under {}", report.throughput, report.penalty);
+//! # Ok(())
+//! # }
 //! ```
 
 pub mod bench;
@@ -88,7 +108,7 @@ pub mod prelude {
     pub use crate::data::{CsrMatrix, SparseDataset};
     pub use crate::loss::Loss;
     pub use crate::model::LinearModel;
-    pub use crate::optim::{Algo, Regularizer, Schedule};
+    pub use crate::optim::{Algo, Penalty, Regularizer, Schedule};
     pub use crate::predict::Predictor;
     pub use crate::train::{
         train_dense, train_lazy, train_parallel, TrainOptions, TrainReport, Trainer,

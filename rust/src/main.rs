@@ -4,7 +4,11 @@
 //!   gen       generate a synthetic Medline-like corpus to libsvm
 //!   train     train a model (lazy by default; --dense baseline;
 //!             --workers N shards across data-parallel workers, with
-//!             --sync-interval M examples between model-averaging syncs)
+//!             --sync-interval M examples between model-averaging syncs;
+//!             --reg selects any registered penalty family, e.g.
+//!             `--reg enet:1e-5:1e-5`, `--reg tg:0.01:10:1.0` for
+//!             truncated gradient with period 10 and ceiling 1.0, or
+//!             `--reg linf:0.1` for an l-inf ball of radius 0.1)
 //!   eval      evaluate a saved model on a libsvm dataset
 //!   serve     run the TCP prediction service (--shards N feature-sharded
 //!             scoring, --workers K connection pool, --batch-max M,
@@ -174,8 +178,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (at_half, best) = evaluate(&report.model, &test);
     let sp = report.model.sparsity();
     println!(
-        "throughput={} loss={:.5} acc={:.4} f1@0.5={:.4} f1*={:.4} nnz(w)={} \
+        "penalty={} throughput={} loss={:.5} acc={:.4} f1@0.5={:.4} f1*={:.4} nnz(w)={} \
          ({:.3}% dense) rebases={}",
+        report.penalty,
         fmt::rate(report.throughput, "ex"),
         report.final_loss(),
         at_half.accuracy,

@@ -2,13 +2,20 @@
 //! stored, so elastic-net models serialize compactly).
 //!
 //! ```text
-//! lazyreg-model v1
+//! lazyreg-model v2
 //! loss logistic
+//! penalty enet:0.001:0.01
 //! dim 260941
 //! bias -0.0123
 //! 17:0.442
 //! 204:-1.73
 //! ```
+//!
+//! v2 adds the optional `penalty` header recording training provenance
+//! (the penalty `name()` string); models never trained omit it. The
+//! version tag is bumped so pre-penalty readers fail with an honest
+//! "bad magic" instead of a confusing `dim` parse error; this reader
+//! still accepts v1 files (which never carry the header).
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
@@ -22,8 +29,20 @@ use super::LinearModel;
 /// Serialize a model (non-zero weights only).
 pub fn write<W: std::io::Write>(w: W, model: &LinearModel) -> Result<()> {
     let mut out = BufWriter::new(w);
-    writeln!(out, "lazyreg-model v1")?;
+    writeln!(out, "lazyreg-model v2")?;
     writeln!(out, "loss {}", model.loss.name())?;
+    if let Some(p) = &model.penalty {
+        // The header is line-oriented and the reader trims the value:
+        // a provenance string with line breaks would corrupt the file,
+        // and one with edge whitespace would not round-trip. Penalty
+        // `name()` strings are always trimmed single lines; reject
+        // anything else rather than silently mutate or corrupt.
+        anyhow::ensure!(
+            !p.is_empty() && p.trim() == p.as_str() && !p.contains(|c| c == '\n' || c == '\r'),
+            "model penalty provenance must be a trimmed, single-line string: {p:?}"
+        );
+        writeln!(out, "penalty {p}")?;
+    }
     writeln!(out, "dim {}", model.dim())?;
     writeln!(out, "bias {}", model.bias)?;
     for (j, &wj) in model.weights.iter().enumerate() {
@@ -45,16 +64,31 @@ pub fn read<R: std::io::Read>(r: R) -> Result<LinearModel> {
             .context("model file read error")
     };
     let magic = next()?;
-    if magic.trim() != "lazyreg-model v1" {
-        bail!("not a lazyreg model file (bad magic {magic:?})");
-    }
+    let v2 = match magic.trim() {
+        "lazyreg-model v1" => false,
+        "lazyreg-model v2" => true,
+        _ => bail!("not a lazyreg model file (bad magic {magic:?})"),
+    };
     let loss_line = next()?;
     let loss = Loss::parse(
         loss_line
             .strip_prefix("loss ")
             .with_context(|| format!("expected `loss ...`, got {loss_line:?}"))?,
     )?;
-    let dim_line = next()?;
+    // Optional `penalty <name>` provenance header — v2 only (v1 files
+    // never carried it). An empty value loads as None so everything
+    // this reader produces is re-saveable by `write`'s header guard.
+    let mut dim_line = next()?;
+    let mut penalty = None;
+    if v2 {
+        if let Some(p) = dim_line.strip_prefix("penalty ") {
+            let p = p.trim();
+            if !p.is_empty() {
+                penalty = Some(p.to_string());
+            }
+            dim_line = next()?;
+        }
+    }
     let dim: usize = dim_line
         .strip_prefix("dim ")
         .with_context(|| format!("expected `dim ...`, got {dim_line:?}"))?
@@ -69,6 +103,7 @@ pub fn read<R: std::io::Read>(r: R) -> Result<LinearModel> {
 
     let mut model = LinearModel::zeros(dim, loss);
     model.bias = bias;
+    model.penalty = penalty;
     for line in lines {
         let line = line?;
         let line = line.trim();
@@ -141,6 +176,47 @@ mod tests {
         let m2 = load(&path).unwrap();
         assert_eq!(m, m2);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn penalty_provenance_round_trips() {
+        let mut m = model();
+        m.penalty = Some("tg:0.01:10:1.5".into());
+        let mut buf = Vec::new();
+        write(&mut buf, &m).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.starts_with("lazyreg-model v2\n"), "{text}");
+        assert!(text.contains("penalty tg:0.01:10:1.5\n"), "{text}");
+        let m2 = read(buf.as_slice()).unwrap();
+        assert_eq!(m2.penalty.as_deref(), Some("tg:0.01:10:1.5"));
+        assert_eq!(m, m2);
+        // legacy files without the header still load, with None provenance
+        let legacy = "lazyreg-model v1\nloss logistic\ndim 4\nbias 0.5\n1:2\n";
+        let m3 = read(legacy.as_bytes()).unwrap();
+        assert_eq!(m3.penalty, None);
+        assert_eq!(m3.bias, 0.5);
+
+        // provenance smuggling a line break is rejected at write time
+        // (it would produce a file this module cannot read back), and so
+        // is edge whitespace (the reader trims, so it wouldn't round-trip)
+        let mut bad = model();
+        bad.penalty = Some("x\ndim 9".into());
+        assert!(write(&mut Vec::new(), &bad).is_err());
+        bad.penalty = Some(" x".into());
+        assert!(write(&mut Vec::new(), &bad).is_err());
+        bad.penalty = Some(String::new());
+        assert!(write(&mut Vec::new(), &bad).is_err());
+
+        // the v2-only header is not recognized in v1 files…
+        let v1_with_header =
+            "lazyreg-model v1\nloss logistic\npenalty x\ndim 4\nbias 0.5\n";
+        assert!(read(v1_with_header.as_bytes()).is_err());
+        // …and an empty header value loads as None (re-saveable)
+        let empty_header =
+            "lazyreg-model v2\nloss logistic\npenalty  \ndim 4\nbias 0.5\n";
+        let m4 = read(empty_header.as_bytes()).unwrap();
+        assert_eq!(m4.penalty, None);
+        write(&mut Vec::new(), &m4).unwrap();
     }
 
     #[test]

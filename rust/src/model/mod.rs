@@ -18,6 +18,10 @@ pub struct LinearModel {
     pub bias: f64,
     /// The loss used to interpret scores.
     pub loss: Loss,
+    /// Training provenance: the penalty `name()` string this model was
+    /// trained under (`None` for hand-built or legacy models). Persisted
+    /// by [`io`] and surfaced by the serving `stats` command.
+    pub penalty: Option<String>,
 }
 
 /// Weight-sparsity summary.
@@ -40,7 +44,7 @@ pub struct SparsityStats {
 impl LinearModel {
     /// Zero-initialized model of dimension `d`.
     pub fn zeros(d: usize, loss: Loss) -> LinearModel {
-        LinearModel { weights: vec![0.0; d], bias: 0.0, loss }
+        LinearModel { weights: vec![0.0; d], bias: 0.0, loss, penalty: None }
     }
 
     /// Dimensionality.

@@ -1,0 +1,87 @@
+//! The `kind:field:field…` config-string splitter shared by every
+//! [`Penalty`] family's `parse` and by [`Schedule::parse`] — a plain
+//! parsing utility with no penalty- or schedule-specific logic, so it
+//! lives beside both rather than inside either.
+//!
+//! [`Penalty`]: super::Penalty
+//! [`Schedule::parse`]: super::Schedule::parse
+
+use anyhow::Result;
+
+/// `kind:field:field…` splitter that rejects trailing garbage: the
+/// arity is checked by [`Fields::done`] against the highest field index
+/// actually consumed, so `l1:0.1:extra` is an error rather than a
+/// silently ignored suffix. Numeric fields must parse non-negative
+/// (every schedule/penalty field is a strength, radius, rate or period);
+/// stricter range rules belong in the caller's `validate`.
+pub(crate) struct Fields<'a> {
+    raw: &'a str,
+    what: &'static str,
+    /// The `kind` token (field 0).
+    pub(crate) kind: &'a str,
+    parts: Vec<&'a str>,
+    consumed: std::cell::Cell<usize>,
+}
+
+impl<'a> Fields<'a> {
+    /// Split `s` on `:`; `what` labels error messages. Infallible —
+    /// `split` always yields at least the kind token.
+    pub(crate) fn split(s: &'a str, what: &'static str) -> Fields<'a> {
+        let parts: Vec<&str> = s.split(':').collect();
+        Fields { raw: s, what, kind: parts[0], parts, consumed: std::cell::Cell::new(0) }
+    }
+
+    /// Parse field `i` as f64 (must exist; must be non-negative-parseable
+    /// by the caller if required).
+    pub(crate) fn get(&self, i: usize) -> Result<f64> {
+        let v: f64 = self.get_raw(i)?.parse().map_err(|e| {
+            anyhow::anyhow!("{} {:?}: field {i}: {e}", self.what, self.raw)
+        })?;
+        anyhow::ensure!(
+            v >= 0.0 && !v.is_nan(),
+            "{} {:?}: field {i} must be non-negative",
+            self.what,
+            self.raw
+        );
+        Ok(v)
+    }
+
+    /// Parse field `i` as u64. Integral float notation (`1e3`, `100.0`)
+    /// is accepted for config compatibility; fractional values are not.
+    pub(crate) fn get_u64(&self, i: usize) -> Result<u64> {
+        let raw = self.get_raw(i)?;
+        if let Ok(v) = raw.parse::<u64>() {
+            return Ok(v);
+        }
+        let v: f64 = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("{} {:?}: field {i}: {e}", self.what, self.raw))?;
+        anyhow::ensure!(
+            v >= 0.0 && v.fract() == 0.0 && v <= 2f64.powi(53),
+            "{} {:?}: field {i} must be a non-negative integer",
+            self.what,
+            self.raw
+        );
+        Ok(v as u64)
+    }
+
+    fn get_raw(&self, i: usize) -> Result<&'a str> {
+        self.consumed.set(self.consumed.get().max(i));
+        self.parts
+            .get(i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("{} {:?}: missing field {i}", self.what, self.raw))
+    }
+
+    /// Finish: error if the text carried more fields than were consumed.
+    pub(crate) fn done<T>(&self, value: T) -> Result<T> {
+        let expect = self.consumed.get() + 1;
+        anyhow::ensure!(
+            self.parts.len() == expect,
+            "{} {:?}: trailing fields after {expect} expected",
+            self.what,
+            self.raw
+        );
+        Ok(value)
+    }
+}

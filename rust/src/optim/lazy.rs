@@ -11,15 +11,22 @@
 //! ```
 //!
 //! Every update family in the paper is this one formula under the right
-//! tables:
+//! tables; the two families added by the [`Penalty`] API reuse the same
+//! shape with degenerate product terms (their closed forms live in
+//! [`super::penalty`], rows included here for the full catch-up
+//! contract):
 //!
-//! | family | a_t (product term) | inner-sum term | paper eq. |
+//! | family | a_t (product term) | inner-sum term | source |
 //! |---|---|---|---|
 //! | SGD ℓ1            | 1                  | η(t)          | Eq. 4  |
 //! | SGD ℓ2²           | 1 − η(t)λ₂         | —             | Eq. 6  |
 //! | SGD elastic net   | 1 − η(t)λ₂         | η(t)/P(t)     | Eq. 10 (erratum: paper prints η(t)/P(t−1)) |
 //! | FoBoS ℓ2²         | 1/(1 + η(t)λ₂)     | —             | Eq. 15 |
 //! | FoBoS elastic net | 1/(1 + η(t)λ₂)     | η(t)/Φ(t−1)   | Eq. 16 |
+//! | truncated gradient | 1 (guarded by `\|w\| ≤ θ`) | K·η(t)·λ₁ at every K-th step | Langford, Li & Zhang |
+//! | ℓ∞ ball           | idempotent clamp to `[−r, r]` | —  | Duchi & Singer (FoBoS) |
+//!
+//! [`Penalty`]: super::Penalty
 //!
 //! The SGD erratum: expanding `w ← a_t|w| − η_t λ₁` shows the shrinkage
 //! applied at step τ is *not* multiplied by `a_τ` itself, so its

@@ -1,15 +1,34 @@
-//! The paper's optimization core: learning-rate schedules, the
+//! The paper's optimization core: learning-rate schedules, the pluggable
+//! [`Penalty`] API (closed-form lazy regularizers behind one trait), the
 //! dynamic-programming caches of partial sums/products, the closed-form
-//! lazy catch-up updates (Eq. 4, 6, 10, 15, 16), and the per-step dense
-//! baselines they must match.
+//! lazy catch-up updates (Eq. 4, 6, 10, 15, 16 for the elastic-net
+//! family; periodic-gravity and idempotent-clamp forms for truncated
+//! gradient and the ℓ∞ ball), and the per-step dense baselines they must
+//! match.
+//!
+//! Layering:
+//!
+//! * [`penalty`] — the [`Penalty`]/[`PenaltyState`] contract and the
+//!   registered families ([`ElasticNet`], [`TruncatedGradient`],
+//!   [`Linf`]);
+//! * [`reg`] — the `Copy` enum [`Regularizer`] the trainers store,
+//!   dispatching over the families;
+//! * [`dp`] — [`DpCache`], the run-level cache generic over the family;
+//! * [`lazy`] / [`dense_step`] — the elastic-net closed forms and the
+//!   per-step dense oracles they reproduce.
 
 pub mod dense_step;
 pub mod dp;
+pub(crate) mod fields;
 pub mod lazy;
+pub mod penalty;
 pub mod reg;
 pub mod schedule;
 
 pub use dp::DpCache;
+pub use penalty::{
+    CatchupSnapshot, ElasticNet, Linf, Penalty, PenaltyState, StepMap, TruncatedGradient,
+};
 pub use reg::Regularizer;
 pub use schedule::Schedule;
 
@@ -32,11 +51,7 @@ pub enum Algo {
 impl Algo {
     /// Parse from CLI/config text.
     pub fn parse(s: &str) -> anyhow::Result<Algo> {
-        match s.to_ascii_lowercase().as_str() {
-            "sgd" => Ok(Algo::Sgd),
-            "fobos" => Ok(Algo::Fobos),
-            other => anyhow::bail!("unknown algo {other:?} (expected sgd|fobos)"),
-        }
+        s.parse()
     }
 
     /// Name for reports.
@@ -44,6 +59,18 @@ impl Algo {
         match self {
             Algo::Sgd => "sgd",
             Algo::Fobos => "fobos",
+        }
+    }
+}
+
+impl std::str::FromStr for Algo {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Ok(Algo::Sgd),
+            "fobos" => Ok(Algo::Fobos),
+            other => anyhow::bail!("unknown algo {other:?} (expected sgd|fobos)"),
         }
     }
 }
@@ -58,5 +85,13 @@ mod tests {
         assert_eq!(Algo::parse("FoBoS").unwrap(), Algo::Fobos);
         assert!(Algo::parse("adam").is_err());
         assert_eq!(Algo::parse(Algo::Fobos.name()).unwrap(), Algo::Fobos);
+    }
+
+    #[test]
+    fn algo_from_str_and_trailing_garbage() {
+        let a: Algo = "sgd".parse().unwrap();
+        assert_eq!(a, Algo::Sgd);
+        assert!("sgd:extra".parse::<Algo>().is_err());
+        assert!("sgd ".parse::<Algo>().is_err());
     }
 }

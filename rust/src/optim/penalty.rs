@@ -1,0 +1,1060 @@
+//! The pluggable penalty API: every regularization family that admits a
+//! **closed-form lazy catch-up** implements [`Penalty`], and the whole
+//! training stack ([`super::DpCache`], the lazy/dense trainers, config,
+//! CLI) is written against that contract instead of a hard-wired
+//! elastic-net struct.
+//!
+//! ## The lazy-update contract
+//!
+//! A penalty owns three tightly-coupled pieces:
+//!
+//! 1. **The per-step oracle** — [`Penalty::dense_step`]: the
+//!    regularization-only map applied to *every* weight at step `t` by a
+//!    dense trainer. This is ground truth.
+//! 2. **The DP state** — [`Penalty::State`], a table maintained by one
+//!    amortized-O(1) [`PenaltyState::extend`] per stochastic iteration.
+//! 3. **The catch-up** — [`PenaltyState::catchup`]: bring a weight
+//!    current from table index ψ to the present index k in O(1), with a
+//!    result equal (to float rounding) to applying the per-step oracle
+//!    at steps ψ, ψ+1, …, k−1 in sequence.
+//!
+//! The generic law suite ([`crate::testing::penalty_laws`]) proves the
+//! contract — catch-up ≡ sequential dense, transitivity of composition,
+//! and rebase invisibility — once, for every registered family, over
+//! both update algorithms and all five learning-rate schedules.
+//!
+//! ## Registered families
+//!
+//! | family | per-step oracle | lazy state | catch-up |
+//! |---|---|---|---|
+//! | [`ElasticNet`] | Eq. 9 (SGD) / Eq. 3 prox (FoBoS) | shifted `pt`/`bt` products & sums | Eq. 4/6/10/15/16 |
+//! | [`TruncatedGradient`] | shrink by `K·η(t)·λ₁` iff `\|w\| ≤ θ`, every K-th step | cumulative event gravities `gt` | single shrink by `gt[k] − gt[ψ]`, guarded by θ |
+//! | [`Linf`] | project onto `{‖w‖∞ ≤ r}` | step counter only | one idempotent clamp |
+//!
+//! `TruncatedGradient` is Langford, Li & Zhang's *Sparse Online Learning
+//! via Truncated Gradient* (K = 1, θ = ∞ degenerates to the paper's SGD
+//! ℓ1, Eq. 4); `Linf` is ℓ∞-ball regularization in the FoBoS/projected
+//! sense of Duchi & Singer (the coordinate-wise projection is idempotent,
+//! which is exactly why its lazy form is a single clamp).
+//!
+//! The closed struct the crate used to expose survives as the
+//! enum-dispatched [`super::Regularizer`], which implements [`Penalty`]
+//! by delegation; trainers store that enum so `TrainOptions` stays
+//! `Copy`, while generic code (the law suite, [`super::DpCache`]) can
+//! instantiate any concrete family directly.
+
+use anyhow::Result;
+
+use super::dense_step::{self, sign};
+use super::fields::Fields;
+use super::{Algo, Schedule};
+
+/// A regularization family with a closed-form lazy update.
+///
+/// Implementations are small `Copy` parameter structs; all mutable state
+/// lives in the associated [`Penalty::State`].
+pub trait Penalty: Copy + std::fmt::Debug + Send + Sync + 'static {
+    /// The DP state backing O(1) catch-up for this family.
+    type State: PenaltyState;
+
+    /// Fresh state at table index k = 0 for `algo`.
+    fn init_state(&self, algo: Algo) -> Self::State;
+
+    /// The regularization-only update a dense trainer applies to every
+    /// weight at global step `t` with learning rate `eta`.
+    ///
+    /// The default routes through [`Penalty::step_map`]; families that
+    /// must preserve a historically exact floating-point expression for
+    /// the dense path (elastic net) override it.
+    fn dense_step(&self, algo: Algo, t: u64, w: f64, eta: f64) -> f64 {
+        self.step_map(algo, t, eta).apply(w)
+    }
+
+    /// Per-example update coefficients for step `t` — the lazy trainer
+    /// hoists this out of its per-feature pass-2 loop.
+    fn step_map(&self, algo: Algo, t: u64, eta: f64) -> StepMap;
+
+    /// Penalty value R(w) for objective logging.
+    fn value(&self, w: &[f64]) -> f64;
+
+    /// True when every step of this penalty is the identity (dense
+    /// trainers skip their O(d) sweep).
+    fn is_noop(&self) -> bool {
+        false
+    }
+
+    /// Check the (algo, schedule) combination is in this family's valid
+    /// regime (e.g. SGD elastic net needs `η(0)·λ₂ < 1`, paper §5.2).
+    fn validate(&self, algo: Algo, schedule: &Schedule) -> Result<()>;
+
+    /// Config/report name; [`Penalty::parse`] round-trips it.
+    fn name(&self) -> String;
+
+    /// Parse from CLI/config text.
+    fn parse(s: &str) -> Result<Self>
+    where
+        Self: Sized;
+}
+
+/// The DP tables of one training run for one penalty family.
+///
+/// `k` (the current table index) starts at 0; one [`PenaltyState::extend`]
+/// per stochastic iteration advances it. Weights carry a ψ timestamp and
+/// [`PenaltyState::catchup`] replays steps ψ…k−1 in O(1).
+pub trait PenaltyState: std::fmt::Debug + Clone + Send + Sync {
+    /// Append the table entry for global step `t` at rate `eta`;
+    /// amortized O(1).
+    fn extend(&mut self, t: u64, eta: f64);
+
+    /// Current table index: weights with `psi == k` are current.
+    fn k(&self) -> u32;
+
+    /// Bring `w` current from `psi` to `k` in O(1).
+    fn catchup(&self, w: f64, psi: u32) -> f64;
+
+    /// Hot-path snapshot with the per-example constants hoisted
+    /// (semantics identical to [`PenaltyState::catchup`]).
+    fn snapshot(&self) -> CatchupSnapshot<'_>;
+
+    /// Live table slots (drives the space-budget flush).
+    fn len(&self) -> usize;
+
+    /// False once the tables approach numerical trouble (forces an early
+    /// flush; see [`super::dp::MIN_TAIL_PRODUCT`]).
+    fn well_conditioned(&self) -> bool {
+        true
+    }
+
+    /// Reset to the k = 0 state. The caller must have brought every
+    /// weight current and zeroed its ψ values.
+    fn rebase(&mut self);
+
+    /// Raw `(pt, bt)` table views where the family maintains them (the
+    /// XLA catch-up artifact path); empty slices otherwise.
+    fn tables(&self) -> (&[f64], &[f64]) {
+        (&[], &[])
+    }
+}
+
+/// One iteration's regularization map with all step-level constants
+/// folded in — the branch-light per-feature form of the pass-2 loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepMap {
+    /// `w ← sgn(w)·[ra·|w| − rb]₊` — the elastic-net family under both
+    /// algorithms (SGD: `ra = 1 − ηλ₂`, `rb = ηλ₁`; FoBoS:
+    /// `ra = 1/(1 + ηλ₂)`, `rb = ηλ₁·ra`).
+    Shrink {
+        /// Multiplicative factor on `|w|`.
+        ra: f64,
+        /// Subtractive shrinkage.
+        rb: f64,
+    },
+    /// Truncated-gradient event: shrink by `alpha` toward 0 iff
+    /// `|w| ≤ theta` (`alpha = 0` between truncation boundaries).
+    Truncate {
+        /// Gravity `K·η(t)·λ₁` at a boundary, 0 elsewhere.
+        alpha: f64,
+        /// Clip ceiling θ: larger weights are left untouched.
+        theta: f64,
+    },
+    /// Projection onto the ℓ∞ ball of radius `r`.
+    Clamp {
+        /// Ball radius.
+        r: f64,
+    },
+}
+
+impl StepMap {
+    /// True when this step's map is the identity on every weight —
+    /// truncated gradient between truncation boundaries, or a shrink
+    /// with no strength. Dense trainers skip their O(d) sweep for such
+    /// steps.
+    #[inline]
+    pub fn is_identity(self) -> bool {
+        match self {
+            StepMap::Shrink { ra, rb } => ra == 1.0 && rb == 0.0,
+            StepMap::Truncate { alpha, .. } => alpha == 0.0,
+            StepMap::Clamp { .. } => false,
+        }
+    }
+
+    /// Apply the map to one weight.
+    #[inline(always)]
+    pub fn apply(self, w: f64) -> f64 {
+        match self {
+            StepMap::Shrink { ra, rb } => {
+                let mag = ra * w.abs() - rb;
+                sign(w) * mag.max(0.0)
+            }
+            StepMap::Truncate { alpha, theta } => {
+                if alpha == 0.0 || w.abs() > theta {
+                    w
+                } else {
+                    sign(w) * (w.abs() - alpha).max(0.0)
+                }
+            }
+            StepMap::Clamp { r } => w.clamp(-r, r),
+        }
+    }
+}
+
+/// Per-example view of the catch-up constants, hoisted out of the
+/// per-feature loop by [`PenaltyState::snapshot`].
+///
+/// For the elastic-net family the algebra is Eq. 10/16 rearranged so the
+/// per-feature work is one gather pair, one fused multiply-add shape,
+/// and a clamp:
+///
+/// ```text
+/// mag = |w| * pk * inv_pt[ψ] - (c1 - c2 * bt[ψ])
+///   where c2 = λ₁·pk, c1 = λ₁·pk·bt[k]
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct CatchupSnapshot<'a> {
+    /// Current table index.
+    pub k: u32,
+    kind: SnapshotKind<'a>,
+}
+
+/// Family-specific snapshot payload. New [`Penalty`] families add a
+/// variant here (the cost of keeping the hot path free of virtual
+/// dispatch).
+#[derive(Debug, Clone, Copy)]
+enum SnapshotKind<'a> {
+    /// Elastic-net shifted tables (Eq. 10/16 rearranged).
+    Shifted {
+        pk: f64,
+        c1: f64,
+        c2: f64,
+        inv_pt: &'a [f64],
+        bt: &'a [f64],
+        pure_scale: bool,
+    },
+    /// Truncated gradient: cumulative event gravities.
+    Truncated { gk: f64, gt: &'a [f64], theta: f64 },
+    /// ℓ∞ ball: one idempotent clamp.
+    Clamped { r: f64 },
+}
+
+impl CatchupSnapshot<'_> {
+    /// O(1) catch-up of one weight from `psi` to `k` (hot-path variant
+    /// of [`PenaltyState::catchup`]; identical semantics, fewer
+    /// loads/branches).
+    #[inline(always)]
+    pub fn catchup(&self, w: f64, psi: u32) -> f64 {
+        if psi == self.k {
+            return w;
+        }
+        match self.kind {
+            SnapshotKind::Shifted { pk, c1, c2, inv_pt, bt, pure_scale } => {
+                let scale = pk * inv_pt[psi as usize];
+                if pure_scale {
+                    return w * scale;
+                }
+                if w == 0.0 {
+                    return 0.0;
+                }
+                let shrink = c1 - c2 * bt[psi as usize];
+                let mag = w.abs() * scale - shrink;
+                sign(w) * mag.max(0.0)
+            }
+            SnapshotKind::Truncated { gk, gt, theta } => {
+                if w == 0.0 {
+                    return 0.0;
+                }
+                if w.abs() > theta {
+                    return w;
+                }
+                let s = gk - gt[psi as usize];
+                sign(w) * (w.abs() - s).max(0.0)
+            }
+            SnapshotKind::Clamped { r } => w.clamp(-r, r),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic net: λ₁‖w‖₁ + (λ₂/2)‖w‖₂²
+// ---------------------------------------------------------------------------
+
+/// The elastic-net family — λ₁‖w‖₁ + (λ₂/2)‖w‖₂², with pure ℓ1, pure
+/// ℓ2² and "no regularization" as degenerate points (the lazy machinery
+/// handles every point with the same closed form).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ElasticNet {
+    /// ℓ1 strength λ₁ ≥ 0.
+    pub lam1: f64,
+    /// ℓ2² strength λ₂ ≥ 0.
+    pub lam2: f64,
+}
+
+impl ElasticNet {
+    /// Kind tokens [`ElasticNet::parse`] accepts (single source for the
+    /// enum dispatch in [`super::Regularizer`]'s `FromStr`).
+    pub(crate) const KINDS: &'static [&'static str] =
+        &["none", "l1", "l22", "l2sq", "ridge", "enet", "elastic_net"];
+
+    /// Construct, asserting non-negative strengths.
+    pub fn new(lam1: f64, lam2: f64) -> ElasticNet {
+        let p = ElasticNet { lam1, lam2 };
+        if let Err(e) = p.check_params() {
+            panic!("{e}");
+        }
+        p
+    }
+
+    /// Is this the zero penalty?
+    pub fn is_none(&self) -> bool {
+        self.lam1 == 0.0 && self.lam2 == 0.0
+    }
+
+    /// The single copy of this family's parameter-range rules, shared by
+    /// `new`, `parse` and `validate`.
+    fn check_params(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.lam1 >= 0.0 && self.lam2 >= 0.0,
+            "elastic net: strengths must be non-negative"
+        );
+        Ok(())
+    }
+}
+
+impl Penalty for ElasticNet {
+    type State = ElasticNetState;
+
+    fn init_state(&self, algo: Algo) -> ElasticNetState {
+        ElasticNetState {
+            algo,
+            lam1: self.lam1,
+            lam2: self.lam2,
+            pt: vec![1.0],
+            inv_pt: vec![1.0],
+            bt: vec![0.0],
+        }
+    }
+
+    /// Exactly the historical dense map ([`dense_step::reg_update`]):
+    /// Eq. 9 for SGD, the Eq. 3 prox solution for FoBoS. Kept separate
+    /// from [`Penalty::step_map`] because the FoBoS expressions differ
+    /// in rounding (`(|w| − ηλ₁)/(1 + ηλ₂)` vs `ra·|w| − rb`), and each
+    /// trainer path must stay bit-identical to its pre-trait behavior.
+    fn dense_step(&self, algo: Algo, _t: u64, w: f64, eta: f64) -> f64 {
+        dense_step::reg_update(algo, w, eta, self.lam1, self.lam2)
+    }
+
+    fn step_map(&self, algo: Algo, _t: u64, eta: f64) -> StepMap {
+        let (ra, rb) = match algo {
+            Algo::Sgd => (1.0 - eta * self.lam2, eta * self.lam1),
+            Algo::Fobos => {
+                let inv = 1.0 / (1.0 + eta * self.lam2);
+                (inv, eta * self.lam1 * inv)
+            }
+        };
+        StepMap::Shrink { ra, rb }
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        let mut l1 = 0.0;
+        let mut l2 = 0.0;
+        for &x in w {
+            l1 += x.abs();
+            l2 += x * x;
+        }
+        self.lam1 * l1 + 0.5 * self.lam2 * l2
+    }
+
+    fn is_noop(&self) -> bool {
+        self.is_none()
+    }
+
+    fn validate(&self, algo: Algo, schedule: &Schedule) -> Result<()> {
+        self.check_params()?;
+        if algo == Algo::Sgd {
+            // Schedules are non-increasing, so eta(0) is the max rate.
+            anyhow::ensure!(
+                schedule.eta(0) * self.lam2 < 1.0,
+                "SGD requires eta0*lam2 < 1 (got {} * {})",
+                schedule.eta(0),
+                self.lam2
+            );
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        match (self.lam1 == 0.0, self.lam2 == 0.0) {
+            (true, true) => "none".into(),
+            (false, true) => format!("l1:{}", self.lam1),
+            (true, false) => format!("l22:{}", self.lam2),
+            (false, false) => format!("enet:{}:{}", self.lam1, self.lam2),
+        }
+    }
+
+    fn parse(s: &str) -> Result<ElasticNet> {
+        let f = Fields::split(s, "regularizer");
+        match f.kind {
+            "none" => f.done(ElasticNet::default()),
+            "l1" => f.done(ElasticNet::new(f.get(1)?, 0.0)),
+            "l22" | "l2sq" | "ridge" => f.done(ElasticNet::new(0.0, f.get(1)?)),
+            "enet" | "elastic_net" => f.done(ElasticNet::new(f.get(1)?, f.get(2)?)),
+            other => anyhow::bail!("unknown elastic-net kind {other:?}"),
+        }
+    }
+}
+
+/// Shifted DP tables for the elastic-net family (see [`super::dp`] and
+/// [`super::lazy`]): `pt[i] = P(i−1)` with `pt[0] = 1`, `bt[i] = B(i−1)`
+/// with `bt[0] = 0`, plus `inv_pt` reciprocals so the catch-up hot path
+/// multiplies instead of divides.
+#[derive(Debug, Clone)]
+pub struct ElasticNetState {
+    algo: Algo,
+    lam1: f64,
+    lam2: f64,
+    pt: Vec<f64>,
+    inv_pt: Vec<f64>,
+    bt: Vec<f64>,
+}
+
+impl PenaltyState for ElasticNetState {
+    #[inline]
+    fn extend(&mut self, _t: u64, eta: f64) {
+        let i = self.pt.len() - 1;
+        let (a, b_inc) = match self.algo {
+            Algo::Sgd => {
+                let a = 1.0 - eta * self.lam2;
+                debug_assert!(a > 0.0, "eta*lam2 >= 1 (paper §5.2 validity)");
+                // erratum-corrected: B(t) += eta(t)/P(t)
+                (a, eta / (a * self.pt[i]))
+            }
+            Algo::Fobos => {
+                let a = 1.0 / (1.0 + eta * self.lam2);
+                // as printed:          beta(t) += eta(t)/Phi(t-1)
+                (a, eta / self.pt[i])
+            }
+        };
+        let p_next = a * self.pt[i];
+        self.pt.push(p_next);
+        self.inv_pt.push(1.0 / p_next);
+        self.bt.push(self.bt[i] + b_inc);
+    }
+
+    #[inline]
+    fn k(&self) -> u32 {
+        (self.pt.len() - 1) as u32
+    }
+
+    #[inline]
+    fn catchup(&self, w: f64, psi: u32) -> f64 {
+        let k = self.pt.len() - 1;
+        let psi = psi as usize;
+        debug_assert!(psi <= k, "psi {psi} beyond k {k} (missed rebase reset?)");
+        if psi == k {
+            return w;
+        }
+        if w == 0.0 {
+            // 0 stays 0 under every family: clipping is absorbing and the
+            // multiplicative factors never flip signs.
+            return 0.0;
+        }
+        if self.lam1 == 0.0 {
+            return super::lazy::catchup_l22(w, self.pt[k], self.pt[psi]);
+        }
+        super::lazy::catchup(w, self.pt[k], self.pt[psi], self.bt[k], self.bt[psi], self.lam1)
+    }
+
+    #[inline]
+    fn snapshot(&self) -> CatchupSnapshot<'_> {
+        let k = self.pt.len() - 1;
+        let pk = self.pt[k];
+        CatchupSnapshot {
+            k: k as u32,
+            kind: SnapshotKind::Shifted {
+                pk,
+                c2: self.lam1 * pk,
+                c1: self.lam1 * pk * self.bt[k],
+                inv_pt: &self.inv_pt,
+                bt: &self.bt,
+                pure_scale: self.lam1 == 0.0,
+            },
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.pt.len()
+    }
+
+    #[inline]
+    fn well_conditioned(&self) -> bool {
+        // P(t) decays geometrically; flush long before f64 underflow.
+        self.pt[self.pt.len() - 1] >= super::dp::MIN_TAIL_PRODUCT
+    }
+
+    fn rebase(&mut self) {
+        self.pt.clear();
+        self.pt.push(1.0);
+        self.inv_pt.clear();
+        self.inv_pt.push(1.0);
+        self.bt.clear();
+        self.bt.push(0.0);
+    }
+
+    fn tables(&self) -> (&[f64], &[f64]) {
+        (&self.pt, &self.bt)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Truncated gradient (Langford, Li & Zhang)
+// ---------------------------------------------------------------------------
+
+/// Truncated gradient: every `k_period`-th step, weights with
+/// `|w| ≤ theta` are shrunk toward zero by the accumulated gravity
+/// `k_period·η(t)·lam1` and clipped at zero; larger weights are left
+/// untouched.
+///
+/// The lazy form reuses cumulative-η sums applied at truncation
+/// boundaries only: because the event map never *increases* a
+/// magnitude, a weight on the `≤ θ` branch stays there for the rest of
+/// the catch-up window, and a weight on the `> θ` branch is untouched
+/// by every event — so the whole window collapses to a single shrink by
+/// the gravity sum (or the identity). `k_period = 1, theta = ∞`
+/// degenerates to the paper's per-step SGD ℓ1 (Eq. 4).
+///
+/// The update is algorithm-independent: under FoBoS it is the same
+/// periodic proximal ℓ1 step with an active-set ceiling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TruncatedGradient {
+    /// Gravity strength λ₁ ≥ 0 (per-step; events apply `k_period×` it).
+    pub lam1: f64,
+    /// Steps between truncation events, K ≥ 1.
+    pub k_period: u64,
+    /// Clip ceiling θ > 0 (∞ truncates every weight).
+    pub theta: f64,
+}
+
+impl TruncatedGradient {
+    /// Kind tokens [`TruncatedGradient::parse`] accepts.
+    pub(crate) const KINDS: &'static [&'static str] = &["tg", "truncated", "truncated_gradient"];
+
+    /// Construct, asserting the valid regime.
+    pub fn new(lam1: f64, k_period: u64, theta: f64) -> TruncatedGradient {
+        let p = TruncatedGradient { lam1, k_period, theta };
+        if let Err(e) = p.check_params() {
+            panic!("{e}");
+        }
+        p
+    }
+
+    /// The single copy of this family's parameter-range rules, shared by
+    /// `new`, `parse` and `validate`.
+    fn check_params(&self) -> Result<()> {
+        anyhow::ensure!(self.lam1 >= 0.0, "tg: lam1 must be >= 0");
+        anyhow::ensure!(self.k_period >= 1, "tg: k_period must be >= 1");
+        anyhow::ensure!(self.theta > 0.0, "tg: theta must be > 0");
+        Ok(())
+    }
+
+    /// Is global step `t` a truncation boundary? Events fire after every
+    /// `k_period`-th step, i.e. at t = K−1, 2K−1, …
+    #[inline]
+    fn is_event(&self, t: u64) -> bool {
+        (t + 1) % self.k_period == 0
+    }
+
+    /// Event gravity at step `t` (0 between boundaries).
+    #[inline]
+    fn gravity(&self, t: u64, eta: f64) -> f64 {
+        if self.is_event(t) {
+            self.lam1 * self.k_period as f64 * eta
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Penalty for TruncatedGradient {
+    type State = TruncatedGradientState;
+
+    fn init_state(&self, _algo: Algo) -> TruncatedGradientState {
+        TruncatedGradientState { penalty: *self, gt: vec![0.0] }
+    }
+
+    fn step_map(&self, _algo: Algo, t: u64, eta: f64) -> StepMap {
+        StepMap::Truncate { alpha: self.gravity(t, eta), theta: self.theta }
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        // The objective truncated gradient approximately minimizes is
+        // the ℓ1-penalized loss (Langford et al. §3).
+        self.lam1 * w.iter().map(|x| x.abs()).sum::<f64>()
+    }
+
+    fn is_noop(&self) -> bool {
+        self.lam1 == 0.0
+    }
+
+    fn validate(&self, _algo: Algo, _schedule: &Schedule) -> Result<()> {
+        self.check_params()
+    }
+
+    fn name(&self) -> String {
+        format!("tg:{}:{}:{}", self.lam1, self.k_period, self.theta)
+    }
+
+    fn parse(s: &str) -> Result<TruncatedGradient> {
+        let f = Fields::split(s, "regularizer");
+        match f.kind {
+            "tg" | "truncated" | "truncated_gradient" => {
+                let p = TruncatedGradient {
+                    lam1: f.get(1)?,
+                    k_period: f.get_u64(2)?,
+                    theta: f.get(3)?,
+                };
+                p.check_params()
+                    .map_err(|e| anyhow::anyhow!("regularizer {s:?}: {e}"))?;
+                f.done(p)
+            }
+            other => anyhow::bail!("unknown truncated-gradient kind {other:?}"),
+        }
+    }
+}
+
+/// Cumulative event gravities: `gt[i]` is the total shrinkage a
+/// below-ceiling weight accrues over steps 0…i−1, so the catch-up over
+/// `[ψ, k)` is the single difference `gt[k] − gt[ψ]`.
+#[derive(Debug, Clone)]
+pub struct TruncatedGradientState {
+    penalty: TruncatedGradient,
+    gt: Vec<f64>,
+}
+
+impl PenaltyState for TruncatedGradientState {
+    #[inline]
+    fn extend(&mut self, t: u64, eta: f64) {
+        let i = self.gt.len() - 1;
+        self.gt.push(self.gt[i] + self.penalty.gravity(t, eta));
+    }
+
+    #[inline]
+    fn k(&self) -> u32 {
+        (self.gt.len() - 1) as u32
+    }
+
+    #[inline]
+    fn catchup(&self, w: f64, psi: u32) -> f64 {
+        let k = self.gt.len() - 1;
+        let psi = psi as usize;
+        debug_assert!(psi <= k, "psi {psi} beyond k {k} (missed rebase reset?)");
+        if psi == k {
+            return w;
+        }
+        if w == 0.0 {
+            return 0.0;
+        }
+        if w.abs() > self.penalty.theta {
+            // Above the ceiling every event in the window is a no-op.
+            return w;
+        }
+        let s = self.gt[k] - self.gt[psi];
+        sign(w) * (w.abs() - s).max(0.0)
+    }
+
+    #[inline]
+    fn snapshot(&self) -> CatchupSnapshot<'_> {
+        let k = self.gt.len() - 1;
+        CatchupSnapshot {
+            k: k as u32,
+            kind: SnapshotKind::Truncated {
+                gk: self.gt[k],
+                gt: &self.gt,
+                theta: self.penalty.theta,
+            },
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.gt.len()
+    }
+
+    fn rebase(&mut self) {
+        self.gt.clear();
+        self.gt.push(0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ℓ∞ ball
+// ---------------------------------------------------------------------------
+
+/// ℓ∞-ball regularization: every step projects the weights onto
+/// `{‖w‖∞ ≤ lam}` (the coordinate-wise clamp `w ← min(max(w, −r), r)`).
+///
+/// Projection is idempotent, so the lazy catch-up over any non-empty
+/// window is a single clamp — the cheapest possible closed form. The
+/// state is just a step counter (ψ bookkeeping still requires k to
+/// advance, and the space budget still bounds it so ψ words can't
+/// overflow).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Linf {
+    /// Ball radius r > 0.
+    pub lam: f64,
+}
+
+impl Linf {
+    /// Kind tokens [`Linf::parse`] accepts.
+    pub(crate) const KINDS: &'static [&'static str] = &["linf", "l_inf"];
+
+    /// Construct, asserting a positive finite radius.
+    pub fn new(lam: f64) -> Linf {
+        let p = Linf { lam };
+        if let Err(e) = p.check_params() {
+            panic!("{e}");
+        }
+        p
+    }
+
+    /// The single copy of this family's parameter-range rules, shared by
+    /// `new`, `parse` and `validate`.
+    fn check_params(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.lam > 0.0 && self.lam.is_finite(),
+            "linf: radius must be positive and finite"
+        );
+        Ok(())
+    }
+}
+
+impl Penalty for Linf {
+    type State = LinfState;
+
+    fn init_state(&self, _algo: Algo) -> LinfState {
+        LinfState { r: self.lam, k: 0 }
+    }
+
+    fn step_map(&self, _algo: Algo, _t: u64, _eta: f64) -> StepMap {
+        StepMap::Clamp { r: self.lam }
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        // Indicator of the ball: projected iterates are always feasible,
+        // so the logged objective is the plain loss.
+        let max = w.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        if max <= self.lam {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn validate(&self, _algo: Algo, _schedule: &Schedule) -> Result<()> {
+        self.check_params()
+    }
+
+    fn name(&self) -> String {
+        format!("linf:{}", self.lam)
+    }
+
+    fn parse(s: &str) -> Result<Linf> {
+        let f = Fields::split(s, "regularizer");
+        match f.kind {
+            "linf" | "l_inf" => {
+                let p = Linf { lam: f.get(1)? };
+                p.check_params()
+                    .map_err(|e| anyhow::anyhow!("regularizer {s:?}: {e}"))?;
+                f.done(p)
+            }
+            other => anyhow::bail!("unknown linf kind {other:?}"),
+        }
+    }
+}
+
+/// Step counter for [`Linf`] (no tables needed — the clamp is
+/// idempotent).
+#[derive(Debug, Clone)]
+pub struct LinfState {
+    r: f64,
+    k: u32,
+}
+
+impl PenaltyState for LinfState {
+    #[inline]
+    fn extend(&mut self, _t: u64, _eta: f64) {
+        self.k += 1;
+    }
+
+    #[inline]
+    fn k(&self) -> u32 {
+        self.k
+    }
+
+    #[inline]
+    fn catchup(&self, w: f64, psi: u32) -> f64 {
+        debug_assert!(psi <= self.k, "psi {psi} beyond k {} (missed rebase reset?)", self.k);
+        if psi == self.k {
+            w
+        } else {
+            w.clamp(-self.r, self.r)
+        }
+    }
+
+    #[inline]
+    fn snapshot(&self) -> CatchupSnapshot<'_> {
+        CatchupSnapshot { k: self.k, kind: SnapshotKind::Clamped { r: self.r } }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.k as usize + 1
+    }
+
+    fn rebase(&mut self) {
+        self.k = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    // The shared ground-truth oracle: dense per-step replay.
+    use crate::testing::penalty_laws::sequential_dense as sequential;
+    use crate::testing::assert_close;
+
+    fn etas(s: &Schedule, n: usize) -> Vec<f64> {
+        (0..n as u64).map(|t| s.eta(t)).collect()
+    }
+
+    #[test]
+    fn elastic_net_dense_step_matches_legacy_reg_update() {
+        let p = ElasticNet::new(0.01, 0.2);
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            for &w in &[0.7, -0.7, 0.001, 0.0] {
+                assert_eq!(
+                    p.dense_step(algo, 5, w, 0.3),
+                    dense_step::reg_update(algo, w, 0.3, 0.01, 0.2)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_net_step_map_matches_trainer_coefficients() {
+        // The pass-2 hot-path coefficients, exactly as the lazy trainer
+        // historically computed them.
+        let p = ElasticNet::new(0.01, 0.2);
+        let eta = 0.3;
+        match p.step_map(Algo::Sgd, 0, eta) {
+            StepMap::Shrink { ra, rb } => {
+                assert_eq!(ra, 1.0 - eta * 0.2);
+                assert_eq!(rb, eta * 0.01);
+            }
+            other => panic!("unexpected map {other:?}"),
+        }
+        match p.step_map(Algo::Fobos, 0, eta) {
+            StepMap::Shrink { ra, rb } => {
+                let inv = 1.0 / (1.0 + eta * 0.2);
+                assert_eq!(ra, inv);
+                assert_eq!(rb, eta * 0.01 * inv);
+            }
+            other => panic!("unexpected map {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_gradient_events_fire_every_k() {
+        let p = TruncatedGradient::new(0.1, 3, 1.0);
+        let fired: Vec<bool> = (0..9).map(|t| p.is_event(t)).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+        // K = 1 fires every step: per-step l1.
+        let l1 = TruncatedGradient::new(0.1, 1, f64::INFINITY);
+        assert!((0..5).all(|t| l1.is_event(t)));
+    }
+
+    #[test]
+    fn truncated_gradient_catchup_equals_sequential() {
+        let s = Schedule::InvSqrtT { eta0: 0.5 };
+        let p = TruncatedGradient::new(0.05, 4, 0.6);
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            let mut st = p.init_state(algo);
+            let n = 37;
+            for (t, &eta) in etas(&s, n).iter().enumerate() {
+                st.extend(t as u64, eta);
+            }
+            for psi in [0usize, 3, 11, 36, 37] {
+                // below ceiling, above ceiling, at zero, negative
+                for &w0 in &[0.25, -0.55, 0.9, -2.0, 0.0] {
+                    let lazy = st.catchup(w0, psi as u32);
+                    let seq = sequential(&p, algo, w0, &s, psi, n);
+                    assert_close(lazy, seq, 1e-12, 1e-14);
+                    assert_close(st.snapshot().catchup(w0, psi as u32), seq, 1e-12, 1e-14);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_gradient_above_ceiling_is_frozen() {
+        let p = TruncatedGradient::new(0.5, 2, 0.3);
+        let s = Schedule::Constant { eta0: 0.4 };
+        let mut st = p.init_state(Algo::Sgd);
+        for t in 0..20u64 {
+            st.extend(t, s.eta(t));
+        }
+        assert_eq!(st.catchup(0.31, 0), 0.31);
+        assert_eq!(st.catchup(-1.5, 0), -1.5);
+        // at the ceiling the weight participates
+        assert!(st.catchup(0.3, 0).abs() < 0.3);
+    }
+
+    #[test]
+    fn tg_with_k1_theta_inf_matches_l1_catchup() {
+        // Degenerate point: per-step l1 with cumulative-eta shrinkage.
+        let s = Schedule::InvT { eta0: 0.8 };
+        let lam1 = 0.02;
+        let tg = TruncatedGradient::new(lam1, 1, f64::INFINITY);
+        let en = ElasticNet::new(lam1, 0.0);
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            let mut a = tg.init_state(algo);
+            let mut b = en.init_state(algo);
+            for (t, &eta) in etas(&s, 50).iter().enumerate() {
+                a.extend(t as u64, eta);
+                b.extend(t as u64, eta);
+            }
+            for &w0 in &[0.8, -0.8, 0.01] {
+                assert_close(a.catchup(w0, 7), b.catchup(w0, 7), 1e-12, 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn linf_catchup_is_one_clamp() {
+        let p = Linf::new(0.5);
+        let s = Schedule::Constant { eta0: 0.3 };
+        let mut st = p.init_state(Algo::Fobos);
+        for t in 0..10u64 {
+            st.extend(t, s.eta(t));
+        }
+        assert_eq!(st.k(), 10);
+        assert_eq!(st.catchup(2.0, 3), 0.5);
+        assert_eq!(st.catchup(-2.0, 0), -0.5);
+        assert_eq!(st.catchup(0.25, 9), 0.25);
+        // psi == k: untouched even outside the ball
+        assert_eq!(st.catchup(2.0, 10), 2.0);
+        // matches the sequential oracle
+        assert_eq!(st.catchup(2.0, 3), sequential(&p, Algo::Fobos, 2.0, &s, 3, 10));
+    }
+
+    #[test]
+    fn states_rebase_to_fresh() {
+        let s = Schedule::Constant { eta0: 0.3 };
+        let en = ElasticNet::new(0.01, 0.1);
+        let mut est = en.init_state(Algo::Fobos);
+        let tg = TruncatedGradient::new(0.01, 2, 1.0);
+        let mut tst = tg.init_state(Algo::Fobos);
+        let li = Linf::new(1.0);
+        let mut lst = li.init_state(Algo::Fobos);
+        for t in 0..12u64 {
+            est.extend(t, s.eta(t));
+            tst.extend(t, s.eta(t));
+            lst.extend(t, s.eta(t));
+        }
+        est.rebase();
+        tst.rebase();
+        lst.rebase();
+        assert_eq!((est.k(), tst.k(), lst.k()), (0, 0, 0));
+        assert_eq!((est.len(), tst.len(), lst.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let tg = TruncatedGradient::parse("tg:0.01:10:1.5").unwrap();
+        assert_eq!(tg, TruncatedGradient { lam1: 0.01, k_period: 10, theta: 1.5 });
+        assert_eq!(TruncatedGradient::parse(&tg.name()).unwrap(), tg);
+        let inf = TruncatedGradient::parse("tg:0.01:10:inf").unwrap();
+        assert_eq!(inf.theta, f64::INFINITY);
+        assert_eq!(TruncatedGradient::parse(&inf.name()).unwrap(), inf);
+        assert!(TruncatedGradient::parse("tg:0.01:0:1.0").is_err(), "K = 0");
+        assert!(TruncatedGradient::parse("tg:0.01:10:0").is_err(), "theta = 0");
+        assert!(TruncatedGradient::parse("tg:0.01:10:1.0:9").is_err(), "trailing");
+
+        let li = Linf::parse("linf:0.25").unwrap();
+        assert_eq!(li, Linf { lam: 0.25 });
+        assert_eq!(Linf::parse(&li.name()).unwrap(), li);
+        assert!(Linf::parse("linf:0").is_err());
+        assert!(Linf::parse("linf:inf").is_err(), "non-finite radius");
+        assert!(Linf::parse("linf:0.1:2").is_err(), "trailing");
+
+        assert!(ElasticNet::parse("l1:0.1:extra").is_err(), "trailing");
+        assert!(ElasticNet::parse("none:1").is_err(), "trailing");
+        assert!(ElasticNet::parse("l1:-1").is_err());
+    }
+
+    #[test]
+    fn kinds_lists_match_the_parsers() {
+        // Every advertised kind token must be accepted by its family's
+        // parser — the enum dispatch relies on these lists.
+        for k in ElasticNet::KINDS {
+            let text = match *k {
+                "none" => "none".to_string(),
+                "enet" | "elastic_net" => format!("{k}:0.1:0.2"),
+                _ => format!("{k}:0.1"),
+            };
+            ElasticNet::parse(&text).unwrap();
+        }
+        for k in TruncatedGradient::KINDS {
+            TruncatedGradient::parse(&format!("{k}:0.1:5:1.0")).unwrap();
+        }
+        for k in Linf::KINDS {
+            Linf::parse(&format!("{k}:0.5")).unwrap();
+        }
+    }
+
+    #[test]
+    fn values_for_logging() {
+        let w = [1.0, -2.0, 0.5];
+        let en = ElasticNet::new(0.5, 2.0);
+        // 0.5*3.5 + 1.0*(1+4+0.25)
+        assert_close(en.value(&w), 1.75 + 5.25, 1e-12, 0.0);
+        let tg = TruncatedGradient::new(0.5, 3, 1.0);
+        assert_close(tg.value(&w), 1.75, 1e-12, 0.0);
+        let li = Linf::new(2.0);
+        assert_eq!(li.value(&w), 0.0);
+        assert_eq!(Linf::new(1.5).value(&w), f64::INFINITY);
+    }
+
+    #[test]
+    fn step_map_apply_semantics() {
+        // Shrink: the elastic-net branch-free form.
+        let m = StepMap::Shrink { ra: 0.9, rb: 0.05 };
+        assert_close(m.apply(1.0), 0.85, 1e-15, 0.0);
+        assert_close(m.apply(-1.0), -0.85, 1e-15, 0.0);
+        assert_eq!(m.apply(0.01), 0.0);
+        // Truncate: inert off-boundary and above theta.
+        assert_eq!(StepMap::Truncate { alpha: 0.0, theta: 1.0 }.apply(0.5), 0.5);
+        assert_eq!(StepMap::Truncate { alpha: 0.1, theta: 1.0 }.apply(2.0), 2.0);
+        assert_close(StepMap::Truncate { alpha: 0.1, theta: 1.0 }.apply(-0.5), -0.4, 1e-15, 0.0);
+        assert_eq!(StepMap::Truncate { alpha: 0.6, theta: 1.0 }.apply(0.5), 0.0);
+        // Clamp.
+        assert_eq!(StepMap::Clamp { r: 0.3 }.apply(1.0), 0.3);
+        assert_eq!(StepMap::Clamp { r: 0.3 }.apply(-1.0), -0.3);
+        assert_eq!(StepMap::Clamp { r: 0.3 }.apply(0.1), 0.1);
+    }
+
+    #[test]
+    fn identity_steps_are_recognized() {
+        // Off-boundary truncated-gradient steps are identity; dense
+        // trainers skip their O(d) sweep on them.
+        let tg = TruncatedGradient::new(0.1, 5, 1.0);
+        assert!(tg.step_map(Algo::Sgd, 0, 0.3).is_identity());
+        assert!(!tg.step_map(Algo::Sgd, 4, 0.3).is_identity());
+        let en = ElasticNet::new(0.01, 0.2);
+        assert!(!en.step_map(Algo::Fobos, 0, 0.3).is_identity());
+        assert!(StepMap::Shrink { ra: 1.0, rb: 0.0 }.is_identity());
+        assert!(!Linf::new(0.5).step_map(Algo::Sgd, 0, 0.3).is_identity());
+    }
+}

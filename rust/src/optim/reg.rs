@@ -1,87 +1,267 @@
-//! Regularizer configuration: λ₁‖w‖₁ + (λ₂/2)‖w‖₂².
+//! The enum-dispatched penalty the trainers store: every registered
+//! [`Penalty`] family behind one `Copy` value.
 //!
-//! Pure ℓ1 (lasso), pure ℓ2² (ridge) and elastic net are all points in
-//! this two-parameter family; the lazy machinery handles every point with
-//! the same closed form (λ₂ = 0 degenerates the products to 1, λ₁ = 0
-//! removes the shrinkage sum).
+//! `Regularizer` used to be a closed two-field elastic-net struct; it is
+//! now the sum type over [`ElasticNet`] (with `l1`/`l22`/`none` as
+//! degenerate points), [`TruncatedGradient`] and [`Linf`], and it
+//! implements [`Penalty`] by delegation — so `TrainOptions` stays
+//! `Copy`/`PartialEq` and the historical constructors
+//! ([`Regularizer::l1`], [`Regularizer::elastic_net`], …) keep
+//! compiling unchanged.
 
-/// An elastic-net-family regularizer.
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
-pub struct Regularizer {
-    /// ℓ1 strength λ₁ ≥ 0.
-    pub lam1: f64,
-    /// ℓ2² strength λ₂ ≥ 0.
-    pub lam2: f64,
+use anyhow::Result;
+
+use super::penalty::{
+    CatchupSnapshot, ElasticNet, ElasticNetState, Linf, LinfState, Penalty, PenaltyState,
+    StepMap, TruncatedGradient, TruncatedGradientState,
+};
+use super::{Algo, Schedule};
+
+/// Any registered penalty family (see [`crate::optim::penalty`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Regularizer {
+    /// λ₁‖w‖₁ + (λ₂/2)‖w‖₂² — the paper's family.
+    ElasticNet(ElasticNet),
+    /// Langford–Li–Zhang truncated gradient (periodic gravity, ceiling θ).
+    TruncatedGradient(TruncatedGradient),
+    /// ℓ∞-ball projection of radius λ.
+    Linf(Linf),
+}
+
+impl Default for Regularizer {
+    fn default() -> Self {
+        Regularizer::none()
+    }
 }
 
 impl Regularizer {
     /// No regularization.
     pub fn none() -> Regularizer {
-        Regularizer { lam1: 0.0, lam2: 0.0 }
+        Regularizer::ElasticNet(ElasticNet::default())
     }
 
     /// Pure lasso.
     pub fn l1(lam1: f64) -> Regularizer {
-        assert!(lam1 >= 0.0);
-        Regularizer { lam1, lam2: 0.0 }
+        Regularizer::ElasticNet(ElasticNet::new(lam1, 0.0))
     }
 
     /// Pure ridge (ℓ2²).
     pub fn l22(lam2: f64) -> Regularizer {
-        assert!(lam2 >= 0.0);
-        Regularizer { lam1: 0.0, lam2 }
+        Regularizer::ElasticNet(ElasticNet::new(0.0, lam2))
     }
 
     /// Elastic net.
     pub fn elastic_net(lam1: f64, lam2: f64) -> Regularizer {
-        assert!(lam1 >= 0.0 && lam2 >= 0.0);
-        Regularizer { lam1, lam2 }
+        Regularizer::ElasticNet(ElasticNet::new(lam1, lam2))
     }
 
-    /// Is this the zero regularizer?
+    /// Truncated gradient: gravity `lam1` applied every `k_period` steps
+    /// below the clip ceiling `theta`.
+    pub fn truncated_gradient(lam1: f64, k_period: u64, theta: f64) -> Regularizer {
+        Regularizer::TruncatedGradient(TruncatedGradient::new(lam1, k_period, theta))
+    }
+
+    /// ℓ∞-ball regularization of radius `lam`.
+    pub fn linf(lam: f64) -> Regularizer {
+        Regularizer::Linf(Linf::new(lam))
+    }
+
+    /// Is this the zero penalty?
     pub fn is_none(&self) -> bool {
-        self.lam1 == 0.0 && self.lam2 == 0.0
+        matches!(self, Regularizer::ElasticNet(e) if e.is_none())
     }
 
-    /// Penalty value R(w) = λ₁‖w‖₁ + (λ₂/2)‖w‖₂² (for objective logging).
+    /// The elastic-net point, when this is one (the XLA catch-up
+    /// artifact only implements that family's tables).
+    pub fn as_elastic_net(&self) -> Option<ElasticNet> {
+        match *self {
+            Regularizer::ElasticNet(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Penalty value R(w) (for objective logging).
     pub fn penalty(&self, w: &[f64]) -> f64 {
-        let mut l1 = 0.0;
-        let mut l2 = 0.0;
-        for &x in w {
-            l1 += x.abs();
-            l2 += x * x;
-        }
-        self.lam1 * l1 + 0.5 * self.lam2 * l2
+        Penalty::value(self, w)
     }
 
-    /// Parse `"none"`, `"l1:Λ"`, `"l22:Λ"`, `"enet:Λ1:Λ2"`.
-    pub fn parse(s: &str) -> anyhow::Result<Regularizer> {
-        let parts: Vec<&str> = s.split(':').collect();
-        let need = |i: usize| -> anyhow::Result<f64> {
-            let v: f64 = parts
-                .get(i)
-                .ok_or_else(|| anyhow::anyhow!("regularizer {s:?}: missing field {i}"))?
-                .parse()
-                .map_err(|e| anyhow::anyhow!("regularizer {s:?}: {e}"))?;
-            anyhow::ensure!(v >= 0.0, "regularizer {s:?}: negative strength");
-            Ok(v)
-        };
-        match parts[0] {
-            "none" => Ok(Regularizer::none()),
-            "l1" => Ok(Regularizer::l1(need(1)?)),
-            "l22" | "l2sq" | "ridge" => Ok(Regularizer::l22(need(1)?)),
-            "enet" | "elastic_net" => Ok(Regularizer::elastic_net(need(1)?, need(2)?)),
-            other => anyhow::bail!("unknown regularizer kind {other:?}"),
-        }
+    /// Parse `"none"`, `"l1:Λ"`, `"l22:Λ"`, `"enet:Λ1:Λ2"`,
+    /// `"tg:Λ1:K:θ"`, `"linf:Λ"`. Trailing fields are rejected.
+    pub fn parse(s: &str) -> Result<Regularizer> {
+        s.parse()
     }
 
-    /// Name for reports.
+    /// Name for reports; [`Regularizer::parse`] round-trips it.
     pub fn name(&self) -> String {
-        match (self.lam1 == 0.0, self.lam2 == 0.0) {
-            (true, true) => "none".into(),
-            (false, true) => format!("l1:{}", self.lam1),
-            (true, false) => format!("l22:{}", self.lam2),
-            (false, false) => format!("enet:{}:{}", self.lam1, self.lam2),
+        match self {
+            Regularizer::ElasticNet(e) => e.name(),
+            Regularizer::TruncatedGradient(t) => t.name(),
+            Regularizer::Linf(l) => l.name(),
+        }
+    }
+}
+
+impl std::str::FromStr for Regularizer {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Regularizer> {
+        // Dispatch on the kind token via each family's own KINDS list
+        // (no second copy of the aliases); the chosen family re-parses
+        // the whole string (including arity/trailing-garbage checks).
+        let kind = s.split(':').next().unwrap_or("");
+        if ElasticNet::KINDS.contains(&kind) {
+            Ok(Regularizer::ElasticNet(ElasticNet::parse(s)?))
+        } else if TruncatedGradient::KINDS.contains(&kind) {
+            Ok(Regularizer::TruncatedGradient(TruncatedGradient::parse(s)?))
+        } else if Linf::KINDS.contains(&kind) {
+            Ok(Regularizer::Linf(Linf::parse(s)?))
+        } else {
+            anyhow::bail!("unknown regularizer kind {kind:?}")
+        }
+    }
+}
+
+impl Penalty for Regularizer {
+    type State = RegularizerState;
+
+    fn init_state(&self, algo: Algo) -> RegularizerState {
+        match self {
+            Regularizer::ElasticNet(e) => RegularizerState::ElasticNet(e.init_state(algo)),
+            Regularizer::TruncatedGradient(t) => {
+                RegularizerState::TruncatedGradient(t.init_state(algo))
+            }
+            Regularizer::Linf(l) => RegularizerState::Linf(l.init_state(algo)),
+        }
+    }
+
+    fn dense_step(&self, algo: Algo, t: u64, w: f64, eta: f64) -> f64 {
+        match self {
+            Regularizer::ElasticNet(e) => e.dense_step(algo, t, w, eta),
+            Regularizer::TruncatedGradient(p) => p.dense_step(algo, t, w, eta),
+            Regularizer::Linf(l) => l.dense_step(algo, t, w, eta),
+        }
+    }
+
+    fn step_map(&self, algo: Algo, t: u64, eta: f64) -> StepMap {
+        match self {
+            Regularizer::ElasticNet(e) => e.step_map(algo, t, eta),
+            Regularizer::TruncatedGradient(p) => p.step_map(algo, t, eta),
+            Regularizer::Linf(l) => l.step_map(algo, t, eta),
+        }
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        match self {
+            Regularizer::ElasticNet(e) => e.value(w),
+            Regularizer::TruncatedGradient(p) => p.value(w),
+            Regularizer::Linf(l) => l.value(w),
+        }
+    }
+
+    fn is_noop(&self) -> bool {
+        match self {
+            Regularizer::ElasticNet(e) => e.is_noop(),
+            Regularizer::TruncatedGradient(p) => p.is_noop(),
+            Regularizer::Linf(l) => l.is_noop(),
+        }
+    }
+
+    fn validate(&self, algo: Algo, schedule: &Schedule) -> Result<()> {
+        match self {
+            Regularizer::ElasticNet(e) => e.validate(algo, schedule),
+            Regularizer::TruncatedGradient(p) => p.validate(algo, schedule),
+            Regularizer::Linf(l) => l.validate(algo, schedule),
+        }
+    }
+
+    fn name(&self) -> String {
+        Regularizer::name(self)
+    }
+
+    fn parse(s: &str) -> Result<Regularizer> {
+        s.parse()
+    }
+}
+
+/// The DP state of whichever family a [`Regularizer`] holds.
+#[derive(Debug, Clone)]
+pub enum RegularizerState {
+    /// Shifted pt/bt tables.
+    ElasticNet(ElasticNetState),
+    /// Cumulative event gravities.
+    TruncatedGradient(TruncatedGradientState),
+    /// Step counter.
+    Linf(LinfState),
+}
+
+impl PenaltyState for RegularizerState {
+    #[inline]
+    fn extend(&mut self, t: u64, eta: f64) {
+        match self {
+            RegularizerState::ElasticNet(s) => s.extend(t, eta),
+            RegularizerState::TruncatedGradient(s) => s.extend(t, eta),
+            RegularizerState::Linf(s) => s.extend(t, eta),
+        }
+    }
+
+    #[inline]
+    fn k(&self) -> u32 {
+        match self {
+            RegularizerState::ElasticNet(s) => s.k(),
+            RegularizerState::TruncatedGradient(s) => s.k(),
+            RegularizerState::Linf(s) => s.k(),
+        }
+    }
+
+    #[inline]
+    fn catchup(&self, w: f64, psi: u32) -> f64 {
+        match self {
+            RegularizerState::ElasticNet(s) => s.catchup(w, psi),
+            RegularizerState::TruncatedGradient(s) => s.catchup(w, psi),
+            RegularizerState::Linf(s) => s.catchup(w, psi),
+        }
+    }
+
+    #[inline]
+    fn snapshot(&self) -> CatchupSnapshot<'_> {
+        match self {
+            RegularizerState::ElasticNet(s) => s.snapshot(),
+            RegularizerState::TruncatedGradient(s) => s.snapshot(),
+            RegularizerState::Linf(s) => s.snapshot(),
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        match self {
+            RegularizerState::ElasticNet(s) => s.len(),
+            RegularizerState::TruncatedGradient(s) => s.len(),
+            RegularizerState::Linf(s) => s.len(),
+        }
+    }
+
+    #[inline]
+    fn well_conditioned(&self) -> bool {
+        match self {
+            RegularizerState::ElasticNet(s) => s.well_conditioned(),
+            RegularizerState::TruncatedGradient(s) => s.well_conditioned(),
+            RegularizerState::Linf(s) => s.well_conditioned(),
+        }
+    }
+
+    fn rebase(&mut self) {
+        match self {
+            RegularizerState::ElasticNet(s) => s.rebase(),
+            RegularizerState::TruncatedGradient(s) => s.rebase(),
+            RegularizerState::Linf(s) => s.rebase(),
+        }
+    }
+
+    fn tables(&self) -> (&[f64], &[f64]) {
+        match self {
+            RegularizerState::ElasticNet(s) => s.tables(),
+            RegularizerState::TruncatedGradient(s) => s.tables(),
+            RegularizerState::Linf(s) => s.tables(),
         }
     }
 }
@@ -101,12 +281,66 @@ mod tests {
 
     #[test]
     fn parse_round_trips() {
-        for text in ["none", "l1:0.1", "l22:0.2", "enet:0.1:0.2"] {
+        for text in [
+            "none",
+            "l1:0.1",
+            "l22:0.2",
+            "enet:0.1:0.2",
+            "tg:0.01:10:1.5",
+            "tg:0.01:10:inf",
+            "linf:0.1",
+        ] {
             let r = Regularizer::parse(text).unwrap();
             assert_eq!(Regularizer::parse(&r.name()).unwrap(), r);
         }
         assert!(Regularizer::parse("l1:-1").is_err());
         assert!(Regularizer::parse("enet:0.1").is_err());
         assert!(Regularizer::parse("l3:0.1").is_err());
+        assert!(Regularizer::parse("tg:0.01").is_err());
+        assert!(Regularizer::parse("linf:-0.1").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_trailing_garbage() {
+        for text in [
+            "l1:0.1:extra",
+            "none:0",
+            "l22:0.2:0.3",
+            "enet:0.1:0.2:0.3",
+            "tg:0.01:10:1.0:5",
+            "linf:0.1:0.2",
+        ] {
+            assert!(Regularizer::parse(text).is_err(), "{text:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn from_str_works_for_standard_parsing() {
+        let r: Regularizer = "tg:0.05:5:2.0".parse().unwrap();
+        assert_eq!(r, Regularizer::truncated_gradient(0.05, 5, 2.0));
+        let r: Regularizer = "linf:0.7".parse().unwrap();
+        assert_eq!(r, Regularizer::linf(0.7));
+    }
+
+    #[test]
+    fn degenerate_constructors_are_elastic_points() {
+        assert!(Regularizer::none().is_none());
+        assert!(!Regularizer::l1(0.1).is_none());
+        assert!(!Regularizer::linf(0.1).is_none());
+        assert_eq!(
+            Regularizer::l1(0.1).as_elastic_net(),
+            Some(super::ElasticNet { lam1: 0.1, lam2: 0.0 })
+        );
+        assert_eq!(Regularizer::linf(0.1).as_elastic_net(), None);
+    }
+
+    #[test]
+    fn names_for_reports() {
+        assert_eq!(Regularizer::none().name(), "none");
+        assert_eq!(Regularizer::l1(0.5).name(), "l1:0.5");
+        assert_eq!(Regularizer::l22(0.5).name(), "l22:0.5");
+        assert_eq!(Regularizer::elastic_net(0.1, 0.2).name(), "enet:0.1:0.2");
+        assert_eq!(Regularizer::truncated_gradient(0.1, 4, 2.0).name(), "tg:0.1:4:2");
+        assert_eq!(Regularizer::linf(0.25).name(), "linf:0.25");
     }
 }

@@ -72,29 +72,42 @@ impl Schedule {
         !matches!(self, Schedule::Constant { .. })
     }
 
-    /// Parse `"const:0.5"`, `"inv_t:0.5"`, `"inv_sqrt:0.5"`,
-    /// `"exp:0.5:0.999"`, `"step:0.5:1000:0.5"`.
-    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
-        let parts: Vec<&str> = s.split(':').collect();
-        let need = |i: usize| -> anyhow::Result<f64> {
-            parts
-                .get(i)
-                .ok_or_else(|| anyhow::anyhow!("schedule {s:?}: missing field {i}"))?
-                .parse::<f64>()
-                .map_err(|e| anyhow::anyhow!("schedule {s:?}: {e}"))
-        };
-        match parts[0] {
-            "const" | "constant" => Ok(Schedule::Constant { eta0: need(1)? }),
-            "inv_t" | "1/t" => Ok(Schedule::InvT { eta0: need(1)? }),
-            "inv_sqrt" | "1/sqrt" => Ok(Schedule::InvSqrtT { eta0: need(1)? }),
-            "exp" => Ok(Schedule::Exponential { eta0: need(1)?, gamma: need(2)? }),
-            "step" => Ok(Schedule::Step {
-                eta0: need(1)?,
-                every: need(2)? as u64,
-                factor: need(3)?,
-            }),
-            other => anyhow::bail!("unknown schedule kind {other:?}"),
+    /// Check the parameters keep the schedule in the regime the lazy
+    /// machinery (and the non-increasing-rate invariant the tests
+    /// assert) requires: `eta0 > 0`, `gamma ∈ (0, 1]`, `factor ∈ (0, 1]`
+    /// and `every ≥ 1`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.eta0() > 0.0 && self.eta0().is_finite(),
+            "schedule {}: eta0 must be positive and finite",
+            self.name()
+        );
+        match *self {
+            Schedule::Exponential { gamma, .. } => {
+                anyhow::ensure!(
+                    gamma > 0.0 && gamma <= 1.0,
+                    "schedule {}: gamma must be in (0, 1]",
+                    self.name()
+                );
+            }
+            Schedule::Step { every, factor, .. } => {
+                anyhow::ensure!(every >= 1, "schedule {}: every must be >= 1", self.name());
+                anyhow::ensure!(
+                    factor > 0.0 && factor <= 1.0,
+                    "schedule {}: factor must be in (0, 1]",
+                    self.name()
+                );
+            }
+            _ => {}
         }
+        Ok(())
+    }
+
+    /// Parse `"const:0.5"`, `"inv_t:0.5"`, `"inv_sqrt:0.5"`,
+    /// `"exp:0.5:0.999"`, `"step:0.5:1000:0.5"`. Trailing fields are
+    /// rejected and the parameters are validated ([`Schedule::validate`]).
+    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
+        s.parse()
     }
 
     /// Name for reports.
@@ -106,6 +119,32 @@ impl Schedule {
             Schedule::Exponential { eta0, gamma } => format!("exp:{eta0}:{gamma}"),
             Schedule::Step { eta0, every, factor } => format!("step:{eta0}:{every}:{factor}"),
         }
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Schedule> {
+        // Shares the `kind:field:…` splitter (with trailing-garbage
+        // rejection) with the penalty parsers; range rules beyond
+        // non-negativity live in `validate`.
+        let f = super::fields::Fields::split(s, "schedule");
+        let sched = match f.kind {
+            "const" | "constant" => Schedule::Constant { eta0: f.get(1)? },
+            "inv_t" | "1/t" => Schedule::InvT { eta0: f.get(1)? },
+            "inv_sqrt" | "1/sqrt" => Schedule::InvSqrtT { eta0: f.get(1)? },
+            "exp" => Schedule::Exponential { eta0: f.get(1)?, gamma: f.get(2)? },
+            "step" => Schedule::Step {
+                eta0: f.get(1)?,
+                every: f.get_u64(2)?,
+                factor: f.get(3)?,
+            },
+            other => anyhow::bail!("unknown schedule kind {other:?}"),
+        };
+        let sched = f.done(sched)?;
+        sched.validate()?;
+        Ok(sched)
     }
 }
 
@@ -152,6 +191,53 @@ mod tests {
         }
         assert!(Schedule::parse("bogus:1").is_err());
         assert!(Schedule::parse("exp:1").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_trailing_garbage() {
+        for text in ["const:0.5:9", "inv_t:0.1:2", "exp:0.5:0.99:7", "step:1:100:0.5:3"] {
+            assert!(Schedule::parse(text).is_err(), "{text:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_invalid_parameters() {
+        // gamma outside (0, 1] would break the non-increasing invariant.
+        assert!(Schedule::parse("exp:0.5:2.0").is_err());
+        assert!(Schedule::parse("exp:0.5:0").is_err());
+        // factor outside (0, 1] / every = 0 likewise.
+        assert!(Schedule::parse("step:0.5:0:0.5").is_err());
+        assert!(Schedule::parse("step:0.5:10:1.5").is_err());
+        assert!(Schedule::parse("step:0.5:10:0").is_err());
+        // eta0 must be positive and finite.
+        assert!(Schedule::parse("const:0").is_err());
+        assert!(Schedule::parse("const:-1").is_err());
+        assert!(Schedule::parse("inv_t:inf").is_err());
+        // boundary values are accepted
+        assert!(Schedule::parse("exp:0.5:1").is_ok());
+        assert!(Schedule::parse("step:0.5:1:1").is_ok());
+        // `every` in integral float notation keeps working…
+        assert_eq!(
+            Schedule::parse("step:0.5:1e3:0.5").unwrap(),
+            Schedule::Step { eta0: 0.5, every: 1000, factor: 0.5 }
+        );
+        // …but fractional periods are rejected (no silent truncation).
+        assert!(Schedule::parse("step:0.5:100.7:0.5").is_err());
+    }
+
+    #[test]
+    fn validate_agrees_with_construction_rules() {
+        assert!(Schedule::Exponential { eta0: 0.5, gamma: 0.97 }.validate().is_ok());
+        assert!(Schedule::Exponential { eta0: 0.5, gamma: 1.2 }.validate().is_err());
+        assert!(Schedule::Step { eta0: 0.5, every: 0, factor: 0.5 }.validate().is_err());
+        assert!(Schedule::Step { eta0: 0.5, every: 5, factor: 0.0 }.validate().is_err());
+        assert!(Schedule::Constant { eta0: 0.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn from_str_works_for_standard_parsing() {
+        let s: Schedule = "inv_sqrt:0.4".parse().unwrap();
+        assert_eq!(s, Schedule::InvSqrtT { eta0: 0.4 });
     }
 
     #[test]

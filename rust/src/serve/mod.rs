@@ -20,19 +20,24 @@
 //! -> reload /path/to/retrained.model
 //! <- ok version=2
 //! -> stats
-//! <- ok version=2 conns=4 n=12 mean=18.21µs p50=16.00µs p99=64.00µs max=81.00µs
+//! <- ok version=2 penalty=enet:1e-5:1e-5 conns=4 n=12 mean=18.21µs p50=16.00µs p99=64.00µs max=81.00µs
 //! -> quit
 //! <- ok bye
 //! ```
 //!
 //! `batch` scores up to [`ServeOptions::batch_max`] `;`-separated
 //! examples in one round trip (an empty segment is an empty example).
+//! `stats` reports, besides the latency percentiles, the current model
+//! version and its training provenance (`penalty=`, the penalty `name()`
+//! recorded in the model file — `unrecorded` for models saved before the
+//! penalty API), so a hot-reloaded model's regularization setup is
+//! visible from the wire protocol.
 //! A fixed pool must defend itself against client misbehavior the seed's
 //! thread-per-connection design merely leaked threads on: idle
-//! connections are dropped after [`IDLE_LIMIT`], a started line must
-//! finish within [`LINE_DEADLINE`] and a byte cap sized to `batch_max`
-//! ([`PER_EXAMPLE_LINE_BYTES`] per example), replies time out after
-//! [`WRITE_TIMEOUT`], and connections that outwait [`QUEUE_WAIT_LIMIT`]
+//! connections are dropped after `IDLE_LIMIT`, a started line must
+//! finish within `LINE_DEADLINE` and a byte cap sized to `batch_max`
+//! (`PER_EXAMPLE_LINE_BYTES` per example), replies time out after
+//! `WRITE_TIMEOUT`, and connections that outwait `QUEUE_WAIT_LIMIT`
 //! behind a saturated pool are shed.
 //!
 //! **Trust model:** the protocol is unauthenticated — anyone who can
@@ -72,14 +77,14 @@ const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
 const IDLE_LIMIT: std::time::Duration = std::time::Duration::from_secs(60);
 
 /// A line older than this must be arriving at at least
-/// [`MIN_LINE_BYTES_PER_SEC`] on average or the connection is dropped: a
+/// `MIN_LINE_BYTES_PER_SEC` on average or the connection is dropped: a
 /// byte-trickling client would otherwise dodge both `IDLE_LIMIT` (it is
 /// never idle) and the read timeout, while a legal maximal batch on a
 /// slow-but-honest link (>= the threshold) still gets through.
 const LINE_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Minimum average throughput demanded of lines older than
-/// [`LINE_DEADLINE`].
+/// `LINE_DEADLINE`.
 const MIN_LINE_BYTES_PER_SEC: usize = 128 << 10;
 
 /// Byte budget per example for the line cap: a full `batch` line may use
@@ -103,7 +108,7 @@ pub struct ServeOptions {
     /// a time, so size this to the expected number of concurrent
     /// *persistent* clients (unlike the seed's thread-per-connection
     /// server, excess connections queue and are shed after
-    /// [`QUEUE_WAIT_LIMIT`] rather than served immediately).
+    /// `QUEUE_WAIT_LIMIT` rather than served immediately).
     pub workers: usize,
     /// Maximum examples accepted per `batch` command.
     pub batch_max: usize,
@@ -118,6 +123,18 @@ impl Default for ServeOptions {
     }
 }
 
+/// The provenance string `stats` reports for a model. The `stats` reply
+/// is a space-delimited `key=value` line, so a header smuggling
+/// whitespace (hand-edited model file) must not be echoed verbatim —
+/// it could spoof other fields for token-wise protocol parsers.
+fn penalty_of(model: &LinearModel) -> Arc<str> {
+    match model.penalty.as_deref() {
+        Some(p) if !p.is_empty() && !p.contains(char::is_whitespace) => p.into(),
+        Some(_) => "invalid".into(),
+        None => "unrecorded".into(),
+    }
+}
+
 /// Build the predictor a server (or a `reload`) installs.
 fn build_predictor(model: LinearModel, opts: &ServeOptions, version: u64) -> Arc<dyn Predictor> {
     if opts.artifact {
@@ -127,9 +144,16 @@ fn build_predictor(model: LinearModel, opts: &ServeOptions, version: u64) -> Arc
     }
 }
 
+/// The served model slot: the predictor plus the training provenance of
+/// the model behind it (the penalty `name()` string recorded in the
+/// model file; `"unrecorded"` for legacy or hand-built models). One
+/// tuple behind one lock, so a `reload` swap is atomic and `stats` can
+/// never pair a new `version=` with the previous model's `penalty=`.
+type ModelSlot = (Arc<dyn Predictor>, Arc<str>);
+
 /// State shared by the accept loop and every connection worker.
 struct Shared {
-    predictor: RwLock<Arc<dyn Predictor>>,
+    predictor: RwLock<ModelSlot>,
     /// Serializes `reload`s so versions stay strictly monotonic while the
     /// (possibly slow) predictor build happens *outside* the RwLock.
     reload_lock: Mutex<()>,
@@ -166,8 +190,9 @@ impl Server {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let penalty = penalty_of(&model);
         let shared = Arc::new(Shared {
-            predictor: RwLock::new(build_predictor(model, &opts, 1)),
+            predictor: RwLock::new((build_predictor(model, &opts, 1), penalty)),
             reload_lock: Mutex::new(()),
             hist: Mutex::new(LatencyHistogram::new()),
             conns: AtomicU64::new(0),
@@ -200,7 +225,7 @@ impl Server {
 
     /// Current model version (1 at spawn, bumped by each `reload`).
     pub fn version(&self) -> u64 {
-        self.shared.predictor.read().unwrap().version()
+        self.shared.predictor.read().unwrap().0.version()
     }
 
     fn stop_threads(&mut self) {
@@ -320,9 +345,17 @@ fn dispatch(line: &str, shared: &Shared) -> Dispatch {
     } else if let Some(rest) = strip_cmd(line, "reload") {
         cmd_reload(rest.trim(), shared)
     } else if line == "stats" {
-        let version = shared.predictor.read().unwrap().version();
+        // One read guard for both: version and provenance always describe
+        // the same model, even mid-reload.
+        let (version, penalty) = {
+            let slot = shared.predictor.read().unwrap();
+            (slot.0.version(), slot.1.clone())
+        };
         let conns = shared.conns.load(Ordering::Relaxed);
-        format!("ok version={version} conns={conns} {}", shared.hist.lock().unwrap().summary())
+        format!(
+            "ok version={version} penalty={penalty} conns={conns} {}",
+            shared.hist.lock().unwrap().summary()
+        )
     } else if line == "quit" {
         return Dispatch::Quit;
     } else {
@@ -333,7 +366,7 @@ fn dispatch(line: &str, shared: &Shared) -> Dispatch {
 
 fn cmd_predict(rest: &str, shared: &Shared) -> String {
     let t0 = Instant::now();
-    let predictor = shared.predictor.read().unwrap().clone();
+    let predictor = shared.predictor.read().unwrap().0.clone();
     match parse_features(rest, predictor.dim()) {
         Some((indices, values)) => {
             let p = predictor.predict(RowView { indices: &indices, values: &values });
@@ -346,7 +379,7 @@ fn cmd_predict(rest: &str, shared: &Shared) -> String {
 
 fn cmd_batch(rest: &str, shared: &Shared) -> String {
     let t0 = Instant::now();
-    let predictor = shared.predictor.read().unwrap().clone();
+    let predictor = shared.predictor.read().unwrap().0.clone();
     let dim = predictor.dim();
     let mut parsed: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
     for seg in rest.split(';') {
@@ -386,9 +419,11 @@ fn cmd_reload(path: &str, shared: &Shared) -> String {
             // usually right here, at worst a one-off blip appended to an
             // in-flight request.
             let _serialized = shared.reload_lock.lock().unwrap();
-            let version = shared.predictor.read().unwrap().version() + 1;
+            let version = shared.predictor.read().unwrap().0.version() + 1;
+            let penalty = penalty_of(&model);
             let fresh = build_predictor(model, &shared.opts, version);
-            let old = std::mem::replace(&mut *shared.predictor.write().unwrap(), fresh);
+            let old =
+                std::mem::replace(&mut *shared.predictor.write().unwrap(), (fresh, penalty));
             drop(old);
             format!("ok version={version}")
         }
@@ -600,6 +635,39 @@ mod tests {
         let stats = c.stats().unwrap();
         assert!(stats.contains("n=3"), "{stats}");
         assert!(stats.contains("version=1"), "{stats}");
+        c.quit().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_reports_penalty_provenance_across_reload() {
+        // Hand-built model: provenance unrecorded.
+        let server = Server::spawn(model(), "127.0.0.1:0").unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("penalty=unrecorded"), "{stats}");
+
+        // Reload a model that carries a penalty name: stats must show it.
+        let mut m = model();
+        m.penalty = Some("tg:0.01:10:1.5".into());
+        let path = std::env::temp_dir().join("lazyreg_serve_penalty_test.model");
+        crate::model::io::save(&path, &m).unwrap();
+        let v = c.reload(path.to_str().unwrap()).unwrap();
+        assert_eq!(v, 2);
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("penalty=tg:0.01:10:1.5"), "{stats}");
+        assert!(stats.contains("version=2"), "{stats}");
+
+        // A provenance header smuggling whitespace must not be echoed
+        // into the space-delimited stats line.
+        m.penalty = Some("foo bar conns=999".into());
+        crate::model::io::save(&path, &m).unwrap();
+        assert_eq!(c.reload(path.to_str().unwrap()).unwrap(), 3);
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("penalty=invalid"), "{stats}");
+        assert!(!stats.contains("conns=999"), "{stats}");
+
+        std::fs::remove_file(&path).ok();
         c.quit().unwrap();
         server.shutdown();
     }

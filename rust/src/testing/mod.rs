@@ -18,6 +18,12 @@
 //!
 //! (`no_run` because rustdoc test binaries don't get the crate's PJRT
 //! rpath; the same property is exercised by unit tests below.)
+//!
+//! [`penalty_laws`] builds on this harness: generic law-checkers proving
+//! the [`crate::optim::Penalty`] contract (catch-up ≡ sequential dense,
+//! transitivity, rebase invisibility) for every registered family.
+
+pub mod penalty_laws;
 
 use crate::util::Rng;
 

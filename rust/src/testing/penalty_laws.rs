@@ -1,0 +1,199 @@
+//! The generic law suite for the [`Penalty`] contract: every registered
+//! family must satisfy three laws, over both update algorithms and any
+//! learning-rate schedule. Writing them once against the trait means a
+//! new family gets the paper's full equivalence guarantees by adding
+//! one call site, not a new test suite.
+//!
+//! 1. **Closed form ≡ sequential dense** — [`check_closed_form`]: the
+//!    O(1) catch-up from ψ to k equals applying the per-step dense
+//!    oracle at steps ψ…k−1 in order, to 1e-10 relative tolerance, and
+//!    the hoisted snapshot path agrees with the plain path.
+//! 2. **Transitivity** — [`check_transitivity`]: catching up ψ→m and
+//!    then m→k equals catching up ψ→k directly.
+//! 3. **Rebase invisibility** — [`check_rebase_invisibility`]: flushing
+//!    (catch up + [`DpCache::rebase`]) anywhere in the step stream
+//!    changes nothing about the final weight.
+//!
+//! [`check_penalty_family`] bundles all three for one
+//! (family, algo, schedule) triple.
+
+use crate::optim::{Algo, DpCache, Penalty, Schedule};
+
+use super::{assert_close, property};
+
+/// Apply the family's dense per-step oracle over global steps
+/// `[lo, hi)` — the ground truth every lazy form must reproduce.
+pub fn sequential_dense<P: Penalty>(
+    p: &P,
+    algo: Algo,
+    mut w: f64,
+    schedule: &Schedule,
+    lo: usize,
+    hi: usize,
+) -> f64 {
+    for t in lo..hi {
+        w = p.dense_step(algo, t as u64, w, schedule.eta(t as u64));
+    }
+    w
+}
+
+/// Law 1: catch-up ≡ sequential dense application for random
+/// (n, ψ, w₀), and the snapshot hot path agrees with the plain path.
+pub fn check_closed_form<P: Penalty>(p: P, algo: Algo, schedule: Schedule, cases: usize) {
+    let label = format!("[{}|{}|{}] catch-up == dense", p.name(), algo.name(), schedule.name());
+    property(&label, cases, |g| {
+        let n = g.usize_in(1, 120);
+        let mut cache = DpCache::new(algo, p, schedule);
+        for _ in 0..n {
+            cache.step();
+        }
+        let psi = g.usize_in(0, n);
+        let w0 = g.f64_in(-2.0, 2.0);
+        let lazy = cache.catchup(w0, psi as u32);
+        let seq = sequential_dense(&p, algo, w0, &schedule, psi, n);
+        assert_close(lazy, seq, 1e-10, 1e-12);
+        // The hoisted snapshot path must agree with the plain path.
+        let snap = cache.snapshot();
+        assert_close(snap.catchup(w0, psi as u32), lazy, 1e-12, 1e-14);
+        // 0 is absorbing under every family.
+        assert_eq!(cache.catchup(0.0, psi as u32), 0.0);
+    });
+}
+
+/// Law 2: catch-up composes transitively: ψ→m then m→k == ψ→k.
+pub fn check_transitivity<P: Penalty>(p: P, algo: Algo, schedule: Schedule, cases: usize) {
+    let label = format!("[{}|{}|{}] transitivity", p.name(), algo.name(), schedule.name());
+    property(&label, cases, |g| {
+        let n = g.usize_in(2, 100);
+        let psi = g.usize_in(0, n - 2);
+        let m = g.usize_in(psi, n - 1);
+        let w0 = g.f64_in(-1.5, 1.5);
+
+        let mut cache = DpCache::new(algo, p, schedule);
+        for _ in 0..m {
+            cache.step();
+        }
+        let mid = cache.catchup(w0, psi as u32);
+        for _ in m..n {
+            cache.step();
+        }
+        let two_hop = cache.catchup(mid, m as u32);
+        let direct = cache.catchup(w0, psi as u32);
+        assert_close(direct, two_hop, 1e-10, 1e-12);
+    });
+}
+
+/// Law 3: a flush (catch up + rebase) anywhere in the step stream is
+/// invisible: the flushed run equals the continuous run.
+pub fn check_rebase_invisibility<P: Penalty>(p: P, algo: Algo, schedule: Schedule, cases: usize) {
+    let label = format!("[{}|{}|{}] rebase invisible", p.name(), algo.name(), schedule.name());
+    property(&label, cases, |g| {
+        let n1 = g.usize_in(1, 60);
+        let n2 = g.usize_in(1, 60);
+        let w0 = g.f64_in(-1.5, 1.5);
+
+        // continuous run
+        let mut c = DpCache::new(algo, p, schedule);
+        for _ in 0..(n1 + n2) {
+            c.step();
+        }
+        let no_flush = c.catchup(w0, 0);
+
+        // flushed run: catch up at n1, rebase, continue
+        let mut c2 = DpCache::new(algo, p, schedule);
+        for _ in 0..n1 {
+            c2.step();
+        }
+        let w_mid = c2.catchup(w0, 0);
+        c2.rebase();
+        assert_eq!(c2.k(), 0);
+        assert_eq!(c2.global_t(), n1 as u64); // schedule keeps advancing
+        for _ in 0..n2 {
+            c2.step();
+        }
+        let flushed = c2.catchup(w_mid, 0);
+        assert_close(no_flush, flushed, 1e-10, 1e-12);
+    });
+}
+
+/// All three laws for one (family, algo, schedule) triple.
+pub fn check_penalty_family<P: Penalty>(p: P, algo: Algo, schedule: Schedule, cases: usize) {
+    check_closed_form(p, algo, schedule, cases);
+    check_transitivity(p, algo, schedule, cases);
+    check_rebase_invisibility(p, algo, schedule, cases);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ElasticNet;
+
+    #[test]
+    fn laws_hold_for_a_spot_check_family() {
+        check_penalty_family(
+            ElasticNet::new(0.01, 0.2),
+            Algo::Fobos,
+            Schedule::InvSqrtT { eta0: 0.5 },
+            25,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "catch-up == dense")]
+    fn law_suite_catches_a_broken_family() {
+        // A deliberately wrong penalty: the dense oracle shrinks but the
+        // "lazy" state is the identity (a huge-radius clamp). The law
+        // suite must reject it.
+        use crate::optim::penalty::{Linf, LinfState};
+        use crate::optim::{CatchupSnapshot, PenaltyState, StepMap};
+
+        #[derive(Debug, Clone, Copy)]
+        struct Broken;
+        #[derive(Debug, Clone)]
+        struct BrokenState {
+            inner: LinfState,
+        }
+        impl PenaltyState for BrokenState {
+            fn extend(&mut self, t: u64, eta: f64) {
+                self.inner.extend(t, eta);
+            }
+            fn k(&self) -> u32 {
+                self.inner.k()
+            }
+            fn catchup(&self, w: f64, psi: u32) -> f64 {
+                self.inner.catchup(w, psi) // effectively identity: r = MAX
+            }
+            fn snapshot(&self) -> CatchupSnapshot<'_> {
+                self.inner.snapshot()
+            }
+            fn len(&self) -> usize {
+                self.inner.len()
+            }
+            fn rebase(&mut self) {
+                self.inner.rebase();
+            }
+        }
+        impl Penalty for Broken {
+            type State = BrokenState;
+            fn init_state(&self, algo: Algo) -> BrokenState {
+                BrokenState { inner: Linf { lam: f64::MAX }.init_state(algo) }
+            }
+            fn step_map(&self, _algo: Algo, _t: u64, eta: f64) -> StepMap {
+                StepMap::Shrink { ra: 1.0, rb: eta * 0.1 }
+            }
+            fn value(&self, _w: &[f64]) -> f64 {
+                0.0
+            }
+            fn validate(&self, _algo: Algo, _schedule: &Schedule) -> anyhow::Result<()> {
+                Ok(())
+            }
+            fn name(&self) -> String {
+                "broken".into()
+            }
+            fn parse(_s: &str) -> anyhow::Result<Broken> {
+                Ok(Broken)
+            }
+        }
+        check_closed_form(Broken, Algo::Sgd, Schedule::Constant { eta0: 0.5 }, 30);
+    }
+}

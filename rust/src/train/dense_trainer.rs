@@ -6,7 +6,7 @@
 use crate::data::RowView;
 use crate::loss::Loss;
 use crate::model::LinearModel;
-use crate::optim::{dense_step, Algo, Regularizer, Schedule};
+use crate::optim::{dense_step, Algo, Penalty, Regularizer, Schedule};
 
 use super::options::TrainOptions;
 
@@ -24,14 +24,18 @@ pub struct DenseTrainer {
 impl DenseTrainer {
     /// Fresh zero-weight trainer of dimension `d`.
     pub fn new(d: usize, opts: &TrainOptions) -> DenseTrainer {
-        if opts.algo == Algo::Sgd {
-            assert!(
-                opts.schedule.eta(0) * opts.reg.lam2 < 1.0,
-                "SGD requires eta0*lam2 < 1"
-            );
+        // Mirror DpCache construction: the penalty regime checks assume a
+        // valid (non-increasing) schedule.
+        if let Err(e) = opts.schedule.validate() {
+            panic!("{e}");
         }
+        if let Err(e) = opts.reg.validate(opts.algo, &opts.schedule) {
+            panic!("{e}");
+        }
+        let mut model = LinearModel::zeros(d, opts.loss);
+        model.penalty = Some(opts.reg.name());
         DenseTrainer {
-            model: LinearModel::zeros(d, opts.loss),
+            model,
             algo: opts.algo,
             reg: opts.reg,
             schedule: opts.schedule,
@@ -54,11 +58,32 @@ impl DenseTrainer {
         }
         self.model.bias -= eta * dz;
 
-        // Dense regularization: every weight, every step — O(d).
-        let (lam1, lam2) = (self.reg.lam1, self.reg.lam2);
-        if !self.reg.is_none() {
-            for w in self.model.weights.iter_mut() {
-                *w = dense_step::reg_update(self.algo, *w, eta, lam1, lam2);
+        // Dense regularization: every weight, every step — O(d), with the
+        // per-step map hoisted out of the sweep. Steps whose map is the
+        // identity (truncated gradient between truncation boundaries)
+        // skip the sweep entirely.
+        let (reg, algo, t) = (self.reg, self.algo, self.t);
+        let map = reg.step_map(algo, t, eta);
+        if !reg.is_noop() && !map.is_identity() {
+            match reg {
+                // Elastic net keeps the historical per-weight
+                // `dense_step::reg_update` expressions (the dense path
+                // must stay bit-identical to its pre-trait behavior),
+                // called directly so the enum isn't re-matched per
+                // weight inside the O(d) sweep.
+                Regularizer::ElasticNet(en) => {
+                    for w in self.model.weights.iter_mut() {
+                        *w = dense_step::reg_update(algo, *w, eta, en.lam1, en.lam2);
+                    }
+                }
+                // Every other family's dense oracle *is* the step map
+                // (`Penalty::dense_step`'s default), so apply the
+                // hoisted copy instead of re-deriving it per weight.
+                _ => {
+                    for w in self.model.weights.iter_mut() {
+                        *w = map.apply(*w);
+                    }
+                }
             }
         }
 

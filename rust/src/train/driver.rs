@@ -42,6 +42,10 @@ pub struct TrainReport {
     pub epochs: Vec<EpochStats>,
     /// Number of amortized DP-cache flushes (lazy only; 0 for dense).
     pub rebases: u64,
+    /// The active penalty's `name()` string (training provenance; also
+    /// persisted with the model and surfaced by the serving `stats`
+    /// command).
+    pub penalty: String,
 }
 
 impl TrainReport {
@@ -108,6 +112,7 @@ pub fn train_lazy_xy(x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -> Resu
         throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
         epochs,
         rebases,
+        penalty: opts.reg.name(),
     })
 }
 
@@ -142,6 +147,7 @@ pub fn train_dense(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainRep
         throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
         epochs,
         rebases: 0,
+        penalty: opts.reg.name(),
     })
 }
 

@@ -12,8 +12,10 @@
 //! and its ψ index are both random-accessed per feature. They are stored
 //! *interleaved* in one 16-byte [`Slot`] so each feature costs one cache
 //! line, not two; the catch-up constants are hoisted per example
-//! ([`DpCache::snapshot`]) and the per-step regularization map is reduced
-//! to a branch-free `sign(wh)·max(ra·|wh| − rb, 0)`.
+//! ([`DpCache::snapshot`]) and the per-step regularization map is hoisted
+//! to a per-example [`crate::optim::StepMap`] (for the elastic-net family
+//! the branch-free `sign(wh)·max(ra·|wh| − rb, 0)`, unchanged from before
+//! the pluggable-penalty API).
 //!
 //! The DP cache's space budget triggers an amortized full flush
 //! ([`LazyTrainer::flush_and_rebase`]) which also keeps the partial
@@ -22,7 +24,7 @@
 use crate::data::RowView;
 use crate::loss::Loss;
 use crate::model::LinearModel;
-use crate::optim::{dense_step, DpCache};
+use crate::optim::{DpCache, Penalty, Regularizer};
 
 use super::options::TrainOptions;
 
@@ -46,8 +48,7 @@ pub struct LazyTrainer {
     cache: DpCache,
     loss: Loss,
     algo: crate::optim::Algo,
-    lam1: f64,
-    lam2: f64,
+    penalty: Regularizer,
     /// Number of amortized full flushes performed.
     pub rebases: u64,
 }
@@ -59,15 +60,16 @@ impl LazyTrainer {
             Some(b) => DpCache::with_budget(opts.algo, opts.reg, opts.schedule, b),
             None => DpCache::new(opts.algo, opts.reg, opts.schedule),
         };
+        let mut model = LinearModel::zeros(d, opts.loss);
+        model.penalty = Some(opts.reg.name());
         LazyTrainer {
             slots: vec![Slot::default(); d],
-            model: LinearModel::zeros(d, opts.loss),
+            model,
             finalized: true, // all-zero is trivially current
             cache,
             loss: opts.loss,
             algo: opts.algo,
-            lam1: opts.reg.lam1,
-            lam2: opts.reg.lam2,
+            penalty: opts.reg,
             rebases: 0,
         }
     }
@@ -96,15 +98,11 @@ impl LazyTrainer {
         let dz = self.loss.dz(z, y);
         let eta = self.cache.eta_now();
 
-        // Per-example regularization coefficients: both families reduce to
-        // `sign(wh) * max(ra*|wh| - rb, 0)` (branch-free per feature).
-        let (ra, rb) = match self.algo {
-            crate::optim::Algo::Sgd => (1.0 - eta * self.lam2, eta * self.lam1),
-            crate::optim::Algo::Fobos => {
-                let inv = 1.0 / (1.0 + eta * self.lam2);
-                (inv, eta * self.lam1 * inv)
-            }
-        };
+        // Per-example regularization map with the step-level constants
+        // folded in (for the elastic-net family this is the branch-free
+        // `sign(wh) * max(ra*|wh| - rb, 0)`, exactly as before the
+        // penalty API; see `optim::penalty::StepMap`).
+        let map = self.penalty.step_map(self.algo, self.cache.global_t(), eta);
 
         // Pass 2: gradient step + this iteration's regularization map.
         // The slots touched in pass 1 are hot in L1 now.
@@ -113,8 +111,7 @@ impl LazyTrainer {
         for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
             let slot = &mut slots[j as usize];
             let wh = slot.w - step * f64::from(v);
-            let mag = ra * wh.abs() - rb;
-            slot.w = dense_step::sign(wh) * mag.max(0.0);
+            slot.w = map.apply(wh);
             slot.psi = next_psi;
         }
         self.model.bias -= step; // bias is unregularized

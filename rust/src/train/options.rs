@@ -1,14 +1,15 @@
 //! Training options shared by every trainer and the coordinator.
 
 use crate::loss::Loss;
-use crate::optim::{Algo, Regularizer, Schedule};
+use crate::optim::{Algo, Penalty, Regularizer, Schedule};
 
 /// Options controlling a training run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TrainOptions {
     /// Update family (SGD or FoBoS).
     pub algo: Algo,
-    /// Regularizer (λ₁, λ₂).
+    /// Penalty family (elastic net, truncated gradient, ℓ∞ ball, …) —
+    /// any point of the enum-dispatched [`Regularizer`].
     pub reg: Regularizer,
     /// Learning-rate schedule.
     pub schedule: Schedule,
@@ -56,15 +57,8 @@ impl TrainOptions {
     /// asserts, but returns an error for CLI-friendly reporting).
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.epochs > 0, "epochs must be >= 1");
-        anyhow::ensure!(self.schedule.eta0() > 0.0, "eta0 must be positive");
-        if self.algo == Algo::Sgd {
-            anyhow::ensure!(
-                self.schedule.eta(0) * self.reg.lam2 < 1.0,
-                "SGD requires eta0*lam2 < 1 (got {}*{})",
-                self.schedule.eta(0),
-                self.reg.lam2
-            );
-        }
+        self.schedule.validate()?;
+        self.reg.validate(self.algo, &self.schedule)?;
         if let Some(b) = self.space_budget {
             anyhow::ensure!(b >= 2, "space budget must be >= 2");
         }
@@ -108,5 +102,32 @@ mod tests {
         let mut o = TrainOptions::default();
         o.sync_interval = Some(0);
         assert!(o.validate().is_err());
+
+        // schedule parameter validation rides through validate()
+        let mut o = TrainOptions::default();
+        o.schedule = Schedule::Exponential { eta0: 0.5, gamma: 2.0 };
+        assert!(o.validate().is_err());
+
+        let mut o = TrainOptions::default();
+        o.schedule = Schedule::Step { eta0: 0.5, every: 0, factor: 0.5 };
+        assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn new_penalty_families_validate() {
+        let mut o = TrainOptions::default();
+        o.reg = Regularizer::truncated_gradient(0.01, 10, 1.0);
+        o.validate().unwrap();
+
+        let mut o = TrainOptions::default();
+        o.reg = Regularizer::linf(0.5);
+        o.validate().unwrap();
+
+        // SGD + linf / tg have no eta0*lam2 constraint
+        let mut o = TrainOptions::default();
+        o.algo = Algo::Sgd;
+        o.reg = Regularizer::linf(0.5);
+        o.schedule = Schedule::Constant { eta0: 0.9 };
+        o.validate().unwrap();
     }
 }

@@ -191,6 +191,7 @@ where
         throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
         epochs,
         rebases,
+        penalty: opts.reg.name(),
     })
 }
 
@@ -206,6 +207,8 @@ pub fn weighted_average(models: &[(&LinearModel, u64)]) -> LinearModel {
         return models[0].0.clone();
     }
     let mut out = LinearModel::zeros(d, models[0].0.loss);
+    // All merge inputs trained under the same options; keep provenance.
+    out.penalty = models[0].0.penalty.clone();
     for &(m, c) in models {
         assert_eq!(m.dim(), d, "weighted_average: dimension mismatch");
         if c == 0 {

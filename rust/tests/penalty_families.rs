@@ -1,0 +1,272 @@
+//! The penalty-API acceptance suite: the generic law harness
+//! (`testing::penalty_laws`) run over **every** registered family —
+//! elastic net (with its l1/l22/none degenerate points), truncated
+//! gradient, and the ℓ∞ ball — × both update algorithms × all five
+//! learning-rate schedules; plus trainer-level lazy ≡ dense and
+//! rebase-invisibility properties for the new families, and a
+//! medline-shaped end-to-end run showing truncated gradient reaches
+//! elastic-net-class sparsity and accuracy through the standard
+//! `train_lazy` driver.
+
+use lazyreg::data::CsrMatrix;
+use lazyreg::eval::evaluate;
+use lazyreg::optim::{Algo, ElasticNet, Linf, Penalty, Regularizer, Schedule, TruncatedGradient};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::testing::penalty_laws::check_penalty_family;
+use lazyreg::testing::{property, Gen};
+use lazyreg::train::{train_lazy, DenseTrainer, LazyTrainer, TrainOptions};
+use lazyreg::util::Rng;
+
+/// The five schedule families, in the stable regime the equivalence
+/// tests use elsewhere (SGD validity: max eta0 * max lam2 < 1).
+fn schedules() -> [Schedule; 5] {
+    [
+        Schedule::Constant { eta0: 0.4 },
+        Schedule::InvT { eta0: 0.9 },
+        Schedule::InvSqrtT { eta0: 0.7 },
+        Schedule::Exponential { eta0: 0.5, gamma: 0.97 },
+        Schedule::Step { eta0: 0.5, every: 7, factor: 0.5 },
+    ]
+}
+
+#[test]
+fn catchup_laws_hold_for_every_family_algo_schedule() {
+    // Concrete family types through the generic harness: elastic net and
+    // its degenerate points…
+    let elastic = [
+        ElasticNet::default(),           // none
+        ElasticNet::new(0.01, 0.0),      // l1
+        ElasticNet::new(0.0, 0.4),       // l22
+        ElasticNet::new(0.02, 0.3),      // enet
+    ];
+    // …and the two families the penalty API opens.
+    let tg = [
+        TruncatedGradient::new(0.01, 5, 0.5),
+        TruncatedGradient::new(0.02, 1, f64::INFINITY), // degenerate per-step l1
+        TruncatedGradient::new(0.05, 13, 2.0),
+    ];
+    let linf = [Linf::new(0.7), Linf::new(0.05)];
+
+    for algo in [Algo::Sgd, Algo::Fobos] {
+        for schedule in schedules() {
+            for p in elastic {
+                check_penalty_family(p, algo, schedule, 12);
+            }
+            for p in tg {
+                check_penalty_family(p, algo, schedule, 12);
+            }
+            for p in linf {
+                check_penalty_family(p, algo, schedule, 12);
+            }
+        }
+    }
+}
+
+#[test]
+fn catchup_laws_hold_through_the_enum_dispatch() {
+    // The same laws through the trainers' enum (`Regularizer` implements
+    // `Penalty` by delegation, so one call per family suffices).
+    for reg in [
+        Regularizer::elastic_net(0.02, 0.3),
+        Regularizer::truncated_gradient(0.01, 5, 0.5),
+        Regularizer::linf(0.7),
+    ] {
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            check_penalty_family(reg, algo, Schedule::InvSqrtT { eta0: 0.7 }, 15);
+        }
+    }
+}
+
+/// A random sparse corpus (mirrors `property_equivalence.rs`).
+fn random_corpus(n: usize, d: usize, p: usize, rng: &mut Rng) -> (CsrMatrix, Vec<f32>) {
+    let mut x = CsrMatrix::empty(d);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = 1 + rng.index(p.min(d - 1));
+        let cols = rng.sample_distinct(d, k);
+        x.push_row(
+            cols.into_iter()
+                .map(|c| (c as u32, 1.0 + rng.index(3) as f32))
+                .collect(),
+        );
+        ys.push(rng.index(2) as f32);
+    }
+    (x, ys)
+}
+
+/// Draw a random penalty from *any* registered family.
+fn random_any_penalty(g: &mut Gen) -> Regularizer {
+    match g.usize_in(0, 3) {
+        0 => Regularizer::elastic_net(g.f64_in(0.0, 0.02), g.f64_in(0.0, 0.4)),
+        1 => Regularizer::truncated_gradient(
+            g.f64_in(0.001, 0.05),
+            g.usize_in(1, 12) as u64,
+            if g.bool(0.3) { f64::INFINITY } else { g.f64_in(0.2, 2.0) },
+        ),
+        2 => Regularizer::linf(g.f64_in(0.1, 1.0)),
+        _ => Regularizer::none(),
+    }
+}
+
+fn random_schedule(g: &mut Gen) -> Schedule {
+    match g.usize_in(0, 4) {
+        0 => Schedule::Constant { eta0: g.f64_in(0.02, 0.15) },
+        1 => Schedule::InvT { eta0: g.f64_in(0.3, 0.9) },
+        2 => Schedule::InvSqrtT { eta0: g.f64_in(0.3, 0.7) },
+        3 => Schedule::Exponential { eta0: g.f64_in(0.2, 0.5), gamma: 0.99 },
+        _ => Schedule::Step { eta0: g.f64_in(0.2, 0.5), every: 13, factor: 0.5 },
+    }
+}
+
+#[test]
+fn lazy_trainer_equals_dense_trainer_for_every_family() {
+    property("lazy == dense (any penalty family)", 30, |g| {
+        let opts = TrainOptions {
+            algo: *g.choose(&[Algo::Sgd, Algo::Fobos]),
+            reg: random_any_penalty(g),
+            schedule: random_schedule(g),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(0x9E4A_u64.wrapping_add(g.case as u64 * 0x7F4A));
+        let d = g.usize_in(8, 50);
+        let n = g.usize_in(10, 140);
+        let (x, ys) = random_corpus(n, d, 8, &mut rng);
+
+        let mut lazy = LazyTrainer::new(d, &opts);
+        let mut dense = DenseTrainer::new(d, &opts);
+        for (r, &y) in ys.iter().enumerate() {
+            lazy.process_example(x.row(r), f64::from(y));
+            dense.process_example(x.row(r), f64::from(y));
+        }
+        lazy.finalize();
+        let diff = lazy.model().max_weight_diff(dense.model());
+        assert!(diff < 1e-9, "weight diff {diff} ({})", opts.reg.name());
+    });
+}
+
+#[test]
+fn rebase_is_invisible_through_the_trainer_for_new_families() {
+    property("tiny budget == default budget (tg, linf)", 20, |g| {
+        let reg = if g.bool(0.5) {
+            Regularizer::truncated_gradient(g.f64_in(0.005, 0.05), g.usize_in(1, 8) as u64, 1.0)
+        } else {
+            Regularizer::linf(g.f64_in(0.2, 1.0))
+        };
+        let opts = TrainOptions {
+            algo: *g.choose(&[Algo::Sgd, Algo::Fobos]),
+            reg,
+            schedule: Schedule::InvSqrtT { eta0: 0.5 },
+            ..Default::default()
+        };
+        let mut tiny = opts;
+        tiny.space_budget = Some(g.usize_in(4, 64));
+
+        let mut rng = Rng::new(0x7AB_u64.wrapping_add(g.case as u64 * 0x51D));
+        let d = g.usize_in(10, 40);
+        let (x, ys) = random_corpus(150, d, 6, &mut rng);
+
+        let mut budgeted = LazyTrainer::new(d, &tiny);
+        let mut default = LazyTrainer::new(d, &opts);
+        for (r, &y) in ys.iter().enumerate() {
+            budgeted.process_example(x.row(r), f64::from(y));
+            default.process_example(x.row(r), f64::from(y));
+        }
+        assert!(budgeted.rebases > 0, "no rebase with budget {:?}", tiny.space_budget);
+        assert_eq!(default.rebases, 0);
+        budgeted.finalize();
+        default.finalize();
+        let diff = budgeted.model().max_weight_diff(default.model());
+        assert!(diff < 1e-9, "rebase changed semantics: diff {diff} ({})", reg.name());
+    });
+}
+
+fn medline_small() -> lazyreg::data::SparseDataset {
+    generate(
+        &BowSpec { n_examples: 1_500, n_features: 8_000, avg_nnz: 50.0, ..Default::default() },
+        1234,
+    )
+}
+
+#[test]
+fn truncated_gradient_matches_elastic_net_class_results_on_medline_small() {
+    // Satellite acceptance: truncated gradient through the standard
+    // `train_lazy` driver reaches sparsity/accuracy comparable to
+    // elastic net on the medline-shaped corpus.
+    let data = medline_small();
+    let (train, test) = data.split(0.3, 5);
+    let base = TrainOptions {
+        algo: Algo::Fobos,
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 3,
+        ..Default::default()
+    };
+
+    let mut unreg = base;
+    unreg.reg = Regularizer::none();
+    let mut enet = base;
+    enet.reg = Regularizer::elastic_net(5e-3, 1e-3);
+    let mut tg = base;
+    tg.reg = Regularizer::truncated_gradient(5e-3, 10, f64::INFINITY);
+
+    let r_unreg = train_lazy(&train, &unreg).unwrap();
+    let r_enet = train_lazy(&train, &enet).unwrap();
+    let r_tg = train_lazy(&train, &tg).unwrap();
+    assert_eq!(r_tg.penalty, "tg:0.005:10:inf");
+
+    let nnz_unreg = r_unreg.model.sparsity().nnz;
+    let nnz_enet = r_enet.model.sparsity().nnz;
+    let nnz_tg = r_tg.model.sparsity().nnz;
+    // Both regularizers prune a large fraction of the touched weights…
+    assert!(nnz_enet * 2 < nnz_unreg, "enet {nnz_enet} vs unreg {nnz_unreg}");
+    assert!(nnz_tg * 2 < nnz_unreg, "tg {nnz_tg} vs unreg {nnz_unreg}");
+    // …and tg sparsity is in the same class as elastic net's (the same
+    // total gravity is applied, just at K-step boundaries).
+    assert!(
+        nnz_tg < nnz_enet * 4 && nnz_enet < nnz_tg * 4,
+        "sparsity not comparable: tg {nnz_tg} vs enet {nnz_enet}"
+    );
+
+    let (acc_enet, _) = evaluate(&r_enet.model, &test);
+    let (acc_tg, _) = evaluate(&r_tg.model, &test);
+    assert!(
+        (acc_tg.accuracy - acc_enet.accuracy).abs() < 0.05,
+        "accuracy diverged: tg {} vs enet {}",
+        acc_tg.accuracy,
+        acc_enet.accuracy
+    );
+    assert!(r_tg.final_loss() < r_tg.epochs[0].mean_loss, "tg loss did not improve");
+}
+
+#[test]
+fn linf_ball_constrains_weights_end_to_end() {
+    let data = medline_small();
+    let radius = 0.05;
+    let opts = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::linf(radius),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 2,
+        ..Default::default()
+    };
+    let report = train_lazy(&data, &opts).unwrap();
+    let sp = report.model.sparsity();
+    assert!(
+        sp.max_abs <= radius + 1e-12,
+        "weights escaped the ball: {} > {radius}",
+        sp.max_abs
+    );
+    assert!(report.final_loss() < report.epochs[0].mean_loss, "linf loss did not improve");
+    assert_eq!(report.penalty, format!("linf:{radius}"));
+    assert_eq!(report.model.penalty.as_deref(), Some(format!("linf:{radius}").as_str()));
+}
+
+#[test]
+fn penalty_value_is_exposed_for_objective_logging() {
+    let w = [0.5, -0.25, 0.0];
+    assert!((Regularizer::l1(0.1).penalty(&w) - 0.075).abs() < 1e-12);
+    assert_eq!(Regularizer::linf(1.0).penalty(&w), 0.0);
+    let tg = Regularizer::truncated_gradient(0.1, 4, 1.0);
+    assert!((tg.penalty(&w) - 0.075).abs() < 1e-12);
+    // And through the trait, for generic code.
+    assert_eq!(Penalty::value(&Regularizer::none(), &w), 0.0);
+}

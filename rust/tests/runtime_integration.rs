@@ -149,9 +149,8 @@ fn catchup_artifact_matches_dp_cache() {
     let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
     let psi32: Vec<i32> = psi.iter().map(|&p| p as i32).collect();
 
-    let got = rt
-        .catchup(&w32, &psi32, &pt32, &bt32, steps as i32, cache.reg().lam1 as f32)
-        .unwrap();
+    let lam1 = cache.penalty().as_elastic_net().expect("elastic-net cache").lam1 as f32;
+    let got = rt.catchup(&w32, &psi32, &pt32, &bt32, steps as i32, lam1).unwrap();
     let mut max_diff = 0.0f64;
     for j in 0..meta.catchup_dim {
         let want = cache.catchup(w[j], psi[j]);
