@@ -1,17 +1,30 @@
-//! E9 — data-parallel scaling: sharded lazy training throughput vs
-//! worker count on the Medline-shaped synthetic corpus.
+//! E9 — data-parallel scaling: pool-runtime sharded training throughput
+//! vs worker count, sync cadence and sync mode on the Medline-shaped
+//! synthetic corpus.
 //!
-//! The lazy trainer is O(p) per example on one core; this bench measures
-//! how close the sharded engine gets to linear scaling when the epoch is
-//! split across N workers synchronized by model averaging (the merge is
-//! O(d·N) per sync — amortized away at epoch-synchronous cadence).
+//! The lazy trainer is O(p) per example on one core; this bench
+//! measures (a) how close the persistent-pool engine gets to linear
+//! scaling, (b) what the pool saves over the original round-spawn
+//! engine (`respawn` mode — the frozen PR 1 copy in
+//! `lazyreg::testing::reference`, measured *in the same run* so the
+//! comparison is honest), and (c) what pipelined sync buys by
+//! overlapping the O(d·workers) merge with the next round's examples.
+//! Per-round sync overhead dominates at small `sync_interval`, which is
+//! exactly where the three modes separate.
 //!
-//! `cargo bench --bench parallel_scaling`
-//! (env LAZYREG_BENCH_N / LAZYREG_BENCH_WORKERS=1,2,4,8 to scale).
+//! `cargo bench --bench parallel_scaling`            human-readable table
+//! `cargo bench --bench parallel_scaling -- --json`  one JSON record per
+//!     (workers, sync_interval, mode) cell, for the BENCH_*.json
+//!     trajectory (also enabled by env LAZYREG_BENCH_JSON=1)
+//!
+//! Env knobs: LAZYREG_BENCH_N (corpus size), LAZYREG_BENCH_WORKERS
+//! (e.g. "1,2,4,8"), LAZYREG_BENCH_INTERVALS (e.g. "epoch,256,64"),
+//! LAZYREG_BENCH_MERGE (flat|tree), LAZYREG_BENCH_FAST=1 (CI smoke).
 
 use lazyreg::prelude::*;
 use lazyreg::synth::{generate, BowSpec};
-use lazyreg::train::train_parallel;
+use lazyreg::testing::reference::round_spawn_train_lazy_xy;
+use lazyreg::train::{train_parallel, TrainReport};
 use lazyreg::util::fmt;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -29,8 +42,73 @@ fn worker_counts() -> Vec<usize> {
     }
 }
 
+/// Sync cadences to sweep; `None` is epoch-synchronous.
+fn sync_intervals() -> Vec<Option<usize>> {
+    match std::env::var("LAZYREG_BENCH_INTERVALS") {
+        Ok(v) => v
+            .split(',')
+            .filter_map(|t| {
+                let t = t.trim();
+                if t.is_empty() {
+                    None
+                } else if t == "epoch" {
+                    Some(None)
+                } else {
+                    t.parse().ok().map(Some)
+                }
+            })
+            .collect(),
+        // The small interval (64) is where per-round overhead — the
+        // respawn-vs-pool difference — actually shows.
+        Err(_) => vec![None, Some(64)],
+    }
+}
+
+struct Cell {
+    mode: &'static str,
+    workers: usize,
+    interval: Option<usize>,
+    /// Topology this cell actually ran: the configured mode for the
+    /// pool engines, always "flat" for the frozen respawn reference
+    /// (it ignores the merge knob), "none" for the merge-free serial row.
+    merge: &'static str,
+    report: TrainReport,
+}
+
+impl Cell {
+    fn merge_seconds(&self) -> f64 {
+        self.report.epochs.iter().map(|e| e.merge_seconds).sum()
+    }
+
+    fn json(&self) -> String {
+        let interval = match self.interval {
+            Some(m) => m.to_string(),
+            None => "null".into(),
+        };
+        format!(
+            "{{\"bench\":\"parallel_scaling\",\"mode\":\"{}\",\"workers\":{},\
+             \"sync_interval\":{},\"merge\":\"{}\",\"examples_per_sec\":{:.1},\
+             \"merge_seconds\":{:.6},\"seconds\":{:.6},\"final_loss\":{:.6}}}",
+            self.mode,
+            self.workers,
+            interval,
+            self.merge,
+            self.report.throughput,
+            self.merge_seconds(),
+            self.report.seconds,
+            self.report.final_loss(),
+        )
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    let n = env_usize("LAZYREG_BENCH_N", 16_000);
+    let fast = std::env::var("LAZYREG_BENCH_FAST").is_ok();
+    let n = env_usize("LAZYREG_BENCH_N", if fast { 2_000 } else { 16_000 });
+    let json = std::env::args().any(|a| a == "--json")
+        || std::env::var("LAZYREG_BENCH_JSON").is_ok();
+    let merge: MergeMode = std::env::var("LAZYREG_BENCH_MERGE")
+        .unwrap_or_else(|_| "flat".into())
+        .parse()?;
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
 
     eprintln!("[parallel] generating Medline-shaped corpus n={n} d=260,941 p~88.5 ...");
@@ -43,38 +121,105 @@ fn main() -> anyhow::Result<()> {
         schedule: Schedule::InvSqrtT { eta0: 0.5 },
         epochs: 2,
         shuffle: false,
+        merge,
         ..Default::default()
     };
 
-    println!(
-        "\n## E9 — parallel scaling (n={}, d={}, p={:.1}, {} cores, epoch-synchronous sync)",
-        fmt::count(stats.n_examples as u64),
-        fmt::count(stats.n_features as u64),
-        stats.avg_nnz,
-        cores
-    );
-    let mut table =
-        fmt::Table::new(["workers", "examples/s", "speedup", "efficiency", "final loss"]);
+    if !json {
+        println!(
+            "\n## E9 — parallel scaling (n={}, d={}, p={:.1}, {} cores, merge={})",
+            fmt::count(stats.n_examples as u64),
+            fmt::count(stats.n_features as u64),
+            stats.avg_nnz,
+            cores,
+            merge.name(),
+        );
+    }
+    let mut table = fmt::Table::new([
+        "mode", "workers", "sync", "examples/s", "speedup", "merge s", "final loss",
+    ]);
     let mut serial_rate = None;
-    for workers in worker_counts() {
-        eprintln!("[parallel] workers={workers} ...");
-        let opts = TrainOptions { workers, ..base };
-        let report = train_parallel(&data, &opts)?;
-        let rate = report.throughput;
-        let base_rate = *serial_rate.get_or_insert(rate);
-        let speedup = rate / base_rate;
+    let mut cells: Vec<Cell> = Vec::new();
+    for interval in sync_intervals() {
+        for workers in worker_counts() {
+            if workers == 1 && serial_rate.is_some() {
+                continue; // serial ignores the sync interval; run it once
+            }
+            let opts = TrainOptions { workers, sync_interval: interval, ..base };
+            // The engines being compared per cell: the persistent pool
+            // (synchronous), the pool with pipelined sync, and the
+            // frozen PR 1 round-spawn engine as the overhead baseline.
+            // workers == 1 delegates to the identical serial path in
+            // all three, so one row suffices.
+            let modes: &[&'static str] = if workers == 1 {
+                &["serial"]
+            } else {
+                &["respawn", "pool", "pipeline"]
+            };
+            for &mode in modes {
+                eprintln!(
+                    "[parallel] mode={mode} workers={workers} sync={:?} ...",
+                    interval
+                );
+                let (report, cell_merge) = match mode {
+                    // The frozen reference ignores the merge knob: flat.
+                    "respawn" => {
+                        (round_spawn_train_lazy_xy(data.x(), data.labels(), &opts)?, "flat")
+                    }
+                    "pipeline" => {
+                        let o = TrainOptions { pipeline_sync: true, ..opts };
+                        (train_parallel(&data, &o)?, merge.name())
+                    }
+                    "serial" => (train_parallel(&data, &opts)?, "none"),
+                    _ => (train_parallel(&data, &opts)?, merge.name()),
+                };
+                cells.push(Cell { mode, workers, interval, merge: cell_merge, report });
+            }
+            if workers == 1 {
+                serial_rate.get_or_insert(cells.last().expect("just pushed").report.throughput);
+            }
+        }
+    }
+
+    if json {
+        for c in &cells {
+            println!("{}", c.json());
+        }
+        return Ok(());
+    }
+
+    let Some(first) = cells.first() else {
+        println!("no cells to run (check LAZYREG_BENCH_WORKERS / _INTERVALS)");
+        return Ok(());
+    };
+    // Speedups are relative to the serial row when it ran, else to the
+    // first cell — say which, so a workers list without 1 can't silently
+    // misattribute the baseline.
+    let (base_rate, base_label) = match serial_rate {
+        Some(r) => (r, "the serial lazy trainer (bit-identical to train_lazy)".to_string()),
+        None => (
+            first.report.throughput,
+            format!("the first cell ({} workers={})", first.mode, first.workers),
+        ),
+    };
+    for c in &cells {
         table.row([
-            workers.to_string(),
-            fmt::rate(rate, "ex"),
-            format!("{speedup:.2}x"),
-            format!("{:.0}%", 100.0 * speedup / workers as f64),
-            format!("{:.5}", report.final_loss()),
+            c.mode.into(),
+            c.workers.to_string(),
+            c.interval.map(|m| m.to_string()).unwrap_or_else(|| "epoch".into()),
+            fmt::rate(c.report.throughput, "ex"),
+            format!("{:.2}x", c.report.throughput / base_rate),
+            format!("{:.3}", c.merge_seconds()),
+            format!("{:.5}", c.report.final_loss()),
         ]);
     }
     println!("{}", table.render());
     println!(
-        "workers=1 is the serial lazy trainer bit-for-bit; speedups are \
-         wall-clock over the same {}-example workload",
+        "pool (persistent workers, barrier rounds) vs respawn (PR 1 \
+         scoped-thread respawn) isolates per-round runtime overhead; \
+         pipeline overlaps the merge with the next round. Speedups are \
+         wall-clock over the same {}-example workload, relative to \
+         {base_label}.",
         fmt::count((stats.n_examples * base.epochs) as u64)
     );
     Ok(())

@@ -6,7 +6,7 @@ use anyhow::Result;
 use crate::loss::Loss;
 use crate::optim::{Algo, Regularizer, Schedule};
 use crate::synth::{BowSpec, LabelSpec};
-use crate::train::TrainOptions;
+use crate::train::{MergeMode, TrainOptions};
 
 use super::parser::ConfigDoc;
 
@@ -87,6 +87,11 @@ impl ExperimentConfig {
         if let Some(m) = doc.get("train", "sync_interval") {
             cfg.train.sync_interval = Some(m.parse()?);
         }
+        if let Some(m) = doc.get("train", "merge") {
+            cfg.train.merge = MergeMode::parse(m)?;
+        }
+        cfg.train.pipeline_sync =
+            doc.get_bool("train", "pipeline_sync", cfg.train.pipeline_sync)?;
 
         cfg.train.validate()?;
         Ok(cfg)
@@ -123,6 +128,8 @@ shuffle = false
 space_budget = 1024
 workers = 4
 sync_interval = 512
+merge = "tree"
+pipeline_sync = true
 "#;
         let doc = ConfigDoc::parse(text).unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
@@ -137,6 +144,8 @@ sync_interval = 512
         assert_eq!(cfg.train.space_budget, Some(1024));
         assert_eq!(cfg.train.workers, 4);
         assert_eq!(cfg.train.sync_interval, Some(512));
+        assert_eq!(cfg.train.merge, MergeMode::Tree);
+        assert!(cfg.train.pipeline_sync);
         assert_eq!(cfg.test_frac, 0.2);
     }
 
@@ -145,11 +154,21 @@ sync_interval = 512
         let cfg = ExperimentConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
         assert_eq!(cfg.train.workers, 1);
         assert_eq!(cfg.train.sync_interval, None);
+        assert_eq!(cfg.train.merge, MergeMode::Flat);
+        assert!(!cfg.train.pipeline_sync);
     }
 
     #[test]
     fn zero_workers_rejected() {
         let doc = ConfigDoc::parse("[train]\nworkers = 0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_merge_mode_rejected() {
+        let doc = ConfigDoc::parse("[train]\nmerge = \"ring\"\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[train]\npipeline_sync = \"maybe\"\n").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 

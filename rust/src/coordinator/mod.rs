@@ -11,9 +11,14 @@
 //!   `opts.workers > 1` the stream is dealt round-robin into per-worker
 //!   queues and the shard models merged by example-weighted averaging.
 //!
-//! Both patterns compose with the data-parallel sharded engine in
-//! [`crate::train::parallel`] via the `workers` / `sync_interval` fields
-//! of [`crate::train::TrainOptions`].
+//! Both patterns run on the shared worker-pool runtime
+//! ([`crate::train::pool`]): their workers are the pool's
+//! run-to-completion face ([`crate::train::scoped_workers`]), their
+//! end-of-stream merges use the pool's topology-configurable
+//! [`crate::train::merge_models`], and both compose with the
+//! barrier-coordinated sharded engine ([`crate::train::parallel`]) via
+//! the `workers` / `sync_interval` / `merge` / `pipeline_sync` fields of
+//! [`crate::train::TrainOptions`].
 
 pub mod pipeline;
 pub mod tagger;

@@ -6,11 +6,14 @@
 //! and the reader blocks — classic backpressure, no unbounded buffering.
 //!
 //! With `opts.workers > 1`, [`train_streaming`] shards the stream
-//! round-robin across per-worker queues; each worker trains its own
-//! [`LazyTrainer`] and the shard models are merged at end-of-stream by
-//! example-weighted averaging ([`crate::train::weighted_average`]).
-//! Shard assignment follows arrival order, so the result is a
-//! deterministic function of the input stream and options.
+//! round-robin across per-worker queues; the consumers run on the
+//! worker pool's run-to-completion face
+//! ([`crate::train::scoped_workers`]), each training its own
+//! [`LazyTrainer`], and the shard models are merged at end-of-stream by
+//! example-weighted averaging in the topology `opts.merge` selects
+//! ([`crate::train::merge_models`] — flat by default, pairwise tree for
+//! high worker counts). Shard assignment follows arrival order, so the
+//! result is a deterministic function of the input stream and options.
 
 use std::collections::VecDeque;
 use std::io::BufRead;
@@ -19,7 +22,7 @@ use std::sync::{Condvar, Mutex};
 use anyhow::Result;
 
 use crate::data::RowView;
-use crate::train::{weighted_average, LazyTrainer, TrainOptions};
+use crate::train::{merge_models, scoped_workers, LazyTrainer, TrainOptions};
 
 /// An owned sparse example flowing through the pipeline.
 #[derive(Debug, Clone, PartialEq)]
@@ -240,12 +243,14 @@ pub fn train_streaming<R: BufRead + Send>(
 
 /// Sharded streaming training: the reader deals examples round-robin
 /// into one [`BoundedQueue`] per worker (deterministic shard assignment
-/// by arrival order, with per-queue backpressure); each worker trains
-/// its own [`LazyTrainer`] over its shard, and the shard models are
-/// merged at end-of-stream by example-weighted averaging.
+/// by arrival order, with per-queue backpressure); the consumers run on
+/// the worker pool ([`scoped_workers`]), each training its own
+/// [`LazyTrainer`] over its shard, and the shard models are merged at
+/// end-of-stream by example-weighted averaging in the configured merge
+/// topology (`opts.merge`).
 ///
 /// One merge per pass: a stream is consumed once, so the sync-interval
-/// knob of the in-memory engine does not apply here.
+/// and pipelining knobs of the in-memory engine do not apply here.
 pub fn train_streaming_sharded<R: BufRead + Send>(
     reader: R,
     dim: usize,
@@ -272,26 +277,20 @@ pub fn train_streaming_sharded<R: BufRead + Send>(
             errors
         });
 
-        let consumers: Vec<_> = qs
-            .iter()
-            .map(|q| {
-                scope.spawn(move || {
-                    let mut trainer = LazyTrainer::new(dim, opts);
-                    let mut count = 0u64;
-                    let mut loss_sum = 0.0f64;
-                    while let Some(ex) = q.pop() {
-                        loss_sum += trainer.process_example(ex.view(), f64::from(ex.label));
-                        count += 1;
-                    }
-                    (trainer.into_model(), count, loss_sum)
-                })
-            })
-            .collect();
-
-        let results: Vec<(crate::model::LinearModel, u64, f64)> = consumers
-            .into_iter()
-            .map(|h| h.join().expect("shard worker panicked"))
-            .collect();
+        // Pool consumers drain their queues concurrently with the
+        // producer above; `scoped_workers` joins them in index order.
+        let results: Vec<(crate::model::LinearModel, u64, f64)> =
+            scoped_workers(workers, |w| {
+                let q = &qs[w];
+                let mut trainer = LazyTrainer::new(dim, opts);
+                let mut count = 0u64;
+                let mut loss_sum = 0.0f64;
+                while let Some(ex) = q.pop() {
+                    loss_sum += trainer.process_example(ex.view(), f64::from(ex.label));
+                    count += 1;
+                }
+                (trainer.into_model(), count, loss_sum)
+            });
         let parse_errors = producer.join().expect("producer panicked");
         (results, parse_errors)
     });
@@ -300,7 +299,7 @@ pub fn train_streaming_sharded<R: BufRead + Send>(
     let loss_sum: f64 = results.iter().map(|(_, _, l)| l).sum();
     let weighted: Vec<(&crate::model::LinearModel, u64)> =
         results.iter().map(|(m, c, _)| (m, *c)).collect();
-    let model = weighted_average(&weighted);
+    let model = merge_models(&weighted, opts.merge);
     let stats = StreamStats {
         examples,
         mean_loss: if examples > 0 { loss_sum / examples as f64 } else { 0.0 },
@@ -425,6 +424,24 @@ mod tests {
         let (b, _) = train_streaming_sharded(text.as_bytes(), 8, &opts, 4).unwrap();
         assert_eq!(a.weights, b.weights);
         assert_eq!(a.bias, b.bias);
+    }
+
+    #[test]
+    fn sharded_streaming_tree_merge_stays_close_to_flat() {
+        use crate::train::MergeMode;
+        let mut text = String::new();
+        for i in 0..200 {
+            text.push_str(if i % 3 == 0 { "1 1:1 2:1\n" } else { "0 3:1 4:1\n" });
+        }
+        let flat = TrainOptions { workers: 4, ..Default::default() };
+        let tree = TrainOptions { merge: MergeMode::Tree, ..flat };
+        let (a, _) = train_streaming_sharded(text.as_bytes(), 8, &flat, 4).unwrap();
+        let (b, _) = train_streaming_sharded(text.as_bytes(), 8, &tree, 4).unwrap();
+        // One end-of-stream merge: same weighted mean, different fold
+        // order — float-tolerance agreement, deterministically.
+        assert!(a.max_weight_diff(&b) < 1e-12);
+        let (b2, _) = train_streaming_sharded(text.as_bytes(), 8, &tree, 4).unwrap();
+        assert_eq!(b.weights, b2.weights);
     }
 
     #[test]

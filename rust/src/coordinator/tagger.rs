@@ -6,9 +6,10 @@
 //! each is O(p) per example with lazy updates, so the whole tagger is
 //! O(K·p) instead of O(K·d) — the difference between feasible and not.
 //!
-//! Coordination: a worker pool pulls tag indices from a shared work queue
-//! (work stealing keeps skewed tags balanced); every worker shares the
-//! read-only corpus and trains its own [`LazyTrainer`].
+//! Coordination: run-to-completion workers on the shared pool runtime
+//! ([`crate::train::scoped_workers`]) pull tag indices from a shared
+//! work queue (work stealing keeps skewed tags balanced); every worker
+//! shares the read-only corpus and trains its own [`LazyTrainer`].
 //!
 //! Orthogonally, `opts.workers > 1` shards *each tag's* training across
 //! data-parallel workers ([`crate::train::train_parallel_xy`]) — useful
@@ -23,7 +24,7 @@ use anyhow::Result;
 
 use crate::data::CsrMatrix;
 use crate::model::LinearModel;
-use crate::train::{train_parallel_xy, LazyTrainer, TrainOptions};
+use crate::train::{scoped_workers, train_parallel_xy, LazyTrainer, TrainOptions};
 use crate::util::Rng;
 
 /// Report from a one-vs-rest training run.
@@ -67,42 +68,38 @@ pub fn train_one_vs_rest(
     let slots_mutex = std::sync::Mutex::new(&mut slots);
 
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
-                loop {
-                    let k = next_tag.fetch_add(1, Ordering::Relaxed);
-                    if k >= tags.len() {
-                        break;
+    scoped_workers(workers, |_w| {
+        loop {
+            let k = next_tag.fetch_add(1, Ordering::Relaxed);
+            if k >= tags.len() {
+                break;
+            }
+            let labels = &tags[k];
+            let model = if opts.workers > 1 {
+                // Shard this tag's examples across data-parallel
+                // workers (per-tag seed keeps tags independent).
+                let mut o = *opts;
+                o.seed = opts.seed ^ (k as u64).wrapping_mul(0x9E37);
+                train_parallel_xy(x, labels, &o)
+                    .expect("options validated above")
+                    .model
+            } else {
+                let mut trainer = LazyTrainer::new(x.n_cols(), opts);
+                // Per-tag deterministic shuffle stream.
+                let mut rng = Rng::new(opts.seed ^ (k as u64).wrapping_mul(0x9E37));
+                let mut order: Vec<usize> = (0..x.n_rows()).collect();
+                for _ in 0..opts.epochs {
+                    if opts.shuffle {
+                        rng.shuffle(&mut order);
                     }
-                    let labels = &tags[k];
-                    let model = if opts.workers > 1 {
-                        // Shard this tag's examples across data-parallel
-                        // workers (per-tag seed keeps tags independent).
-                        let mut o = *opts;
-                        o.seed = opts.seed ^ (k as u64).wrapping_mul(0x9E37);
-                        train_parallel_xy(x, labels, &o)
-                            .expect("options validated above")
-                            .model
-                    } else {
-                        let mut trainer = LazyTrainer::new(x.n_cols(), opts);
-                        // Per-tag deterministic shuffle stream.
-                        let mut rng = Rng::new(opts.seed ^ (k as u64).wrapping_mul(0x9E37));
-                        let mut order: Vec<usize> = (0..x.n_rows()).collect();
-                        for _ in 0..opts.epochs {
-                            if opts.shuffle {
-                                rng.shuffle(&mut order);
-                            }
-                            for &r in &order {
-                                trainer.process_example(x.row(r), f64::from(labels[r]));
-                            }
-                        }
-                        trainer.into_model()
-                    };
-                    updates.fetch_add((x.n_rows() * opts.epochs) as u64, Ordering::Relaxed);
-                    slots_mutex.lock().unwrap()[k] = Some(model);
+                    for &r in &order {
+                        trainer.process_example(x.row(r), f64::from(labels[r]));
+                    }
                 }
-            });
+                trainer.into_model()
+            };
+            updates.fetch_add((x.n_rows() * opts.epochs) as u64, Ordering::Relaxed);
+            slots_mutex.lock().unwrap()[k] = Some(model);
         }
     });
     let seconds = t0.elapsed().as_secs_f64();

@@ -29,12 +29,20 @@
 //!   lazy update engine ([`optim`]: the [`optim::Penalty`] families,
 //!   [`optim::DpCache`], the closed forms in [`optim::lazy`]; [`train`]:
 //!   lazy/dense trainers behind the [`train::Trainer`] trait), the
-//!   **data-parallel sharded engine** ([`train::parallel`]: N lazy
-//!   workers over disjoint shards, synchronized by deterministic
-//!   example-weighted model averaging every `sync_interval` examples —
-//!   epoch-synchronous by default, `workers = 1` bit-identical to
-//!   serial), multi-worker orchestration ([`coordinator`]: one-vs-rest
-//!   tagging and sharded bounded-queue streaming), evaluation
+//!   **persistent worker-pool runtime** ([`train::pool`]: long-lived
+//!   workers owning their trainers, coordinated by barrier/condvar
+//!   rounds — no per-round thread respawn) with the data-parallel
+//!   sharded drivers on top ([`train::parallel`]: N lazy workers over
+//!   disjoint shards, synchronized by deterministic example-weighted
+//!   model averaging every `sync_interval` examples in a flat or
+//!   fixed-topology tree merge, optionally **pipelined** so the
+//!   O(d·workers) merge overlaps the next round's examples via a
+//!   one-round-stale broadcast — epoch-synchronous flat by default,
+//!   `workers = 1` bit-identical to serial, synchronous mode pinned
+//!   bitwise against the frozen PR 1 engine in [`testing::reference`]),
+//!   multi-worker orchestration ([`coordinator`]: one-vs-rest tagging
+//!   and sharded bounded-queue streaming, both running on the same
+//!   pool), evaluation
 //!   ([`eval`]), the **serving layer** ([`predict`]: the
 //!   [`predict::Predictor`] trait over native, **feature-sharded**
 //!   ([`predict::ShardedModel`] — the serving dual of the
@@ -111,6 +119,7 @@ pub mod prelude {
     pub use crate::optim::{Algo, Penalty, Regularizer, Schedule};
     pub use crate::predict::Predictor;
     pub use crate::train::{
-        train_dense, train_lazy, train_parallel, TrainOptions, TrainReport, Trainer,
+        train_dense, train_lazy, train_parallel, MergeMode, TrainOptions, TrainReport,
+        Trainer,
     };
 }

@@ -3,10 +3,13 @@
 //! Subcommands:
 //!   gen       generate a synthetic Medline-like corpus to libsvm
 //!   train     train a model (lazy by default; --dense baseline;
-//!             --workers N shards across data-parallel workers, with
-//!             --sync-interval M examples between model-averaging syncs;
-//!             --reg selects any registered penalty family, e.g.
-//!             `--reg enet:1e-5:1e-5`, `--reg tg:0.01:10:1.0` for
+//!             --workers N shards across the persistent worker pool,
+//!             with --sync-interval M examples between model-averaging
+//!             syncs, --merge flat|tree picking the deterministic merge
+//!             topology, and --pipeline-sync overlapping each round's
+//!             merge with the next round's examples (one-round-stale
+//!             broadcast); --reg selects any registered penalty family,
+//!             e.g. `--reg enet:1e-5:1e-5`, `--reg tg:0.01:10:1.0` for
 //!             truncated gradient with period 10 and ceiling 1.0, or
 //!             `--reg linf:0.1` for an l-inf ball of radius 0.1)
 //!   eval      evaluate a saved model on a libsvm dataset
@@ -93,6 +96,12 @@ fn options_from(args: &Args) -> Result<(TrainOptions, BowSpec, f64, u64)> {
     if let Some(m) = args.try_parse::<usize>("sync-interval")? {
         cfg.train.sync_interval = Some(m);
     }
+    if let Some(m) = args.opt("merge") {
+        cfg.train.merge = lazyreg::train::MergeMode::parse(m)?;
+    }
+    if args.flag("pipeline-sync") {
+        cfg.train.pipeline_sync = true;
+    }
     if let Some(n) = args.try_parse::<usize>("n")? {
         cfg.corpus.n_examples = n;
     }
@@ -154,11 +163,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let data = load_or_generate(args, &corpus, data_seed)?;
     let (train, test) = data.split(test_frac, EVAL_SPLIT_SEED);
     eprintln!(
-        "training on {} examples ({} held out), d={}, workers={}",
+        "training on {} examples ({} held out), d={}, workers={} (merge={}, {})",
         train.n_examples(),
         test.n_examples(),
         train.n_features(),
-        opts.workers
+        opts.workers,
+        opts.merge.name(),
+        if opts.pipeline_sync { "pipelined sync" } else { "synchronous" }
     );
     let report = match (args.flag("dense"), opts.workers > 1) {
         (true, true) => train_parallel_dense_xy(train.x(), train.labels(), &opts)?,
@@ -167,10 +178,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         (false, false) => train_lazy(&train, &opts)?,
     };
     for e in &report.epochs {
+        let merge = if opts.workers > 1 {
+            format!(", merge {:.3}s", e.merge_seconds)
+        } else {
+            String::new()
+        };
         eprintln!(
-            "epoch {}: loss={:.5} ({:.1}s, {})",
+            "epoch {}: loss={:.5} obj={:.5} ({:.1}s, {}{merge})",
             e.epoch,
             e.mean_loss,
+            e.objective,
             e.seconds,
             fmt::rate(e.examples as f64 / e.seconds.max(1e-9), "ex")
         );

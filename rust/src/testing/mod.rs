@@ -22,8 +22,12 @@
 //! [`penalty_laws`] builds on this harness: generic law-checkers proving
 //! the [`crate::optim::Penalty`] contract (catch-up ≡ sequential dense,
 //! transitivity, rebase invisibility) for every registered family.
+//! [`reference`] holds frozen copies of replaced engines (currently the
+//! PR 1 round-spawn parallel trainer) so refactors can be pinned
+//! bitwise against the behavior they claim to preserve.
 
 pub mod penalty_laws;
+pub mod reference;
 
 use crate::util::Rng;
 

@@ -1,0 +1,211 @@
+//! Frozen reference engines — behavior pins for refactored runtimes.
+//!
+//! [`round_spawn_train_xy`] is the PR 1 data-parallel engine exactly as
+//! it shipped: scoped threads **respawned every sync round**, flat
+//! index-order [`weighted_average`] merges, broadcast by
+//! [`Trainer::load_weights`]. The production runtime
+//! ([`crate::train::pool`]) replaced the respawn with a persistent
+//! barrier-coordinated pool; this copy exists so tests can assert the
+//! replacement is **bitwise-identical** in synchronous flat-merge mode
+//! (the acceptance bar for deleting the old path), and so
+//! `benches/parallel_scaling.rs` can measure the pool's per-round
+//! overhead win against the respawn baseline *in the same run*.
+//!
+//! Do not "improve" this module: its value is that it does not change.
+//! It intentionally ignores the post-PR 1 knobs (`merge`,
+//! `pipeline_sync`) — the original engine had neither.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::CsrMatrix;
+use crate::model::LinearModel;
+use crate::train::driver::{epoch_order, train_lazy_xy, EpochStats, TrainReport};
+use crate::train::{weighted_average, LazyTrainer, TrainOptions, Trainer};
+use crate::util::Rng;
+
+/// The original round-spawn engine over lazy workers (`workers <= 1`
+/// delegates to the serial driver, as it always did).
+pub fn round_spawn_train_lazy_xy(
+    x: &CsrMatrix,
+    labels: &[f32],
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    opts.validate()?;
+    anyhow::ensure!(
+        x.n_rows() == labels.len(),
+        "rows ({}) != labels ({})",
+        x.n_rows(),
+        labels.len()
+    );
+    let workers = opts.workers.min(x.n_rows().max(1));
+    if workers <= 1 {
+        return train_lazy_xy(x, labels, opts);
+    }
+    round_spawn_train_xy(x, labels, opts, workers, || LazyTrainer::new(x.n_cols(), opts))
+}
+
+/// The PR 1 sharded round loop, verbatim: spawn scoped threads per
+/// round, flat merge at every barrier.
+pub fn round_spawn_train_xy<T, F>(
+    x: &CsrMatrix,
+    labels: &[f32],
+    opts: &TrainOptions,
+    workers: usize,
+    make_trainer: F,
+) -> Result<TrainReport>
+where
+    T: Trainer + Send,
+    F: Fn() -> T,
+{
+    let n = x.n_rows();
+    let mut trainers: Vec<T> = (0..workers).map(|_| make_trainer()).collect();
+    let mut rng = Rng::new(opts.seed);
+    let mut epochs = Vec::with_capacity(opts.epochs);
+    let t0 = Instant::now();
+
+    for epoch in 0..opts.epochs {
+        let order = epoch_order(n, opts, &mut rng);
+        let shards = split_contiguous(&order, workers);
+        let interval = opts.sync_interval.unwrap_or(n.max(1));
+        let longest = shards.iter().map(|s| s.len()).max().unwrap_or(0);
+        let e0 = Instant::now();
+        let mut merge_seconds = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut offset = 0usize;
+        while offset < longest {
+            // One round: every worker advances up to `interval` examples
+            // of its shard in parallel, finalizing at the barrier. Each
+            // round respawns scoped threads — the overhead the pool
+            // runtime exists to remove.
+            let round: Vec<(f64, u64)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = trainers
+                    .iter_mut()
+                    .zip(shards.iter())
+                    .map(|(tr, shard)| {
+                        scope.spawn(move || {
+                            let lo = offset.min(shard.len());
+                            let hi = offset.saturating_add(interval).min(shard.len());
+                            let mut ls = 0.0f64;
+                            for &r in &shard[lo..hi] {
+                                ls += tr.process_example(x.row(r), f64::from(labels[r]));
+                            }
+                            tr.finalize();
+                            (ls, (hi - lo) as u64)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("parallel training worker panicked"))
+                    .collect()
+            });
+            loss_sum += round.iter().map(|(ls, _)| ls).sum::<f64>();
+            let counts: Vec<u64> = round.iter().map(|&(_, c)| c).collect();
+            let m0 = Instant::now();
+            merge_and_broadcast(&mut trainers, &counts);
+            merge_seconds += m0.elapsed().as_secs_f64();
+            offset = offset.saturating_add(interval);
+        }
+        let mean_loss = loss_sum / n.max(1) as f64;
+        epochs.push(EpochStats {
+            epoch,
+            mean_loss,
+            // All trainers hold the merged model after the broadcast.
+            objective: mean_loss + trainers[0].penalty_value(),
+            examples: n,
+            seconds: e0.elapsed().as_secs_f64(),
+            merge_seconds,
+        });
+    }
+
+    let seconds = t0.elapsed().as_secs_f64();
+    let examples = (n * opts.epochs) as u64;
+    let rebases: u64 = trainers.iter().map(|t| t.rebases()).sum();
+    let model = trainers.swap_remove(0).into_model();
+    Ok(TrainReport {
+        model,
+        examples,
+        seconds,
+        throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
+        epochs,
+        rebases,
+        penalty: opts.reg.name(),
+    })
+}
+
+/// Flat merge + broadcast, exactly as PR 1 shipped it.
+fn merge_and_broadcast<T: Trainer>(trainers: &mut [T], counts: &[u64]) {
+    if counts.iter().all(|&c| c == 0) {
+        return;
+    }
+    let merged = {
+        let models: Vec<(&LinearModel, u64)> = trainers
+            .iter()
+            .zip(counts.iter())
+            .map(|(t, &c)| (t.model(), c))
+            .collect();
+        weighted_average(&models)
+    };
+    for tr in trainers.iter_mut() {
+        tr.load_weights(&merged.weights, merged.bias);
+    }
+}
+
+/// Contiguous shards whose lengths differ by at most one (earlier
+/// shards get the extra examples) — PR 1's partition.
+fn split_contiguous(order: &[usize], k: usize) -> Vec<&[usize]> {
+    assert!(k >= 1);
+    let n = order.len();
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(&order[start..start + len]);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Algo, Regularizer, Schedule};
+    use crate::synth::{generate, BowSpec};
+    use crate::train::train_lazy;
+
+    #[test]
+    fn split_contiguous_covers_and_balances() {
+        let order: Vec<usize> = (0..10).collect();
+        let shards = split_contiguous(&order, 3);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[0], &[0, 1, 2, 3]);
+        assert_eq!(shards[1], &[4, 5, 6]);
+        assert_eq!(shards[2], &[7, 8, 9]);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 10);
+        // k > n: trailing shards are empty, never out of bounds
+        let small = split_contiguous(&order[..2], 4);
+        assert_eq!(small.iter().map(|s| s.len()).collect::<Vec<_>>(), vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn reference_delegates_to_serial_at_one_worker() {
+        let data = generate(&BowSpec::tiny(), 41);
+        let opts = TrainOptions {
+            algo: Algo::Fobos,
+            reg: Regularizer::elastic_net(1e-5, 1e-4),
+            schedule: Schedule::InvSqrtT { eta0: 0.5 },
+            epochs: 2,
+            workers: 1,
+            ..Default::default()
+        };
+        let serial = train_lazy(&data, &opts).unwrap();
+        let reference = round_spawn_train_lazy_xy(data.x(), data.labels(), &opts).unwrap();
+        assert_eq!(serial.model.weights, reference.model.weights);
+        assert_eq!(serial.model.bias, reference.model.bias);
+    }
+}

@@ -118,6 +118,12 @@ impl DenseTrainer {
     pub fn iterations(&self) -> u64 {
         self.t
     }
+
+    /// Penalty value `R(w)` of the current weights (always current for
+    /// dense updates), for objective logging.
+    pub fn penalty_value(&self) -> f64 {
+        self.reg.penalty(&self.model.weights)
+    }
 }
 
 #[cfg(test)]

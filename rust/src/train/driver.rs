@@ -21,10 +21,22 @@ pub struct EpochStats {
     pub epoch: usize,
     /// Mean online (pre-update) loss over the epoch.
     pub mean_loss: f64,
+    /// Regularized objective at epoch end: `mean_loss` plus the penalty
+    /// value `R(w)` of the epoch-final weights ([`Penalty::value`] via
+    /// the active regularizer) — the curve reports show, so runs under
+    /// different penalties stay comparable on what they optimize.
+    ///
+    /// [`Penalty::value`]: crate::optim::Penalty::value
+    pub objective: f64,
     /// Examples processed this epoch.
     pub examples: usize,
     /// Wall-clock seconds for the epoch.
     pub seconds: f64,
+    /// Seconds of this epoch spent in the merge+broadcast sync step
+    /// (parallel engines; 0 for the serial drivers). In pipelined mode
+    /// this is the coordinator's shadow-time merge cost — overhead that
+    /// overlaps example processing instead of serializing it.
+    pub merge_seconds: f64,
 }
 
 /// Result of a training run.
@@ -94,11 +106,16 @@ pub fn train_lazy_xy(x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -> Resu
         for &r in &order {
             loss_sum += trainer.process_example(x.row(r), f64::from(labels[r]));
         }
+        let mean_loss = loss_sum / order.len().max(1) as f64;
         epochs.push(EpochStats {
             epoch,
-            mean_loss: loss_sum / order.len().max(1) as f64,
+            mean_loss,
+            // `penalty_value` catches weights up transiently (no ψ/table
+            // mutation), so the logged objective cannot perturb training.
+            objective: mean_loss + trainer.penalty_value(),
             examples: order.len(),
             seconds: e0.elapsed().as_secs_f64(),
+            merge_seconds: 0.0,
         });
     }
     let seconds = t0.elapsed().as_secs_f64();
@@ -131,11 +148,14 @@ pub fn train_dense(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainRep
         for &r in &order {
             loss_sum += trainer.process_example(data.x().row(r), f64::from(data.labels()[r]));
         }
+        let mean_loss = loss_sum / order.len().max(1) as f64;
         epochs.push(EpochStats {
             epoch,
-            mean_loss: loss_sum / order.len().max(1) as f64,
+            mean_loss,
+            objective: mean_loss + trainer.penalty_value(),
             examples: order.len(),
             seconds: e0.elapsed().as_secs_f64(),
+            merge_seconds: 0.0,
         });
     }
     let seconds = t0.elapsed().as_secs_f64();
@@ -180,6 +200,11 @@ mod tests {
         );
         assert!(report.throughput > 0.0);
         assert_eq!(report.examples, 3 * 500);
+        for e in &report.epochs {
+            // Serial: no merge; objective = loss + a non-negative penalty.
+            assert_eq!(e.merge_seconds, 0.0);
+            assert!(e.objective.is_finite() && e.objective >= e.mean_loss);
+        }
     }
 
     #[test]

@@ -198,6 +198,18 @@ impl LazyTrainer {
         self.model
     }
 
+    /// Penalty value `R(w)` of the current weights, for objective
+    /// logging. Stale weights are caught up **transiently** (the same
+    /// closed-form snapshot [`Self::score_current`] uses) — ψ and the DP
+    /// tables are untouched, so training trajectories are bitwise
+    /// unaffected by when (or whether) this is called. O(d).
+    pub fn penalty_value(&self) -> f64 {
+        let snap = self.cache.snapshot();
+        let current: Vec<f64> =
+            self.slots.iter().map(|s| snap.catchup(s.w, s.psi)).collect();
+        self.penalty.penalty(&current)
+    }
+
     /// Global iteration count.
     pub fn iterations(&self) -> u64 {
         self.cache.global_t()
@@ -309,6 +321,27 @@ mod tests {
         b.finalize();
         let diff = a.model().max_weight_diff(b.model());
         assert!(diff < 1e-10, "flush changed semantics: diff={diff}");
+    }
+
+    #[test]
+    fn penalty_value_is_observation_only_and_matches_finalized() {
+        let x = two_docs();
+        let mut probed = LazyTrainer::new(6, &opts());
+        let mut clean = LazyTrainer::new(6, &opts());
+        for i in 0..20 {
+            let y = (i % 2 == 0) as u8 as f64;
+            probed.process_example(x.row(i % 2), y);
+            let _ = probed.penalty_value(); // mid-epoch observation
+            clean.process_example(x.row(i % 2), y);
+        }
+        let v = probed.penalty_value();
+        probed.finalize();
+        clean.finalize();
+        // Probing never perturbed the trajectory.
+        assert_eq!(probed.model().weights, clean.model().weights);
+        // And the value is the penalty of the (caught-up) weights.
+        let expect = opts().reg.penalty(&probed.model().weights);
+        assert!((v - expect).abs() <= 1e-12 * expect.abs().max(1.0), "{v} vs {expect}");
     }
 
     #[test]

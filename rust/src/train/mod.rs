@@ -1,20 +1,25 @@
 //! Trainers: the paper's lazy Algorithm 1, the dense baseline, the epoch
-//! driver that produces loss curves and throughput reports, and the
-//! data-parallel sharded engine that runs N lazy workers synchronized by
-//! deterministic model averaging.
+//! driver that produces loss/objective curves and throughput reports,
+//! and the persistent worker-pool runtime ([`pool`]) that runs every
+//! parallel-training configuration — barrier-coordinated sharded rounds
+//! (synchronous or pipelined, flat or tree merges) plus the
+//! run-to-completion workers behind the streaming and one-vs-rest
+//! coordinators.
 
 pub mod dense_trainer;
 pub mod driver;
 pub mod lazy_trainer;
 pub mod options;
 pub mod parallel;
+pub mod pool;
 pub mod trainer;
 
 pub use dense_trainer::DenseTrainer;
 pub use driver::{train_dense, train_lazy, train_lazy_xy, EpochStats, TrainReport};
 pub use lazy_trainer::LazyTrainer;
 pub use options::TrainOptions;
-pub use parallel::{
-    train_parallel, train_parallel_dense_xy, train_parallel_xy, weighted_average,
+pub use parallel::{train_parallel, train_parallel_dense_xy, train_parallel_xy};
+pub use pool::{
+    merge_models, scoped_workers, tree_weighted_average, weighted_average, MergeMode,
 };
 pub use trainer::Trainer;

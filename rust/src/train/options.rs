@@ -3,6 +3,8 @@
 use crate::loss::Loss;
 use crate::optim::{Algo, Penalty, Regularizer, Schedule};
 
+use super::pool::MergeMode;
+
 /// Options controlling a training run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TrainOptions {
@@ -33,6 +35,17 @@ pub struct TrainOptions {
     /// `None` (the default) is epoch-synchronous: one merge per epoch.
     /// Ignored when `workers == 1`.
     pub sync_interval: Option<usize>,
+    /// Merge topology of the sync step: `flat` (index-order
+    /// accumulation, the historical merge) or `tree` (fixed-topology
+    /// pairwise reduce — same weights up to float rounding). Ignored
+    /// when `workers == 1`.
+    pub merge: MergeMode,
+    /// Overlap each round's O(d·workers) merge with the next round's
+    /// example processing; the merged model is applied one round late
+    /// (deterministic stale-synchronous averaging — see
+    /// [`crate::train::pool`]). `false` (the default) is fully
+    /// synchronous. Ignored when `workers == 1`.
+    pub pipeline_sync: bool,
 }
 
 impl Default for TrainOptions {
@@ -48,6 +61,8 @@ impl Default for TrainOptions {
             space_budget: None,
             workers: 1,
             sync_interval: None,
+            merge: MergeMode::Flat,
+            pipeline_sync: false,
         }
     }
 }
@@ -111,6 +126,20 @@ mod tests {
         let mut o = TrainOptions::default();
         o.schedule = Schedule::Step { eta0: 0.5, every: 0, factor: 0.5 };
         assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn pool_knobs_validate() {
+        // Both merge topologies and the pipelined flag are always legal
+        // (each is a pure runtime choice, ignored at workers == 1).
+        for merge in [MergeMode::Flat, MergeMode::Tree] {
+            for pipeline_sync in [false, true] {
+                let o = TrainOptions { merge, pipeline_sync, workers: 4, ..Default::default() };
+                o.validate().unwrap();
+            }
+        }
+        assert_eq!(TrainOptions::default().merge, MergeMode::Flat);
+        assert!(!TrainOptions::default().pipeline_sync);
     }
 
     #[test]

@@ -1,34 +1,43 @@
-//! Data-parallel sharded training with deterministic model averaging.
+//! Data-parallel sharded training drivers over the persistent worker
+//! pool ([`super::pool`]).
 //!
 //! The paper's lazy updates make one *thread* fast — O(p) per example —
-//! but the seed trained on a single core. This engine adds the next axis:
-//! shard the epoch's visit order across `opts.workers` threads, each
-//! running its own [`Trainer`] (a [`LazyTrainer`] in production) over a
-//! disjoint contiguous slice of the (deterministically shuffled) order,
-//! and periodically synchronize by **example-weighted model averaging**
-//! (Zinkevich-style parallel SGD). The merge is deterministic: workers
-//! are combined in index order with fixed floating-point evaluation
-//! order, so a run is a pure function of `(data, options)` regardless of
-//! thread timing.
+//! and this layer adds the next axis: shard the epoch's visit order
+//! across `opts.workers` threads, each running its own [`Trainer`] (a
+//! [`LazyTrainer`] in production) over a disjoint contiguous slice of
+//! the (deterministically shuffled) order, periodically synchronized by
+//! **example-weighted model averaging** (Zinkevich-style parallel SGD).
+//! The runtime is the pool: workers are spawned **once** per training
+//! run and coordinated by barrier/condvar rounds, so the per-round cost
+//! is a rendezvous, not a thread spawn — small `sync_interval`s on huge
+//! corpora are a first-class workload, not a footgun.
 //!
-//! ## Sync cadence
+//! ## Sync cadence and topology
 //!
 //! * `sync_interval = None` (default): epoch-synchronous — one merge at
 //!   each epoch boundary. Lowest overhead.
 //! * `sync_interval = Some(m)`: each worker processes `m` examples of
-//!   its shard, then all workers barrier, average, and broadcast. More
-//!   O(d) merges, tighter coupling between shards.
+//!   its shard per round, then all workers synchronize.
+//! * `merge = flat | tree` ([`MergeMode`]): index-order accumulation
+//!   (the historical merge) or a fixed-topology pairwise tree — same
+//!   weights up to float rounding, deterministic either way.
+//! * `pipeline_sync = true`: overlap the O(d·workers) merge of round
+//!   *r* with round *r+1*'s example processing; the merged model is
+//!   applied one round late (a defined, deterministic stale-synchronous
+//!   estimator — see [`super::pool`] for the telescoping argument).
+//!   Synchronous remains the default.
 //!
-//! ## Semantics — the three-way equivalence
+//! ## Semantics — the equivalence ladder
 //!
 //! * `workers == 1` delegates to the serial lazy driver — **bit-identical**
 //!   to [`train_lazy`] by construction.
+//! * Synchronous pool training is **bit-identical to the original
+//!   round-spawn engine** (PR 1) for any worker count — pinned by tests
+//!   against the frozen copy in [`crate::testing::reference`].
 //! * For any worker count, running the engine with lazy workers equals
 //!   running it with dense workers ([`train_parallel_dense_xy`]) up to
 //!   float rounding: the per-worker update maps are the paper's exact
 //!   lazy ≡ dense equivalence, and the merge schedule is identical.
-//!   The integration suite asserts this to well beyond the paper's
-//!   4-significant-figure criterion.
 //! * `workers > 1` is a *different estimator* from serial SGD (averaged
 //!   shard trajectories move ~1/workers as far per example as a serial
 //!   pass); it converges to the same regularized optimum but is not
@@ -42,26 +51,26 @@
 //! relies on.
 //!
 //! [`train_lazy`]: super::train_lazy
-
-use std::time::Instant;
+//! [`MergeMode`]: super::pool::MergeMode
 
 use anyhow::Result;
 
 use crate::data::{CsrMatrix, SparseDataset};
-use crate::model::LinearModel;
-use crate::util::Rng;
 
 use super::dense_trainer::DenseTrainer;
-use super::driver::{epoch_order, train_lazy_xy, EpochStats, TrainReport};
+use super::driver::{train_lazy_xy, TrainReport};
 use super::lazy_trainer::LazyTrainer;
 use super::options::TrainOptions;
+use super::pool;
 use super::trainer::Trainer;
 
-/// Train with `opts.workers` data-parallel lazy workers.
+/// Train with `opts.workers` data-parallel lazy workers on the
+/// persistent pool.
 ///
 /// `workers == 1` is bit-identical to [`train_lazy`]; `workers > 1`
 /// shards each epoch's visit order and merges by example-weighted model
-/// averaging every `sync_interval` examples (default: per epoch).
+/// averaging every `sync_interval` examples (default: per epoch), with
+/// the topology and pipelining set by `opts.merge` / `opts.pipeline_sync`.
 ///
 /// [`train_lazy`]: super::train_lazy
 pub fn train_parallel(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainReport> {
@@ -108,7 +117,8 @@ fn check_and_clamp_workers(x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -
     Ok(opts.workers.min(x.n_rows().max(1)))
 }
 
-/// The sharded round loop, generic over the worker trainer type.
+/// The sharded round engine, generic over the worker trainer type —
+/// a thin wrapper over the persistent pool runtime ([`pool::run`]).
 fn run_sharded<T, F>(
     x: &CsrMatrix,
     labels: &[f32],
@@ -120,152 +130,17 @@ where
     T: Trainer + Send,
     F: Fn() -> T,
 {
-    let n = x.n_rows();
-    let mut trainers: Vec<T> = (0..workers).map(|_| make_trainer()).collect();
-    let mut rng = Rng::new(opts.seed);
-    let mut epochs = Vec::with_capacity(opts.epochs);
-    let t0 = Instant::now();
-
-    for epoch in 0..opts.epochs {
-        let order = epoch_order(n, opts, &mut rng);
-        let shards = split_contiguous(&order, workers);
-        let interval = opts.sync_interval.unwrap_or(n.max(1));
-        let longest = shards.iter().map(|s| s.len()).max().unwrap_or(0);
-        let e0 = Instant::now();
-        let mut loss_sum = 0.0f64;
-        let mut offset = 0usize;
-        while offset < longest {
-            // One round: every worker advances up to `interval` examples
-            // of its shard in parallel, finalizing at the barrier.
-            //
-            // Rounds respawn scoped threads (~tens of µs per round):
-            // negligible at the epoch-synchronous default or moderate
-            // intervals, but a persistent worker pool with a
-            // `std::sync::Barrier` is the next step if very small
-            // `sync_interval`s on huge corpora become a real workload
-            // (see ROADMAP).
-            let round: Vec<(f64, u64)> = std::thread::scope(|scope| {
-                let handles: Vec<_> = trainers
-                    .iter_mut()
-                    .zip(shards.iter())
-                    .map(|(tr, shard)| {
-                        scope.spawn(move || {
-                            let lo = offset.min(shard.len());
-                            let hi = offset.saturating_add(interval).min(shard.len());
-                            let mut ls = 0.0f64;
-                            for &r in &shard[lo..hi] {
-                                ls += tr.process_example(x.row(r), f64::from(labels[r]));
-                            }
-                            tr.finalize();
-                            (ls, (hi - lo) as u64)
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("parallel training worker panicked"))
-                    .collect()
-            });
-            loss_sum += round.iter().map(|(ls, _)| ls).sum::<f64>();
-            let counts: Vec<u64> = round.iter().map(|&(_, c)| c).collect();
-            merge_and_broadcast(&mut trainers, &counts);
-            offset = offset.saturating_add(interval);
-        }
-        epochs.push(EpochStats {
-            epoch,
-            mean_loss: loss_sum / n.max(1) as f64,
-            examples: n,
-            seconds: e0.elapsed().as_secs_f64(),
-        });
-    }
-
-    let seconds = t0.elapsed().as_secs_f64();
-    let examples = (n * opts.epochs) as u64;
-    let rebases: u64 = trainers.iter().map(|t| t.rebases()).sum();
-    // Every trainer holds the merged model after the final broadcast.
-    let model = trainers.swap_remove(0).into_model();
-    Ok(TrainReport {
-        model,
-        examples,
-        seconds,
-        throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
-        epochs,
-        rebases,
-        penalty: opts.reg.name(),
-    })
-}
-
-/// Example-weighted average of per-worker models — the merge half of the
-/// sync step, also used by the sharded streaming pipeline. Models with
-/// weight 0 are skipped; if every weight is 0 the first model is
-/// returned unchanged. Deterministic: fixed iteration and FP order.
-pub fn weighted_average(models: &[(&LinearModel, u64)]) -> LinearModel {
-    assert!(!models.is_empty(), "weighted_average of no models");
-    let d = models[0].0.dim();
-    let total: u64 = models.iter().map(|&(_, c)| c).sum();
-    if total == 0 {
-        return models[0].0.clone();
-    }
-    let mut out = LinearModel::zeros(d, models[0].0.loss);
-    // All merge inputs trained under the same options; keep provenance.
-    out.penalty = models[0].0.penalty.clone();
-    for &(m, c) in models {
-        assert_eq!(m.dim(), d, "weighted_average: dimension mismatch");
-        if c == 0 {
-            continue;
-        }
-        let wgt = c as f64 / total as f64;
-        for (acc, &w) in out.weights.iter_mut().zip(m.weights.iter()) {
-            *acc += wgt * w;
-        }
-        out.bias += wgt * m.bias;
-    }
-    out
-}
-
-/// Average the (finalized) worker models weighted by the number of
-/// examples each processed this round, then broadcast the result back
-/// into every worker.
-fn merge_and_broadcast<T: Trainer>(trainers: &mut [T], counts: &[u64]) {
-    if counts.iter().all(|&c| c == 0) {
-        return;
-    }
-    let merged = {
-        let models: Vec<(&LinearModel, u64)> = trainers
-            .iter()
-            .zip(counts.iter())
-            .map(|(t, &c)| (t.model(), c))
-            .collect();
-        weighted_average(&models)
-    };
-    for tr in trainers.iter_mut() {
-        tr.load_weights(&merged.weights, merged.bias);
-    }
-}
-
-/// Split `order` into `k` contiguous shards whose lengths differ by at
-/// most one (earlier shards get the extra examples).
-fn split_contiguous(order: &[usize], k: usize) -> Vec<&[usize]> {
-    assert!(k >= 1);
-    let n = order.len();
-    let base = n / k;
-    let extra = n % k;
-    let mut out = Vec::with_capacity(k);
-    let mut start = 0usize;
-    for i in 0..k {
-        let len = base + usize::from(i < extra);
-        out.push(&order[start..start + len]);
-        start += len;
-    }
-    out
+    pool::run(x, labels, opts, workers, make_trainer)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::loss::Loss;
+    use crate::model::LinearModel;
     use crate::optim::{Algo, Regularizer, Schedule};
     use crate::synth::{generate, BowSpec};
+    use crate::train::pool::weighted_average;
     use crate::train::{train_dense, train_lazy};
 
     fn opts(workers: usize) -> TrainOptions {
@@ -277,21 +152,6 @@ mod tests {
             workers,
             ..Default::default()
         }
-    }
-
-    #[test]
-    fn split_contiguous_covers_and_balances() {
-        let order: Vec<usize> = (0..10).collect();
-        let shards = split_contiguous(&order, 3);
-        assert_eq!(shards.len(), 3);
-        assert_eq!(shards[0], &[0, 1, 2, 3]);
-        assert_eq!(shards[1], &[4, 5, 6]);
-        assert_eq!(shards[2], &[7, 8, 9]);
-        let total: usize = shards.iter().map(|s| s.len()).sum();
-        assert_eq!(total, 10);
-        // k > n: trailing shards are empty, never out of bounds
-        let small = split_contiguous(&order[..2], 4);
-        assert_eq!(small.iter().map(|s| s.len()).collect::<Vec<_>>(), vec![1, 1, 0, 0]);
     }
 
     #[test]
@@ -347,6 +207,21 @@ mod tests {
         let dense = train_parallel_dense_xy(data.x(), data.labels(), &o).unwrap();
         let diff = lazy.model.max_weight_diff(&dense.model);
         assert!(diff < 1e-8, "parallel lazy vs dense diff {diff}");
+    }
+
+    #[test]
+    fn pipelined_lazy_and_dense_workers_agree_through_the_engine() {
+        // The lazy == dense per-update equivalence survives the
+        // stale-synchronous pipeline: identical round/rebase schedule on
+        // both sides.
+        let data = generate(&BowSpec::tiny(), 23);
+        let mut o = opts(3);
+        o.sync_interval = Some(20);
+        o.pipeline_sync = true;
+        let lazy = train_parallel(&data, &o).unwrap();
+        let dense = train_parallel_dense_xy(data.x(), data.labels(), &o).unwrap();
+        let diff = lazy.model.max_weight_diff(&dense.model);
+        assert!(diff < 1e-8, "pipelined lazy vs dense diff {diff}");
     }
 
     #[test]

@@ -1,0 +1,995 @@
+//! The persistent worker-pool training runtime.
+//!
+//! One pool owns every parallel-training configuration in the crate:
+//!
+//! * **Round-synchronized sharded training** (`run`, driven by the
+//!   public [`super::parallel`] drivers) — `workers`
+//!   long-lived threads, each owning its [`Trainer`], coordinated by a
+//!   poisonable round barrier (plus two condvar sequence slots for epoch
+//!   orders and merged models) instead of the per-round `thread::scope`
+//!   respawn of the original engine. Threads are spawned once per run; a
+//!   round costs two barrier crossings (~hundreds of ns), not a
+//!   spawn+join (~tens of µs) — the difference the `parallel_scaling`
+//!   bench's `--json` mode measures at small `sync_interval`.
+//! * **Run-to-completion workers** ([`scoped_workers`]) — the same
+//!   "spawn once, run to completion, join in index order" shape used by
+//!   the streaming shard consumers ([`crate::coordinator::pipeline`])
+//!   and the one-vs-rest tag slots ([`crate::coordinator::tagger`]).
+//!
+//! ## Merge topologies
+//!
+//! The sync step averages per-worker models weighted by the number of
+//! examples each processed this round. Two deterministic topologies:
+//!
+//! * [`MergeMode::Flat`] (default) — [`weighted_average`]: accumulate
+//!   workers in index order into one output vector. Bitwise-identical to
+//!   the original round-spawn engine (pinned against
+//!   [`crate::testing::reference`]).
+//! * [`MergeMode::Tree`] — [`tree_weighted_average`]: pair adjacent
+//!   workers and combine level by level, the same fixed-topology
+//!   associative-combine idea as the block partials in
+//!   [`crate::predict::sharded`]. The pairwise combine
+//!   `(cₐ·A + c_b·B)/(cₐ+c_b)` is weight-exact but rounds differently
+//!   from the flat fold (float addition is not associative), so tree and
+//!   flat agree to float tolerance, not bitwise. The topology depends
+//!   only on the worker count — never on thread timing — so either mode
+//!   is a pure function of `(data, options)`.
+//!
+//! ## Pipelined sync (`TrainOptions::pipeline_sync`)
+//!
+//! Synchronous rounds serialize the O(d·workers) merge between rounds.
+//! The opt-in pipelined mode overlaps it: the coordinator computes round
+//! *r*'s merge while the workers already process round *r+1*, and the
+//! merged model is applied **one round late** — a defined, deterministic
+//! estimator (stale-synchronous model averaging with staleness 1), not a
+//! racy approximation:
+//!
+//! * At the end of round *r* every worker rebases its local model onto
+//!   the (just-arrived) round *r−1* merge: `w ← M⁽ʳ⁻¹⁾ + (w − s)` where
+//!   `s` is the snapshot it published at the end of round *r−1*, then
+//!   publishes its new snapshot for merge *r*.
+//! * Hence `M⁽ʳ⁾ = M⁽ʳ⁻¹⁾ + Σ c_w·Δ_w⁽ʳ⁾ / Σ c_w`: the chain telescopes
+//!   and every example's update enters exactly one merge — nothing is
+//!   lost at the pipeline drain, and the final model is the last merge.
+//! * One barrier per round instead of two; the merge runs entirely in
+//!   the coordinator's shadow time.
+//!
+//! The *lazy* parallel driver never sends `workers == 1` here (it
+//! delegates to the bitwise-identical serial path first), but the dense
+//! comparator driver does: a single-worker pool is a well-defined
+//! configuration whose every merge is an exact self-copy.
+//!
+//! ## Failure semantics
+//!
+//! A panic on any pool thread (a trainer bug, a merge assert) poisons
+//! the shared coordination primitives (`RoundBarrier`, the sequence
+//! slots), waking every parked thread with a panic so the whole run
+//! fails fast — the same promptness the old engine got from per-round
+//! `join().expect`, instead of a silent deadlock at the barrier.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::CsrMatrix;
+use crate::model::LinearModel;
+use crate::util::Rng;
+
+use super::driver::{epoch_order, EpochStats, TrainReport};
+use super::options::TrainOptions;
+use super::trainer::Trainer;
+
+/// Deterministic topology of the model-averaging sync step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MergeMode {
+    /// Index-order accumulation ([`weighted_average`]) — the historical
+    /// merge, bitwise-identical to the pre-pool engine.
+    #[default]
+    Flat,
+    /// Fixed-topology pairwise tree ([`tree_weighted_average`]) — same
+    /// weights up to float rounding, O(log workers) depth.
+    Tree,
+}
+
+impl MergeMode {
+    /// Parse `"flat"` or `"tree"`.
+    pub fn parse(s: &str) -> Result<MergeMode> {
+        s.parse()
+    }
+
+    /// Name for reports/config; [`MergeMode::parse`] round-trips it.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergeMode::Flat => "flat",
+            MergeMode::Tree => "tree",
+        }
+    }
+}
+
+impl std::str::FromStr for MergeMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<MergeMode> {
+        match s {
+            "flat" => Ok(MergeMode::Flat),
+            "tree" => Ok(MergeMode::Tree),
+            _ => anyhow::bail!("unknown merge mode {s:?} (expected flat|tree)"),
+        }
+    }
+}
+
+/// Example-weighted average of per-worker models in index order — the
+/// flat merge, also used by the sharded streaming pipeline. Models with
+/// weight 0 are skipped; if every weight is 0 the first model is
+/// returned unchanged. Deterministic: fixed iteration and FP order.
+pub fn weighted_average(models: &[(&LinearModel, u64)]) -> LinearModel {
+    assert!(!models.is_empty(), "weighted_average of no models");
+    let d = models[0].0.dim();
+    let total: u64 = models.iter().map(|&(_, c)| c).sum();
+    if total == 0 {
+        return models[0].0.clone();
+    }
+    let mut out = LinearModel::zeros(d, models[0].0.loss);
+    // All merge inputs trained under the same options; keep provenance.
+    out.penalty = models[0].0.penalty.clone();
+    for &(m, c) in models {
+        assert_eq!(m.dim(), d, "weighted_average: dimension mismatch");
+        if c == 0 {
+            continue;
+        }
+        let wgt = c as f64 / total as f64;
+        for (acc, &w) in out.weights.iter_mut().zip(m.weights.iter()) {
+            *acc += wgt * w;
+        }
+        out.bias += wgt * m.bias;
+    }
+    out
+}
+
+/// Example-weighted average with a **fixed pairwise-tree topology**:
+/// adjacent models are combined level by level (the combine
+/// `(cₐ·A + c_b·B)/(cₐ + c_b)` carries the summed weight upward), the
+/// same shape as the block-partial reduce in [`crate::predict::sharded`].
+/// Mathematically identical to [`weighted_average`]; rounds differently
+/// (float addition is not associative) but deterministically — the tree
+/// shape depends only on `models.len()`.
+pub fn tree_weighted_average(models: &[(&LinearModel, u64)]) -> LinearModel {
+    assert!(!models.is_empty(), "tree_weighted_average of no models");
+    let d = models[0].0.dim();
+    let total: u64 = models.iter().map(|&(_, c)| c).sum();
+    if total == 0 {
+        return models[0].0.clone();
+    }
+    for &(m, _) in models {
+        assert_eq!(m.dim(), d, "tree_weighted_average: dimension mismatch");
+    }
+    // Level 0 combines *borrowed* pairs straight into owned nodes, so a
+    // k-way merge allocates ⌈k/2⌉ vectors instead of cloning all k
+    // inputs first — this runs on the per-round sync path.
+    let mut layer: Vec<(LinearModel, u64)> = Vec::with_capacity(models.len().div_ceil(2));
+    let mut leaves = models.iter();
+    while let Some(&(a, ca)) = leaves.next() {
+        match leaves.next() {
+            Some(&(b, cb)) => layer.push(combine_borrowed(a, ca, b, cb)),
+            None => layer.push((a.clone(), ca)),
+        }
+    }
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.into_iter();
+        while let Some(left) = it.next() {
+            match it.next() {
+                Some(right) => next.push(combine_weighted(left, right)),
+                None => next.push(left),
+            }
+        }
+        layer = next;
+    }
+    let (mut out, _) = layer.pop().expect("non-empty layer");
+    out.penalty = models[0].0.penalty.clone();
+    out
+}
+
+/// One tree-combine step: `(cₐ·A + c_b·B)/(cₐ + c_b)` elementwise,
+/// carrying the combined example weight. Zero-weight sides pass the
+/// other side through unchanged (exact).
+fn combine_weighted(a: (LinearModel, u64), b: (LinearModel, u64)) -> (LinearModel, u64) {
+    let (mut am, ac) = a;
+    let (bm, bc) = b;
+    if bc == 0 {
+        return (am, ac);
+    }
+    if ac == 0 {
+        return (bm, bc);
+    }
+    let total = ac + bc;
+    let wa = ac as f64 / total as f64;
+    let wb = bc as f64 / total as f64;
+    for (x, &y) in am.weights.iter_mut().zip(bm.weights.iter()) {
+        *x = wa * *x + wb * y;
+    }
+    am.bias = wa * am.bias + wb * bm.bias;
+    (am, total)
+}
+
+/// [`combine_weighted`] over borrowed leaves (tree level 0) — identical
+/// arithmetic (`wa·x + wb·y` per element), writing into one fresh
+/// output instead of cloning both inputs.
+fn combine_borrowed(a: &LinearModel, ca: u64, b: &LinearModel, cb: u64) -> (LinearModel, u64) {
+    if cb == 0 {
+        return (a.clone(), ca);
+    }
+    if ca == 0 {
+        return (b.clone(), cb);
+    }
+    let total = ca + cb;
+    let wa = ca as f64 / total as f64;
+    let wb = cb as f64 / total as f64;
+    let mut out = LinearModel::zeros(a.dim(), a.loss);
+    for ((o, &x), &y) in out.weights.iter_mut().zip(a.weights.iter()).zip(b.weights.iter()) {
+        *o = wa * x + wb * y;
+    }
+    out.bias = wa * a.bias + wb * b.bias;
+    (out, total)
+}
+
+/// Dispatch on the configured merge topology.
+pub fn merge_models(models: &[(&LinearModel, u64)], mode: MergeMode) -> LinearModel {
+    match mode {
+        MergeMode::Flat => weighted_average(models),
+        MergeMode::Tree => tree_weighted_average(models),
+    }
+}
+
+/// Run `workers` dedicated worker threads to completion and collect
+/// their results in worker-index order. The run-to-completion face of
+/// the pool: threads are spawned once for the whole job and joined at
+/// the end (there is no round structure to amortize, unlike `run`).
+/// Streaming shard consumers and one-vs-rest tag slots run on this, so
+/// every parallel-training path shares one spawn/join runtime.
+pub fn scoped_workers<R, F>(workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let f = &f;
+                scope.spawn(move || f(w))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    })
+}
+
+/// `[start, start + len)` of worker `w`'s contiguous shard of an
+/// `n`-element epoch order: lengths differ by at most one, earlier
+/// shards take the extras — the same partition as the original engine's
+/// `split_contiguous`.
+fn shard_range(n: usize, workers: usize, w: usize) -> Range<usize> {
+    debug_assert!(w < workers);
+    let base = n / workers;
+    let extra = n % workers;
+    let start = w * base + w.min(extra);
+    start..start + base + usize::from(w < extra)
+}
+
+/// Longest shard length (worker 0 by construction).
+fn longest_shard(n: usize, workers: usize) -> usize {
+    shard_range(n, workers, 0).len()
+}
+
+/// Message every poisoned primitive panics with — a deliberate panic so
+/// a crashed pool fails the whole run fast instead of deadlocking.
+const POISONED: &str = "worker pool poisoned: a pool thread panicked";
+
+/// A reusable round barrier **with poisoning**. `std::sync::Barrier`
+/// cannot be poisoned: if one participant panics, every other thread
+/// parks at the rendezvous forever and the run hangs (the old
+/// round-spawn engine failed fast through `join().expect`). Here a
+/// panicking participant calls [`RoundBarrier::poison`], which wakes
+/// all current and future waiters with a panic instead.
+struct RoundBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    parties: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl RoundBarrier {
+    fn new(parties: usize) -> RoundBarrier {
+        assert!(parties >= 1);
+        RoundBarrier {
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+            parties,
+        }
+    }
+
+    fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.poisoned, "{}", POISONED);
+        st.arrived += 1;
+        if st.arrived == self.parties {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            drop(st);
+            self.cv.notify_all();
+            return;
+        }
+        let gen = st.generation;
+        while st.generation == gen && !st.poisoned {
+            st = self.cv.wait(st).unwrap();
+        }
+        assert!(!st.poisoned, "{}", POISONED);
+    }
+
+    fn poison(&self) {
+        // Tolerate a Mutex poisoned by a panic inside `wait`: this runs
+        // on the cleanup path and must not panic itself.
+        match self.state.lock() {
+            Ok(mut st) => st.poisoned = true,
+            Err(p) => p.into_inner().poisoned = true,
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// A single-value publish/subscribe slot keyed by a monotone sequence
+/// number, with the same poisoning contract as [`RoundBarrier`]. Used
+/// for the per-epoch visit orders (workers block until their epoch's
+/// order is up) and for the pipelined merged-model hand-off (only the
+/// latest value is kept — every consumer takes sequence `s` before the
+/// producer can reach `s + 1`).
+struct SeqSlot<T> {
+    state: Mutex<SeqState<T>>,
+    cv: Condvar,
+}
+
+struct SeqState<T> {
+    poisoned: bool,
+    value: Option<(usize, T)>,
+}
+
+impl<T: Clone> SeqSlot<T> {
+    fn new() -> SeqSlot<T> {
+        SeqSlot { state: Mutex::new(SeqState { poisoned: false, value: None }), cv: Condvar::new() }
+    }
+
+    fn publish(&self, seq: usize, value: T) {
+        self.state.lock().unwrap().value = Some((seq, value));
+        self.cv.notify_all();
+    }
+
+    fn wait_for(&self, seq: usize) -> T {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            assert!(!st.poisoned, "{}", POISONED);
+            if let Some((s, v)) = st.value.as_ref() {
+                debug_assert!(*s <= seq, "seq slot ran ahead");
+                if *s == seq {
+                    return v.clone();
+                }
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Drop the retained value (releases the slot's `Arc` so the final
+    /// model can be unwrapped without a copy).
+    fn take(&self) -> Option<(usize, T)> {
+        self.state.lock().unwrap().value.take()
+    }
+
+    fn poison(&self) {
+        // See `RoundBarrier::poison` — must not panic on the cleanup path.
+        match self.state.lock() {
+            Ok(mut st) => st.poisoned = true,
+            Err(p) => p.into_inner().poisoned = true,
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Per-round worker output: (loss sum, examples processed).
+type RoundOut = (f64, u64);
+
+/// A worker's post-rebase model snapshot + its round example count —
+/// the merge input in pipelined mode.
+type Snapshot = (LinearModel, u64);
+
+/// Shared coordination state between the coordinator and the pool.
+struct PoolShared<T> {
+    trainers: Vec<Mutex<T>>,
+    round_out: Vec<Mutex<RoundOut>>,
+    snapshots: Vec<Mutex<Option<Snapshot>>>,
+    /// Size `workers + 1`: the coordinator participates in every round.
+    barrier: RoundBarrier,
+    gate: SeqSlot<Arc<Vec<usize>>>,
+    merge_slot: SeqSlot<Arc<LinearModel>>,
+}
+
+impl<T> PoolShared<T> {
+    /// Wake every parked pool thread with a panic (see module docs,
+    /// "Failure semantics").
+    fn poison_all(&self) {
+        self.barrier.poison();
+        self.gate.poison();
+        self.merge_slot.poison();
+    }
+}
+
+/// The persistent-pool sharded round engine, generic over the worker
+/// trainer type. Spawns `workers` threads once, runs
+/// `epochs × ⌈longest-shard / interval⌉` barrier-coordinated rounds, and
+/// returns the merged model. Synchronous unless `opts.pipeline_sync`.
+///
+/// Callers guarantee `1 ≤ workers ≤ n` and validated options (the
+/// public drivers in [`super::parallel`] do both).
+pub(crate) fn run<T, F>(
+    x: &CsrMatrix,
+    labels: &[f32],
+    opts: &TrainOptions,
+    workers: usize,
+    make_trainer: F,
+) -> Result<TrainReport>
+where
+    T: Trainer + Send,
+    F: Fn() -> T,
+{
+    let n = x.n_rows();
+    if n == 0 {
+        // Degenerate zero-round case, reachable through the dense
+        // comparator driver (it enters the pool even at the clamped
+        // workers == 1). Short-circuit before spawning: zero-round
+        // epochs cross no barriers, so the single-value epoch gate
+        // could outrun a worker that never rendezvous and hang the run.
+        let mut trainer = make_trainer();
+        let epochs_out: Vec<EpochStats> = (0..opts.epochs)
+            .map(|epoch| EpochStats {
+                epoch,
+                mean_loss: 0.0,
+                objective: trainer.penalty_value(),
+                examples: 0,
+                seconds: 0.0,
+                merge_seconds: 0.0,
+            })
+            .collect();
+        trainer.finalize();
+        return Ok(TrainReport {
+            model: trainer.into_model(),
+            examples: 0,
+            seconds: 0.0,
+            throughput: 0.0,
+            epochs: epochs_out,
+            rebases: 0,
+            penalty: opts.reg.name(),
+        });
+    }
+    let pipelined = opts.pipeline_sync;
+    let shared = PoolShared {
+        trainers: (0..workers).map(|_| Mutex::new(make_trainer())).collect(),
+        round_out: (0..workers).map(|_| Mutex::new((0.0, 0))).collect(),
+        snapshots: (0..workers).map(|_| Mutex::new(None)).collect(),
+        barrier: RoundBarrier::new(workers + 1),
+        gate: SeqSlot::new(),
+        merge_slot: SeqSlot::new(),
+    };
+
+    let mut rng = Rng::new(opts.seed);
+    let mut epochs_out = Vec::with_capacity(opts.epochs);
+    // The model produced by the most recent merge (sync: broadcast to
+    // every worker; pipelined: applied one round late).
+    let mut last_merged: Option<Arc<LinearModel>> = None;
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let shared = &shared;
+            scope.spawn(move || {
+                // A worker panic must poison the pool before unwinding,
+                // or every other thread parks at the barrier forever.
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    worker_loop(shared, x, labels, opts, workers, w);
+                }));
+                if let Err(payload) = result {
+                    shared.poison_all();
+                    resume_unwind(payload);
+                }
+            });
+        }
+
+        // Coordinator: drives epochs/rounds, merges, publishes. Like
+        // the workers, it poisons the pool if it panics (otherwise the
+        // workers would park forever and `scope` could never join them).
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            coordinator_loop(
+                &shared,
+                opts,
+                n,
+                workers,
+                &mut rng,
+                &mut epochs_out,
+                &mut last_merged,
+            );
+        }));
+        if let Err(payload) = result {
+            shared.poison_all();
+            resume_unwind(payload);
+        }
+    });
+
+    let seconds = t0.elapsed().as_secs_f64();
+    let examples = (n * opts.epochs) as u64;
+    let mut trainers: Vec<T> = shared
+        .trainers
+        .into_iter()
+        .map(|m| m.into_inner().expect("worker panicked holding its trainer"))
+        .collect();
+    let rebases: u64 = trainers.iter().map(|t| t.rebases()).sum();
+    let model = match last_merged {
+        // Pipelined: the final merge *is* the model (every round's
+        // updates entered exactly one merge; the trainers only hold
+        // stale bases). The merge slot's retained copy is dropped first
+        // so the unwrap is zero-copy.
+        Some(merged) if pipelined => {
+            drop(shared.merge_slot.take());
+            Arc::try_unwrap(merged).unwrap_or_else(|arc| (*arc).clone())
+        }
+        // Synchronous: every trainer holds the merged model after the
+        // final broadcast. (`n >= 1` is guaranteed above, so pipelined
+        // runs always have a merge; this arm is the synchronous one.)
+        _ => trainers.swap_remove(0).into_model(),
+    };
+    Ok(TrainReport {
+        model,
+        examples,
+        seconds,
+        throughput: if seconds > 0.0 { examples as f64 / seconds } else { 0.0 },
+        epochs: epochs_out,
+        rebases,
+        penalty: opts.reg.name(),
+    })
+}
+
+/// The coordinator half of the pool: publishes epoch orders, rendezvous
+/// with the workers each round, reads their round outputs, and performs
+/// (or, pipelined, overlaps) the merge+broadcast.
+fn coordinator_loop<T: Trainer>(
+    shared: &PoolShared<T>,
+    opts: &TrainOptions,
+    n: usize,
+    workers: usize,
+    rng: &mut Rng,
+    epochs_out: &mut Vec<EpochStats>,
+    last_merged: &mut Option<Arc<LinearModel>>,
+) {
+    let interval = opts.sync_interval.unwrap_or(n.max(1));
+    let longest = longest_shard(n, workers);
+    let pipelined = opts.pipeline_sync;
+    let mut round = 0usize;
+    // Pipelined mode pre-publishes the next epoch's order from the
+    // epoch-final round (see below); this flag prevents a second
+    // epoch_order draw for the same epoch at the loop head.
+    let mut next_published = false;
+    for epoch in 0..opts.epochs {
+        if !next_published {
+            let order = Arc::new(epoch_order(n, opts, rng));
+            shared.gate.publish(epoch, order);
+        }
+        next_published = false;
+        let e0 = Instant::now();
+        let mut loss_sum = 0.0f64;
+        let mut merge_seconds = 0.0f64;
+        let mut offset = 0usize;
+        while offset < longest {
+            // Workers finished the round (synchronous: first of the
+            // round's two barriers; pipelined: the only one).
+            shared.barrier.wait();
+            // Next epoch's order may be needed by workers as soon as
+            // they cross a pipelined epoch-final barrier; publishing
+            // before the (possibly long) merge keeps them unblocked.
+            let epoch_done = offset.saturating_add(interval) >= longest;
+            if pipelined && epoch_done && epoch + 1 < opts.epochs {
+                let next = Arc::new(epoch_order(n, opts, rng));
+                shared.gate.publish(epoch + 1, next);
+                next_published = true;
+            }
+            // Round loss, summed per round in worker-index order
+            // (bit-compatible with the original engine's fold).
+            let mut round_sum = 0.0f64;
+            let mut counts = Vec::with_capacity(workers);
+            for slot in &shared.round_out {
+                let (ls, c) = *slot.lock().unwrap();
+                round_sum += ls;
+                counts.push(c);
+            }
+            loss_sum += round_sum;
+
+            let m0 = Instant::now();
+            if pipelined {
+                // Merge the workers' published snapshots; they apply
+                // it at the end of the round they're now processing.
+                let guards: Vec<_> =
+                    shared.snapshots.iter().map(|s| s.lock().unwrap()).collect();
+                let merged = {
+                    let models: Vec<(&LinearModel, u64)> = guards
+                        .iter()
+                        .map(|g| {
+                            let (m, c) = g.as_ref().expect("worker missed snapshot");
+                            (m, *c)
+                        })
+                        .collect();
+                    Arc::new(merge_models(&models, opts.merge))
+                };
+                drop(guards);
+                shared.merge_slot.publish(round, merged.clone());
+                *last_merged = Some(merged);
+            } else if counts.iter().any(|&c| c > 0) {
+                // Synchronous: merge + broadcast between the round's
+                // two barriers, exactly like the round-spawn engine.
+                let mut guards: Vec<_> =
+                    shared.trainers.iter().map(|t| t.lock().unwrap()).collect();
+                let merged = {
+                    let models: Vec<(&LinearModel, u64)> = guards
+                        .iter()
+                        .zip(counts.iter())
+                        .map(|(g, &c)| (g.model(), c))
+                        .collect();
+                    merge_models(&models, opts.merge)
+                };
+                for g in guards.iter_mut() {
+                    g.load_weights(&merged.weights, merged.bias);
+                }
+                drop(guards);
+                *last_merged = Some(Arc::new(merged));
+            }
+            merge_seconds += m0.elapsed().as_secs_f64();
+
+            if !pipelined {
+                shared.barrier.wait(); // release workers into next round
+            }
+            round += 1;
+            offset = offset.saturating_add(interval);
+        }
+        let mean_loss = loss_sum / n.max(1) as f64;
+        let objective = mean_loss
+            + last_merged
+                .as_ref()
+                .map(|m| opts.reg.penalty(&m.weights))
+                .unwrap_or(0.0);
+        epochs_out.push(EpochStats {
+            epoch,
+            mean_loss,
+            objective,
+            examples: n,
+            seconds: e0.elapsed().as_secs_f64(),
+            merge_seconds,
+        });
+    }
+}
+
+/// One persistent worker: processes its contiguous shard slice each
+/// round, then participates in the sync (synchronous: two barriers
+/// around the coordinator's merge+broadcast; pipelined: rebase onto the
+/// one-round-stale merge, publish a snapshot, one barrier).
+fn worker_loop<T: Trainer>(
+    shared: &PoolShared<T>,
+    x: &CsrMatrix,
+    labels: &[f32],
+    opts: &TrainOptions,
+    workers: usize,
+    w: usize,
+) {
+    let n = x.n_rows();
+    let interval = opts.sync_interval.unwrap_or(n.max(1));
+    let longest = longest_shard(n, workers);
+    let range = shard_range(n, workers, w);
+    let pipelined = opts.pipeline_sync;
+    let mut round = 0usize;
+
+    for epoch in 0..opts.epochs {
+        let order = shared.gate.wait_for(epoch);
+        let shard = &order[range.clone()];
+        let mut offset = 0usize;
+        while offset < longest {
+            let lo = offset.min(shard.len());
+            let hi = offset.saturating_add(interval).min(shard.len());
+            {
+                let mut tr = shared.trainers[w].lock().unwrap();
+                let mut ls = 0.0f64;
+                for &r in &shard[lo..hi] {
+                    ls += tr.process_example(x.row(r), f64::from(labels[r]));
+                }
+                tr.finalize();
+                if pipelined {
+                    boundary_rebase(shared, &mut tr, round, (hi - lo) as u64, w);
+                }
+                *shared.round_out[w].lock().unwrap() = (ls, (hi - lo) as u64);
+            }
+            if pipelined {
+                shared.barrier.wait();
+            } else {
+                shared.barrier.wait(); // round done; coordinator merges
+                shared.barrier.wait(); // merge broadcast; safe to continue
+            }
+            round += 1;
+            offset = offset.saturating_add(interval);
+        }
+    }
+}
+
+/// Pipelined round boundary for one worker: rebase the local model onto
+/// the one-round-stale merge (`w ← M⁽ʳ⁻¹⁾ + (w − s)`, where `s` is the
+/// previous published snapshot), then publish the post-rebase snapshot
+/// as this round's merge input.
+fn boundary_rebase<T: Trainer>(
+    shared: &PoolShared<T>,
+    tr: &mut T,
+    round: usize,
+    count: u64,
+    w: usize,
+) {
+    // Wait for the stale merge *before* taking the snapshot lock: the
+    // coordinator holds every snapshot lock while it merges, so a worker
+    // reaching this boundary early (e.g. an empty tail slice) must not
+    // grab its slot first and then block on the merge — that would be a
+    // lock-order deadlock. The coordinator publishes only after it has
+    // released the snapshot guards, so once `wait_for` returns the slot
+    // is free.
+    let merged = if round >= 1 { Some(shared.merge_slot.wait_for(round - 1)) } else { None };
+    let mut snap_slot = shared.snapshots[w].lock().unwrap();
+    if let Some(merged) = merged {
+        let (prev, _) = snap_slot.as_ref().expect("round >= 1 implies a prior snapshot");
+        let model = tr.model();
+        let neww: Vec<f64> = merged
+            .weights
+            .iter()
+            .zip(model.weights.iter())
+            .zip(prev.weights.iter())
+            .map(|((&m, &c), &p)| m + (c - p))
+            .collect();
+        let newb = merged.bias + (model.bias - prev.bias);
+        tr.load_weights(&neww, newb);
+    }
+    *snap_slot = Some((tr.model().clone(), count));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Loss;
+    use crate::optim::{Algo, Regularizer, Schedule};
+    use crate::synth::{generate, BowSpec};
+    use crate::testing::reference::round_spawn_train_lazy_xy;
+    use crate::train::{train_parallel, train_parallel_dense_xy, train_parallel_xy};
+
+    fn opts(workers: usize) -> TrainOptions {
+        TrainOptions {
+            algo: Algo::Fobos,
+            reg: Regularizer::elastic_net(1e-5, 1e-4),
+            schedule: Schedule::InvSqrtT { eta0: 0.5 },
+            epochs: 3,
+            workers,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn merge_mode_parses_and_round_trips() {
+        assert_eq!(MergeMode::parse("flat").unwrap(), MergeMode::Flat);
+        assert_eq!(MergeMode::parse("tree").unwrap(), MergeMode::Tree);
+        assert!(MergeMode::parse("ring").is_err());
+        for m in [MergeMode::Flat, MergeMode::Tree] {
+            assert_eq!(MergeMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(MergeMode::default(), MergeMode::Flat);
+    }
+
+    #[test]
+    fn shard_range_matches_contiguous_split() {
+        // 10 over 3: lengths 4, 3, 3 — earlier shards take the extras.
+        assert_eq!(shard_range(10, 3, 0), 0..4);
+        assert_eq!(shard_range(10, 3, 1), 4..7);
+        assert_eq!(shard_range(10, 3, 2), 7..10);
+        assert_eq!(longest_shard(10, 3), 4);
+        // k > n: trailing shards empty, never out of bounds.
+        assert_eq!(shard_range(2, 4, 0), 0..1);
+        assert_eq!(shard_range(2, 4, 1), 1..2);
+        assert_eq!(shard_range(2, 4, 3), 2..2);
+        // Exhaustive cover/disjointness at small sizes.
+        for n in 0..12usize {
+            for k in 1..=6usize {
+                let mut covered = 0usize;
+                let mut prev_end = 0usize;
+                for w in 0..k {
+                    let r = shard_range(n, k, w);
+                    assert_eq!(r.start, prev_end);
+                    prev_end = r.end;
+                    covered += r.len();
+                    assert!(r.len() <= longest_shard(n, k));
+                }
+                assert_eq!(covered, n);
+                assert_eq!(prev_end, n);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_average_equals_flat_mathematically() {
+        let mk = |ws: &[f64], b: f64| {
+            let mut m = LinearModel::zeros(ws.len(), Loss::Logistic);
+            m.weights = ws.to_vec();
+            m.bias = b;
+            m
+        };
+        let a = mk(&[1.0, 0.0, 4.0], 1.0);
+        let b = mk(&[0.0, 2.0, -2.0], -1.0);
+        let c = mk(&[3.0, 3.0, 0.0], 0.5);
+        let models = [(&a, 3u64), (&b, 1), (&c, 4)];
+        let flat = weighted_average(&models);
+        let tree = tree_weighted_average(&models);
+        for (x, y) in flat.weights.iter().zip(tree.weights.iter()) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+        assert!((flat.bias - tree.bias).abs() < 1e-12);
+        // Hand value: w0 = (3*1 + 0 + 4*3)/8 = 15/8.
+        assert!((tree.weights[0] - 15.0 / 8.0).abs() < 1e-12);
+        // Zero-weight sides pass through exactly.
+        let z = tree_weighted_average(&[(&a, 0), (&b, 2), (&c, 0)]);
+        assert_eq!(z.weights, b.weights);
+        // All-zero weights: first model unchanged.
+        let same = tree_weighted_average(&[(&a, 0), (&b, 0)]);
+        assert_eq!(same.weights, a.weights);
+    }
+
+    #[test]
+    fn scoped_workers_collects_in_index_order() {
+        let results = scoped_workers(5, |w| w * 10);
+        assert_eq!(results, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn poisoned_barrier_wakes_waiters_with_a_panic() {
+        // The fail-fast guarantee: a parked participant must panic when
+        // the pool is poisoned, not hang forever (std::sync::Barrier
+        // would deadlock here).
+        let b = RoundBarrier::new(2);
+        std::thread::scope(|scope| {
+            let parked = scope.spawn(|| b.wait());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            b.poison();
+            assert!(parked.join().is_err(), "poisoned waiter should panic, not hang");
+        });
+        // Late arrivals fail immediately too.
+        assert!(catch_unwind(AssertUnwindSafe(|| b.wait())).is_err());
+    }
+
+    #[test]
+    fn seq_slot_publishes_and_poisons() {
+        let s: SeqSlot<usize> = SeqSlot::new();
+        s.publish(0, 7);
+        assert_eq!(s.wait_for(0), 7);
+        assert_eq!(s.take(), Some((0, 7)));
+        assert!(s.take().is_none());
+
+        let s: SeqSlot<usize> = SeqSlot::new();
+        std::thread::scope(|scope| {
+            let parked = scope.spawn(|| s.wait_for(3));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            s.poison();
+            assert!(parked.join().is_err(), "poisoned waiter should panic, not hang");
+        });
+    }
+
+    #[test]
+    fn pool_sync_is_bitwise_identical_to_round_spawn_reference() {
+        let data = generate(&BowSpec::tiny(), 31);
+        for workers in [2usize, 3] {
+            let mut o = opts(workers);
+            o.sync_interval = Some(17);
+            let pool = train_parallel(&data, &o).unwrap();
+            let reference = round_spawn_train_lazy_xy(data.x(), data.labels(), &o).unwrap();
+            assert_eq!(pool.model.weights, reference.model.weights, "workers={workers}");
+            assert_eq!(pool.model.bias, reference.model.bias);
+            assert_eq!(pool.rebases, reference.rebases);
+            for (a, b) in pool.epochs.iter().zip(reference.epochs.iter()) {
+                assert_eq!(a.mean_loss, b.mean_loss, "epoch {}", a.epoch);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_merge_stays_close_to_flat_through_training() {
+        let data = generate(&BowSpec::tiny(), 32);
+        let mut flat = opts(4);
+        flat.sync_interval = Some(20);
+        let mut tree = flat;
+        tree.merge = MergeMode::Tree;
+        let a = train_parallel(&data, &flat).unwrap();
+        let b = train_parallel(&data, &tree).unwrap();
+        let diff = a.model.max_weight_diff(&b.model);
+        assert!(diff < 1e-6, "tree vs flat diverged: {diff}");
+        assert!(b.final_loss() < b.epochs[0].mean_loss);
+    }
+
+    #[test]
+    fn pipelined_mode_is_deterministic_and_learns() {
+        let data = generate(&BowSpec::tiny(), 33);
+        let mut o = opts(4);
+        o.sync_interval = Some(25);
+        o.pipeline_sync = true;
+        let a = train_parallel(&data, &o).unwrap();
+        let b = train_parallel(&data, &o).unwrap();
+        assert_eq!(a.model.weights, b.model.weights);
+        assert_eq!(a.model.bias, b.model.bias);
+        assert!(a.final_loss() < a.epochs[0].mean_loss, "pipelined did not learn");
+        assert_eq!(a.examples, (data.n_examples() * 3) as u64);
+    }
+
+    #[test]
+    fn pipelined_single_round_equals_synchronous() {
+        // One merge total: the pipeline has nothing to overlap, and both
+        // modes reduce to "train shards, average once".
+        let mut x = CsrMatrix::empty(4);
+        x.push_row(vec![(0, 1.0)]);
+        x.push_row(vec![(1, 1.0)]);
+        x.push_row(vec![(2, 1.0)]);
+        x.push_row(vec![(3, 1.0)]);
+        let labels = vec![1.0, 0.0, 1.0, 0.0];
+        let mut o = opts(2);
+        o.epochs = 1; // epoch-synchronous: exactly one round
+        let sync = train_parallel_xy(&x, &labels, &o).unwrap();
+        o.pipeline_sync = true;
+        let pipe = train_parallel_xy(&x, &labels, &o).unwrap();
+        assert_eq!(sync.model.weights, pipe.model.weights);
+        assert_eq!(sync.model.bias, pipe.model.bias);
+    }
+
+    #[test]
+    fn empty_dataset_returns_untrained_model_in_both_modes() {
+        // Reachable through the dense comparator driver (it enters the
+        // pool even at the clamped workers == 1): zero rounds run, no
+        // merge ever happens, and both sync modes must hand back the
+        // untrained model instead of panicking or hanging. epochs = 3
+        // covers the multi-epoch case, where zero-round epochs cross no
+        // barriers (the reason the engine short-circuits at n == 0).
+        let x = CsrMatrix::empty(3);
+        let labels: Vec<f32> = Vec::new();
+        for pipeline_sync in [false, true] {
+            let mut o = opts(2);
+            o.pipeline_sync = pipeline_sync;
+            let r = train_parallel_dense_xy(&x, &labels, &o).unwrap();
+            assert_eq!(r.model.weights, vec![0.0; 3]);
+            assert_eq!(r.examples, 0);
+            assert_eq!(r.epochs.len(), 3);
+            assert!(r.epochs.iter().all(|e| e.mean_loss == 0.0));
+        }
+    }
+
+    #[test]
+    fn merge_seconds_and_objective_are_populated() {
+        let data = generate(&BowSpec::tiny(), 34);
+        let mut o = opts(3);
+        o.sync_interval = Some(40);
+        let report = train_parallel(&data, &o).unwrap();
+        for e in &report.epochs {
+            assert!(e.merge_seconds >= 0.0 && e.merge_seconds <= e.seconds);
+            assert!(e.objective.is_finite());
+            // Elastic-net penalty is non-negative.
+            assert!(e.objective >= e.mean_loss);
+        }
+    }
+}

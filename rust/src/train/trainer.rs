@@ -44,6 +44,12 @@ pub trait Trainer {
     fn rebases(&self) -> u64 {
         0
     }
+
+    /// Penalty value `R(w)` of the *current* weights — the
+    /// regularization term of the logged objective. Lazy trainers catch
+    /// stale weights up transiently (no state mutation), so calling this
+    /// mid-epoch is observation-only.
+    fn penalty_value(&self) -> f64;
 }
 
 impl Trainer for LazyTrainer {
@@ -74,6 +80,10 @@ impl Trainer for LazyTrainer {
     fn rebases(&self) -> u64 {
         self.rebases
     }
+
+    fn penalty_value(&self) -> f64 {
+        LazyTrainer::penalty_value(self)
+    }
 }
 
 impl Trainer for DenseTrainer {
@@ -99,6 +109,10 @@ impl Trainer for DenseTrainer {
 
     fn load_weights(&mut self, weights: &[f64], bias: f64) {
         DenseTrainer::load_weights(self, weights, bias);
+    }
+
+    fn penalty_value(&self) -> f64 {
+        DenseTrainer::penalty_value(self)
     }
 }
 

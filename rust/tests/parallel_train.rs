@@ -1,9 +1,13 @@
-//! Integration tests for the data-parallel sharded training engine on
-//! the Medline-shaped `medline_small` corpus — the lazy/dense/parallel
-//! equivalence triangle:
+//! Integration tests for the pool-based data-parallel training runtime
+//! on the Medline-shaped `medline_small` corpus — the
+//! lazy/dense/parallel equivalence triangle, plus the pool-vs-reference
+//! pin:
 //!
 //! * `workers = 1` must be **bit-identical** to the serial lazy trainer
 //!   (same code path by construction — asserted here).
+//! * Synchronous pool training must be **bit-identical** to the frozen
+//!   PR 1 round-spawn engine (`testing::reference`) at `workers ∈
+//!   {2, 4}` — the acceptance bar for replacing the old runtime.
 //! * For `workers ∈ {2, 4}`, the engine running **lazy** workers must
 //!   match the engine running **dense** workers far past the paper's
 //!   criterion (3 significant figures asserted per weight; the absolute
@@ -20,6 +24,7 @@ use lazyreg::model::LinearModel;
 use lazyreg::prelude::*;
 use lazyreg::synth::{generate, BowSpec};
 use lazyreg::testing::agrees_to_sig_figs;
+use lazyreg::testing::reference::round_spawn_train_lazy_xy;
 use lazyreg::train::{train_parallel, train_parallel_dense_xy};
 
 fn medline_small() -> SparseDataset {
@@ -66,6 +71,99 @@ fn one_worker_is_bit_identical_to_serial_lazy() {
     assert_eq!(serial.rebases, par.rebases);
     for (a, b) in serial.epochs.iter().zip(par.epochs.iter()) {
         assert_eq!(a.mean_loss, b.mean_loss, "epoch {} loss diverged", a.epoch);
+    }
+}
+
+#[test]
+fn pool_sync_is_bitwise_identical_to_round_spawn_engine() {
+    // The acceptance pin for the runtime refactor: the persistent pool
+    // in synchronous flat-merge mode must reproduce the PR 1 round-spawn
+    // engine bit for bit — same shard slices, same per-round merge
+    // arithmetic, same broadcast — at production-representative scale.
+    let data = medline_small();
+    for workers in [2usize, 4] {
+        let o = opts(workers);
+        let pool = train_parallel(&data, &o).unwrap();
+        let reference = round_spawn_train_lazy_xy(data.x(), data.labels(), &o).unwrap();
+        assert_eq!(
+            pool.model.weights, reference.model.weights,
+            "workers={workers}: pool diverged from the round-spawn reference"
+        );
+        assert_eq!(pool.model.bias, reference.model.bias);
+        assert_eq!(pool.rebases, reference.rebases);
+        assert_eq!(pool.examples, reference.examples);
+        for (a, b) in pool.epochs.iter().zip(reference.epochs.iter()) {
+            assert_eq!(a.mean_loss, b.mean_loss, "epoch {} loss diverged", a.epoch);
+            assert_eq!(a.objective, b.objective, "epoch {} objective diverged", a.epoch);
+        }
+    }
+    // Epoch-synchronous cadence too (one merge per epoch).
+    let mut o = opts(4);
+    o.sync_interval = None;
+    let pool = train_parallel(&data, &o).unwrap();
+    let reference = round_spawn_train_lazy_xy(data.x(), data.labels(), &o).unwrap();
+    assert_eq!(pool.model.weights, reference.model.weights);
+    assert_eq!(pool.model.bias, reference.model.bias);
+}
+
+#[test]
+fn tree_merge_tracks_flat_merge_within_float_tolerance() {
+    let data = medline_small();
+    let flat = opts(4);
+    let mut tree = flat;
+    tree.merge = MergeMode::Tree;
+    let a = train_parallel(&data, &flat).unwrap();
+    let b = train_parallel(&data, &tree).unwrap();
+    // Same weighted mean per merge, different fold order: agreement to
+    // float tolerance through a full multi-epoch training run.
+    let diff = a.model.max_weight_diff(&b.model);
+    assert!(diff < 1e-6, "tree vs flat merge diverged: {diff}");
+    assert!(b.final_loss() < b.epochs[0].mean_loss, "tree-merge run did not learn");
+    // And the tree merge is itself deterministic.
+    let b2 = train_parallel(&data, &tree).unwrap();
+    assert_eq!(b.model.weights, b2.model.weights);
+}
+
+#[test]
+fn pipelined_sync_is_deterministic_and_learns() {
+    let data = medline_small();
+    let mut o = opts(4);
+    o.pipeline_sync = true;
+    let a = train_parallel(&data, &o).unwrap();
+    let b = train_parallel(&data, &o).unwrap();
+    // One-round-stale broadcast is a *defined* estimator: repeated runs
+    // are bitwise identical regardless of thread timing.
+    assert_eq!(a.model.weights, b.model.weights);
+    assert_eq!(a.model.bias, b.model.bias);
+    for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()) {
+        assert_eq!(ea.mean_loss, eb.mean_loss);
+    }
+    // And it still learns the medline-shaped signal.
+    assert!(
+        a.final_loss() < a.epochs[0].mean_loss,
+        "pipelined run did not learn: {} -> {}",
+        a.epochs[0].mean_loss,
+        a.final_loss()
+    );
+    assert!(a.final_loss().is_finite());
+    assert_eq!(a.examples, (data.n_examples() * 4) as u64);
+}
+
+#[test]
+fn epoch_stats_report_objective_and_merge_time() {
+    let data = medline_small();
+    let par = train_parallel(&data, &opts(4)).unwrap();
+    for e in &par.epochs {
+        assert!(e.objective.is_finite());
+        // Elastic net: R(w) >= 0, so the objective dominates the loss.
+        assert!(e.objective >= e.mean_loss);
+        assert!(e.merge_seconds >= 0.0 && e.merge_seconds <= e.seconds);
+    }
+    // Serial driver: objective populated, merge time identically zero.
+    let serial = train_lazy(&data, &opts(1)).unwrap();
+    for e in &serial.epochs {
+        assert!(e.objective.is_finite() && e.objective >= e.mean_loss);
+        assert_eq!(e.merge_seconds, 0.0);
     }
 }
 
