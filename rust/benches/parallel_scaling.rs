@@ -7,10 +7,13 @@
 //! scaling, (b) what the pool saves over the original round-spawn
 //! engine (`respawn` mode — the frozen PR 1 copy in
 //! `lazyreg::testing::reference`, measured *in the same run* so the
-//! comparison is honest), and (c) what pipelined sync buys by
-//! overlapping the O(d·workers) merge with the next round's examples.
-//! Per-round sync overhead dominates at small `sync_interval`, which is
-//! exactly where the three modes separate.
+//! comparison is honest), (c) what pipelined sync buys by overlapping
+//! the O(d·workers) merge with the next round's examples, and (d) what
+//! the **sparse** merge saves by syncing only the O(touched) features of
+//! each round (`touched_frac` per cell = the fraction of d each sync
+//! actually moved; flat and sparse run in the same invocation so the
+//! `merge_seconds` ratio is honest). Per-round sync overhead dominates
+//! at small `sync_interval`, which is exactly where the modes separate.
 //!
 //! `cargo bench --bench parallel_scaling`            human-readable table
 //! `cargo bench --bench parallel_scaling -- --json`  one JSON record per
@@ -80,6 +83,16 @@ impl Cell {
         self.report.epochs.iter().map(|e| e.merge_seconds).sum()
     }
 
+    /// Mean fraction of the d weights each sync round moved (1.0 for
+    /// dense merges, |U|/d for sparse, 0 for the merge-free serial row).
+    fn touched_frac(&self) -> f64 {
+        let epochs = self.report.epochs.len();
+        if epochs == 0 {
+            return 0.0;
+        }
+        self.report.epochs.iter().map(|e| e.touched_frac).sum::<f64>() / epochs as f64
+    }
+
     fn json(&self) -> String {
         let interval = match self.interval {
             Some(m) => m.to_string(),
@@ -88,13 +101,15 @@ impl Cell {
         format!(
             "{{\"bench\":\"parallel_scaling\",\"mode\":\"{}\",\"workers\":{},\
              \"sync_interval\":{},\"merge\":\"{}\",\"examples_per_sec\":{:.1},\
-             \"merge_seconds\":{:.6},\"seconds\":{:.6},\"final_loss\":{:.6}}}",
+             \"merge_seconds\":{:.6},\"touched_frac\":{:.6},\"seconds\":{:.6},\
+             \"final_loss\":{:.6}}}",
             self.mode,
             self.workers,
             interval,
             self.merge,
             self.report.throughput,
             self.merge_seconds(),
+            self.touched_frac(),
             self.report.seconds,
             self.report.final_loss(),
         )
@@ -109,6 +124,15 @@ fn main() -> anyhow::Result<()> {
     let merge: MergeMode = std::env::var("LAZYREG_BENCH_MERGE")
         .unwrap_or_else(|_| "flat".into())
         .parse()?;
+    // The knob picks the *dense* topology of the pool/pipeline cells;
+    // the sparse sync always runs as its own `sparse` mode row (setting
+    // it here would mislabel the pool cells and break the pipeline cell,
+    // which validate rightly rejects with merge = sparse).
+    anyhow::ensure!(
+        merge != MergeMode::Sparse,
+        "LAZYREG_BENCH_MERGE selects the dense merge topology (flat|tree); \
+         the sparse sync is always measured as its own `sparse` mode row"
+    );
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
 
     eprintln!("[parallel] generating Medline-shaped corpus n={n} d=260,941 p~88.5 ...");
@@ -136,7 +160,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let mut table = fmt::Table::new([
-        "mode", "workers", "sync", "examples/s", "speedup", "merge s", "final loss",
+        "mode", "workers", "sync", "examples/s", "speedup", "merge s", "touched", "final loss",
     ]);
     let mut serial_rate = None;
     let mut cells: Vec<Cell> = Vec::new();
@@ -147,16 +171,28 @@ fn main() -> anyhow::Result<()> {
             }
             let opts = TrainOptions { workers, sync_interval: interval, ..base };
             // The engines being compared per cell: the persistent pool
-            // (synchronous), the pool with pipelined sync, and the
-            // frozen PR 1 round-spawn engine as the overhead baseline.
-            // workers == 1 delegates to the identical serial path in
-            // all three, so one row suffices.
+            // (synchronous, in the configured dense topology), the pool
+            // with pipelined sync, the pool with the O(touched) sparse
+            // sync, and the frozen PR 1 round-spawn engine as the
+            // overhead baseline. workers == 1 delegates to the identical
+            // serial path in all of them, so one row suffices.
             let modes: &[&'static str] = if workers == 1 {
                 &["serial"]
             } else {
-                &["respawn", "pool", "pipeline"]
+                &["respawn", "pool", "pipeline", "sparse"]
             };
             for &mode in modes {
+                // A sparse cell whose engine silently fell back to the
+                // flat merge would mislabel its own measurements; skip
+                // instead (the engine only falls back on unequal shards).
+                if mode == "sparse" && stats.n_examples % workers != 0 {
+                    eprintln!(
+                        "[parallel] skipping sparse cell: n={} % workers={workers} != 0 \
+                         would fall back to the flat merge",
+                        stats.n_examples
+                    );
+                    continue;
+                }
                 eprintln!(
                     "[parallel] mode={mode} workers={workers} sync={:?} ...",
                     interval
@@ -169,6 +205,10 @@ fn main() -> anyhow::Result<()> {
                     "pipeline" => {
                         let o = TrainOptions { pipeline_sync: true, ..opts };
                         (train_parallel(&data, &o)?, merge.name())
+                    }
+                    "sparse" => {
+                        let o = TrainOptions { merge: MergeMode::Sparse, ..opts };
+                        (train_parallel(&data, &o)?, "sparse")
                     }
                     "serial" => (train_parallel(&data, &opts)?, "none"),
                     _ => (train_parallel(&data, &opts)?, merge.name()),
@@ -210,6 +250,7 @@ fn main() -> anyhow::Result<()> {
             fmt::rate(c.report.throughput, "ex"),
             format!("{:.2}x", c.report.throughput / base_rate),
             format!("{:.3}", c.merge_seconds()),
+            format!("{:.1}%", c.touched_frac() * 100.0),
             format!("{:.5}", c.report.final_loss()),
         ]);
     }

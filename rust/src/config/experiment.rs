@@ -173,6 +173,17 @@ pipeline_sync = true
     }
 
     #[test]
+    fn sparse_merge_parses_but_rejects_pipelining() {
+        let doc = ConfigDoc::parse("[train]\nmerge = \"sparse\"\nworkers = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.train.merge, MergeMode::Sparse);
+        // Config-level validation catches the illegal pair too.
+        let doc =
+            ConfigDoc::parse("[train]\nmerge = \"sparse\"\npipeline_sync = true\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
     fn empty_config_gives_defaults() {
         let cfg = ExperimentConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
         assert_eq!(cfg.corpus.n_features, 260_941);

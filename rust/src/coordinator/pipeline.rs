@@ -12,8 +12,10 @@
 //! [`LazyTrainer`], and the shard models are merged at end-of-stream by
 //! example-weighted averaging in the topology `opts.merge` selects
 //! ([`crate::train::merge_models`] — flat by default, pairwise tree for
-//! high worker counts). Shard assignment follows arrival order, so the
-//! result is a deterministic function of the input stream and options.
+//! high worker counts; `sparse` is a round-synchronized pool strategy
+//! and degrades here to the flat fold with a logged reason). Shard
+//! assignment follows arrival order, so the result is a deterministic
+//! function of the input stream and options.
 
 use std::collections::VecDeque;
 use std::io::BufRead;
@@ -22,7 +24,7 @@ use std::sync::{Condvar, Mutex};
 use anyhow::Result;
 
 use crate::data::RowView;
-use crate::train::{merge_models, scoped_workers, LazyTrainer, TrainOptions};
+use crate::train::{merge_models, scoped_workers, LazyTrainer, MergeMode, TrainOptions};
 
 /// An owned sparse example flowing through the pipeline.
 #[derive(Debug, Clone, PartialEq)]
@@ -299,6 +301,16 @@ pub fn train_streaming_sharded<R: BufRead + Send>(
     let loss_sum: f64 = results.iter().map(|(_, _, l)| l).sum();
     let weighted: Vec<(&crate::model::LinearModel, u64)> =
         results.iter().map(|(m, c, _)| (m, *c)).collect();
+    if opts.merge == MergeMode::Sparse {
+        // The sparse sync needs the round-synchronized pool's equal
+        // per-round counts; a stream's shard counts are only known at
+        // end-of-stream (and generally unequal), so the one-shot merge
+        // degrades to the dense flat fold. Logged, never a wrong model.
+        eprintln!(
+            "[lazyreg] sparse merge does not apply to the streaming end-of-stream \
+             merge; falling back to the flat merge"
+        );
+    }
     let model = merge_models(&weighted, opts.merge);
     let stats = StreamStats {
         examples,
@@ -442,6 +454,22 @@ mod tests {
         assert!(a.max_weight_diff(&b) < 1e-12);
         let (b2, _) = train_streaming_sharded(text.as_bytes(), 8, &tree, 4).unwrap();
         assert_eq!(b.weights, b2.weights);
+    }
+
+    #[test]
+    fn sharded_streaming_sparse_merge_degrades_to_flat() {
+        // Streams have no equal-round structure, so `sparse` must give
+        // bitwise the flat end-of-stream merge, never a wrong model.
+        let mut text = String::new();
+        for i in 0..160 {
+            text.push_str(if i % 3 == 0 { "1 1:1 2:1\n" } else { "0 3:1 4:1\n" });
+        }
+        let flat = TrainOptions { workers: 4, ..Default::default() };
+        let sparse = TrainOptions { merge: MergeMode::Sparse, ..flat };
+        let (a, _) = train_streaming_sharded(text.as_bytes(), 8, &flat, 4).unwrap();
+        let (b, _) = train_streaming_sharded(text.as_bytes(), 8, &sparse, 4).unwrap();
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.bias, b.bias);
     }
 
     #[test]

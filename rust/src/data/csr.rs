@@ -40,6 +40,33 @@ impl<'a> RowView<'a> {
     }
 }
 
+/// Sort `entries` by column, sum duplicate columns (in ascending column
+/// order), and append the non-zero results to `(indices, values)` — the
+/// **single copy** of the row-compaction semantics, shared by
+/// [`CsrMatrix::push_row`] and the streaming libsvm reader (which builds
+/// the CSR arrays directly). `entries` is a caller-reused scratch
+/// buffer; it is left sorted.
+pub(crate) fn compact_row_into(
+    entries: &mut [(u32, f32)],
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) {
+    entries.sort_unstable_by_key(|e| e.0);
+    let mut i = 0;
+    while i < entries.len() {
+        let (j, mut v) = entries[i];
+        i += 1;
+        while i < entries.len() && entries[i].0 == j {
+            v += entries[i].1;
+            i += 1;
+        }
+        if v != 0.0 {
+            indices.push(j);
+            values.push(v);
+        }
+    }
+}
+
 /// CSR sparse matrix with `f32` values and `u32` column indices.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CsrMatrix {
@@ -107,21 +134,12 @@ impl CsrMatrix {
     /// Append a row given `(column, value)` pairs (will be sorted; duplicate
     /// columns are summed; zero values dropped).
     pub fn push_row(&mut self, mut entries: Vec<(u32, f32)>) {
-        entries.sort_unstable_by_key(|e| e.0);
-        let mut merged: Vec<(u32, f32)> = Vec::with_capacity(entries.len());
-        for (j, v) in entries {
-            match merged.last_mut() {
-                Some(last) if last.0 == j => last.1 += v,
-                _ => merged.push((j, v)),
-            }
-        }
-        for (j, v) in merged {
-            if v != 0.0 {
-                debug_assert!((j as usize) < self.n_cols);
-                self.indices.push(j);
-                self.values.push(v);
-            }
-        }
+        let start = self.indices.len();
+        compact_row_into(&mut entries, &mut self.indices, &mut self.values);
+        debug_assert!(
+            self.indices[start..].iter().all(|&j| (j as usize) < self.n_cols),
+            "push_row: column out of range"
+        );
         self.n_rows += 1;
         self.indptr.push(self.indices.len() as u64);
     }

@@ -9,19 +9,40 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use super::csr::CsrMatrix;
+use super::csr::{compact_row_into, CsrMatrix};
 use super::dataset::SparseDataset;
 
 /// Parse libsvm text from a reader. `n_features = None` infers the
 /// dimensionality from the max index seen.
+///
+/// Single-pass streaming parse: one reused line buffer
+/// (`BufRead::read_line`) and the CSR arrays built directly — no
+/// `Vec<Vec<(u32, f32)>>` staging of the whole corpus, so peak ingest
+/// memory is the final matrix plus one line. The 0/1-base shift (known
+/// only once the whole file has been seen) is applied to the index array
+/// in place at the end.
 pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<SparseDataset> {
+    let mut reader = BufReader::new(reader);
     let mut labels: Vec<f32> = Vec::new();
-    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut indptr: Vec<u64> = vec![0];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    // Reused per line: the raw text and the row's (index, value) pairs.
+    let mut line = String::new();
+    let mut entries: Vec<(u32, f32)> = Vec::new();
     let mut max_idx: i64 = -1;
     let mut min_idx: i64 = i64::MAX;
+    let mut lineno = 0usize;
 
-    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
-        let line = line.with_context(|| format!("line {}", lineno + 1))?;
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .with_context(|| format!("line {}", lineno + 1))?;
+        if n == 0 {
+            break;
+        }
+        lineno += 1;
         let body = line.split('#').next().unwrap_or("").trim();
         if body.is_empty() {
             continue;
@@ -30,25 +51,32 @@ pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<Sp
         let label_tok = parts.next().unwrap();
         let label: f32 = label_tok
             .parse()
-            .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
-        let mut entries = Vec::new();
+            .with_context(|| format!("line {lineno}: bad label {label_tok:?}"))?;
+        entries.clear();
         for tok in parts {
             let (i_str, v_str) = tok
                 .split_once(':')
-                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+                .with_context(|| format!("line {lineno}: bad pair {tok:?}"))?;
             let idx: i64 = i_str
                 .parse()
-                .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
+                .with_context(|| format!("line {lineno}: bad index {i_str:?}"))?;
             let val: f32 = v_str
                 .parse()
-                .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
-            anyhow::ensure!(idx >= 0, "line {}: negative index {idx}", lineno + 1);
+                .with_context(|| format!("line {lineno}: bad value {v_str:?}"))?;
+            anyhow::ensure!(idx >= 0, "line {lineno}: negative index {idx}");
+            anyhow::ensure!(
+                idx <= i64::from(u32::MAX),
+                "line {lineno}: index {idx} exceeds u32"
+            );
             max_idx = max_idx.max(idx);
             min_idx = min_idx.min(idx);
-            entries.push((idx, val));
+            entries.push((idx as u32, val));
         }
         labels.push(label);
-        rows.push(entries.into_iter().map(|(i, v)| (i as u32, v)).collect());
+        // `CsrMatrix::push_row` semantics (same shared helper), applied
+        // straight onto the CSR arrays: sort, sum duplicates, drop zeros.
+        compact_row_into(&mut entries, &mut indices, &mut values);
+        indptr.push(indices.len() as u64);
     }
 
     // Detect 1-based indexing: if no zero index ever appears, shift by -1
@@ -58,11 +86,12 @@ pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<Sp
     let shift = if one_based { 1 } else { 0 };
     let inferred = if max_idx < 0 { 0 } else { (max_idx as usize + 1) - shift };
     let d = n_features.unwrap_or(inferred).max(inferred);
-
-    let mut x = CsrMatrix::empty(d);
-    for row in rows {
-        x.push_row(row.into_iter().map(|(i, v)| (i - shift as u32, v)).collect());
+    if shift == 1 {
+        for j in indices.iter_mut() {
+            *j -= 1;
+        }
     }
+    let x = CsrMatrix::from_parts(labels.len(), d, indptr, indices, values)?;
     SparseDataset::new(x, labels)
 }
 
@@ -141,6 +170,18 @@ mod tests {
         let d2 = read(buf.as_slice(), Some(d.n_features())).unwrap();
         assert_eq!(d.x(), d2.x());
         assert_eq!(d.labels(), d2.labels());
+    }
+
+    #[test]
+    fn unsorted_and_duplicate_indices_merge_like_push_row() {
+        // `push_row` semantics through the streaming parse: columns
+        // sorted, duplicates summed, zero-sum entries dropped.
+        let text = "1 4:2 1:1 4:3\n0 2:1 2:-1\n";
+        let d = read(text.as_bytes(), None).unwrap();
+        assert_eq!(d.x().row(0).indices, &[0, 3]);
+        assert_eq!(d.x().row(0).values, &[1.0, 5.0]);
+        assert_eq!(d.x().row(1).nnz(), 0);
+        assert_eq!(d.n_features(), 4);
     }
 
     #[test]

@@ -34,12 +34,17 @@
 //!   rounds — no per-round thread respawn) with the data-parallel
 //!   sharded drivers on top ([`train::parallel`]: N lazy workers over
 //!   disjoint shards, synchronized by deterministic example-weighted
-//!   model averaging every `sync_interval` examples in a flat or
-//!   fixed-topology tree merge, optionally **pipelined** so the
-//!   O(d·workers) merge overlaps the next round's examples via a
-//!   one-round-stale broadcast — epoch-synchronous flat by default,
-//!   `workers = 1` bit-identical to serial, synchronous mode pinned
-//!   bitwise against the frozen PR 1 engine in [`testing::reference`]),
+//!   model averaging every `sync_interval` examples in a flat,
+//!   fixed-topology tree, or **sparse** merge — the latter extends the
+//!   paper's lazy principle across the data-parallel boundary, syncing
+//!   only the O(touched) features of each round while everything else
+//!   stays lazy in every worker (identical DP tables make the skipped
+//!   average exact; dense-flat fallback wherever that invariant cannot
+//!   hold) — optionally **pipelined** so the O(d·workers) flat/tree
+//!   merge overlaps the next round's examples via a one-round-stale
+//!   broadcast — epoch-synchronous flat by default, `workers = 1`
+//!   bit-identical to serial, synchronous mode pinned bitwise against
+//!   the frozen PR 1 engine in [`testing::reference`]),
 //!   multi-worker orchestration ([`coordinator`]: one-vs-rest tagging
 //!   and sharded bounded-queue streaming, both running on the same
 //!   pool), evaluation

@@ -5,10 +5,14 @@
 //!   train     train a model (lazy by default; --dense baseline;
 //!             --workers N shards across the persistent worker pool,
 //!             with --sync-interval M examples between model-averaging
-//!             syncs, --merge flat|tree picking the deterministic merge
-//!             topology, and --pipeline-sync overlapping each round's
+//!             syncs, --merge flat|tree|sparse picking the sync strategy
+//!             (sparse = O(touched) gather/scatter of only the features
+//!             touched since the last merge — everything else stays
+//!             lazy in every worker; falls back to flat when shards are
+//!             unequal), and --pipeline-sync overlapping each round's
 //!             merge with the next round's examples (one-round-stale
-//!             broadcast); --reg selects any registered penalty family,
+//!             broadcast; flat/tree only); --reg selects any registered
+//!             penalty family,
 //!             e.g. `--reg enet:1e-5:1e-5`, `--reg tg:0.01:10:1.0` for
 //!             truncated gradient with period 10 and ceiling 1.0, or
 //!             `--reg linf:0.1` for an l-inf ball of radius 0.1)
@@ -179,7 +183,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     for e in &report.epochs {
         let merge = if opts.workers > 1 {
-            format!(", merge {:.3}s", e.merge_seconds)
+            format!(", merge {:.3}s touched {:.1}%", e.merge_seconds, e.touched_frac * 100.0)
         } else {
             String::new()
         };

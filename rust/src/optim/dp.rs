@@ -150,6 +150,19 @@ impl<P: Penalty> DpCache<P> {
         self.state.len() >= self.space_budget || !self.state.well_conditioned()
     }
 
+    /// Would `steps` more [`DpCache::step`]s hit the space budget (or is
+    /// the state already near conditioning trouble)? The sparse
+    /// data-parallel sync asks this at round boundaries to flush **all**
+    /// workers together before any of them would rebase mid-round —
+    /// conservative for conditioning (which is only observed at its
+    /// current state), but a budget-driven rebase is exactly predictable
+    /// from the step count.
+    #[inline]
+    pub fn would_rebase_within(&self, steps: usize) -> bool {
+        self.state.len().saturating_add(steps) >= self.space_budget
+            || !self.state.well_conditioned()
+    }
+
     /// Reset tables after the trainer brought every weight current.
     /// All ψ values must be reset to 0 by the caller.
     pub fn rebase(&mut self) {

@@ -74,8 +74,18 @@ pub trait Penalty: Copy + std::fmt::Debug + Send + Sync + 'static {
     /// hoists this out of its per-feature pass-2 loop.
     fn step_map(&self, algo: Algo, t: u64, eta: f64) -> StepMap;
 
-    /// Penalty value R(w) for objective logging.
-    fn value(&self, w: &[f64]) -> f64;
+    /// Penalty value R(w) for objective logging (provided in terms of
+    /// [`Penalty::value_iter`]).
+    fn value(&self, w: &[f64]) -> f64 {
+        self.value_iter(w.iter().copied())
+    }
+
+    /// [`Penalty::value`] over an iterator of weights — the
+    /// allocation-free form observation paths use (the lazy trainer
+    /// streams transiently caught-up weights through it without
+    /// materializing a d-length buffer; see
+    /// `LazyTrainer::penalty_value`).
+    fn value_iter<I: Iterator<Item = f64>>(&self, ws: I) -> f64;
 
     /// True when every step of this penalty is the identity (dense
     /// trainers skip their O(d) sweep).
@@ -353,10 +363,10 @@ impl Penalty for ElasticNet {
         StepMap::Shrink { ra, rb }
     }
 
-    fn value(&self, w: &[f64]) -> f64 {
+    fn value_iter<I: Iterator<Item = f64>>(&self, ws: I) -> f64 {
         let mut l1 = 0.0;
         let mut l2 = 0.0;
-        for &x in w {
+        for x in ws {
             l1 += x.abs();
             l2 += x * x;
         }
@@ -585,10 +595,10 @@ impl Penalty for TruncatedGradient {
         StepMap::Truncate { alpha: self.gravity(t, eta), theta: self.theta }
     }
 
-    fn value(&self, w: &[f64]) -> f64 {
+    fn value_iter<I: Iterator<Item = f64>>(&self, ws: I) -> f64 {
         // The objective truncated gradient approximately minimizes is
         // the ℓ1-penalized loss (Langford et al. §3).
-        self.lam1 * w.iter().map(|x| x.abs()).sum::<f64>()
+        self.lam1 * ws.map(|x| x.abs()).sum::<f64>()
     }
 
     fn is_noop(&self) -> bool {
@@ -738,10 +748,10 @@ impl Penalty for Linf {
         StepMap::Clamp { r: self.lam }
     }
 
-    fn value(&self, w: &[f64]) -> f64 {
+    fn value_iter<I: Iterator<Item = f64>>(&self, ws: I) -> f64 {
         // Indicator of the ball: projected iterates are always feasible,
         // so the logged objective is the plain loss.
-        let max = w.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        let max = ws.fold(0.0f64, |m, x| m.max(x.abs()));
         if max <= self.lam {
             0.0
         } else {

@@ -150,11 +150,11 @@ impl Penalty for Regularizer {
         }
     }
 
-    fn value(&self, w: &[f64]) -> f64 {
+    fn value_iter<I: Iterator<Item = f64>>(&self, ws: I) -> f64 {
         match self {
-            Regularizer::ElasticNet(e) => e.value(w),
-            Regularizer::TruncatedGradient(p) => p.value(w),
-            Regularizer::Linf(l) => l.value(w),
+            Regularizer::ElasticNet(e) => e.value_iter(ws),
+            Regularizer::TruncatedGradient(p) => p.value_iter(ws),
+            Regularizer::Linf(l) => l.value_iter(ws),
         }
     }
 

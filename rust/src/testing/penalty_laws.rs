@@ -181,7 +181,7 @@ mod tests {
             fn step_map(&self, _algo: Algo, _t: u64, eta: f64) -> StepMap {
                 StepMap::Shrink { ra: 1.0, rb: eta * 0.1 }
             }
-            fn value(&self, _w: &[f64]) -> f64 {
+            fn value_iter<I: Iterator<Item = f64>>(&self, _ws: I) -> f64 {
                 0.0
             }
             fn validate(&self, _algo: Algo, _schedule: &Schedule) -> anyhow::Result<()> {

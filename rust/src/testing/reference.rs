@@ -117,6 +117,10 @@ where
             examples: n,
             seconds: e0.elapsed().as_secs_f64(),
             merge_seconds,
+            // Post-PR 1 diagnostic field: the frozen engine always runs
+            // dense flat merges (constructing it does not change the
+            // pinned behavior).
+            touched_frac: 1.0,
         });
     }
 

@@ -104,6 +104,19 @@ impl DenseTrainer {
         self.model.bias = bias;
     }
 
+    /// Write merged values for `indices` plus the bias — the dense side
+    /// of the sparse data-parallel sync
+    /// ([`crate::train::MergeMode::Sparse`]). Plain indexed writes:
+    /// dense weights are always current, so there is no lazy state to
+    /// stamp. O(|indices|).
+    pub fn scatter_merged(&mut self, indices: &[u32], values: &[f64], bias: f64) {
+        assert_eq!(indices.len(), values.len(), "scatter_merged: length mismatch");
+        for (&j, &v) in indices.iter().zip(values.iter()) {
+            self.model.weights[j as usize] = v;
+        }
+        self.model.bias = bias;
+    }
+
     /// The model (always current — that's the point of dense updates).
     pub fn model(&self) -> &LinearModel {
         &self.model

@@ -35,8 +35,19 @@ pub struct EpochStats {
     /// Seconds of this epoch spent in the merge+broadcast sync step
     /// (parallel engines; 0 for the serial drivers). In pipelined mode
     /// this is the coordinator's shadow-time merge cost — overhead that
-    /// overlaps example processing instead of serializing it.
+    /// overlaps example processing instead of serializing it. In sparse
+    /// mode it covers the whole coordinator-side sync (touched-set
+    /// union, gather-fold, scatter, coordinated flush); only the
+    /// per-worker feature-list collection is excluded, because it runs
+    /// in parallel inside the workers' training pass.
     pub merge_seconds: f64,
+    /// Fraction of the d weights each sync round of this epoch moved,
+    /// averaged over its rounds: 1.0 for the dense merges (flat / tree /
+    /// pipelined all rebroadcast every weight), `|U|/d` for the sparse
+    /// merge (U = features touched since the last sync), and 0.0 when no
+    /// merge ran (serial drivers). The merge-cost ratio
+    /// `parallel_scaling --json` reports per cell.
+    pub touched_frac: f64,
 }
 
 /// Result of a training run.
@@ -116,6 +127,7 @@ pub fn train_lazy_xy(x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -> Resu
             examples: order.len(),
             seconds: e0.elapsed().as_secs_f64(),
             merge_seconds: 0.0,
+            touched_frac: 0.0,
         });
     }
     let seconds = t0.elapsed().as_secs_f64();
@@ -156,6 +168,7 @@ pub fn train_dense(data: &SparseDataset, opts: &TrainOptions) -> Result<TrainRep
             examples: order.len(),
             seconds: e0.elapsed().as_secs_f64(),
             merge_seconds: 0.0,
+            touched_frac: 0.0,
         });
     }
     let seconds = t0.elapsed().as_secs_f64();

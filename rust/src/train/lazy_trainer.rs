@@ -185,6 +185,58 @@ impl LazyTrainer {
         self.finalized = true;
     }
 
+    /// The current bias. Always current — the bias is unregularized, so
+    /// it is updated eagerly and has no lazy bookkeeping.
+    pub fn bias(&self) -> f64 {
+        self.model.bias
+    }
+
+    /// Read the *current* values of `indices` with the snapshot
+    /// catch-up — the gather half of the sparse data-parallel sync
+    /// ([`crate::train::MergeMode::Sparse`]). Observation-only: ψ and
+    /// the DP tables are untouched. O(|indices|).
+    pub fn gather_current(&self, indices: &[u32]) -> Vec<f64> {
+        let snap = self.cache.snapshot();
+        indices
+            .iter()
+            .map(|&j| {
+                let slot = &self.slots[j as usize];
+                snap.catchup(slot.w, slot.psi)
+            })
+            .collect()
+    }
+
+    /// Fold `wgt ×` the current values of `indices` into `acc` — the
+    /// allocation-free gather the coordinator's sparse merge uses
+    /// (identical arithmetic to [`LazyTrainer::gather_current`] plus
+    /// the weighted fold, no intermediate buffer). Observation-only.
+    pub fn accumulate_current(&self, indices: &[u32], wgt: f64, acc: &mut [f64]) {
+        debug_assert_eq!(indices.len(), acc.len(), "accumulate_current: length mismatch");
+        let snap = self.cache.snapshot();
+        for (a, &j) in acc.iter_mut().zip(indices.iter()) {
+            let slot = &self.slots[j as usize];
+            *a += wgt * snap.catchup(slot.w, slot.psi);
+        }
+    }
+
+    /// Write merged values for `indices` (plus the bias), marking each
+    /// current as of the table head (ψ ← k) — the scatter half of the
+    /// sparse sync. Unlike [`LazyTrainer::load_weights`] there is **no
+    /// table rebase** and no O(d) sweep: every other weight keeps its
+    /// lazy `(w, ψ)` state, exactly as in serial Algorithm 1.
+    /// O(|indices|).
+    pub fn scatter_merged(&mut self, indices: &[u32], values: &[f64], bias: f64) {
+        assert_eq!(indices.len(), values.len(), "scatter_merged: length mismatch");
+        let k = self.cache.k();
+        for (&j, &v) in indices.iter().zip(values.iter()) {
+            let slot = &mut self.slots[j as usize];
+            slot.w = v;
+            slot.psi = k;
+        }
+        self.model.bias = bias;
+        self.finalized = false;
+    }
+
     /// Finalized model view ([`LazyTrainer::finalize`] must have run since
     /// the last update; enforced in debug builds).
     pub fn model(&self) -> &LinearModel {
@@ -202,12 +254,14 @@ impl LazyTrainer {
     /// logging. Stale weights are caught up **transiently** (the same
     /// closed-form snapshot [`Self::score_current`] uses) — ψ and the DP
     /// tables are untouched, so training trajectories are bitwise
-    /// unaffected by when (or whether) this is called. O(d).
+    /// unaffected by when (or whether) this is called. O(d) time,
+    /// **O(1) space**: the transient catch-ups stream straight into the
+    /// penalty accumulator ([`Penalty::value_iter`]) instead of
+    /// materializing a d-length buffer.
     pub fn penalty_value(&self) -> f64 {
         let snap = self.cache.snapshot();
-        let current: Vec<f64> =
-            self.slots.iter().map(|s| snap.catchup(s.w, s.psi)).collect();
-        self.penalty.penalty(&current)
+        self.penalty
+            .value_iter(self.slots.iter().map(|s| snap.catchup(s.w, s.psi)))
     }
 
     /// Global iteration count.

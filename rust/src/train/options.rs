@@ -36,9 +36,13 @@ pub struct TrainOptions {
     /// Ignored when `workers == 1`.
     pub sync_interval: Option<usize>,
     /// Merge topology of the sync step: `flat` (index-order
-    /// accumulation, the historical merge) or `tree` (fixed-topology
-    /// pairwise reduce — same weights up to float rounding). Ignored
-    /// when `workers == 1`.
+    /// accumulation, the historical merge), `tree` (fixed-topology
+    /// pairwise reduce — same weights up to float rounding) or `sparse`
+    /// (O(touched)·workers sync over the features touched since the last
+    /// merge; everything else stays lazy in every worker — falls back to
+    /// `flat` with a logged reason wherever its equal-round invariant
+    /// cannot hold, see [`crate::train::pool`]). Ignored when
+    /// `workers == 1`.
     pub merge: MergeMode,
     /// Overlap each round's O(d·workers) merge with the next round's
     /// example processing; the merged model is applied one round late
@@ -80,6 +84,14 @@ impl TrainOptions {
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
         if let Some(m) = self.sync_interval {
             anyhow::ensure!(m >= 1, "sync interval must be >= 1");
+        }
+        if self.merge == MergeMode::Sparse && self.pipeline_sync {
+            anyhow::bail!(
+                "merge = sparse is incompatible with pipeline_sync: the sparse \
+                 sync gathers at an up-to-date round boundary, which the \
+                 one-round-stale pipelined broadcast cannot provide (pipeline \
+                 the flat/tree merges instead)"
+            );
         }
         Ok(())
     }
@@ -130,14 +142,20 @@ mod tests {
 
     #[test]
     fn pool_knobs_validate() {
-        // Both merge topologies and the pipelined flag are always legal
-        // (each is a pure runtime choice, ignored at workers == 1).
+        // The dense merge topologies combine freely with the pipelined
+        // flag (each is a pure runtime choice, ignored at workers == 1).
         for merge in [MergeMode::Flat, MergeMode::Tree] {
             for pipeline_sync in [false, true] {
                 let o = TrainOptions { merge, pipeline_sync, workers: 4, ..Default::default() };
                 o.validate().unwrap();
             }
         }
+        // The sparse sync needs an up-to-date round boundary: legal
+        // synchronously, rejected with pipelining.
+        let o = TrainOptions { merge: MergeMode::Sparse, workers: 4, ..Default::default() };
+        o.validate().unwrap();
+        let o = TrainOptions { pipeline_sync: true, ..o };
+        assert!(o.validate().is_err(), "sparse + pipeline_sync must be rejected");
         assert_eq!(TrainOptions::default().merge, MergeMode::Flat);
         assert!(!TrainOptions::default().pipeline_sync);
     }

@@ -18,14 +18,31 @@
 //!   each epoch boundary. Lowest overhead.
 //! * `sync_interval = Some(m)`: each worker processes `m` examples of
 //!   its shard per round, then all workers synchronize.
-//! * `merge = flat | tree` ([`MergeMode`]): index-order accumulation
-//!   (the historical merge) or a fixed-topology pairwise tree — same
-//!   weights up to float rounding, deterministic either way.
+//! * `merge = flat | tree | sparse` ([`MergeMode`]): index-order
+//!   accumulation (the historical merge), a fixed-topology pairwise tree
+//!   (same weights up to float rounding), or the **sparse sync** — the
+//!   paper's O(p) principle extended across the data-parallel boundary.
+//!   A sparse sync costs O(|U|·workers + sort) where U is the union of
+//!   features touched by any worker since the last merge (≤
+//!   `sync_interval`·workers·p, usually ≪ d): with equal per-round
+//!   example counts every worker's DP tables are identical, so features
+//!   untouched by *all* workers need no gather, no average, no
+//!   broadcast and no rebase — they stay lazy in every worker, and the
+//!   per-round O(d) worker-side `finalize` disappears too. Falls back
+//!   to `flat` (with a logged reason) on unequal shards
+//!   (`n % workers != 0`), non-sparse-capable trainers, or one-shot
+//!   merges — see [`super::pool`] for the invariant, the coordinated
+//!   budget flush and the fallback matrix. Equivalent to `flat` within
+//!   float tolerance (property-tested at 1e-10 across penalty families,
+//!   algorithms and schedules), ~|U|/d of its merge cost.
 //! * `pipeline_sync = true`: overlap the O(d·workers) merge of round
 //!   *r* with round *r+1*'s example processing; the merged model is
 //!   applied one round late (a defined, deterministic stale-synchronous
 //!   estimator — see [`super::pool`] for the telescoping argument).
-//!   Synchronous remains the default.
+//!   Synchronous remains the default. Incompatible with `merge =
+//!   sparse` (rejected by [`TrainOptions::validate`]).
+//!
+//! [`TrainOptions::validate`]: super::options::TrainOptions::validate
 //!
 //! ## Semantics — the equivalence ladder
 //!

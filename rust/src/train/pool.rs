@@ -34,6 +34,54 @@
 //!   flat agree to float tolerance, not bitwise. The topology depends
 //!   only on the worker count — never on thread timing — so either mode
 //!   is a pure function of `(data, options)`.
+//! * [`MergeMode::Sparse`] — the paper's lazy principle extended across
+//!   the data-parallel boundary: a sync whose cost is
+//!   **O(|U|·workers)**, where U is the union of features touched by
+//!   any worker since the last merge, instead of O(d·workers).
+//!
+//! ## The sparse merge (`--merge sparse`)
+//!
+//! **Invariant.** With equal per-round example counts, every worker's
+//! DP tables are identical — same penalty, same schedule, same step
+//! count — and every sparse sync leaves all workers in an *identical*
+//! state (touched features get the same merged value at the same table
+//! head; untouched features keep the same lazy `(w, ψ)` pair they
+//! already shared). Hence for any feature untouched by **all** workers
+//! since the last merge, the weighted average of the workers' caught-up
+//! values equals the single shared closed-form catch-up: those features
+//! need no gather, no average, no broadcast, and **no rebase** — they
+//! simply stay lazy in every worker, exactly as in serial Algorithm 1.
+//!
+//! **Mechanics.** Each worker collects the sorted, deduplicated feature
+//! list of its own slice *alongside its training pass* (parallel,
+//! amortized into worker time — the discovery scan never serializes on
+//! the coordinator). Between the round's two barriers the coordinator
+//! then: unions those lists into the round's merge set U (inside the
+//! `merge_seconds` window — the union is part of the sync cost and is
+//! accounted as such), folds the caught-up values of U from every
+//! worker straight into the merge accumulator
+//! ([`Trainer::accumulate_current`] — allocation-free, same
+//! example-weighted arithmetic as the flat fold), and scatters the
+//! merged values back ([`Trainer::scatter_merged`]) with ψ stamped to
+//! the current table head — no table rebase, and no per-round O(d)
+//! `finalize` in the workers either. Because the tables now grow
+//! across rounds, the coordinator performs a **coordinated budget
+//! flush**: if the next round would push any worker's DP table over its
+//! space budget, *all* workers flush at the boundary together
+//! ([`Trainer::rebase_pressure`] / [`Trainer::flush`]), preserving the
+//! shared-table invariant. (A conditioning-driven mid-round rebase is
+//! also invariant-safe: identical tables make every worker trigger it at
+//! the same local step.)
+//!
+//! **Fallback.** The sparse sync requires equal per-round counts and an
+//! up-to-date round boundary, so it degrades — with a logged reason — to
+//! the dense flat merge whenever shards are unequal (`n % workers != 0`:
+//! remainder shards), the trainer lacks the sparse-sync API, or the mode
+//! is pipelined (`TrainOptions::validate` rejects `sparse` +
+//! `pipeline_sync` up front). One-shot merges that must materialize a
+//! dense model (streaming end-of-stream, [`merge_models`] callers)
+//! degrade to the flat fold likewise. Never a wrong model, only a denser
+//! merge.
 //!
 //! ## Pipelined sync (`TrainOptions::pipeline_sync`)
 //!
@@ -92,10 +140,16 @@ pub enum MergeMode {
     /// Fixed-topology pairwise tree ([`tree_weighted_average`]) — same
     /// weights up to float rounding, O(log workers) depth.
     Tree,
+    /// O(|touched|·workers) sync: only the features touched since the
+    /// last merge are gathered, averaged and scattered; everything else
+    /// stays lazy in every worker (see the module docs). Falls back to
+    /// the flat merge — with a logged reason — wherever its equal-round
+    /// invariant cannot hold.
+    Sparse,
 }
 
 impl MergeMode {
-    /// Parse `"flat"` or `"tree"`.
+    /// Parse `"flat"`, `"tree"` or `"sparse"`.
     pub fn parse(s: &str) -> Result<MergeMode> {
         s.parse()
     }
@@ -105,6 +159,7 @@ impl MergeMode {
         match self {
             MergeMode::Flat => "flat",
             MergeMode::Tree => "tree",
+            MergeMode::Sparse => "sparse",
         }
     }
 }
@@ -116,7 +171,8 @@ impl std::str::FromStr for MergeMode {
         match s {
             "flat" => Ok(MergeMode::Flat),
             "tree" => Ok(MergeMode::Tree),
-            _ => anyhow::bail!("unknown merge mode {s:?} (expected flat|tree)"),
+            "sparse" => Ok(MergeMode::Sparse),
+            _ => anyhow::bail!("unknown merge mode {s:?} (expected flat|tree|sparse)"),
         }
     }
 }
@@ -237,9 +293,15 @@ fn combine_borrowed(a: &LinearModel, ca: u64, b: &LinearModel, cb: u64) -> (Line
 }
 
 /// Dispatch on the configured merge topology.
+///
+/// [`MergeMode::Sparse`] is a *sync strategy* of the round-synchronized
+/// pool engine, not a topology for one-shot merges: anywhere a dense
+/// merged model must be materialized (streaming end-of-stream, the
+/// pool's own fallback) it degrades to the flat fold — the same
+/// weighted mean the sparse sync computes on the touched set.
 pub fn merge_models(models: &[(&LinearModel, u64)], mode: MergeMode) -> LinearModel {
     match mode {
-        MergeMode::Flat => weighted_average(models),
+        MergeMode::Flat | MergeMode::Sparse => weighted_average(models),
         MergeMode::Tree => tree_weighted_average(models),
     }
 }
@@ -284,6 +346,15 @@ fn shard_range(n: usize, workers: usize, w: usize) -> Range<usize> {
 /// Longest shard length (worker 0 by construction).
 fn longest_shard(n: usize, workers: usize) -> usize {
     shard_range(n, workers, 0).len()
+}
+
+/// `[lo, hi)` of a shard's slice for the round starting at `offset` —
+/// the round-slicing arithmetic in one place. (The sparse merge set U
+/// needs no second copy: each worker collects the feature list of the
+/// exact slice it trains on, so U covers precisely the processed
+/// examples by construction.)
+fn round_slice(shard_len: usize, offset: usize, interval: usize) -> Range<usize> {
+    offset.min(shard_len)..offset.saturating_add(interval).min(shard_len)
 }
 
 /// Message every poisoned primitive panics with — a deliberate panic so
@@ -415,6 +486,11 @@ struct PoolShared<T> {
     trainers: Vec<Mutex<T>>,
     round_out: Vec<Mutex<RoundOut>>,
     snapshots: Vec<Mutex<Option<Snapshot>>>,
+    /// Sparse mode: each worker's sorted, deduplicated feature list for
+    /// the round it just processed (collected in parallel with training,
+    /// buffers reused across rounds). The coordinator unions them into
+    /// the round's merge set U between the barriers.
+    touched: Vec<Mutex<Vec<u32>>>,
     /// Size `workers + 1`: the coordinator participates in every round.
     barrier: RoundBarrier,
     gate: SeqSlot<Arc<Vec<usize>>>,
@@ -465,6 +541,7 @@ where
                 examples: 0,
                 seconds: 0.0,
                 merge_seconds: 0.0,
+                touched_frac: 0.0,
             })
             .collect();
         trainer.finalize();
@@ -483,9 +560,45 @@ where
         trainers: (0..workers).map(|_| Mutex::new(make_trainer())).collect(),
         round_out: (0..workers).map(|_| Mutex::new((0.0, 0))).collect(),
         snapshots: (0..workers).map(|_| Mutex::new(None)).collect(),
+        touched: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
         barrier: RoundBarrier::new(workers + 1),
         gate: SeqSlot::new(),
         merge_slot: SeqSlot::new(),
+    };
+
+    // Sparse-sync eligibility: the O(touched) merge needs equal per-round
+    // example counts (so every worker's DP tables stay identical — the
+    // invariant in the module docs), a synchronous round boundary, and a
+    // trainer that implements the gather/scatter API. Anything else
+    // degrades to the dense flat merge with a logged reason — never a
+    // wrong model.
+    let sparse = if opts.merge == MergeMode::Sparse {
+        if pipelined {
+            // `TrainOptions::validate` rejects this pair on the public
+            // drivers; defensive here because `run` is crate-visible.
+            eprintln!(
+                "[lazyreg] sparse merge is incompatible with pipelined sync; \
+                 falling back to the flat merge"
+            );
+            false
+        } else if n % workers != 0 {
+            eprintln!(
+                "[lazyreg] sparse merge disabled: n = {n} over {workers} workers \
+                 leaves remainder shards with unequal round counts; falling back \
+                 to the flat merge"
+            );
+            false
+        } else if !shared.trainers[0].lock().unwrap().supports_sparse_sync() {
+            eprintln!(
+                "[lazyreg] sparse merge disabled: trainer lacks the sparse-sync \
+                 API; falling back to the flat merge"
+            );
+            false
+        } else {
+            true
+        }
+    } else {
+        false
     };
 
     let mut rng = Rng::new(opts.seed);
@@ -502,7 +615,7 @@ where
                 // A worker panic must poison the pool before unwinding,
                 // or every other thread parks at the barrier forever.
                 let result = catch_unwind(AssertUnwindSafe(|| {
-                    worker_loop(shared, x, labels, opts, workers, w);
+                    worker_loop(shared, x, labels, opts, workers, sparse, w);
                 }));
                 if let Err(payload) = result {
                     shared.poison_all();
@@ -517,9 +630,10 @@ where
         let result = catch_unwind(AssertUnwindSafe(|| {
             coordinator_loop(
                 &shared,
+                x,
                 opts,
-                n,
                 workers,
+                sparse,
                 &mut rng,
                 &mut epochs_out,
                 &mut last_merged,
@@ -566,20 +680,29 @@ where
 
 /// The coordinator half of the pool: publishes epoch orders, rendezvous
 /// with the workers each round, reads their round outputs, and performs
-/// (or, pipelined, overlaps) the merge+broadcast.
+/// (or, pipelined, overlaps; or, sparse, restricts to the touched set)
+/// the merge+broadcast.
+#[allow(clippy::too_many_arguments)]
 fn coordinator_loop<T: Trainer>(
     shared: &PoolShared<T>,
+    x: &CsrMatrix,
     opts: &TrainOptions,
-    n: usize,
     workers: usize,
+    sparse: bool,
     rng: &mut Rng,
     epochs_out: &mut Vec<EpochStats>,
     last_merged: &mut Option<Arc<LinearModel>>,
 ) {
+    let n = x.n_rows();
+    let d = x.n_cols();
     let interval = opts.sync_interval.unwrap_or(n.max(1));
     let longest = longest_shard(n, workers);
     let pipelined = opts.pipeline_sync;
     let mut round = 0usize;
+    // Sparse-sync scratch, reused across rounds: the sorted merge set U
+    // of the current round and its weighted-average accumulator.
+    let mut touched: Vec<u32> = Vec::new();
+    let mut merged: Vec<f64> = Vec::new();
     // Pipelined mode pre-publishes the next epoch's order from the
     // epoch-final round (see below); this flag prevents a second
     // epoch_order draw for the same epoch at the loop head.
@@ -593,10 +716,19 @@ fn coordinator_loop<T: Trainer>(
         let e0 = Instant::now();
         let mut loss_sum = 0.0f64;
         let mut merge_seconds = 0.0f64;
+        // Per-epoch touched-fraction accounting: weights moved per sync
+        // round / d (1.0 for the dense merges, |U|/d for sparse).
+        let mut frac_sum = 0.0f64;
+        let mut merges = 0usize;
+        let mut epoch_penalty: Option<f64> = None;
         let mut offset = 0usize;
         while offset < longest {
             // Workers finished the round (synchronous: first of the
-            // round's two barriers; pipelined: the only one).
+            // round's two barriers; pipelined: the only one). In sparse
+            // mode each worker has also published the sorted feature
+            // list of its own slice (collected *in parallel* with its
+            // training pass, so the per-round discovery scan never
+            // serializes on the coordinator).
             shared.barrier.wait();
             // Next epoch's order may be needed by workers as soon as
             // they cross a pipelined epoch-final barrier; publishing
@@ -619,7 +751,63 @@ fn coordinator_loop<T: Trainer>(
             loss_sum += round_sum;
 
             let m0 = Instant::now();
-            if pipelined {
+            if sparse {
+                // The O(|U|·workers) sync. Equal per-round counts across
+                // workers (the eligibility precondition) keep every DP
+                // table identical, so features outside U need no gather,
+                // no average, no broadcast and no rebase — they stay
+                // lazy in every worker (module docs, "The sparse merge").
+                debug_assert!(
+                    counts.iter().all(|&c| c == counts[0]),
+                    "sparse sync requires equal per-round counts"
+                );
+                let total: u64 = counts.iter().sum();
+                if total > 0 {
+                    // U = sorted union of the workers' per-round feature
+                    // lists (each already sorted + deduplicated). This
+                    // union *is* part of the sync cost, so it runs
+                    // inside the merge_seconds window — honest
+                    // accounting for the bench's sparse-vs-flat ratio.
+                    touched.clear();
+                    for slot in &shared.touched {
+                        touched.extend_from_slice(&slot.lock().unwrap());
+                    }
+                    touched.sort_unstable();
+                    touched.dedup();
+                    let mut guards: Vec<_> =
+                        shared.trainers.iter().map(|t| t.lock().unwrap()).collect();
+                    // Same example-weighted accumulation arithmetic as
+                    // `weighted_average`, restricted to U (accumulator
+                    // reused across rounds — no alloc in the window).
+                    merged.clear();
+                    merged.resize(touched.len(), 0.0);
+                    let mut bias = 0.0f64;
+                    for (g, &c) in guards.iter().zip(counts.iter()) {
+                        if c == 0 {
+                            continue;
+                        }
+                        let wgt = c as f64 / total as f64;
+                        g.accumulate_current(&touched, wgt, &mut merged);
+                        bias += wgt * g.bias();
+                    }
+                    for g in guards.iter_mut() {
+                        g.scatter_merged(&touched, &merged, bias);
+                    }
+                    // Coordinated budget flush: if the *next* round would
+                    // push any worker's DP table over its space budget,
+                    // every worker flushes here at the boundary, keeping
+                    // all tables identical (rebase counters advance in
+                    // lockstep — the canary test asserts it).
+                    let next = next_round_steps(n, workers, interval, offset, epoch, opts);
+                    if next > 0 && guards.iter().any(|g| g.rebase_pressure(next)) {
+                        for g in guards.iter_mut() {
+                            g.flush();
+                        }
+                    }
+                    frac_sum += touched.len() as f64 / d.max(1) as f64;
+                    merges += 1;
+                }
+            } else if pipelined {
                 // Merge the workers' published snapshots; they apply
                 // it at the end of the round they're now processing.
                 let guards: Vec<_> =
@@ -637,6 +825,8 @@ fn coordinator_loop<T: Trainer>(
                 drop(guards);
                 shared.merge_slot.publish(round, merged.clone());
                 *last_merged = Some(merged);
+                frac_sum += 1.0;
+                merges += 1;
             } else if counts.iter().any(|&c| c > 0) {
                 // Synchronous: merge + broadcast between the round's
                 // two barriers, exactly like the round-spawn engine.
@@ -655,9 +845,20 @@ fn coordinator_loop<T: Trainer>(
                 }
                 drop(guards);
                 *last_merged = Some(Arc::new(merged));
+                frac_sum += 1.0;
+                merges += 1;
             }
             merge_seconds += m0.elapsed().as_secs_f64();
 
+            if sparse && epoch_done {
+                // R(w) of the just-merged model for the epoch objective,
+                // streamed off worker 0's lazy state (after a sparse
+                // sync every worker holds an identical state, and no
+                // dense merged model exists to read). Observation-only,
+                // and taken *before* the release barrier lets workers
+                // start the next epoch.
+                epoch_penalty = Some(shared.trainers[0].lock().unwrap().penalty_value());
+            }
             if !pipelined {
                 shared.barrier.wait(); // release workers into next round
             }
@@ -665,11 +866,16 @@ fn coordinator_loop<T: Trainer>(
             offset = offset.saturating_add(interval);
         }
         let mean_loss = loss_sum / n.max(1) as f64;
-        let objective = mean_loss
-            + last_merged
-                .as_ref()
-                .map(|m| opts.reg.penalty(&m.weights))
-                .unwrap_or(0.0);
+        let objective = match epoch_penalty {
+            Some(p) => mean_loss + p,
+            None => {
+                mean_loss
+                    + last_merged
+                        .as_ref()
+                        .map(|m| opts.reg.penalty(&m.weights))
+                        .unwrap_or(0.0)
+            }
+        };
         epochs_out.push(EpochStats {
             epoch,
             mean_loss,
@@ -677,20 +883,49 @@ fn coordinator_loop<T: Trainer>(
             examples: n,
             seconds: e0.elapsed().as_secs_f64(),
             merge_seconds,
+            touched_frac: if merges > 0 { frac_sum / merges as f64 } else { 0.0 },
         });
+    }
+}
+
+/// Examples each worker will process in the round *after* the one that
+/// ended at `offset` — 0 when training ends there. Sparse mode only,
+/// where every shard has the same length (`n % workers == 0`), so the
+/// answer is worker-independent; drives the coordinated budget flush.
+fn next_round_steps(
+    n: usize,
+    workers: usize,
+    interval: usize,
+    offset: usize,
+    epoch: usize,
+    opts: &TrainOptions,
+) -> usize {
+    let shard_len = n / workers;
+    let next_offset = offset.saturating_add(interval);
+    if next_offset < shard_len {
+        interval.min(shard_len - next_offset)
+    } else if epoch + 1 < opts.epochs {
+        interval.min(shard_len)
+    } else {
+        0
     }
 }
 
 /// One persistent worker: processes its contiguous shard slice each
 /// round, then participates in the sync (synchronous: two barriers
 /// around the coordinator's merge+broadcast; pipelined: rebase onto the
-/// one-round-stale merge, publish a snapshot, one barrier).
+/// one-round-stale merge, publish a snapshot, one barrier; sparse: no
+/// per-round finalize at all — the coordinator gathers through the
+/// snapshot catch-up, so the O(d) materialization happens once, at the
+/// end of the run).
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<T: Trainer>(
     shared: &PoolShared<T>,
     x: &CsrMatrix,
     labels: &[f32],
     opts: &TrainOptions,
     workers: usize,
+    sparse: bool,
     w: usize,
 ) {
     let n = x.n_rows();
@@ -705,15 +940,38 @@ fn worker_loop<T: Trainer>(
         let shard = &order[range.clone()];
         let mut offset = 0usize;
         while offset < longest {
-            let lo = offset.min(shard.len());
-            let hi = offset.saturating_add(interval).min(shard.len());
+            let slice = round_slice(shard.len(), offset, interval);
+            let (lo, hi) = (slice.start, slice.end);
             {
                 let mut tr = shared.trainers[w].lock().unwrap();
                 let mut ls = 0.0f64;
-                for &r in &shard[lo..hi] {
-                    ls += tr.process_example(x.row(r), f64::from(labels[r]));
+                if sparse {
+                    // Collect this slice's feature list alongside the
+                    // training pass — the discovery half of the sparse
+                    // sync, done by every worker in parallel (the
+                    // coordinator only unions the sorted lists). No
+                    // per-round finalize either: the coordinator
+                    // gathers through the snapshot catch-up, so the
+                    // O(d) materialization happens once, at the end of
+                    // the run.
+                    let mut tv = shared.touched[w].lock().unwrap();
+                    tv.clear();
+                    for &r in &shard[lo..hi] {
+                        let row = x.row(r);
+                        tv.extend_from_slice(row.indices);
+                        ls += tr.process_example(row, f64::from(labels[r]));
+                    }
+                    tv.sort_unstable();
+                    tv.dedup();
+                } else {
+                    for &r in &shard[lo..hi] {
+                        ls += tr.process_example(x.row(r), f64::from(labels[r]));
+                    }
+                    // The dense merges read `model()`, so every weight
+                    // must be materialized each round — the O(d) cost
+                    // per worker per round the sparse sync eliminates.
+                    tr.finalize();
                 }
-                tr.finalize();
                 if pipelined {
                     boundary_rebase(shared, &mut tr, round, (hi - lo) as u64, w);
                 }
@@ -791,8 +1049,9 @@ mod tests {
     fn merge_mode_parses_and_round_trips() {
         assert_eq!(MergeMode::parse("flat").unwrap(), MergeMode::Flat);
         assert_eq!(MergeMode::parse("tree").unwrap(), MergeMode::Tree);
+        assert_eq!(MergeMode::parse("sparse").unwrap(), MergeMode::Sparse);
         assert!(MergeMode::parse("ring").is_err());
-        for m in [MergeMode::Flat, MergeMode::Tree] {
+        for m in [MergeMode::Flat, MergeMode::Tree, MergeMode::Sparse] {
             assert_eq!(MergeMode::parse(m.name()).unwrap(), m);
         }
         assert_eq!(MergeMode::default(), MergeMode::Flat);
@@ -977,6 +1236,132 @@ mod tests {
             assert_eq!(r.epochs.len(), 3);
             assert!(r.epochs.iter().all(|e| e.mean_loss == 0.0));
         }
+    }
+
+    #[test]
+    fn sparse_sync_leaves_untouched_slots_lazy_and_identical() {
+        // The shared-table invariant at unit scale: two lazy workers
+        // take equal step counts, then a *manual* sparse sync over the
+        // union U of their touched features. Outside U the slots must be
+        // untouched by the sync (ψ still 0, no rebase) and identical
+        // across workers — and their caught-up values must equal the
+        // flat-merge broadcast value, so continuing to train on both
+        // paths stays equivalent.
+        use crate::train::LazyTrainer;
+        let o = TrainOptions {
+            algo: Algo::Fobos,
+            reg: Regularizer::elastic_net(0.01, 0.05),
+            schedule: Schedule::InvSqrtT { eta0: 0.5 },
+            ..Default::default()
+        };
+        let d = 8;
+        let mut x = CsrMatrix::empty(d);
+        x.push_row(vec![(0, 1.0), (2, 2.0)]); // worker a's example
+        x.push_row(vec![(1, 1.0), (2, 1.0)]); // worker b's example
+        // Non-zero starting weights so "untouched" is not trivially 0.
+        let w0: Vec<f64> = (0..d).map(|j| 0.1 * (j as f64 + 1.0)).collect();
+        let mk = || {
+            let mut t = LazyTrainer::new(d, &o);
+            t.load_weights(&w0, 0.25);
+            t
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..5 {
+            a.process_example(x.row(0), 1.0);
+            b.process_example(x.row(1), 0.0);
+        }
+
+        // Flat control: finalize, average, broadcast (rebases ψ to 0).
+        let (mut fa, mut fb) = (a.clone(), b.clone());
+        fa.finalize();
+        fb.finalize();
+        let merged = weighted_average(&[(fa.model(), 5), (fb.model(), 5)]);
+        fa.load_weights(&merged.weights, merged.bias);
+        fb.load_weights(&merged.weights, merged.bias);
+
+        // Sparse sync over U = {0, 1, 2}: same weighted-mean arithmetic,
+        // restricted to the touched set; ψ stamped to the table head.
+        let u: Vec<u32> = vec![0, 1, 2];
+        let (ga, gb) = (a.gather_current(&u), b.gather_current(&u));
+        let vals: Vec<f64> =
+            ga.iter().zip(gb.iter()).map(|(x, y)| 0.5 * x + 0.5 * y).collect();
+        let bias = 0.5 * a.bias() + 0.5 * b.bias();
+        a.scatter_merged(&u, &vals, bias);
+        b.scatter_merged(&u, &vals, bias);
+
+        for t in [&a, &b] {
+            let psi = t.psi();
+            assert_eq!(&psi[0..3], &[5, 5, 5], "touched ψ must be at the table head");
+            assert_eq!(&psi[3..], &[0, 0, 0, 0, 0], "untouched ψ must be untouched");
+        }
+        // Outside U the workers agree bitwise with each other and (to
+        // catch-up rounding) with the flat broadcast.
+        let rest: Vec<u32> = (3..d as u32).collect();
+        let (ra, rb) = (a.gather_current(&rest), b.gather_current(&rest));
+        assert_eq!(ra, rb, "untouched slots diverged across workers");
+        for (v, j) in ra.iter().zip(rest.iter()) {
+            let flat = merged.weights[*j as usize];
+            assert!((v - flat).abs() <= 1e-12, "feature {j}: sparse {v} vs flat {flat}");
+        }
+
+        // Training continues equivalently on both paths.
+        for _ in 0..5 {
+            a.process_example(x.row(0), 1.0);
+            b.process_example(x.row(1), 0.0);
+            fa.process_example(x.row(0), 1.0);
+            fb.process_example(x.row(1), 0.0);
+        }
+        a.finalize();
+        b.finalize();
+        fa.finalize();
+        fb.finalize();
+        assert!(a.model().max_weight_diff(fa.model()) < 1e-10);
+        assert!(b.model().max_weight_diff(fb.model()) < 1e-10);
+    }
+
+    #[test]
+    fn sparse_merge_matches_flat_through_the_pool() {
+        let data = generate(&BowSpec::tiny(), 35);
+        for workers in [2usize, 4] {
+            let mut flat = opts(workers);
+            flat.sync_interval = Some(25);
+            let mut sp = flat;
+            sp.merge = MergeMode::Sparse;
+            let a = train_parallel(&data, &flat).unwrap();
+            let b = train_parallel(&data, &sp).unwrap();
+            let diff = a.model.max_weight_diff(&b.model);
+            assert!(diff < 1e-10, "workers={workers}: sparse vs flat diff {diff}");
+            assert!((a.model.bias - b.model.bias).abs() < 1e-10);
+            // Dense merges move all d weights; sparse rounds move |U|.
+            for e in &a.epochs {
+                assert_eq!(e.touched_frac, 1.0);
+            }
+            for e in &b.epochs {
+                assert!(e.touched_frac > 0.0 && e.touched_frac < 1.0, "{}", e.touched_frac);
+                assert!(e.objective.is_finite() && e.objective >= e.mean_loss);
+            }
+            // And the sparse run is deterministic.
+            let b2 = train_parallel(&data, &sp).unwrap();
+            assert_eq!(b.model.weights, b2.model.weights);
+            assert_eq!(b.model.bias, b2.model.bias);
+        }
+    }
+
+    #[test]
+    fn sparse_merge_falls_back_to_flat_on_unequal_shards() {
+        // n = 500 is not divisible by 3: remainder shards break the
+        // equal-round-count invariant, so the engine must run the dense
+        // flat merge instead — bitwise the same model as `--merge flat`.
+        let data = generate(&BowSpec::tiny(), 36);
+        let mut flat = opts(3);
+        flat.sync_interval = Some(40);
+        let mut sp = flat;
+        sp.merge = MergeMode::Sparse;
+        let a = train_parallel(&data, &flat).unwrap();
+        let b = train_parallel(&data, &sp).unwrap();
+        assert_eq!(a.model.weights, b.model.weights);
+        assert_eq!(a.model.bias, b.model.bias);
+        assert_eq!(a.rebases, b.rebases);
     }
 
     #[test]

@@ -50,6 +50,64 @@ pub trait Trainer {
     /// stale weights up transiently (no state mutation), so calling this
     /// mid-epoch is observation-only.
     fn penalty_value(&self) -> f64;
+
+    /// The current bias (always eagerly maintained — the bias is
+    /// unregularized, so it has no lazy bookkeeping to catch up).
+    fn bias(&self) -> f64 {
+        self.model().bias
+    }
+
+    /// Does this trainer implement the sparse-sync API below
+    /// ([`Trainer::gather_current`] / [`Trainer::scatter_merged`])? The
+    /// sparse merge ([`crate::train::MergeMode::Sparse`]) falls back to
+    /// the dense flat merge when it does not.
+    fn supports_sparse_sync(&self) -> bool {
+        false
+    }
+
+    /// Read the *current* values of the given feature indices, catching
+    /// stale weights up transiently (no ψ/table mutation) — the gather
+    /// half of the sparse sync. Only called when
+    /// [`Trainer::supports_sparse_sync`] is true.
+    fn gather_current(&self, _indices: &[u32]) -> Vec<f64> {
+        unreachable!("gather_current on a trainer without sparse-sync support")
+    }
+
+    /// Fold `wgt ×` the current values of `indices` into `acc`
+    /// (`acc[i] += wgt · current(indices[i])`) — the allocation-free
+    /// form of [`Trainer::gather_current`] the coordinator's per-round
+    /// merge uses (it runs with every trainer lock held, so no heap
+    /// traffic or second pass belongs there). Same arithmetic as
+    /// gathering then folding; implementations override to skip the
+    /// intermediate buffer.
+    fn accumulate_current(&self, indices: &[u32], wgt: f64, acc: &mut [f64]) {
+        for (a, v) in acc.iter_mut().zip(self.gather_current(indices)) {
+            *a += wgt * v;
+        }
+    }
+
+    /// Write externally merged values for the given feature indices (and
+    /// the bias), marking them current as of the trainer's present lazy
+    /// state **without** rebasing any DP tables — the scatter half of the
+    /// sparse sync. All other weights keep their lazy state untouched.
+    /// Only called when [`Trainer::supports_sparse_sync`] is true.
+    fn scatter_merged(&mut self, _indices: &[u32], _values: &[f64], _bias: f64) {
+        unreachable!("scatter_merged on a trainer without sparse-sync support")
+    }
+
+    /// Would processing `steps` more examples trigger an amortized
+    /// DP-cache rebase (space budget / conditioning)? Drives the
+    /// *coordinated* flush of the sparse sync: if any worker answers yes
+    /// at a round boundary, every worker flushes there, keeping all
+    /// workers' tables identical. Always false for eager trainers.
+    fn rebase_pressure(&self, _steps: usize) -> bool {
+        false
+    }
+
+    /// Bring every weight current and rebase the lazy bookkeeping now
+    /// (the coordinated-flush half of [`Trainer::rebase_pressure`]).
+    /// No-op for eager trainers.
+    fn flush(&mut self) {}
 }
 
 impl Trainer for LazyTrainer {
@@ -84,6 +142,36 @@ impl Trainer for LazyTrainer {
     fn penalty_value(&self) -> f64 {
         LazyTrainer::penalty_value(self)
     }
+
+    fn bias(&self) -> f64 {
+        // The default reads `model()`, which debug-asserts finalization;
+        // the bias itself is always current (it is updated eagerly).
+        LazyTrainer::bias(self)
+    }
+
+    fn supports_sparse_sync(&self) -> bool {
+        true
+    }
+
+    fn gather_current(&self, indices: &[u32]) -> Vec<f64> {
+        LazyTrainer::gather_current(self, indices)
+    }
+
+    fn accumulate_current(&self, indices: &[u32], wgt: f64, acc: &mut [f64]) {
+        LazyTrainer::accumulate_current(self, indices, wgt, acc);
+    }
+
+    fn scatter_merged(&mut self, indices: &[u32], values: &[f64], bias: f64) {
+        LazyTrainer::scatter_merged(self, indices, values, bias);
+    }
+
+    fn rebase_pressure(&self, steps: usize) -> bool {
+        self.cache().would_rebase_within(steps)
+    }
+
+    fn flush(&mut self) {
+        LazyTrainer::flush_and_rebase(self);
+    }
 }
 
 impl Trainer for DenseTrainer {
@@ -113,6 +201,32 @@ impl Trainer for DenseTrainer {
 
     fn penalty_value(&self) -> f64 {
         DenseTrainer::penalty_value(self)
+    }
+
+    fn supports_sparse_sync(&self) -> bool {
+        // Dense weights are always current, so gather/scatter are plain
+        // indexed reads/writes. Features untouched since the last sync
+        // hold *identical* values in every equal-step worker (the same
+        // dense map was applied to the same starting value), so skipping
+        // them in the merge is exact — the dense side of the sparse≡flat
+        // equivalence the tests assert.
+        true
+    }
+
+    fn gather_current(&self, indices: &[u32]) -> Vec<f64> {
+        let w = &self.model().weights;
+        indices.iter().map(|&j| w[j as usize]).collect()
+    }
+
+    fn accumulate_current(&self, indices: &[u32], wgt: f64, acc: &mut [f64]) {
+        let w = &self.model().weights;
+        for (a, &j) in acc.iter_mut().zip(indices.iter()) {
+            *a += wgt * w[j as usize];
+        }
+    }
+
+    fn scatter_merged(&mut self, indices: &[u32], values: &[f64], bias: f64) {
+        DenseTrainer::scatter_merged(self, indices, values, bias);
     }
 }
 

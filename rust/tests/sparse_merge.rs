@@ -1,0 +1,157 @@
+//! Sparse-merge equivalence suite: the O(touched) data-parallel sync
+//! (`--merge sparse`) must be a pure optimization of the flat merge —
+//! same model to float tolerance — across every penalty family, both
+//! update algorithms, the learning-rate schedules and sync cadences,
+//! with lazy and dense workers, and under coordinated budget flushes.
+//!
+//! The shared-table invariant itself (untouched slots stay lazy and
+//! identical across workers after a sparse sync) is pinned at unit scale
+//! in `train::pool`'s tests; here the whole engine is exercised.
+
+use lazyreg::prelude::*;
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::testing::property;
+use lazyreg::train::train_parallel_dense_xy;
+
+#[test]
+fn sparse_merge_equals_flat_across_families_algos_and_schedules() {
+    // n = 500 is divisible by every worker count drawn below, so the
+    // sparse sync never falls back — each case genuinely runs the
+    // O(touched) path.
+    let data = generate(&BowSpec::tiny(), 91);
+    property("sparse merge == flat merge", 12, |g| {
+        let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+        let reg = *g.choose(&[
+            Regularizer::none(),
+            Regularizer::l1(0.005),
+            Regularizer::l22(0.1),
+            Regularizer::elastic_net(0.003, 0.1),
+            Regularizer::truncated_gradient(0.005, 4, 0.8),
+            Regularizer::linf(0.6),
+        ]);
+        let schedule = *g.choose(&[
+            Schedule::Constant { eta0: 0.3 },
+            Schedule::InvT { eta0: 0.8 },
+            Schedule::InvSqrtT { eta0: 0.5 },
+        ]);
+        let workers = *g.choose(&[2usize, 4, 5]);
+        let sync_interval = Some(*g.choose(&[10usize, 25, 64]));
+        let flat = TrainOptions {
+            algo,
+            reg,
+            schedule,
+            epochs: 2,
+            workers,
+            sync_interval,
+            seed: 0xBEEF ^ g.case as u64,
+            ..Default::default()
+        };
+        let sparse = TrainOptions { merge: MergeMode::Sparse, ..flat };
+        let a = train_parallel(&data, &flat).unwrap();
+        let b = train_parallel(&data, &sparse).unwrap();
+        let diff = a.model.max_weight_diff(&b.model);
+        assert!(
+            diff < 1e-10,
+            "case {}: {algo:?}/{}/{schedule:?} workers={workers} \
+             sync={sync_interval:?}: sparse vs flat diff {diff}",
+            g.case,
+            reg.name(),
+        );
+        assert!((a.model.bias - b.model.bias).abs() < 1e-10);
+        // Identical example schedule on both sides: the loss curves
+        // agree to the same tolerance class.
+        for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()) {
+            assert!((ea.mean_loss - eb.mean_loss).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn sparse_engine_lazy_matches_dense_workers() {
+    // The paper's lazy == dense per-update equivalence survives the
+    // sparse sync: dense workers take the same gather/scatter schedule
+    // (their untouched weights are provably identical across workers),
+    // so both engines walk the same trajectory up to rounding.
+    let data = generate(&BowSpec::tiny(), 92);
+    let o = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-4, 1e-3),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 2,
+        workers: 4,
+        sync_interval: Some(20),
+        merge: MergeMode::Sparse,
+        ..Default::default()
+    };
+    let lazy = train_parallel(&data, &o).unwrap();
+    let dense = train_parallel_dense_xy(data.x(), data.labels(), &o).unwrap();
+    let diff = lazy.model.max_weight_diff(&dense.model);
+    assert!(diff < 1e-8, "sparse lazy vs dense diff {diff}");
+    assert!(lazy.final_loss() < lazy.epochs[0].mean_loss, "sparse run did not learn");
+}
+
+#[test]
+fn tiny_space_budget_triggers_the_coordinated_flush() {
+    // Budget 18 with interval 16: a round adds at most 16 table slots,
+    // so no worker ever rebases mid-round (the table peaks at 17 < 18),
+    // but at every boundary `len + next_steps >= budget` — the
+    // coordinator must flush **all** workers there, together.
+    let data = generate(&BowSpec::tiny(), 93);
+    let workers = 4usize;
+    let flat = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-4, 1e-3),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 2,
+        workers,
+        sync_interval: Some(16),
+        space_budget: Some(18),
+        ..Default::default()
+    };
+    let sparse = TrainOptions { merge: MergeMode::Sparse, ..flat };
+    let a = train_parallel(&data, &flat).unwrap();
+    let b = train_parallel(&data, &sparse).unwrap();
+    // Flat rebases through every round's `load_weights` broadcast (not
+    // counted as amortized flushes), so its counter stays 0; under the
+    // same pressure the sparse engine must flush, and in lockstep.
+    assert_eq!(a.rebases, 0);
+    assert!(b.rebases > 0, "rebase pressure never triggered the coordinated flush");
+    assert_eq!(
+        b.rebases % workers as u64,
+        0,
+        "workers flushed out of lockstep: {} rebases over {workers} workers",
+        b.rebases
+    );
+    // And the flush is invisible to the trained model.
+    let diff = a.model.max_weight_diff(&b.model);
+    assert!(diff < 1e-10, "coordinated flush changed the model: diff {diff}");
+}
+
+#[test]
+fn sparse_merge_shrinks_the_synced_weight_volume() {
+    // The point of the optimization, asserted structurally rather than
+    // by wall clock: on a sparse corpus the per-round merge set is a
+    // small fraction of d, while every dense merge moves all of d.
+    let data = generate(&BowSpec::tiny(), 94);
+    let o = TrainOptions {
+        algo: Algo::Fobos,
+        reg: Regularizer::elastic_net(1e-4, 1e-3),
+        schedule: Schedule::InvSqrtT { eta0: 0.5 },
+        epochs: 2,
+        workers: 4,
+        sync_interval: Some(10),
+        merge: MergeMode::Sparse,
+        ..Default::default()
+    };
+    let report = train_parallel(&data, &o).unwrap();
+    for e in &report.epochs {
+        // 4 workers x 10 examples x ~20 distinct tokens bounds |U| by
+        // 800 of d = 2000; Zipf reuse pushes it far lower.
+        assert!(
+            e.touched_frac > 0.0 && e.touched_frac < 0.5,
+            "epoch {}: touched_frac {} not sparse",
+            e.epoch,
+            e.touched_frac
+        );
+    }
+}
