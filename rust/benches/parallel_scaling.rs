@@ -12,8 +12,13 @@
 //! the **sparse** merge saves by syncing only the O(touched) features of
 //! each round (`touched_frac` per cell = the fraction of d each sync
 //! actually moved; flat and sparse run in the same invocation so the
-//! `merge_seconds` ratio is honest). Per-round sync overhead dominates
-//! at small `sync_interval`, which is exactly where the modes separate.
+//! `merge_seconds` ratio is honest), and (e) what dropping the merge
+//! entirely buys: the `hogwild` mode row runs the lock-free pool
+//! (`merge = none` — one shared weight vector, racing updates, no
+//! gather/average/broadcast at all; its `final_loss` is a different,
+//! non-deterministic estimator, so compare it statistically, not
+//! bitwise). Per-round sync overhead dominates at small
+//! `sync_interval`, which is exactly where the modes separate.
 //!
 //! `cargo bench --bench parallel_scaling`            human-readable table
 //! `cargo bench --bench parallel_scaling -- --json`  one JSON record per
@@ -73,7 +78,8 @@ struct Cell {
     interval: Option<usize>,
     /// Topology this cell actually ran: the configured mode for the
     /// pool engines, always "flat" for the frozen respawn reference
-    /// (it ignores the merge knob), "none" for the merge-free serial row.
+    /// (it ignores the merge knob), "none" for both merge-free rows —
+    /// serial and hogwild (the `mode` field tells them apart).
     merge: &'static str,
     report: TrainReport,
 }
@@ -129,9 +135,10 @@ fn main() -> anyhow::Result<()> {
     // it here would mislabel the pool cells and break the pipeline cell,
     // which validate rightly rejects with merge = sparse).
     anyhow::ensure!(
-        merge != MergeMode::Sparse,
+        merge == MergeMode::Flat || merge == MergeMode::Tree,
         "LAZYREG_BENCH_MERGE selects the dense merge topology (flat|tree); \
-         the sparse sync is always measured as its own `sparse` mode row"
+         the sparse sync and the lock-free pool are always measured as \
+         their own `sparse` / `hogwild` mode rows"
     );
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
 
@@ -179,7 +186,7 @@ fn main() -> anyhow::Result<()> {
             let modes: &[&'static str] = if workers == 1 {
                 &["serial"]
             } else {
-                &["respawn", "pool", "pipeline", "sparse"]
+                &["respawn", "pool", "pipeline", "sparse", "hogwild"]
             };
             for &mode in modes {
                 // A sparse cell whose engine silently fell back to the
@@ -209,6 +216,13 @@ fn main() -> anyhow::Result<()> {
                     "sparse" => {
                         let o = TrainOptions { merge: MergeMode::Sparse, ..opts };
                         (train_parallel(&data, &o)?, "sparse")
+                    }
+                    // The lock-free pool: merge = none. The mode field
+                    // disambiguates it from the serial row, whose merge
+                    // column is also "none" (serial has nothing to merge).
+                    "hogwild" => {
+                        let o = TrainOptions { merge: MergeMode::None, ..opts };
+                        (train_parallel(&data, &o)?, "none")
                     }
                     "serial" => (train_parallel(&data, &opts)?, "none"),
                     _ => (train_parallel(&data, &opts)?, merge.name()),
@@ -258,7 +272,9 @@ fn main() -> anyhow::Result<()> {
     println!(
         "pool (persistent workers, barrier rounds) vs respawn (PR 1 \
          scoped-thread respawn) isolates per-round runtime overhead; \
-         pipeline overlaps the merge with the next round. Speedups are \
+         pipeline overlaps the merge with the next round; hogwild drops \
+         the merge entirely (lock-free shared weights — its loss is a \
+         different, non-deterministic estimator). Speedups are \
          wall-clock over the same {}-example workload, relative to \
          {base_label}.",
         fmt::count((stats.n_examples * base.epochs) as u64)

@@ -8,6 +8,12 @@
 //! `batch 64` delivers ≥ 2x the single-row protocol throughput: the
 //! round trip, parse and lock overheads amortize across the batch.
 //!
+//! A second, in-process cell compares the scoring kernels themselves —
+//! the canonical f64 blocked reduction vs the opt-in f32 fast path
+//! ([`lazyreg::predict::build_f32`]) — with no protocol or socket in the
+//! way, so the kernel ratio is honest (the PR 6 acceptance bar is
+//! f32 ≥ 1.5x f64).
+//!
 //! `cargo bench --bench serve_throughput`
 //! (env LAZYREG_BENCH_REQUESTS to scale, LAZYREG_BENCH_FAST=1 for CI).
 
@@ -116,6 +122,43 @@ fn main() -> anyhow::Result<()> {
         "sharded scoring is bitwise-identical to native (see \
          tests/serve_protocol.rs); shards pay off once d outgrows one \
          node's cache — at d=32,768 the win is round-trip amortization"
+    );
+
+    // Kernel-only comparison: f64 canonical vs f32 fast path, scored
+    // in-process through the Predictor trait (no socket, no parsing).
+    let rows: Vec<lazyreg::data::RowView<'_>> =
+        (0..data.n_examples()).map(|r| data.x().row(r)).collect();
+    let reps = (n_requests / rows.len()).max(1);
+    let f64_pred = lazyreg::predict::build(model.clone(), 1, 1);
+    let f32_pred = lazyreg::predict::build_f32(model.clone(), 1, 1);
+    let mut kernel_rate = |pred: &std::sync::Arc<dyn lazyreg::predict::Predictor>| {
+        let t0 = Instant::now();
+        let mut sink = 0.0f64;
+        for _ in 0..reps {
+            for row in &rows {
+                sink += pred.score(*row);
+            }
+        }
+        let rate = (reps * rows.len()) as f64 / t0.elapsed().as_secs_f64();
+        (rate, sink)
+    };
+    let (r64, s64) = kernel_rate(&f64_pred);
+    let (r32, s32) = kernel_rate(&f32_pred);
+    // The two kernels score the same model: sanity-check agreement so a
+    // broken fast path can't post a fraudulent speedup.
+    let denom = s64.abs().max(1.0);
+    anyhow::ensure!(
+        (s64 - s32).abs() / denom < 1e-3,
+        "f32 kernel disagrees with f64: {s64} vs {s32}"
+    );
+    println!(
+        "kernel-only (in-process, d={}, {} scores): f64 {} | f32 {} | f32/f64 {:.2}x {}",
+        fmt::count(dim as u64),
+        fmt::count((reps * rows.len()) as u64),
+        fmt::rate(r64, "ex"),
+        fmt::rate(r32, "ex"),
+        r32 / r64,
+        if r32 >= 1.5 * r64 { "(>= 1.5x: PASS)" } else { "(< 1.5x)" }
     );
     Ok(())
 }

@@ -92,6 +92,7 @@ impl ExperimentConfig {
         }
         cfg.train.pipeline_sync =
             doc.get_bool("train", "pipeline_sync", cfg.train.pipeline_sync)?;
+        cfg.train.fast_f32 = doc.get_bool("train", "fast_f32", cfg.train.fast_f32)?;
 
         cfg.train.validate()?;
         Ok(cfg)
@@ -181,6 +182,25 @@ pipeline_sync = true
         let doc =
             ConfigDoc::parse("[train]\nmerge = \"sparse\"\npipeline_sync = true\n").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn none_merge_parses_but_rejects_pipelining() {
+        let doc = ConfigDoc::parse("[train]\nmerge = \"none\"\nworkers = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.train.merge, MergeMode::None);
+        // The lock-free pool has no merge to pipeline.
+        let doc =
+            ConfigDoc::parse("[train]\nmerge = \"none\"\npipeline_sync = true\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn fast_f32_parses_and_defaults_off() {
+        let cfg = ExperimentConfig::from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert!(!cfg.train.fast_f32);
+        let doc = ConfigDoc::parse("[train]\nfast_f32 = true\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).unwrap().train.fast_f32);
     }
 
     #[test]

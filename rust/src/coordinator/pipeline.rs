@@ -311,6 +311,17 @@ pub fn train_streaming_sharded<R: BufRead + Send>(
              merge; falling back to the flat merge"
         );
     }
+    if opts.merge == MergeMode::None {
+        // The lock-free pool shares one weight vector through a round
+        // structure a single-pass stream does not have; the streaming
+        // consumers trained independent shard models, so the end-of-
+        // stream merge degrades to the flat fold. Logged, never a wrong
+        // model.
+        eprintln!(
+            "[lazyreg] merge = none (the lock-free pool) does not apply to \
+             streaming training; falling back to the flat end-of-stream merge"
+        );
+    }
     let model = merge_models(&weighted, opts.merge);
     let stats = StreamStats {
         examples,

@@ -1,8 +1,11 @@
 //! libsvm / svmlight text format reader and writer.
 //!
 //! Format: one example per line, `label idx:val idx:val ...` with
-//! 1-based or 0-based feature indices (auto-detected on read, 1-based on
-//! write, matching the ecosystem default). `#` starts a comment.
+//! 1-based or 0-based feature indices (1-based on write, matching the
+//! ecosystem default). On read the base is pinned by the caller when
+//! known ([`IndexBase`], [`read_with`]) and only guessed under
+//! [`IndexBase::Auto`]; an explicitly declared `n_features` is enforced,
+//! never silently extended. `#` starts a comment.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
@@ -12,16 +15,62 @@ use anyhow::{Context, Result};
 use super::csr::{compact_row_into, CsrMatrix};
 use super::dataset::SparseDataset;
 
-/// Parse libsvm text from a reader. `n_features = None` infers the
-/// dimensionality from the max index seen.
+/// Feature-index base of a libsvm file.
+///
+/// The text format does not record its base, so a 0-based corpus that
+/// happens never to touch feature 0 is indistinguishable from a 1-based
+/// one — guessing shifts every feature by −1, a silent wrong-model bug
+/// (train/serve misalignment). Callers that know how their file was
+/// written pin the base with [`IndexBase::Zero`] / [`IndexBase::One`];
+/// [`IndexBase::Auto`] keeps the historical heuristic for files of
+/// unknown provenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IndexBase {
+    /// Guess: 1-based iff no zero index appears (svmlight convention).
+    #[default]
+    Auto,
+    /// Indices are 0-based: never shifted.
+    Zero,
+    /// Indices are 1-based: always shifted by −1; a zero index errors.
+    One,
+}
+
+impl IndexBase {
+    /// Parse a CLI/config spelling: `auto`, `0`, or `1`.
+    pub fn parse(s: &str) -> Result<IndexBase> {
+        match s {
+            "auto" => Ok(IndexBase::Auto),
+            "0" => Ok(IndexBase::Zero),
+            "1" => Ok(IndexBase::One),
+            other => anyhow::bail!("bad index base {other:?} (expected auto|0|1)"),
+        }
+    }
+}
+
+/// Parse libsvm text from a reader with [`IndexBase::Auto`] — see
+/// [`read_with`] for pinning the base when it is known.
+///
+/// `n_features = None` infers the dimensionality from the max index
+/// seen; `Some(d)` declares it, and any index outside the declared
+/// space (after the base shift) is a hard error, never a silent
+/// extension of the feature space.
+pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<SparseDataset> {
+    read_with(reader, n_features, IndexBase::Auto)
+}
+
+/// [`read`] with an explicit [`IndexBase`].
 ///
 /// Single-pass streaming parse: one reused line buffer
 /// (`BufRead::read_line`) and the CSR arrays built directly — no
 /// `Vec<Vec<(u32, f32)>>` staging of the whole corpus, so peak ingest
-/// memory is the final matrix plus one line. The 0/1-base shift (known
-/// only once the whole file has been seen) is applied to the index array
-/// in place at the end.
-pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<SparseDataset> {
+/// memory is the final matrix plus one line. The 0/1-base shift (under
+/// `Auto`, known only once the whole file has been seen) is applied to
+/// the index array in place at the end.
+pub fn read_with<R: std::io::Read>(
+    reader: R,
+    n_features: Option<usize>,
+    base: IndexBase,
+) -> Result<SparseDataset> {
     let mut reader = BufReader::new(reader);
     let mut labels: Vec<f32> = Vec::new();
     let mut indptr: Vec<u64> = vec![0];
@@ -79,13 +128,37 @@ pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<Sp
         indptr.push(indices.len() as u64);
     }
 
-    // Detect 1-based indexing: if no zero index ever appears, shift by -1
-    // (the svmlight convention). Explicit n_features suppresses guessing
-    // only for dimension, not base.
-    let one_based = min_idx >= 1;
-    let shift = if one_based { 1 } else { 0 };
-    let inferred = if max_idx < 0 { 0 } else { (max_idx as usize + 1) - shift };
-    let d = n_features.unwrap_or(inferred).max(inferred);
+    // Resolve the base: pinned when declared, the historical min-index
+    // guess only under `Auto` (which mis-reads a 0-based corpus that
+    // merely never touches feature 0 — hence the pinning API).
+    let shift: u32 = match base {
+        IndexBase::Zero => 0,
+        IndexBase::One => {
+            anyhow::ensure!(
+                max_idx < 0 || min_idx >= 1,
+                "zero feature index in a file declared 1-based"
+            );
+            1
+        }
+        IndexBase::Auto => u32::from(min_idx >= 1),
+    };
+    let inferred = if max_idx < 0 { 0 } else { (max_idx as usize + 1) - shift as usize };
+    // Resolve the dimension: an explicitly declared `n_features` is a
+    // contract, not a hint — an index outside it (after the base shift)
+    // is a hard error. The old `.max(inferred)` silently grew the
+    // feature space, misaligning train against serve.
+    let d = match n_features {
+        Some(d) => {
+            anyhow::ensure!(
+                inferred <= d,
+                "feature index {max_idx} out of range for declared n_features = {d} \
+                 (base {base:?}, shift -{shift}): refusing to silently extend the \
+                 feature space"
+            );
+            d
+        }
+        None => inferred,
+    };
     if shift == 1 {
         for j in indices.iter_mut() {
             *j -= 1;
@@ -95,11 +168,20 @@ pub fn read<R: std::io::Read>(reader: R, n_features: Option<usize>) -> Result<Sp
     SparseDataset::new(x, labels)
 }
 
-/// Read a libsvm file from disk.
+/// Read a libsvm file from disk with [`IndexBase::Auto`].
 pub fn read_file<P: AsRef<Path>>(path: P, n_features: Option<usize>) -> Result<SparseDataset> {
+    read_file_with(path, n_features, IndexBase::Auto)
+}
+
+/// Read a libsvm file from disk with an explicit [`IndexBase`].
+pub fn read_file_with<P: AsRef<Path>>(
+    path: P,
+    n_features: Option<usize>,
+    base: IndexBase,
+) -> Result<SparseDataset> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("open {}", path.as_ref().display()))?;
-    read(f, n_features)
+    read_with(f, n_features, base)
 }
 
 /// Write a dataset in 1-based libsvm format.
@@ -156,9 +238,51 @@ mod tests {
     }
 
     #[test]
-    fn explicit_dimension_extends() {
+    fn explicit_dimension_still_widens_the_matrix() {
         let d = read("1 1:1\n".as_bytes(), Some(100)).unwrap();
         assert_eq!(d.n_features(), 100);
+    }
+
+    #[test]
+    fn pinned_base_is_never_guessed_away() {
+        // The regression this API exists for: a 0-based corpus that
+        // never touches feature 0. Auto (the old behavior) shifts every
+        // feature by −1; a pinned base keeps the alignment.
+        let text = "1 1:1 5:2\n0 3:1\n";
+        let zero = read_with(text.as_bytes(), Some(10), IndexBase::Zero).unwrap();
+        assert_eq!(zero.x().row(0).indices, &[1, 5], "0-based pin must not shift");
+        assert_eq!(zero.n_features(), 10);
+        let auto = read(text.as_bytes(), Some(10)).unwrap();
+        assert_eq!(auto.x().row(0).indices, &[0, 4], "auto still guesses 1-based");
+
+        // A declared 1-based file shifts even when a pathological Auto
+        // read would not have (n/a here), and rejects a zero index.
+        let one = read_with(text.as_bytes(), Some(10), IndexBase::One).unwrap();
+        assert_eq!(one.x().row(0).indices, &[0, 4]);
+        assert!(read_with("1 0:1\n".as_bytes(), None, IndexBase::One).is_err());
+    }
+
+    #[test]
+    fn explicit_dimension_overflow_is_an_error() {
+        // The old reader silently extended d via `.max(inferred)` —
+        // a wrong-model bug when train and serve disagree on the space.
+        assert!(read("1 1:1 12:3\n".as_bytes(), Some(10)).is_err());
+        // Base shift is applied before the check: 1-based max 10 fits d=10 …
+        assert!(read("1 1:1 10:2\n".as_bytes(), Some(10)).is_ok());
+        // … but a zero index forces a 0-based read, and index 10 overflows.
+        assert!(read("1 0:1 10:2\n".as_bytes(), Some(10)).is_err());
+        // A pinned 0-based read overflows at index == d too.
+        assert!(read_with("1 10:1\n".as_bytes(), Some(10), IndexBase::Zero).is_err());
+        // Inference without a declared dimension still accepts anything.
+        assert!(read("1 1:1 12:3\n".as_bytes(), None).is_ok());
+    }
+
+    #[test]
+    fn index_base_parses() {
+        assert_eq!(IndexBase::parse("auto").unwrap(), IndexBase::Auto);
+        assert_eq!(IndexBase::parse("0").unwrap(), IndexBase::Zero);
+        assert_eq!(IndexBase::parse("1").unwrap(), IndexBase::One);
+        assert!(IndexBase::parse("2").is_err());
     }
 
     #[test]
@@ -167,7 +291,9 @@ mod tests {
         let d = read(text.as_bytes(), None).unwrap();
         let mut buf = Vec::new();
         write(&mut buf, &d).unwrap();
-        let d2 = read(buf.as_slice(), Some(d.n_features())).unwrap();
+        // The writer is 1-based by contract, so the re-read pins the
+        // base instead of re-guessing it.
+        let d2 = read_with(buf.as_slice(), Some(d.n_features()), IndexBase::One).unwrap();
         assert_eq!(d.x(), d2.x());
         assert_eq!(d.labels(), d2.labels());
     }

@@ -8,3 +8,4 @@ pub mod libsvm;
 pub use batch::{BatchIter, DenseBatch};
 pub use csr::{CsrMatrix, RowView};
 pub use dataset::{DatasetStats, SparseDataset};
+pub use libsvm::IndexBase;

@@ -64,10 +64,16 @@ pub fn metrics_at(p: &[f64], y: &[f32], threshold: f64) -> Metrics {
 
 /// Sweep all meaningful thresholds and return the F1-optimal metrics
 /// (O(n log n): sort by score, evaluate F1 at every cut).
+///
+/// Scores are ordered by [`f64::total_cmp`], so non-finite values cannot
+/// panic or hang the sweep: a diverged model (NaN/±∞ scores) still gets
+/// its metrics reported instead of killing evaluation. NaN sorts above
+/// +∞ in that total order, so NaN-scored examples land in the earliest
+/// (most-positive) prefix.
 pub fn optimal_f1(p: &[f64], y: &[f32]) -> Metrics {
     assert_eq!(p.len(), y.len());
     let mut idx: Vec<usize> = (0..p.len()).collect();
-    idx.sort_unstable_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+    idx.sort_unstable_by(|&a, &b| p[b].total_cmp(&p[a]));
     let total_pos = y.iter().filter(|&&v| v > 0.5).count();
 
     // Walk thresholds from high to low; at each prefix the predicted
@@ -77,9 +83,13 @@ pub fn optimal_f1(p: &[f64], y: &[f32]) -> Metrics {
     let mut best_threshold = 1.0;
     let mut i = 0;
     while i < idx.len() {
-        // advance over ties so the threshold stays well-defined
+        // Advance over ties so the threshold stays well-defined. Tie
+        // equality is `total_cmp`, not `==`: NaN != NaN under IEEE
+        // comparison, which would leave `i` stuck forever. Under the
+        // total order the first element always matches its own cut, so
+        // every outer iteration consumes at least one index.
         let cut = p[idx[i]];
-        while i < idx.len() && p[idx[i]] == cut {
+        while i < idx.len() && p[idx[i]].total_cmp(&cut).is_eq() {
             if y[idx[i]] > 0.5 {
                 tp += 1;
             }
@@ -103,6 +113,8 @@ pub fn optimal_f1(p: &[f64], y: &[f32]) -> Metrics {
 
 /// Area under the ROC curve via the rank-sum (Mann–Whitney) formulation,
 /// with midrank tie handling. Returns 0.5 for degenerate label sets.
+/// Scores are ranked by [`f64::total_cmp`], so NaN/±∞ scores produce a
+/// (degraded) number instead of a panic or an infinite tie loop.
 pub fn auc(p: &[f64], y: &[f32]) -> f64 {
     assert_eq!(p.len(), y.len());
     let n_pos = y.iter().filter(|&&v| v > 0.5).count();
@@ -111,13 +123,17 @@ pub fn auc(p: &[f64], y: &[f32]) -> f64 {
         return 0.5;
     }
     let mut idx: Vec<usize> = (0..p.len()).collect();
-    idx.sort_unstable_by(|&a, &b| p[a].partial_cmp(&p[b]).unwrap());
-    // midranks
+    idx.sort_unstable_by(|&a, &b| p[a].total_cmp(&p[b]));
+    // Midranks. Tie groups use `total_cmp` equality for the same reason
+    // as [`optimal_f1`]: `p[idx[i]] == p[idx[i]]` is false for NaN, so
+    // the IEEE `==` group would be empty and `i = j` would never
+    // advance. Under the total order every group has at least one
+    // member, so the walk terminates for any score vector.
     let mut rank_sum_pos = 0.0f64;
     let mut i = 0;
     while i < idx.len() {
         let mut j = i;
-        while j < idx.len() && p[idx[j]] == p[idx[i]] {
+        while j < idx.len() && p[idx[j]].total_cmp(&p[idx[i]]).is_eq() {
             j += 1;
         }
         let midrank = (i + 1 + j) as f64 / 2.0; // average of ranks i+1..=j
@@ -237,6 +253,38 @@ mod tests {
             let got = auc(&p, &y);
             assert!((got - want).abs() < 1e-12, "{got} vs {want}");
         }
+    }
+
+    #[test]
+    fn nan_and_inf_scores_do_not_panic_or_hang() {
+        // A diverged model (huge η, hogwild races) emits NaN/±∞ scores;
+        // evaluation must report, not die. Pre-fix this panicked in the
+        // sort (`partial_cmp().unwrap()`) and — with the sort fixed —
+        // hung in the tie-advance loops (NaN != NaN never consumes).
+        let p = [f64::NAN, 0.9, f64::INFINITY, 0.2, f64::NEG_INFINITY, f64::NAN];
+        let y = [1.0f32, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let best = optimal_f1(&p, &y);
+        assert!(best.n == p.len());
+        let a = auc(&p, &y);
+        assert!((0.0..=1.0).contains(&a), "auc {a} out of range");
+
+        // All-NaN is the worst case for the tie loops: one tie group
+        // covering the whole vector.
+        let p = [f64::NAN; 4];
+        let y = [1.0f32, 0.0, 1.0, 0.0];
+        let best = optimal_f1(&p, &y);
+        assert_eq!(best.n, 4);
+        let a = auc(&p, &y);
+        assert!((a - 0.5).abs() < 1e-12, "all-tied NaN scores rank as 0.5, got {a}");
+    }
+
+    #[test]
+    fn finite_scores_unchanged_by_total_order() {
+        // The total_cmp switch must not disturb ordinary finite sweeps.
+        let p = [0.40, 0.35, 0.30, 0.10, 0.05];
+        let y = [1.0, 1.0, 1.0, 0.0, 0.0];
+        assert_eq!(optimal_f1(&p, &y).f1, 1.0);
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &[1.0, 1.0, 0.0, 0.0]), 1.0);
     }
 
     #[test]

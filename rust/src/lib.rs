@@ -44,7 +44,16 @@
 //!   merge overlaps the next round's examples via a one-round-stale
 //!   broadcast — epoch-synchronous flat by default, `workers = 1`
 //!   bit-identical to serial, synchronous mode pinned bitwise against
-//!   the frozen PR 1 engine in [`testing::reference`]),
+//!   the frozen PR 1 engine in [`testing::reference`]; `merge = none`
+//!   drops merging entirely and runs the **lock-free HOGWILD** engine
+//!   ([`train::hogwild`]): one shared weight vector updated by all
+//!   workers without locks, the shared DP cache read through per-round
+//!   snapshots, the coordinated budget flush the only sync point —
+//!   non-deterministic by design, verified statistically rather than
+//!   bitwise; the opt-in `fast_f32` flag swaps the two hot loops — the
+//!   pass-2 shrink ([`optim::lazy::shrink_f32`]) and blocked scoring
+//!   ([`predict::blocked_score_f32`]) — onto 4-wide f32 kernels behind
+//!   the bitwise-pinned f64 default),
 //!   multi-worker orchestration ([`coordinator`]: one-vs-rest tagging
 //!   and sharded bounded-queue streaming, both running on the same
 //!   pool), evaluation

@@ -5,21 +5,26 @@
 //!   train     train a model (lazy by default; --dense baseline;
 //!             --workers N shards across the persistent worker pool,
 //!             with --sync-interval M examples between model-averaging
-//!             syncs, --merge flat|tree|sparse picking the sync strategy
-//!             (sparse = O(touched) gather/scatter of only the features
-//!             touched since the last merge — everything else stays
-//!             lazy in every worker; falls back to flat when shards are
-//!             unequal), and --pipeline-sync overlapping each round's
-//!             merge with the next round's examples (one-round-stale
-//!             broadcast; flat/tree only); --reg selects any registered
-//!             penalty family,
+//!             syncs, --merge flat|tree|sparse|none picking the sync
+//!             strategy (sparse = O(touched) gather/scatter of only the
+//!             features touched since the last merge — everything else
+//!             stays lazy in every worker; falls back to flat when
+//!             shards are unequal; none = the lock-free HOGWILD pool:
+//!             one shared weight vector, no merge at all,
+//!             non-deterministic by design), --pipeline-sync
+//!             overlapping each round's merge with the next round's
+//!             examples (one-round-stale broadcast; flat/tree only),
+//!             and --fast-f32 opting the pass-2 shrink into the f32
+//!             kernel; --base auto|0|1 pins the libsvm index base of
+//!             --data; --reg selects any registered penalty family,
 //!             e.g. `--reg enet:1e-5:1e-5`, `--reg tg:0.01:10:1.0` for
 //!             truncated gradient with period 10 and ceiling 1.0, or
 //!             `--reg linf:0.1` for an l-inf ball of radius 0.1)
 //!   eval      evaluate a saved model on a libsvm dataset
 //!   serve     run the TCP prediction service (--shards N feature-sharded
 //!             scoring, --workers K connection pool, --batch-max M,
-//!             --artifact to batch-score through the AOT predict graph;
+//!             --artifact to batch-score through the AOT predict graph,
+//!             --fast-f32 to score through the f32 kernel;
 //!             hot-reloadable via the `reload` protocol command)
 //!   bench     quick Table-1-style lazy-vs-dense throughput comparison
 //!   info      print artifact + corpus statistics
@@ -106,6 +111,9 @@ fn options_from(args: &Args) -> Result<(TrainOptions, BowSpec, f64, u64)> {
     if args.flag("pipeline-sync") {
         cfg.train.pipeline_sync = true;
     }
+    if args.flag("fast-f32") {
+        cfg.train.fast_f32 = true;
+    }
     if let Some(n) = args.try_parse::<usize>("n")? {
         cfg.corpus.n_examples = n;
     }
@@ -125,8 +133,11 @@ fn load_or_generate(
     data_seed: u64,
 ) -> Result<lazyreg::data::SparseDataset> {
     match args.opt("data") {
-        Some(path) => libsvm::read_file(path, args.try_parse::<usize>("dims")?)
-            .with_context(|| format!("load {path}")),
+        Some(path) => {
+            let base = index_base(args)?;
+            libsvm::read_file_with(path, args.try_parse::<usize>("dims")?, base)
+                .with_context(|| format!("load {path}"))
+        }
         None => {
             eprintln!(
                 "generating synthetic corpus: n={} d={} p~{}",
@@ -134,6 +145,14 @@ fn load_or_generate(
             );
             Ok(generate(corpus, data_seed))
         }
+    }
+}
+
+/// `--base auto|0|1`: the libsvm index-base convention of `--data`.
+fn index_base(args: &Args) -> Result<libsvm::IndexBase> {
+    match args.opt("base") {
+        Some(b) => libsvm::IndexBase::parse(b),
+        None => Ok(libsvm::IndexBase::Auto),
     }
 }
 
@@ -225,7 +244,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
     let data_path = args.opt("data").context("--data required")?;
     let model = load_model(model_path, Loss::Logistic)?;
-    let data = libsvm::read_file(data_path, Some(model.dim()))?;
+    let data = libsvm::read_file_with(data_path, Some(model.dim()), index_base(args)?)?;
     let (at_half, best) = evaluate(&model, &data);
     let p: Vec<f64> = (0..data.n_examples()).map(|r| model.predict(data.x().row(r))).collect();
     let auc = lazyreg::eval::auc(&p, data.labels());
@@ -247,15 +266,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_parse("workers", 4usize),
         batch_max: args.get_parse("batch-max", 256usize),
         artifact: args.flag("artifact"),
+        fast_f32: args.flag("fast-f32"),
     };
     let server = Server::spawn_with(model, &addr, opts)?;
     println!(
-        "serving predictions on {} (shards={} workers={} batch_max={} artifact={})",
+        "serving predictions on {} (shards={} workers={} batch_max={} artifact={} f32={})",
         server.addr(),
         opts.shards,
         opts.workers,
         opts.batch_max,
-        opts.artifact
+        opts.artifact,
+        opts.fast_f32
     );
     println!(
         "protocol: `predict idx:val ...` | `batch ex;ex;...` | \

@@ -86,8 +86,8 @@ impl Throughput {
     }
 }
 
-/// Fixed-bucket log-scale latency histogram (1µs .. ~17s, 64 buckets of
-/// quarter-powers-of-two).
+/// Fixed-bucket log-scale latency histogram (1µs .. ~17s, 96 buckets of
+/// quarter-powers-of-two: 4 buckets per doubling × 24 doublings).
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
     buckets: Vec<u64>,
@@ -148,12 +148,14 @@ impl LatencyHistogram {
         self.count
     }
 
-    /// Mean latency.
+    /// Mean latency. Exact integer division in nanoseconds — `Duration`
+    /// only divides by `u32`, and casting the `u64` count down would
+    /// truncate past 2³² observations (division by zero at exactly 2³²).
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             Duration::ZERO
         } else {
-            self.sum / self.count as u32
+            Duration::from_nanos((self.sum.as_nanos() / u128::from(self.count)) as u64)
         }
     }
 
@@ -162,7 +164,9 @@ impl LatencyHistogram {
         self.max
     }
 
-    /// Approximate quantile (bucket upper bound), q in [0, 1].
+    /// Approximate quantile (bucket upper bound, clamped to the observed
+    /// [`LatencyHistogram::max`] so a reported p99 can never exceed the
+    /// true maximum), q in [0, 1].
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -172,7 +176,7 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return Self::bucket_upper_bound(i);
+                return Self::bucket_upper_bound(i).min(self.max);
             }
         }
         self.max
@@ -228,9 +232,49 @@ mod tests {
         }
         assert_eq!(h.count(), 8);
         assert!(h.quantile(0.5) <= h.quantile(0.99));
-        assert!(h.quantile(0.99) <= h.max() * 2);
+        assert!(h.quantile(0.99) <= h.max());
         assert!(h.mean() >= Duration::from_micros(10));
         assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn quantile_never_exceeds_observed_max() {
+        // A single observation falls mid-bucket: the bucket's upper
+        // bound is above it, so an unclamped quantile would report
+        // p99 > max — a number serve `stats` exposed as truth.
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(33));
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert!(
+                h.quantile(q) <= h.max(),
+                "q{q}: {:?} > max {:?}",
+                h.quantile(q),
+                h.max()
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_has_96_log_buckets() {
+        // Doc header, allocation, and the clamp in bucket_of must agree:
+        // 4 buckets per doubling for 24 doublings (1µs .. ~16.8s).
+        let h = LatencyHistogram::new();
+        assert_eq!(h.buckets.len(), 96);
+        assert_eq!(LatencyHistogram::bucket_of(Duration::from_secs(30)), 95);
+        assert!(LatencyHistogram::bucket_upper_bound(95) > Duration::from_secs(16));
+    }
+
+    #[test]
+    fn mean_survives_past_u32_observations() {
+        // count crosses 2³²: the old `sum / count as u32` wrapped the
+        // divisor to 0 here (division-by-zero panic) and silently
+        // truncated for any count above 2³².
+        let mut h = LatencyHistogram::new();
+        let d = Duration::from_micros(10);
+        h.record_n(d, u32::MAX);
+        h.record(d);
+        assert_eq!(h.count(), 1u64 << 32);
+        assert_eq!(h.mean(), d);
     }
 
     #[test]

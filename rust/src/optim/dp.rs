@@ -136,6 +136,15 @@ impl<P: Penalty> DpCache<P> {
         self.state.snapshot()
     }
 
+    /// [`DpCache::snapshot`] pinned at table position `k ≤ self.k()`
+    /// ([`PenaltyState::snapshot_at`]). The lock-free pool's coordinator
+    /// pre-extends one shared cache for a whole round; each worker
+    /// snapshots at its *own* local position, which trails the head.
+    #[inline]
+    pub fn snapshot_at(&self, k: u32) -> CatchupSnapshot<'_> {
+        self.state.snapshot_at(k)
+    }
+
     /// Bring a weight current from `psi` to `k` in O(1)
     /// (Eq. 4 / 6 / 10 / 15 / 16 for the elastic-net family; the
     /// family-specific closed form otherwise).

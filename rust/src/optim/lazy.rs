@@ -54,6 +54,36 @@ pub fn catchup_l22(w: f64, pk: f64, p_psi: f64) -> f64 {
     w * (pk / p_psi)
 }
 
+/// The elastic-net per-step shrink `w ← sgn(w)·[ra·|w| − rb]₊` applied
+/// in place over an `f32` slice, written as an explicit 4-wide chunked
+/// loop: each chunk's lanes are fully independent and branch-free, the
+/// shape the autovectorizer lifts into SIMD lanes (`f32x4` on SSE2
+/// baselines, wider where the target allows).
+///
+/// This is the opt-in fast path of the trainer's pass-2 hot loop
+/// ([`crate::train::TrainOptions::fast_f32`]): the `f64` scalar map
+/// ([`super::StepMap::apply`]) remains the bitwise-pinned default, and
+/// this kernel is held to agreement within `f32` rounding, not bitwise.
+/// The shrink is contractive (`|output| ≤ ra·|input|`, one multiply and
+/// one subtract per lane), so the f32 round-off does not compound
+/// beyond ordinary f32 accuracy per step.
+pub fn shrink_f32(ws: &mut [f32], ra: f32, rb: f32) {
+    let mut chunks = ws.chunks_exact_mut(4);
+    for c in &mut chunks {
+        // Fixed-width inner loop over the chunk: no cross-lane
+        // dependency, no branch — each lane is `max(ra·|w| − rb, 0)`
+        // with the input's sign restored.
+        for w in c.iter_mut() {
+            let mag = (ra * w.abs() - rb).max(0.0);
+            *w = mag.copysign(*w);
+        }
+    }
+    for w in chunks.into_remainder() {
+        let mag = (ra * w.abs() - rb).max(0.0);
+        *w = mag.copysign(*w);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +199,31 @@ mod tests {
             let seq = sequential_reg_updates(algo, w0, &etas[1..4], 0.0, lam2);
             assert_close(lazy, seq, 1e-12, 1e-15);
             assert_close(fast, seq, 1e-12, 1e-15);
+        }
+    }
+
+    #[test]
+    fn shrink_f32_matches_scalar_step_map_within_f32_rounding() {
+        use crate::optim::penalty::StepMap;
+        // Odd length exercises the chunked loop and its remainder.
+        let inputs: [f64; 11] = [
+            0.0, 1.0, -1.0, 0.004, -0.004, 0.75, -0.75, 2.5, -2.5, 1e-3, -37.25,
+        ];
+        let (ra, rb) = (0.9375f64, 0.005f64); // exactly representable in f32
+        let map = StepMap::Shrink { ra, rb };
+        let mut ws: Vec<f32> = inputs.iter().map(|&w| w as f32).collect();
+        shrink_f32(&mut ws, ra as f32, rb as f32);
+        for (&w0, &got) in inputs.iter().zip(ws.iter()) {
+            let want = map.apply(w0);
+            assert!(
+                (f64::from(got) - want).abs() <= 1e-6 * want.abs().max(1.0),
+                "shrink_f32({w0}) = {got}, scalar map gives {want}"
+            );
+            // The clip-at-zero branch must agree exactly: a weight the
+            // f64 map zeroes stays zero on the fast path too.
+            if want == 0.0 {
+                assert_eq!(got, 0.0, "fast path failed to clip {w0}");
+            }
         }
     }
 

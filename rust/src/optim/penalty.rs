@@ -126,6 +126,18 @@ pub trait PenaltyState: std::fmt::Debug + Clone + Send + Sync {
     /// (semantics identical to [`PenaltyState::catchup`]).
     fn snapshot(&self) -> CatchupSnapshot<'_>;
 
+    /// [`PenaltyState::snapshot`] pinned at an arbitrary table position
+    /// `k ≤ self.k()`: catch-up targets position `k` instead of the
+    /// head. The lock-free pool needs this — its coordinator pre-extends
+    /// one shared table for a whole round, so each worker's "present" is
+    /// its own local position, not the table head. The default only
+    /// accepts the head (families that never share tables need not
+    /// implement mid-table views).
+    fn snapshot_at(&self, k: u32) -> CatchupSnapshot<'_> {
+        assert_eq!(k, self.k(), "this penalty state only snapshots at the table head");
+        self.snapshot()
+    }
+
     /// Live table slots (drives the space-budget flush).
     fn len(&self) -> usize;
 
@@ -475,7 +487,13 @@ impl PenaltyState for ElasticNetState {
 
     #[inline]
     fn snapshot(&self) -> CatchupSnapshot<'_> {
-        let k = self.pt.len() - 1;
+        self.snapshot_at((self.pt.len() - 1) as u32)
+    }
+
+    #[inline]
+    fn snapshot_at(&self, k: u32) -> CatchupSnapshot<'_> {
+        let k = k as usize;
+        assert!(k < self.pt.len(), "snapshot_at({k}) beyond table head {}", self.pt.len() - 1);
         let pk = self.pt[k];
         CatchupSnapshot {
             k: k as u32,
@@ -673,7 +691,13 @@ impl PenaltyState for TruncatedGradientState {
 
     #[inline]
     fn snapshot(&self) -> CatchupSnapshot<'_> {
-        let k = self.gt.len() - 1;
+        self.snapshot_at((self.gt.len() - 1) as u32)
+    }
+
+    #[inline]
+    fn snapshot_at(&self, k: u32) -> CatchupSnapshot<'_> {
+        let k = k as usize;
+        assert!(k < self.gt.len(), "snapshot_at({k}) beyond table head {}", self.gt.len() - 1);
         CatchupSnapshot {
             k: k as u32,
             kind: SnapshotKind::Truncated {
@@ -813,6 +837,12 @@ impl PenaltyState for LinfState {
     #[inline]
     fn snapshot(&self) -> CatchupSnapshot<'_> {
         CatchupSnapshot { k: self.k, kind: SnapshotKind::Clamped { r: self.r } }
+    }
+
+    #[inline]
+    fn snapshot_at(&self, k: u32) -> CatchupSnapshot<'_> {
+        assert!(k <= self.k, "snapshot_at({k}) beyond table head {}", self.k);
+        CatchupSnapshot { k, kind: SnapshotKind::Clamped { r: self.r } }
     }
 
     #[inline]
@@ -957,6 +987,53 @@ mod tests {
         assert_eq!(st.catchup(2.0, 10), 2.0);
         // matches the sequential oracle
         assert_eq!(st.catchup(2.0, 3), sequential(&p, Algo::Fobos, 2.0, &s, 3, 10));
+    }
+
+    fn check_snapshot_at<P: Penalty>(p: P, algo: Algo, s: &Schedule) {
+        // A mid-table snapshot must be indistinguishable from the head
+        // snapshot of a table that simply stopped extending there —
+        // bitwise, since both read the identical table prefix.
+        let n = 40;
+        let mut full = p.init_state(algo);
+        for (t, &eta) in etas(s, n).iter().enumerate() {
+            full.extend(t as u64, eta);
+        }
+        for pos in [0usize, 1, 7, 23, n] {
+            let mut short = p.init_state(algo);
+            for (t, &eta) in etas(s, pos).iter().enumerate() {
+                short.extend(t as u64, eta);
+            }
+            let mid = full.snapshot_at(pos as u32);
+            let head = short.snapshot();
+            assert_eq!(mid.k, head.k);
+            for psi in 0..=pos as u32 {
+                for &w in &[0.7, -0.7, 0.01, 0.0, 2.0, -2.0] {
+                    assert_eq!(
+                        mid.catchup(w, psi),
+                        head.catchup(w, psi),
+                        "pos {pos} psi {psi} w {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_at_matches_a_table_truncated_there() {
+        let s = Schedule::InvSqrtT { eta0: 0.5 };
+        for algo in [Algo::Sgd, Algo::Fobos] {
+            check_snapshot_at(ElasticNet::new(0.01, 0.2), algo, &s);
+            check_snapshot_at(ElasticNet::new(0.0, 0.2), algo, &s);
+            check_snapshot_at(TruncatedGradient::new(0.05, 4, 0.6), algo, &s);
+            check_snapshot_at(Linf::new(0.5), algo, &s);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond table head")]
+    fn snapshot_at_rejects_positions_beyond_the_head() {
+        let st = ElasticNet::new(0.01, 0.2).init_state(Algo::Fobos);
+        let _ = st.snapshot_at(1);
     }
 
     #[test]

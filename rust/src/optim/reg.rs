@@ -232,6 +232,15 @@ impl PenaltyState for RegularizerState {
     }
 
     #[inline]
+    fn snapshot_at(&self, k: u32) -> CatchupSnapshot<'_> {
+        match self {
+            RegularizerState::ElasticNet(s) => s.snapshot_at(k),
+            RegularizerState::TruncatedGradient(s) => s.snapshot_at(k),
+            RegularizerState::Linf(s) => s.snapshot_at(k),
+        }
+    }
+
+    #[inline]
     fn len(&self) -> usize {
         match self {
             RegularizerState::ElasticNet(s) => s.len(),

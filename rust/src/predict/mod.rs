@@ -99,6 +99,79 @@ pub fn fold_score(bias: f64, partials: &[(u32, f64)]) -> f64 {
     z
 }
 
+/// The opt-in `f32` fast-path score: `bias + w·x` with the weights
+/// already quantized to `f32` (CSR values are `f32` natively, so the
+/// products stay in one precision end to end), written as an explicit
+/// 4-wide chunked loop with four independent accumulator lanes — the
+/// shape the autovectorizer lifts into SIMD (the gather of
+/// `weights[j]` is the remaining serial step; the multiplies and adds
+/// vectorize).
+///
+/// This is **not** the canonical blocked reduction: lanes replace
+/// blocks, so scores differ from [`blocked_score`] within `f32`
+/// rounding (≈1e-6 relative) and the bitwise sharding contract does not
+/// cover it. It exists for [`F32Model`], the serving fast path measured
+/// by the `serve_throughput` bench; the `f64` path stays the default.
+pub fn blocked_score_f32(bias: f64, row: RowView<'_>, weights: &[f32]) -> f64 {
+    let mut acc = [0.0f32; 4];
+    let mut idx = row.indices.chunks_exact(4);
+    let mut val = row.values.chunks_exact(4);
+    for (ji, vi) in (&mut idx).zip(&mut val) {
+        // Four independent lanes: no cross-lane dependency per chunk.
+        for l in 0..4 {
+            acc[l] += vi[l] * weights[ji[l] as usize];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&j, &v) in idx.remainder().iter().zip(val.remainder().iter()) {
+        tail += v * weights[j as usize];
+    }
+    bias + f64::from((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail)
+}
+
+/// The serving fast path: one upfront `f64 → f32` quantization of the
+/// weight vector, then every score runs the 4-wide `f32` kernel
+/// ([`blocked_score_f32`]). Opt-in (`serve --fast-f32`): predictions
+/// agree with the `f64` predictors to `f32` rounding, not bitwise, so
+/// the canonical scorers stay the default. Unsharded — the kernel's
+/// whole point is that one thread's dot product gets cheaper.
+pub struct F32Model {
+    weights: Vec<f32>,
+    bias: f64,
+    loss: Loss,
+    version: u64,
+}
+
+impl F32Model {
+    /// Quantize `model`'s weights once; `version` is reported verbatim.
+    pub fn from_model(model: &LinearModel, version: u64) -> F32Model {
+        F32Model {
+            weights: model.weights.iter().map(|&w| w as f32).collect(),
+            bias: model.bias,
+            loss: model.loss,
+            version,
+        }
+    }
+}
+
+impl Predictor for F32Model {
+    fn dim(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn loss(&self) -> Loss {
+        self.loss
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn score(&self, row: RowView<'_>) -> f64 {
+        blocked_score_f32(self.bias, row, &self.weights)
+    }
+}
+
 /// A scoring engine the prediction service can serve from.
 ///
 /// Implementations must be shareable across the server's connection
@@ -233,6 +306,16 @@ pub fn build(model: LinearModel, shards: usize, version: u64) -> Arc<dyn Predict
     }
 }
 
+/// [`build`] for the opt-in `f32` fast path: quantize once, serve from
+/// [`F32Model`]. The kernel is single-threaded by design, so a shard
+/// request is ignored with a note — never silently.
+pub fn build_f32(model: LinearModel, shards: usize, version: u64) -> Arc<dyn Predictor> {
+    if shards > 1 {
+        eprintln!("predict: the f32 fast path is unsharded; ignoring shards={shards}");
+    }
+    Arc::new(F32Model::from_model(&model, version))
+}
+
 /// Like [`build`], but prefer batch scoring through the AOT `predict`
 /// artifact (from [`crate::runtime::Runtime::default_dir`]). Falls back
 /// to [`build`] — with the reason on stderr — when the artifacts or the
@@ -357,6 +440,64 @@ mod tests {
         let p = build_with_artifact(m, 2, 5);
         assert_eq!(p.version(), 5);
         assert_eq!(p.dim(), 8);
+    }
+
+    #[test]
+    fn f32_fast_path_tracks_the_canonical_score() {
+        let (m, indices, values) = spanning_model_and_row();
+        let row = RowView { indices: &indices, values: &values };
+        let canonical = Predictor::score(&m, row);
+        let fast = F32Model::from_model(&m, 9);
+        assert_eq!(fast.version(), 9);
+        assert_eq!(fast.dim(), m.dim());
+        let z = fast.score(row);
+        // f32 rounding, not bitwise: the 200-nnz dot should agree to
+        // ~1e-5 relative — far outside that means a kernel bug, inside
+        // f64 bitwise would mean we are not actually on the f32 path.
+        assert!(
+            (z - canonical).abs() <= 1e-4 * (1.0 + canonical.abs()),
+            "f32 score {z} vs canonical {canonical}"
+        );
+    }
+
+    #[test]
+    fn f32_kernel_handles_remainders_and_empty_rows() {
+        let mut m = LinearModel::zeros(12, Loss::Logistic);
+        for (j, w) in m.weights.iter_mut().enumerate() {
+            *w = 0.25 * (j as f64 + 1.0); // exact in f32
+        }
+        m.bias = 0.5;
+        // nnz from 0 through 6 covers empty, sub-chunk, exactly one
+        // chunk, and chunk + remainder shapes.
+        for nnz in 0..=6usize {
+            let indices: Vec<u32> = (0..nnz as u32).map(|i| 2 * i).collect();
+            let values: Vec<f32> = (0..nnz).map(|i| 0.5 * (i as f32 + 1.0)).collect();
+            let row = RowView { indices: &indices, values: &values };
+            let want: f64 = m.bias
+                + indices
+                    .iter()
+                    .zip(values.iter())
+                    .map(|(&j, &v)| f64::from(v) * m.weights[j as usize])
+                    .sum::<f64>();
+            let fast = F32Model::from_model(&m, 0);
+            // All inputs exact in f32 and tiny sums: exact agreement.
+            assert_eq!(fast.score(row), want, "nnz = {nnz}");
+        }
+    }
+
+    #[test]
+    fn build_f32_serves_the_fast_path_at_any_shard_request() {
+        let mut m = LinearModel::zeros(8, Loss::Logistic);
+        m.weights[3] = 1.5;
+        m.bias = 0.25;
+        let indices = [3u32];
+        let values = [2.0f32];
+        let row = RowView { indices: &indices, values: &values };
+        for shards in [1usize, 4] {
+            let p = build_f32(m.clone(), shards, 6);
+            assert_eq!(p.version(), 6);
+            assert_eq!(p.score(row), 0.25 + 3.0, "shards = {shards}");
+        }
     }
 
     #[test]

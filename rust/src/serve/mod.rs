@@ -115,11 +115,15 @@ pub struct ServeOptions {
     /// Score batches through the AOT `predict` artifact when available
     /// ([`crate::predict::build_with_artifact`]; falls back to native).
     pub artifact: bool,
+    /// Serve through the opt-in `f32` scoring kernel
+    /// ([`crate::predict::build_f32`]) instead of the bitwise-pinned
+    /// f64 path. Unsharded; incompatible with `artifact`.
+    pub fast_f32: bool,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { shards: 1, workers: 4, batch_max: 256, artifact: false }
+        ServeOptions { shards: 1, workers: 4, batch_max: 256, artifact: false, fast_f32: false }
     }
 }
 
@@ -137,7 +141,9 @@ fn penalty_of(model: &LinearModel) -> Arc<str> {
 
 /// Build the predictor a server (or a `reload`) installs.
 fn build_predictor(model: LinearModel, opts: &ServeOptions, version: u64) -> Arc<dyn Predictor> {
-    if opts.artifact {
+    if opts.fast_f32 {
+        predict::build_f32(model, opts.shards, version)
+    } else if opts.artifact {
         predict::build_with_artifact(model, opts.shards, version)
     } else {
         predict::build(model, opts.shards, version)
@@ -187,6 +193,10 @@ impl Server {
         anyhow::ensure!(opts.workers >= 1, "serve: workers must be >= 1");
         anyhow::ensure!(opts.shards >= 1, "serve: shards must be >= 1");
         anyhow::ensure!(opts.batch_max >= 1, "serve: batch_max must be >= 1");
+        anyhow::ensure!(
+            !(opts.fast_f32 && opts.artifact),
+            "serve: fast_f32 and artifact are mutually exclusive scoring paths"
+        );
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;

@@ -24,7 +24,8 @@
 use crate::data::RowView;
 use crate::loss::Loss;
 use crate::model::LinearModel;
-use crate::optim::{DpCache, Penalty, Regularizer};
+use crate::optim::lazy::shrink_f32;
+use crate::optim::{DpCache, Penalty, Regularizer, StepMap};
 
 use super::options::TrainOptions;
 
@@ -49,6 +50,12 @@ pub struct LazyTrainer {
     loss: Loss,
     algo: crate::optim::Algo,
     penalty: Regularizer,
+    /// Opt-in f32 fast path for the pass-2 shrink
+    /// ([`TrainOptions::fast_f32`]); only [`StepMap::Shrink`] steps are
+    /// eligible, everything else stays on the scalar f64 map.
+    fast_f32: bool,
+    /// Pass-2 scratch for the f32 kernel (reused; no per-example alloc).
+    scratch: Vec<f32>,
     /// Number of amortized full flushes performed.
     pub rebases: u64,
 }
@@ -70,6 +77,8 @@ impl LazyTrainer {
             loss: opts.loss,
             algo: opts.algo,
             penalty: opts.reg,
+            fast_f32: opts.fast_f32,
+            scratch: Vec::new(),
             rebases: 0,
         }
     }
@@ -108,11 +117,32 @@ impl LazyTrainer {
         // The slots touched in pass 1 are hot in L1 now.
         let next_psi = snap.k + 1;
         let step = eta * dz;
-        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
-            let slot = &mut slots[j as usize];
-            let wh = slot.w - step * f64::from(v);
-            slot.w = map.apply(wh);
-            slot.psi = next_psi;
+        match map {
+            // The opt-in f32 fast path ([`TrainOptions::fast_f32`]):
+            // gradient-stepped weights are staged into an f32 scratch
+            // and shrunk by the 4-wide chunked kernel. Only the
+            // elastic-net shrink is eligible; truncate/clamp maps fall
+            // through to the scalar path below.
+            StepMap::Shrink { ra, rb } if self.fast_f32 => {
+                self.scratch.clear();
+                for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                    self.scratch.push((slots[j as usize].w - step * f64::from(v)) as f32);
+                }
+                shrink_f32(&mut self.scratch, ra as f32, rb as f32);
+                for (&j, &w) in row.indices.iter().zip(self.scratch.iter()) {
+                    let slot = &mut slots[j as usize];
+                    slot.w = f64::from(w);
+                    slot.psi = next_psi;
+                }
+            }
+            map => {
+                for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                    let slot = &mut slots[j as usize];
+                    let wh = slot.w - step * f64::from(v);
+                    slot.w = map.apply(wh);
+                    slot.psi = next_psi;
+                }
+            }
         }
         self.model.bias -= step; // bias is unregularized
 
@@ -375,6 +405,36 @@ mod tests {
         b.finalize();
         let diff = a.model().max_weight_diff(b.model());
         assert!(diff < 1e-10, "flush changed semantics: diff={diff}");
+    }
+
+    #[test]
+    fn fast_f32_path_tracks_the_f64_trainer() {
+        let x = two_docs();
+        let mut fast_opts = opts();
+        fast_opts.fast_f32 = true;
+        let mut fast = LazyTrainer::new(6, &fast_opts);
+        let mut slow = LazyTrainer::new(6, &opts());
+        for i in 0..60 {
+            let y = (i % 2 == 0) as u8 as f64;
+            fast.process_example(x.row(i % 2), y);
+            slow.process_example(x.row(i % 2), y);
+        }
+        fast.finalize();
+        slow.finalize();
+        for (j, (&wf, &ws)) in
+            fast.model().weights.iter().zip(slow.model().weights.iter()).enumerate()
+        {
+            let tol = 1e-4 * ws.abs().max(1e-3);
+            assert!((wf - ws).abs() <= tol, "weight {j}: f32 {wf} vs f64 {ws}");
+        }
+        // The default stays bitwise-pinned: rerunning the f64 trainer
+        // reproduces itself exactly.
+        let mut again = LazyTrainer::new(6, &opts());
+        for i in 0..60 {
+            again.process_example(x.row(i % 2), (i % 2 == 0) as u8 as f64);
+        }
+        again.finalize();
+        assert_eq!(again.model().weights, slow.model().weights);
     }
 
     #[test]

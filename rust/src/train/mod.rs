@@ -1,13 +1,16 @@
 //! Trainers: the paper's lazy Algorithm 1, the dense baseline, the epoch
 //! driver that produces loss/objective curves and throughput reports,
-//! and the persistent worker-pool runtime ([`pool`]) that runs every
-//! parallel-training configuration — barrier-coordinated sharded rounds
-//! (synchronous or pipelined, flat or tree merges) plus the
-//! run-to-completion workers behind the streaming and one-vs-rest
-//! coordinators.
+//! the persistent worker-pool runtime ([`pool`]) that runs every
+//! merged parallel-training configuration — barrier-coordinated sharded
+//! rounds (synchronous or pipelined; flat, tree or sparse merges) plus
+//! the run-to-completion workers behind the streaming and one-vs-rest
+//! coordinators — and the lock-free HOGWILD engine ([`hogwild`],
+//! `merge = none`) that shares one weight vector across workers with no
+//! merge at all.
 
 pub mod dense_trainer;
 pub mod driver;
+pub mod hogwild;
 pub mod lazy_trainer;
 pub mod options;
 pub mod parallel;

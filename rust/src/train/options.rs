@@ -37,12 +37,14 @@ pub struct TrainOptions {
     pub sync_interval: Option<usize>,
     /// Merge topology of the sync step: `flat` (index-order
     /// accumulation, the historical merge), `tree` (fixed-topology
-    /// pairwise reduce — same weights up to float rounding) or `sparse`
+    /// pairwise reduce — same weights up to float rounding), `sparse`
     /// (O(touched)·workers sync over the features touched since the last
     /// merge; everything else stays lazy in every worker — falls back to
     /// `flat` with a logged reason wherever its equal-round invariant
-    /// cannot hold, see [`crate::train::pool`]). Ignored when
-    /// `workers == 1`.
+    /// cannot hold, see [`crate::train::pool`]) or `none` (the
+    /// HOGWILD-style lock-free pool: one shared weight vector, sparse
+    /// relaxed-atomic updates, no merge at all — non-deterministic; see
+    /// [`crate::train::hogwild`]). Ignored when `workers == 1`.
     pub merge: MergeMode,
     /// Overlap each round's O(d·workers) merge with the next round's
     /// example processing; the merged model is applied one round late
@@ -50,6 +52,15 @@ pub struct TrainOptions {
     /// [`crate::train::pool`]). `false` (the default) is fully
     /// synchronous. Ignored when `workers == 1`.
     pub pipeline_sync: bool,
+    /// Opt-in `f32` fast path for the pass-2 shrink kernel in
+    /// [`crate::train::LazyTrainer`] (and advisory for serving — see
+    /// [`crate::predict::blocked_score_f32`]): the hot loops run as
+    /// explicit 4-wide chunked `f32` arithmetic the autovectorizer can
+    /// lift into SIMD lanes. `false` (the default) keeps the bitwise-
+    /// pinned `f64` path; enabling trades the last ~7 significant
+    /// decimal digits for throughput. Only the elastic-net shrink map is
+    /// eligible; other penalty families silently stay on the `f64` path.
+    pub fast_f32: bool,
 }
 
 impl Default for TrainOptions {
@@ -67,6 +78,7 @@ impl Default for TrainOptions {
             sync_interval: None,
             merge: MergeMode::Flat,
             pipeline_sync: false,
+            fast_f32: false,
         }
     }
 }
@@ -91,6 +103,13 @@ impl TrainOptions {
                  sync gathers at an up-to-date round boundary, which the \
                  one-round-stale pipelined broadcast cannot provide (pipeline \
                  the flat/tree merges instead)"
+            );
+        }
+        if self.merge == MergeMode::None && self.pipeline_sync {
+            anyhow::bail!(
+                "merge = none is incompatible with pipeline_sync: the lock-free \
+                 pool has no per-round merge to overlap — there is nothing to \
+                 pipeline (drop the flag, or pipeline the flat/tree merges)"
             );
         }
         Ok(())
@@ -156,8 +175,14 @@ mod tests {
         o.validate().unwrap();
         let o = TrainOptions { pipeline_sync: true, ..o };
         assert!(o.validate().is_err(), "sparse + pipeline_sync must be rejected");
+        // The lock-free pool has no merge, hence nothing to pipeline.
+        let o = TrainOptions { merge: MergeMode::None, workers: 4, ..Default::default() };
+        o.validate().unwrap();
+        let o = TrainOptions { pipeline_sync: true, ..o };
+        assert!(o.validate().is_err(), "none + pipeline_sync must be rejected");
         assert_eq!(TrainOptions::default().merge, MergeMode::Flat);
         assert!(!TrainOptions::default().pipeline_sync);
+        assert!(!TrainOptions::default().fast_f32);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //!   each epoch boundary. Lowest overhead.
 //! * `sync_interval = Some(m)`: each worker processes `m` examples of
 //!   its shard per round, then all workers synchronize.
-//! * `merge = flat | tree | sparse` ([`MergeMode`]): index-order
+//! * `merge = flat | tree | sparse | none` ([`MergeMode`]): index-order
 //!   accumulation (the historical merge), a fixed-topology pairwise tree
 //!   (same weights up to float rounding), or the **sparse sync** — the
 //!   paper's O(p) principle extended across the data-parallel boundary.
@@ -34,7 +34,24 @@
 //!   merges — see [`super::pool`] for the invariant, the coordinated
 //!   budget flush and the fallback matrix. Equivalent to `flat` within
 //!   float tolerance (property-tested at 1e-10 across penalty families,
-//!   algorithms and schedules), ~|U|/d of its merge cost.
+//!   algorithms and schedules), ~|U|/d of its merge cost. `none` is the
+//!   **lock-free HOGWILD engine** ([`super::hogwild`]): no per-worker
+//!   models and no merge — every worker updates one shared weight
+//!   vector with relaxed atomics, and the per-round cost drops to the
+//!   barrier crossings plus the occasional coordinated budget flush.
+//!   Non-deterministic (tests assert statistical closeness to `flat`,
+//!   never bitwise equality); lazy workers only — the dense comparator
+//!   falls back to `flat` with a logged reason.
+//!
+//!   The per-round sync cost ladder, per worker, d = dimension, |U| =
+//!   features touched since the last merge:
+//!
+//!   | mode     | worker round cost | coordinator round cost  |
+//!   |----------|-------------------|-------------------------|
+//!   | `flat`   | O(d) finalize     | O(d·workers) merge      |
+//!   | `tree`   | O(d) finalize     | O(d·workers) merge      |
+//!   | `sparse` | O(slice nnz) scan | O(|U|·workers + sort)   |
+//!   | `none`   | —                 | — (amortized O(d) flush)|
 //! * `pipeline_sync = true`: overlap the O(d·workers) merge of round
 //!   *r* with round *r+1*'s example processing; the merged model is
 //!   applied one round late (a defined, deterministic stale-synchronous
@@ -76,6 +93,7 @@ use crate::data::{CsrMatrix, SparseDataset};
 
 use super::dense_trainer::DenseTrainer;
 use super::driver::{train_lazy_xy, TrainReport};
+use super::hogwild;
 use super::lazy_trainer::LazyTrainer;
 use super::options::TrainOptions;
 use super::pool;
@@ -107,6 +125,10 @@ pub fn train_parallel_xy(
         // single-worker configuration is bitwise-equal to serial training.
         return train_lazy_xy(x, labels, opts);
     }
+    if opts.merge == pool::MergeMode::None {
+        // The lock-free engine: one shared weight vector, no merge.
+        return hogwild::run(x, labels, opts, workers);
+    }
     run_sharded(x, labels, opts, workers, || LazyTrainer::new(x.n_cols(), opts))
 }
 
@@ -120,7 +142,20 @@ pub fn train_parallel_dense_xy(
     opts: &TrainOptions,
 ) -> Result<TrainReport> {
     let workers = check_and_clamp_workers(x, labels, opts)?;
-    run_sharded(x, labels, opts, workers, || DenseTrainer::new(x.n_cols(), opts))
+    let opts = if opts.merge == pool::MergeMode::None && workers > 1 {
+        // The lock-free engine is built on the shared lazy (w, ψ)
+        // tables; the dense comparator has no lazy state to share.
+        // Degrade to the flat merge with a logged reason — never a
+        // wrong model, and the scaling bench skips the cell honestly.
+        eprintln!(
+            "[lazyreg] merge = none (the lock-free pool) requires the lazy \
+             trainer; dense workers fall back to the flat merge"
+        );
+        TrainOptions { merge: pool::MergeMode::Flat, ..*opts }
+    } else {
+        *opts
+    };
+    run_sharded(x, labels, &opts, workers, || DenseTrainer::new(x.n_cols(), &opts))
 }
 
 fn check_and_clamp_workers(x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -> Result<usize> {

@@ -146,10 +146,18 @@ pub enum MergeMode {
     /// the flat merge — with a logged reason — wherever its equal-round
     /// invariant cannot hold.
     Sparse,
+    /// No merge at all: the HOGWILD-style lock-free pool
+    /// ([`super::hogwild`]). Every worker applies sparse updates
+    /// straight into one shared weight vector with relaxed atomics — no
+    /// per-round gather/average/broadcast; the coordinated budget flush
+    /// is the only synchronization point. Non-deterministic by design
+    /// (tests assert statistical closeness to the flat merge, never
+    /// bitwise equality).
+    None,
 }
 
 impl MergeMode {
-    /// Parse `"flat"`, `"tree"` or `"sparse"`.
+    /// Parse `"flat"`, `"tree"`, `"sparse"` or `"none"`.
     pub fn parse(s: &str) -> Result<MergeMode> {
         s.parse()
     }
@@ -160,6 +168,7 @@ impl MergeMode {
             MergeMode::Flat => "flat",
             MergeMode::Tree => "tree",
             MergeMode::Sparse => "sparse",
+            MergeMode::None => "none",
         }
     }
 }
@@ -172,7 +181,8 @@ impl std::str::FromStr for MergeMode {
             "flat" => Ok(MergeMode::Flat),
             "tree" => Ok(MergeMode::Tree),
             "sparse" => Ok(MergeMode::Sparse),
-            _ => anyhow::bail!("unknown merge mode {s:?} (expected flat|tree|sparse)"),
+            "none" => Ok(MergeMode::None),
+            _ => anyhow::bail!("unknown merge mode {s:?} (expected flat|tree|sparse|none)"),
         }
     }
 }
@@ -299,9 +309,12 @@ fn combine_borrowed(a: &LinearModel, ca: u64, b: &LinearModel, cb: u64) -> (Line
 /// merged model must be materialized (streaming end-of-stream, the
 /// pool's own fallback) it degrades to the flat fold — the same
 /// weighted mean the sparse sync computes on the touched set.
+/// [`MergeMode::None`] likewise: the lock-free engine has no per-worker
+/// models to merge, so a one-shot caller holding several (streaming
+/// end-of-stream fell back to the round engine) gets the flat fold.
 pub fn merge_models(models: &[(&LinearModel, u64)], mode: MergeMode) -> LinearModel {
     match mode {
-        MergeMode::Flat | MergeMode::Sparse => weighted_average(models),
+        MergeMode::Flat | MergeMode::Sparse | MergeMode::None => weighted_average(models),
         MergeMode::Tree => tree_weighted_average(models),
     }
 }
@@ -335,7 +348,7 @@ where
 /// `n`-element epoch order: lengths differ by at most one, earlier
 /// shards take the extras — the same partition as the original engine's
 /// `split_contiguous`.
-fn shard_range(n: usize, workers: usize, w: usize) -> Range<usize> {
+pub(crate) fn shard_range(n: usize, workers: usize, w: usize) -> Range<usize> {
     debug_assert!(w < workers);
     let base = n / workers;
     let extra = n % workers;
@@ -344,7 +357,7 @@ fn shard_range(n: usize, workers: usize, w: usize) -> Range<usize> {
 }
 
 /// Longest shard length (worker 0 by construction).
-fn longest_shard(n: usize, workers: usize) -> usize {
+pub(crate) fn longest_shard(n: usize, workers: usize) -> usize {
     shard_range(n, workers, 0).len()
 }
 
@@ -353,21 +366,23 @@ fn longest_shard(n: usize, workers: usize) -> usize {
 /// needs no second copy: each worker collects the feature list of the
 /// exact slice it trains on, so U covers precisely the processed
 /// examples by construction.)
-fn round_slice(shard_len: usize, offset: usize, interval: usize) -> Range<usize> {
+pub(crate) fn round_slice(shard_len: usize, offset: usize, interval: usize) -> Range<usize> {
     offset.min(shard_len)..offset.saturating_add(interval).min(shard_len)
 }
 
 /// Message every poisoned primitive panics with — a deliberate panic so
 /// a crashed pool fails the whole run fast instead of deadlocking.
-const POISONED: &str = "worker pool poisoned: a pool thread panicked";
+pub(crate) const POISONED: &str = "worker pool poisoned: a pool thread panicked";
 
 /// A reusable round barrier **with poisoning**. `std::sync::Barrier`
 /// cannot be poisoned: if one participant panics, every other thread
 /// parks at the rendezvous forever and the run hangs (the old
 /// round-spawn engine failed fast through `join().expect`). Here a
 /// panicking participant calls [`RoundBarrier::poison`], which wakes
-/// all current and future waiters with a panic instead.
-struct RoundBarrier {
+/// all current and future waiters with a panic instead. Shared with the
+/// lock-free engine ([`super::hogwild`]), whose coordinated budget
+/// flush reuses the same rendezvous + failure semantics.
+pub(crate) struct RoundBarrier {
     state: Mutex<BarrierState>,
     cv: Condvar,
     parties: usize,
@@ -380,7 +395,7 @@ struct BarrierState {
 }
 
 impl RoundBarrier {
-    fn new(parties: usize) -> RoundBarrier {
+    pub(crate) fn new(parties: usize) -> RoundBarrier {
         assert!(parties >= 1);
         RoundBarrier {
             state: Mutex::new(BarrierState { arrived: 0, generation: 0, poisoned: false }),
@@ -389,7 +404,7 @@ impl RoundBarrier {
         }
     }
 
-    fn wait(&self) {
+    pub(crate) fn wait(&self) {
         let mut st = self.state.lock().unwrap();
         assert!(!st.poisoned, "{}", POISONED);
         st.arrived += 1;
@@ -407,7 +422,7 @@ impl RoundBarrier {
         assert!(!st.poisoned, "{}", POISONED);
     }
 
-    fn poison(&self) {
+    pub(crate) fn poison(&self) {
         // Tolerate a Mutex poisoned by a panic inside `wait`: this runs
         // on the cleanup path and must not panic itself.
         match self.state.lock() {
@@ -1050,8 +1065,9 @@ mod tests {
         assert_eq!(MergeMode::parse("flat").unwrap(), MergeMode::Flat);
         assert_eq!(MergeMode::parse("tree").unwrap(), MergeMode::Tree);
         assert_eq!(MergeMode::parse("sparse").unwrap(), MergeMode::Sparse);
+        assert_eq!(MergeMode::parse("none").unwrap(), MergeMode::None);
         assert!(MergeMode::parse("ring").is_err());
-        for m in [MergeMode::Flat, MergeMode::Tree, MergeMode::Sparse] {
+        for m in [MergeMode::Flat, MergeMode::Tree, MergeMode::Sparse, MergeMode::None] {
             assert_eq!(MergeMode::parse(m.name()).unwrap(), m);
         }
         assert_eq!(MergeMode::default(), MergeMode::Flat);

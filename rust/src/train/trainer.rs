@@ -7,6 +7,12 @@
 //! surface: feed one example, finalize, read/write the model. Extracting
 //! it lets the parallel engine (and future backends) stay generic over
 //! the update implementation.
+//!
+//! One engine deliberately sidesteps this trait: the lock-free HOGWILD
+//! pool ([`super::hogwild`], `merge = none`). Its workers share one
+//! weight vector and one DP cache rather than owning per-worker trainer
+//! state, so the feed/finalize/merge contract — built around private
+//! models synchronized by explicit merges — does not apply there.
 
 use crate::data::RowView;
 use crate::model::LinearModel;

@@ -65,7 +65,14 @@ fn libsvm_round_trip_preserves_training_result() {
     let data = medline_small();
     let mut buf: Vec<u8> = Vec::new();
     libsvm::write(&mut buf, &data).unwrap();
-    let data2 = libsvm::read(buf.as_slice(), Some(data.n_features())).unwrap();
+    // We wrote the file ourselves (1-based by contract): pin the base
+    // rather than letting Auto re-guess it from the index range.
+    let data2 = libsvm::read_with(
+        buf.as_slice(),
+        Some(data.n_features()),
+        libsvm::IndexBase::One,
+    )
+    .unwrap();
     assert_eq!(data.x(), data2.x());
     let a = train_lazy(&data, &opts()).unwrap();
     let b = train_lazy(&data2, &opts()).unwrap();
@@ -94,6 +101,26 @@ fn streaming_pipeline_matches_in_memory_single_epoch() {
     // f32 values survive libsvm text exactly (printed via {}); training is
     // identical modulo f64 ops on identical inputs.
     assert!(max_diff < 1e-9, "stream vs memory diff {max_diff}");
+}
+
+#[test]
+fn streaming_with_merge_none_falls_back_to_flat_and_learns() {
+    // The lock-free pool needs the whole corpus up front (shared weight
+    // vector + round pre-extension); the streaming coordinator logs a
+    // fallback and runs its usual end-of-stream flat merge instead.
+    let data = medline_small();
+    let mut buf: Vec<u8> = Vec::new();
+    libsvm::write(&mut buf, &data).unwrap();
+    let mut o = opts();
+    o.epochs = 1;
+    o.shuffle = false;
+    o.workers = 2;
+    o.merge = lazyreg::train::MergeMode::None;
+    let (model, stats) = train_streaming(buf.as_slice(), data.n_features(), &o, 64).unwrap();
+    assert_eq!(stats.examples as usize, data.n_examples());
+    assert_eq!(stats.parse_errors, 0);
+    assert!(stats.mean_loss.is_finite());
+    assert!(model.weights.iter().any(|&w| w != 0.0), "fallback produced a zero model");
 }
 
 #[test]

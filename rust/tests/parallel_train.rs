@@ -243,6 +243,66 @@ fn epoch_synchronous_default_also_converges() {
 }
 
 #[test]
+fn hogwild_tracks_flat_merge_on_the_objective_across_seeds() {
+    // `merge = none` is the lock-free HOGWILD pool: one shared weight
+    // vector, racing sparse updates, no merge. It is non-deterministic
+    // by design, so the acceptance bar is *statistical* and one-sided:
+    // averaging dampens the effective per-example step (~1/workers)
+    // while lock-free updates land at full strength, so hogwild
+    // routinely ends at or below the flat objective — what this guards
+    // against is ending much worse (diverging races).
+    let data = medline_small();
+    let mut worse = 0usize;
+    for seed in [7u64, 19, 23] {
+        let mut flat = opts(4);
+        flat.shuffle = true;
+        flat.seed = seed;
+        let mut hog = flat;
+        hog.merge = MergeMode::None;
+        let f = train_parallel(&data, &flat).unwrap();
+        let h = train_parallel(&data, &hog).unwrap();
+        let of = objective(&f.model, &data, &flat.reg);
+        let oh = objective(&h.model, &data, &flat.reg);
+        assert!(oh.is_finite(), "seed {seed}: hogwild objective not finite");
+        let tol = 0.15 * of.abs().max(0.05);
+        assert!(
+            oh <= of + tol,
+            "seed {seed}: hogwild objective {oh} much worse than flat {of} (tol {tol})"
+        );
+        if oh > of {
+            worse += 1;
+        }
+        // It learns the signal outright, not just relative to flat.
+        assert!(h.final_loss() < h.epochs[0].mean_loss, "seed {seed}: did not learn");
+        // No merge ⇒ the sparse-merge touched-fraction stat stays zero.
+        for e in &h.epochs {
+            assert_eq!(e.touched_frac, 0.0);
+        }
+    }
+    assert!(worse < 3, "hogwild ended worse than flat on every seed");
+}
+
+#[test]
+fn hogwild_rejects_pipelining_and_falls_back_off_the_lazy_path() {
+    let data = medline_small();
+    // none + pipeline_sync is rejected up front: there is no merge to
+    // overlap with the next round.
+    let mut o = opts(4);
+    o.merge = MergeMode::None;
+    o.pipeline_sync = true;
+    let err = o.validate().unwrap_err().to_string();
+    assert!(err.contains("pipeline"), "unexpected error: {err}");
+    assert!(train_parallel(&data, &o).is_err());
+    // Dense workers have no lazy trainer to share; the driver falls
+    // back to the flat merge and still trains.
+    let mut d = opts(2);
+    d.merge = MergeMode::None;
+    let report = train_parallel_dense_xy(data.x(), data.labels(), &d).unwrap();
+    assert!(report.final_loss().is_finite());
+    assert!(report.final_loss() < report.epochs[0].mean_loss);
+}
+
+#[test]
 fn parallel_report_accounts_all_examples_and_epochs() {
     let data = medline_small();
     let mut o = opts(4);
