@@ -15,14 +15,26 @@
 //! cargo run --release --example medline_repro -- --n 1000000 --epochs 1
 //! ```
 
+// Under `--cfg loom` only the sync facade of the library builds;
+// this binary has nothing to model-check, so it compiles to a stub.
+#[cfg(loom)]
+fn main() {}
+
+#[cfg(not(loom))]
 use std::time::Instant;
 
+#[cfg(not(loom))]
 use lazyreg::eval::evaluate;
+#[cfg(not(loom))]
 use lazyreg::prelude::*;
+#[cfg(not(loom))]
 use lazyreg::synth::{generate, BowSpec};
+#[cfg(not(loom))]
 use lazyreg::train::DenseTrainer;
+#[cfg(not(loom))]
 use lazyreg::util::{fmt, Args};
 
+#[cfg(not(loom))]
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n: usize = args.get_parse("n", 20_000);

@@ -5,11 +5,21 @@
 //! cargo run --release --example quickstart
 //! ```
 
+// Under `--cfg loom` only the sync facade of the library builds;
+// this binary has nothing to model-check, so it compiles to a stub.
+#[cfg(loom)]
+fn main() {}
+
+#[cfg(not(loom))]
 use lazyreg::eval::evaluate;
+#[cfg(not(loom))]
 use lazyreg::prelude::*;
+#[cfg(not(loom))]
 use lazyreg::synth::{generate, BowSpec};
+#[cfg(not(loom))]
 use lazyreg::util::fmt;
 
+#[cfg(not(loom))]
 fn main() -> anyhow::Result<()> {
     // 1. A synthetic sparse corpus: 5k documents, 20k vocabulary, ~80
     //    distinct tokens per document (Medline shape, scaled down).

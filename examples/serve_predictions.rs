@@ -11,18 +11,32 @@
 //!     --shards 2 --batch 64
 //! ```
 
+// Under `--cfg loom` only the sync facade of the library builds;
+// this binary has nothing to model-check, so it compiles to a stub.
+#[cfg(loom)]
+fn main() {}
+
+#[cfg(not(loom))]
 use std::time::Instant;
 
+#[cfg(not(loom))]
 use lazyreg::data::BatchIter;
+#[cfg(not(loom))]
 use lazyreg::prelude::*;
+#[cfg(not(loom))]
 use lazyreg::runtime::Runtime;
+#[cfg(not(loom))]
 use lazyreg::serve::{Client, ServeOptions, Server};
+#[cfg(not(loom))]
 use lazyreg::synth::{generate, BowSpec};
+#[cfg(not(loom))]
 use lazyreg::util::{fmt, Args};
 
 /// One sparse request: `(feature, value)` pairs.
+#[cfg(not(loom))]
 type Example = Vec<(u32, f32)>;
 
+#[cfg(not(loom))]
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_clients: usize = args.get_parse("clients", 4);

@@ -17,14 +17,15 @@
 //! assignment follows arrival order, so the result is a deterministic
 //! function of the input stream and options.
 
-use std::collections::VecDeque;
 use std::io::BufRead;
-use std::sync::{Condvar, Mutex};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 
 use anyhow::Result;
 
 use crate::data::RowView;
 use crate::train::{merge_models, scoped_workers, LazyTrainer, MergeMode, TrainOptions};
+
+pub use crate::sync::BoundedQueue;
 
 /// An owned sparse example flowing through the pipeline.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,86 +42,6 @@ impl SparseExample {
     /// Borrow as a `RowView` for the trainers.
     pub fn view(&self) -> RowView<'_> {
         RowView { indices: &self.indices, values: &self.values }
-    }
-}
-
-/// A blocking MPMC bounded queue (Mutex + Condvar; crossbeam channels are
-/// unavailable offline).
-pub struct BoundedQueue<T> {
-    inner: Mutex<QueueState<T>>,
-    not_full: Condvar,
-    not_empty: Condvar,
-    capacity: usize,
-}
-
-struct QueueState<T> {
-    items: VecDeque<T>,
-    closed: bool,
-}
-
-impl<T> BoundedQueue<T> {
-    /// Create with a positive capacity.
-    pub fn new(capacity: usize) -> BoundedQueue<T> {
-        assert!(capacity > 0);
-        BoundedQueue {
-            inner: Mutex::new(QueueState {
-                items: VecDeque::with_capacity(capacity),
-                closed: false,
-            }),
-            not_full: Condvar::new(),
-            not_empty: Condvar::new(),
-            capacity,
-        }
-    }
-
-    /// Push, blocking while full. Returns `false` if the queue was closed.
-    pub fn push(&self, item: T) -> bool {
-        let mut st = self.inner.lock().unwrap();
-        while st.items.len() >= self.capacity && !st.closed {
-            st = self.not_full.wait(st).unwrap();
-        }
-        if st.closed {
-            return false;
-        }
-        st.items.push_back(item);
-        drop(st);
-        self.not_empty.notify_one();
-        true
-    }
-
-    /// Pop, blocking while empty. `None` once closed *and* drained.
-    pub fn pop(&self) -> Option<T> {
-        let mut st = self.inner.lock().unwrap();
-        loop {
-            if let Some(item) = st.items.pop_front() {
-                drop(st);
-                self.not_full.notify_one();
-                return Some(item);
-            }
-            if st.closed {
-                return None;
-            }
-            st = self.not_empty.wait(st).unwrap();
-        }
-    }
-
-    /// Close: producers stop, consumers drain then get `None`.
-    pub fn close(&self) {
-        let mut st = self.inner.lock().unwrap();
-        st.closed = true;
-        drop(st);
-        self.not_full.notify_all();
-        self.not_empty.notify_all();
-    }
-
-    /// Current queue length (snapshot).
-    pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
-    }
-
-    /// Whether the queue is currently empty (snapshot).
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
     }
 }
 
@@ -227,9 +148,21 @@ pub fn train_streaming<R: BufRead + Send>(
     std::thread::scope(|scope| {
         let q = &queue;
         let producer = scope.spawn(move || {
-            let errors = produce_examples(reader, dim, |ex| q.push(ex));
-            q.close();
-            errors
+            // A producer panic must poison the queue before unwinding,
+            // or the consumer below blocks forever on examples that
+            // will never arrive (it panics on the poisoned pop instead).
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                let errors = produce_examples(reader, dim, |ex| q.push(ex));
+                q.close();
+                errors
+            }));
+            match result {
+                Ok(errors) => errors,
+                Err(payload) => {
+                    q.poison();
+                    resume_unwind(payload);
+                }
+            }
         });
 
         while let Some(ex) = queue.pop() {
@@ -267,16 +200,29 @@ pub fn train_streaming_sharded<R: BufRead + Send>(
     let (results, parse_errors) = std::thread::scope(|scope| {
         let qs = &queues;
         let producer = scope.spawn(move || {
-            let mut next = 0usize;
-            let errors = produce_examples(reader, dim, |ex| {
-                let ok = qs[next % workers].push(ex);
-                next += 1;
-                ok
-            });
-            for q in qs.iter() {
-                q.close();
+            // Same poison-on-panic contract as the single-queue path,
+            // fanned out: every shard consumer must fail fast.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                let mut next = 0usize;
+                let errors = produce_examples(reader, dim, |ex| {
+                    let ok = qs[next % workers].push(ex);
+                    next += 1;
+                    ok
+                });
+                for q in qs.iter() {
+                    q.close();
+                }
+                errors
+            }));
+            match result {
+                Ok(errors) => errors,
+                Err(payload) => {
+                    for q in qs.iter() {
+                        q.poison();
+                    }
+                    resume_unwind(payload);
+                }
             }
-            errors
         });
 
         // Pool consumers drain their queues concurrently with the
@@ -334,8 +280,8 @@ pub fn train_streaming_sharded<R: BufRead + Send>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Arc;
+    use crate::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::Arc;
 
     #[test]
     fn queue_fifo_order() {
@@ -382,6 +328,37 @@ mod tests {
         q.close();
         assert!(!q.push(1));
         assert_eq!(q.pop(), None);
+    }
+
+    /// A reader that panics mid-stream (an I/O layer bug). The pipeline
+    /// must propagate the panic, not leave the consumer parked forever
+    /// on a queue nobody will ever close.
+    struct PanickyReader;
+
+    impl std::io::Read for PanickyReader {
+        fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+            panic!("reader bug")
+        }
+    }
+
+    impl std::io::BufRead for PanickyReader {
+        fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+            panic!("reader bug")
+        }
+        fn consume(&mut self, _amt: usize) {}
+    }
+
+    #[test]
+    fn producer_panic_fails_the_run_instead_of_hanging() {
+        let opts = TrainOptions::default();
+        let serial =
+            catch_unwind(AssertUnwindSafe(|| train_streaming(PanickyReader, 8, &opts, 2)));
+        assert!(serial.is_err(), "producer panic should fail the run");
+
+        let opts = TrainOptions { workers: 3, ..Default::default() };
+        let sharded =
+            catch_unwind(AssertUnwindSafe(|| train_streaming_sharded(PanickyReader, 8, &opts, 2)));
+        assert!(sharded.is_err(), "producer panic should fail the sharded run");
     }
 
     #[test]

@@ -17,13 +17,14 @@
 //! (`n_workers` tag slots × `opts.workers` shards), so pick one to scale
 //! unless cores abound.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::data::CsrMatrix;
 use crate::model::LinearModel;
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::Mutex;
 use crate::train::{scoped_workers, train_parallel_xy, LazyTrainer, TrainOptions};
 use crate::util::Rng;
 
@@ -65,12 +66,15 @@ pub fn train_one_vs_rest(
     // Slots for finished models, one per tag.
     let mut slots: Vec<Option<LinearModel>> = Vec::new();
     slots.resize_with(tags.len(), || None);
-    let slots_mutex = std::sync::Mutex::new(&mut slots);
+    let slots_mutex = Mutex::new(&mut slots);
 
     let t0 = Instant::now();
     scoped_workers(workers, |_w| {
         loop {
-            let k = next_tag.fetch_add(1, Ordering::Relaxed);
+            // SeqCst over Relaxed: a work-queue ticket is not a hot
+            // path, and only `train/hogwild` (+ its cell) gets to make
+            // relaxed-ordering arguments (`relaxed-ordering` lint).
+            let k = next_tag.fetch_add(1, Ordering::SeqCst);
             if k >= tags.len() {
                 break;
             }
@@ -98,7 +102,7 @@ pub fn train_one_vs_rest(
                 }
                 trainer.into_model()
             };
-            updates.fetch_add((x.n_rows() * opts.epochs) as u64, Ordering::Relaxed);
+            updates.fetch_add((x.n_rows() * opts.epochs) as u64, Ordering::SeqCst);
             slots_mutex.lock().unwrap()[k] = Some(model);
         }
     });
@@ -112,7 +116,7 @@ pub fn train_one_vs_rest(
     Ok(TaggerReport {
         models,
         updates_per_sec: if seconds > 0.0 {
-            updates.load(Ordering::Relaxed) as f64 / seconds
+            updates.load(Ordering::SeqCst) as f64 / seconds
         } else {
             0.0
         },

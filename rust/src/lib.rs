@@ -64,7 +64,17 @@
 //!   count via block-partial tree reduction), and `pjrt`
 //!   artifact-batched scoring; [`serve`]: a fixed-worker-pool TCP
 //!   service with batched requests, hot model reload, and per-model
-//!   penalty provenance in `stats`) and CLI (`src/main.rs`).
+//!   penalty provenance in `stats`) and CLI (`src/main.rs`). All of it
+//!   synchronizes exclusively through the [`sync`] facade: the only
+//!   module allowed to name `std::sync` (lint rule `std-sync`), home of
+//!   the poisonable coordination primitives ([`sync::RoundBarrier`],
+//!   [`sync::SeqSlot`], [`sync::BoundedQueue`]) and the HOGWILD
+//!   `(w, ψ)` cell ([`sync::HogwildCell`]); under `--cfg loom` the
+//!   facade swaps `std::sync` for the exhaustive interleaving explorer
+//!   ([`sync::model`]) and `tests/loom_models.rs` model-checks the
+//!   primitives' rendezvous/publish/poison protocols (see
+//!   `CONCURRENCY.md` for the memory-ordering arguments and how to run
+//!   loom/Miri/TSan locally).
 //! * **Layer 2 (JAX, build-time)** — dense mini-batch logistic-regression
 //!   graphs lowered once to HLO text (`python/compile/`), executed from
 //!   Rust through PJRT by [`runtime`] (gated behind the `pjrt` cargo
@@ -108,24 +118,50 @@
 //! # }
 //! ```
 
+// The no-unsafe status quo, enforced: every concurrent structure in the
+// crate is built from safe std (or model) primitives.
+#![forbid(unsafe_code)]
+
+// Under `--cfg loom` only the sync facade (and the model checker it
+// wraps) builds: the rest of the crate would need every std type the
+// model doesn't replace, and the loom suite only exercises the
+// primitives anyway.
+#[cfg(not(loom))]
 pub mod bench;
+#[cfg(not(loom))]
 pub mod config;
+#[cfg(not(loom))]
 pub mod coordinator;
+#[cfg(not(loom))]
 pub mod data;
+#[cfg(not(loom))]
 pub mod eval;
+#[cfg(not(loom))]
 pub mod loss;
+#[cfg(not(loom))]
 pub mod metrics;
+#[cfg(not(loom))]
 pub mod model;
+#[cfg(not(loom))]
 pub mod optim;
+#[cfg(not(loom))]
 pub mod predict;
+#[cfg(not(loom))]
 pub mod runtime;
+#[cfg(not(loom))]
 pub mod serve;
+pub mod sync;
+#[cfg(not(loom))]
 pub mod synth;
+#[cfg(not(loom))]
 pub mod testing;
+#[cfg(not(loom))]
 pub mod train;
+#[cfg(not(loom))]
 pub mod util;
 
 /// Convenience re-exports for downstream users.
+#[cfg(not(loom))]
 pub mod prelude {
     pub use crate::data::{CsrMatrix, SparseDataset};
     pub use crate::loss::Loss;

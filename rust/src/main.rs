@@ -32,23 +32,41 @@
 //! Run `lazyreg <cmd> --help` conceptually via README; flags are parsed by
 //! the from-scratch `util::args` (clap is unavailable offline).
 
+// Under `--cfg loom` only the sync facade of the library builds;
+// this binary has nothing to model-check, so it compiles to a stub.
+#[cfg(loom)]
+fn main() {}
+
+#[cfg(not(loom))]
 use std::path::Path;
 
+#[cfg(not(loom))]
 use anyhow::{Context, Result};
 
+#[cfg(not(loom))]
 use lazyreg::config::ExperimentConfig;
+#[cfg(not(loom))]
 use lazyreg::data::libsvm;
+#[cfg(not(loom))]
 use lazyreg::eval::evaluate;
+#[cfg(not(loom))]
 use lazyreg::loss::Loss;
+#[cfg(not(loom))]
 use lazyreg::optim::{Algo, Regularizer, Schedule};
+#[cfg(not(loom))]
 use lazyreg::serve::{ServeOptions, Server};
+#[cfg(not(loom))]
 use lazyreg::synth::{generate, BowSpec};
+#[cfg(not(loom))]
 use lazyreg::train::{
     train_dense, train_lazy, train_parallel, train_parallel_dense_xy, TrainOptions,
 };
+#[cfg(not(loom))]
 use lazyreg::util::fmt;
+#[cfg(not(loom))]
 use lazyreg::util::Args;
 
+#[cfg(not(loom))]
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
@@ -73,6 +91,7 @@ fn main() {
 }
 
 /// Build train options from flags (or a --config file, flags overriding).
+#[cfg(not(loom))]
 fn options_from(args: &Args) -> Result<(TrainOptions, BowSpec, f64, u64)> {
     let mut cfg = match args.opt("config") {
         Some(path) => ExperimentConfig::load(Path::new(path))?,
@@ -127,6 +146,7 @@ fn options_from(args: &Args) -> Result<(TrainOptions, BowSpec, f64, u64)> {
     Ok((cfg.train, cfg.corpus, cfg.test_frac, cfg.data_seed))
 }
 
+#[cfg(not(loom))]
 fn load_or_generate(
     args: &Args,
     corpus: &BowSpec,
@@ -149,6 +169,7 @@ fn load_or_generate(
 }
 
 /// `--base auto|0|1`: the libsvm index-base convention of `--data`.
+#[cfg(not(loom))]
 fn index_base(args: &Args) -> Result<libsvm::IndexBase> {
     match args.opt("base") {
         Some(b) => libsvm::IndexBase::parse(b),
@@ -156,6 +177,7 @@ fn index_base(args: &Args) -> Result<libsvm::IndexBase> {
     }
 }
 
+#[cfg(not(loom))]
 fn cmd_gen(args: &Args) -> Result<()> {
     let (_, corpus, _, data_seed) = options_from(args)?;
     let out = args.get("out", "data.svm");
@@ -173,14 +195,17 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(loom))]
 fn save_model(path: &str, model: &lazyreg::model::LinearModel) -> Result<()> {
     lazyreg::model::io::save(path, model)
 }
 
+#[cfg(not(loom))]
 fn load_model(path: &str, _loss: Loss) -> Result<lazyreg::model::LinearModel> {
     lazyreg::model::io::load(path)
 }
 
+#[cfg(not(loom))]
 fn cmd_train(args: &Args) -> Result<()> {
     let (opts, corpus, test_frac, data_seed) = options_from(args)?;
     let data = load_or_generate(args, &corpus, data_seed)?;
@@ -238,8 +263,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 /// Fixed seed for the train/test split (reports stay comparable).
+#[cfg(not(loom))]
 const EVAL_SPLIT_SEED: u64 = 0x5EED_5EED;
 
+#[cfg(not(loom))]
 fn cmd_eval(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
     let data_path = args.opt("data").context("--data required")?;
@@ -257,6 +284,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(loom))]
 fn cmd_serve(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
     let model = load_model(model_path, Loss::Logistic)?;
@@ -288,6 +316,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+#[cfg(not(loom))]
 fn cmd_bench(args: &Args) -> Result<()> {
     let (opts, mut corpus, _, data_seed) = options_from(args)?;
     if args.opt("n").is_none() {
@@ -318,6 +347,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(loom))]
 fn cmd_info(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("data") {
         let data = libsvm::read_file(path, None)?;

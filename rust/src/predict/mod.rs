@@ -39,7 +39,7 @@ pub mod sharded;
 pub use artifact::ArtifactBatcher;
 pub use sharded::ShardedModel;
 
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use crate::data::{CsrMatrix, RowView};
 use crate::loss::Loss;

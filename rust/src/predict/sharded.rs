@@ -20,8 +20,7 @@
 //! `ShardedModel::score` equals the trait score of the unsharded
 //! [`LinearModel`] bit for bit, for **any** shard count.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use crate::sync::{lock_ok, mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::data::RowView;
@@ -148,9 +147,10 @@ impl ShardedModel {
         let (reply, results) = mpsc::channel();
         for w in &self.workers {
             let job = Job::Score { rows: rows.clone(), reply: reply.clone() };
-            let sent = w.tx.lock().unwrap().send(job);
-            // Panic *outside* the lock statement: a dead shard must not
-            // poison the sender Mutex (Drop still needs to lock it).
+            // `lock_ok`: a Mutex poisoned by some earlier panic still
+            // guards a perfectly valid Sender, and Drop must be able to
+            // lock it again either way.
+            let sent = lock_ok(w.tx.lock()).send(job);
             sent.expect("shard worker exited");
         }
         drop(reply);
@@ -237,11 +237,13 @@ impl Predictor for ShardedModel {
 impl Drop for ShardedModel {
     fn drop(&mut self) {
         for w in &self.workers {
-            // Tolerate a poisoned Mutex: panicking in Drop during an
-            // unwind would abort the process.
-            if let Ok(tx) = w.tx.lock() {
-                let _ = tx.send(Job::Stop);
-            }
+            // `lock_ok`, not `if let Ok(..)`: skipping the Stop message
+            // on a poisoned Mutex would leave that shard parked on
+            // `recv` while its Sender is still alive in `self.workers`,
+            // and the join below would hang Drop forever. (Panicking
+            // here is not an option either — during an unwind it would
+            // abort the process.)
+            let _ = lock_ok(w.tx.lock()).send(Job::Stop);
         }
         for w in &mut self.workers {
             if let Some(h) = w.handle.take() {
@@ -308,5 +310,26 @@ mod tests {
         let sm = ShardedModel::spawn(&m, 2, 0);
         let p = sm.predict(row);
         assert_eq!(p, crate::loss::sigmoid(sm.score(row)));
+    }
+
+    #[test]
+    fn drop_tolerates_a_poisoned_sender_mutex() {
+        // Poison one shard's sender Mutex the only way a real panic
+        // would: while holding the guard. Drop must still deliver Stop
+        // to that shard — skipping it would park the shard on `recv`
+        // forever and hang the join (the regression this test pins).
+        let m = random_model(64, 5);
+        let sm = ShardedModel::spawn(&m, 2, 1);
+        let poisoned = std::thread::scope(|scope| {
+            scope
+                .spawn(|| {
+                    let _guard = sm.workers[0].tx.lock().unwrap();
+                    panic!("poison the sender mutex");
+                })
+                .join()
+        });
+        assert!(poisoned.is_err());
+        assert!(sm.workers[0].tx.lock().is_err(), "mutex should be poisoned");
+        drop(sm); // must neither panic nor hang
     }
 }

@@ -48,8 +48,6 @@
 use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -59,6 +57,8 @@ use crate::data::RowView;
 use crate::metrics::LatencyHistogram;
 use crate::model::LinearModel;
 use crate::predict::{self, Predictor};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{lock_ok, Arc, Mutex, RwLock};
 
 /// Connections waiting for a worker before the accept loop blocks.
 const ACCEPT_QUEUE_DEPTH: usize = 128;
@@ -235,11 +235,11 @@ impl Server {
 
     /// Current model version (1 at spawn, bumped by each `reload`).
     pub fn version(&self) -> u64 {
-        self.shared.predictor.read().unwrap().0.version()
+        lock_ok(self.shared.predictor.read()).0.version()
     }
 
     fn stop_threads(&mut self) {
-        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.queue.close();
         if let Some(h) = self.accept.take() {
             let _ = h.join();
@@ -262,7 +262,7 @@ impl Drop for Server {
 }
 
 fn accept_loop(listener: TcpListener, shared: &Shared) {
-    while !shared.stop.load(Ordering::Relaxed) {
+    while !shared.stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
                 // Blocks when the pool is saturated and the queue full —
@@ -295,7 +295,7 @@ fn worker_loop(shared: &Shared) {
             drop(stream); // shed stale load: a clean close, not a stall
             continue;
         }
-        shared.conns.fetch_add(1, Ordering::Relaxed);
+        shared.conns.fetch_add(1, Ordering::SeqCst);
         // A panic while serving one connection must not shrink the fixed
         // pool (the seed's per-connection threads lost only themselves).
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -358,13 +358,13 @@ fn dispatch(line: &str, shared: &Shared) -> Dispatch {
         // One read guard for both: version and provenance always describe
         // the same model, even mid-reload.
         let (version, penalty) = {
-            let slot = shared.predictor.read().unwrap();
+            let slot = lock_ok(shared.predictor.read());
             (slot.0.version(), slot.1.clone())
         };
-        let conns = shared.conns.load(Ordering::Relaxed);
+        let conns = shared.conns.load(Ordering::SeqCst);
         format!(
             "ok version={version} penalty={penalty} conns={conns} {}",
-            shared.hist.lock().unwrap().summary()
+            lock_ok(shared.hist.lock()).summary()
         )
     } else if line == "quit" {
         return Dispatch::Quit;
@@ -376,11 +376,11 @@ fn dispatch(line: &str, shared: &Shared) -> Dispatch {
 
 fn cmd_predict(rest: &str, shared: &Shared) -> String {
     let t0 = Instant::now();
-    let predictor = shared.predictor.read().unwrap().0.clone();
+    let predictor = lock_ok(shared.predictor.read()).0.clone();
     match parse_features(rest, predictor.dim()) {
         Some((indices, values)) => {
             let p = predictor.predict(RowView { indices: &indices, values: &values });
-            shared.hist.lock().unwrap().record(t0.elapsed());
+            lock_ok(shared.hist.lock()).record(t0.elapsed());
             format!("ok {p:.6}")
         }
         None => "err bad-features".to_string(),
@@ -389,7 +389,7 @@ fn cmd_predict(rest: &str, shared: &Shared) -> String {
 
 fn cmd_batch(rest: &str, shared: &Shared) -> String {
     let t0 = Instant::now();
-    let predictor = shared.predictor.read().unwrap().0.clone();
+    let predictor = lock_ok(shared.predictor.read()).0.clone();
     let dim = predictor.dim();
     let mut parsed: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
     for seg in rest.split(';') {
@@ -409,7 +409,7 @@ fn cmd_batch(rest: &str, shared: &Shared) -> String {
     // Per-example latency, once per example: `stats` percentiles stay in
     // "one prediction" units across the single-row and batch paths.
     let n = rows.len().max(1) as u32;
-    shared.hist.lock().unwrap().record_n(t0.elapsed() / n, n);
+    lock_ok(shared.hist.lock()).record_n(t0.elapsed() / n, n);
     let mut out = String::from("ok");
     for p in probs {
         let _ = write!(out, " {p:.6}"); // fmt::Write into a String is infallible
@@ -428,12 +428,12 @@ fn cmd_reload(path: &str, shared: &Shared) -> String {
             // threads) runs on whichever thread drops the last clone —
             // usually right here, at worst a one-off blip appended to an
             // in-flight request.
-            let _serialized = shared.reload_lock.lock().unwrap();
-            let version = shared.predictor.read().unwrap().0.version() + 1;
+            let _serialized = lock_ok(shared.reload_lock.lock());
+            let version = lock_ok(shared.predictor.read()).0.version() + 1;
             let penalty = penalty_of(&model);
             let fresh = build_predictor(model, &shared.opts, version);
             let old =
-                std::mem::replace(&mut *shared.predictor.write().unwrap(), (fresh, penalty));
+                std::mem::replace(&mut *lock_ok(shared.predictor.write()), (fresh, penalty));
             drop(old);
             format!("ok version={version}")
         }
@@ -463,7 +463,7 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
     let max_line_bytes =
         PER_EXAMPLE_LINE_BYTES.saturating_mul(shared.opts.batch_max.saturating_add(1));
     loop {
-        if shared.stop.load(Ordering::Relaxed) {
+        if shared.stop.load(Ordering::SeqCst) {
             break;
         }
         // Lines are assembled from `fill_buf` chunks instead of

@@ -1,0 +1,223 @@
+//! The HOGWILD shared-weight cell: one `(w, ψ)` pair whose racy
+//! publish/read protocol is the entire correctness surface of the
+//! lock-free engine ([`crate::train::hogwild`]).
+//!
+//! ## The ψ-stamp invariant
+//!
+//! `ψ` records the table position its weight is current to; a reader at
+//! position `pos` applies the lazy catch-up `snap.catchup(w, ψ)` only
+//! when `ψ < pos`. The one pairing that corrupts a weight is **fresh
+//! `w` with stale `ψ`**: the reader would re-apply regularization the
+//! writer already folded in (double catch-up — a systematic shrink
+//! bias, not HOGWILD noise). The protocol therefore guarantees:
+//!
+//! > a `read()` never returns `(w, ψ)` with `ψ` older than the stamp
+//! > `w` was published with.
+//!
+//! [`HogwildCell::publish`] bumps `ψ` (a `fetch_max`, so two racing
+//! writers keep ψ monotone) **before** releasing the weight;
+//! [`HogwildCell::read`] acquires the weight **before** loading `ψ`.
+//! The release/acquire edge on `w` orders the two ψ accesses: a reader
+//! that sees the published `w` has a happens-before path back through
+//! the writer's `fetch_max`, so coherence forces its `ψ` load to return
+//! at least that stamp. The benign direction — stale `w` with fresh
+//! `ψ`, i.e. skipping a catch-up another writer already performed — is
+//! allowed; it is the ordinary HOGWILD lost-update/under-step noise the
+//! statistical-closeness tests bound.
+//!
+//! `tests/loom_models.rs` checks the invariant exhaustively on the
+//! model-backed build; the unit tests below replicate the protocol on
+//! the explorer directly (and show the pre-audit store-order *failing*)
+//! so tier-1 re-proves it on every run.
+//!
+//! Every access here is deliberately `Relaxed`/`Acquire`/`Release`; the
+//! `relaxed-ordering` lint exempts exactly this module and the engine
+//! that drives it.
+
+use crate::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// One f64 stored as bits in a relaxed atomic. Plain loads/stores only
+/// (HOGWILD: racy read-modify-write is the accepted trade); the CAS
+/// loop is reserved for the bias, which every example touches.
+#[inline]
+pub fn load_f64(cell: &AtomicU64) -> f64 {
+    f64::from_bits(cell.load(Ordering::Relaxed))
+}
+
+#[inline]
+pub fn store_f64(cell: &AtomicU64, v: f64) {
+    cell.store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// Lock-free accumulate for the bias: unlike the weights (sparse
+/// touches, rare collisions) the bias is updated by *every* example, so
+/// a racy read-modify-write would lose a meaningful fraction of its
+/// updates. A CAS loop makes the add atomic; order stays arbitrary.
+pub fn fetch_add_f64(cell: &AtomicU64, delta: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// One shared weight: f64 bit pattern + ψ stamp (table position the
+/// weight is current to). See the module docs for the protocol.
+pub struct HogwildCell {
+    w: AtomicU64,
+    psi: AtomicU32,
+}
+
+impl HogwildCell {
+    /// A cell holding `v` current to table position 0.
+    pub fn new(v: f64) -> HogwildCell {
+        HogwildCell { w: AtomicU64::new(v.to_bits()), psi: AtomicU32::new(0) }
+    }
+
+    /// Racy read: `(w, ψ)` with the invariant that `ψ` is never older
+    /// than the stamp `w` was published with (module docs). The weight
+    /// load is `Acquire` and **must precede** the ψ load — it is the
+    /// reader's half of the release/acquire edge.
+    #[inline]
+    pub fn read(&self) -> (f64, u32) {
+        let w = self.w.load(Ordering::Acquire);
+        // Relaxed is enough here: the Acquire above already ordered us
+        // after the writer's ψ bump whenever we see its weight.
+        let psi = self.psi.load(Ordering::Relaxed);
+        (f64::from_bits(w), psi)
+    }
+
+    /// Racy publish of `v` as current to `stamp`. The ψ bump goes
+    /// **first** (so no reader can pair the new weight with the old
+    /// stamp) and is a `fetch_max` (so two racing writers leave ψ at
+    /// the larger stamp — a plain store could move ψ *backwards* and
+    /// re-trigger catch-up on a weight that is already current).
+    #[inline]
+    pub fn publish(&self, stamp: u32, v: f64) {
+        // Relaxed fetch_max: ordered before the store below by the
+        // Release, which is what readers synchronize with.
+        self.psi.fetch_max(stamp, Ordering::Relaxed);
+        self.w.store(v.to_bits(), Ordering::Release);
+    }
+
+    /// Quiescent value read — exact only while no writer is live (the
+    /// coordinator between barriers, or after the worker scope ends).
+    #[inline]
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.w.load(Ordering::Relaxed))
+    }
+
+    /// Quiescent ψ read — same caveat as [`HogwildCell::value`].
+    #[inline]
+    pub fn stamp(&self) -> u32 {
+        self.psi.load(Ordering::Relaxed)
+    }
+
+    /// Quiescent reset to `v` at ψ = 0 (the coordinated budget flush:
+    /// weights brought current, tables rebased, stamps restart).
+    pub fn reset(&self, v: f64) {
+        self.w.store(v.to_bits(), Ordering::Relaxed);
+        self.psi.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::sync::model::{self, model, thread};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::Ordering::SeqCst;
+    use std::sync::Arc;
+
+    #[test]
+    fn fetch_add_f64_accumulates_exactly_when_uncontended() {
+        let cell = AtomicU64::new(0f64.to_bits());
+        fetch_add_f64(&cell, 1.5);
+        fetch_add_f64(&cell, -0.25);
+        assert_eq!(load_f64(&cell), 1.25);
+    }
+
+    #[test]
+    fn cell_round_trips_value_stamp_and_reset() {
+        let c = HogwildCell::new(0.5);
+        assert_eq!(c.read(), (0.5, 0));
+        c.publish(3, -1.25);
+        assert_eq!(c.value(), -1.25);
+        assert_eq!(c.stamp(), 3);
+        c.publish(1, 9.0); // stale stamp: value moves, ψ stays at max
+        assert_eq!(c.read(), (9.0, 3));
+        c.reset(0.0);
+        assert_eq!(c.read(), (0.0, 0));
+    }
+
+    /// Explorer replica of [`HogwildCell::publish`]/`read` (the model
+    /// atomics execute SeqCst, a superset of the acq/rel argument —
+    /// TSan covers the weaker real orderings in CI). The writer
+    /// publishes stamp 1 concurrently with one reader; in *no*
+    /// interleaving may the reader pair the new weight with ψ = 0.
+    #[test]
+    fn psi_bump_before_weight_store_never_double_catches_up() {
+        model(|| {
+            let w = Arc::new(model::AtomicU64::new(1f64.to_bits()));
+            let psi = Arc::new(model::AtomicU32::new(0));
+            let (w2, psi2) = (Arc::clone(&w), Arc::clone(&psi));
+            let t = thread::spawn(move || {
+                psi2.fetch_max(1, SeqCst); // ψ first...
+                w2.store(2f64.to_bits(), SeqCst); // ...then the weight
+            });
+            let seen_w = f64::from_bits(w.load(SeqCst));
+            let seen_psi = psi.load(SeqCst);
+            t.join().unwrap();
+            assert!(
+                !(seen_w == 2.0 && seen_psi < 1),
+                "fresh weight paired with stale ψ: double catch-up"
+            );
+        });
+    }
+
+    /// The pre-audit order (weight first, ψ second — what PR 6 shipped)
+    /// *does* admit the double-catch-up pairing; the explorer finds the
+    /// schedule. This is the regression the protocol fix exists for.
+    #[test]
+    fn weight_store_before_psi_bump_is_caught_by_the_explorer() {
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let w = Arc::new(model::AtomicU64::new(1f64.to_bits()));
+                let psi = Arc::new(model::AtomicU32::new(0));
+                let (w2, psi2) = (Arc::clone(&w), Arc::clone(&psi));
+                let t = thread::spawn(move || {
+                    w2.store(2f64.to_bits(), SeqCst); // weight first (bad)
+                    psi2.store(1, SeqCst);
+                });
+                let seen_w = f64::from_bits(w.load(SeqCst));
+                let seen_psi = psi.load(SeqCst);
+                t.join().unwrap();
+                assert!(!(seen_w == 2.0 && seen_psi < 1), "double catch-up");
+            });
+        }));
+        assert!(err.is_err(), "explorer failed to find the double-catch-up schedule");
+    }
+
+    /// Two racing writers with stamps 1 and 2: `fetch_max` keeps ψ at 2
+    /// in every interleaving (plain stores could leave ψ = 1 with the
+    /// stamp-2 weight — a backwards stamp that re-triggers catch-up).
+    #[test]
+    fn racing_publishes_keep_psi_monotone() {
+        model(|| {
+            let c = Arc::new(model::AtomicU32::new(0));
+            let (a, b) = (Arc::clone(&c), Arc::clone(&c));
+            let t1 = thread::spawn(move || {
+                a.fetch_max(1, SeqCst);
+            });
+            let t2 = thread::spawn(move || {
+                b.fetch_max(2, SeqCst);
+            });
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(c.load(SeqCst), 2);
+        });
+    }
+}

@@ -1,0 +1,60 @@
+//! The synchronization facade: the **only** module in the crate allowed
+//! to name `std::sync` (enforced by `cargo xtask lint`, rule
+//! `std-sync`). Everything else imports `crate::sync`, which presents
+//! one of two faces:
+//!
+//! * **Normal builds** — re-exports of `std::sync` and
+//!   `std::sync::atomic`, zero-cost.
+//! * **`--cfg loom` builds** — the exhaustive interleaving explorer in
+//!   [`model`]: same `Mutex`/`Condvar`/atomic API, but every operation
+//!   is a scheduling decision point and `model(|| ...)` re-runs the
+//!   closure under *every* bounded-preemption interleaving. Run it with
+//!   `RUSTFLAGS="--cfg loom" cargo test --release -p lazyreg --test
+//!   loom_models` (see `CONCURRENCY.md`).
+//!
+//! The crate's hand-rolled coordination primitives live behind the same
+//! boundary so both faces exercise identical code: [`RoundBarrier`] and
+//! [`SeqSlot`] (poisonable round rendezvous + pipelined hand-off, from
+//! the pool runtimes), [`BoundedQueue`] (streaming backpressure), and
+//! [`HogwildCell`] (the lock-free engine's `(w, ψ)` publish/read
+//! protocol).
+
+pub mod hogwild_cell;
+pub mod model;
+pub mod primitives;
+pub mod queue;
+
+pub use hogwild_cell::{fetch_add_f64, load_f64, store_f64, HogwildCell};
+pub use primitives::{RoundBarrier, SeqSlot, POISONED};
+pub use queue::BoundedQueue;
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    atomic, mpsc, Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock,
+    RwLockReadGuard, RwLockWriteGuard,
+};
+
+#[cfg(loom)]
+pub use self::model::{thread, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub use std::sync::{Arc, LockResult, PoisonError};
+
+/// Model-backed `std::sync::atomic` stand-in: the explorer's atomics
+/// under the std names, plus the real [`atomic::Ordering`] (accepted
+/// for API compatibility; the model executes every access `SeqCst`).
+#[cfg(loom)]
+pub mod atomic {
+    pub use super::model::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+    pub use std::sync::atomic::Ordering;
+}
+
+/// Unwrap a [`LockResult`], treating a poisoned lock as acquired.
+///
+/// For code that must stay alive after another thread panicked — serve
+/// paths and `Drop` impls — where std's poison flag adds no safety: the
+/// guarded state is either value-checked by the caller or being torn
+/// down anyway. Pairs with the `serve-unwrap` lint rule, which bans
+/// bare `.unwrap()` on request paths.
+pub fn lock_ok<G>(r: LockResult<G>) -> G {
+    r.unwrap_or_else(PoisonError::into_inner)
+}

@@ -1,0 +1,1023 @@
+//! A miniature exhaustive-interleaving model checker — a self-contained,
+//! dependency-free stand-in for the `loom` crate (which cannot be
+//! vendored into this offline build).
+//!
+//! [`model`] runs a closure repeatedly, once per distinct thread
+//! interleaving, until the schedule space (bounded by a CHESS-style
+//! preemption budget) is exhausted. Inside the closure, the model types
+//! exported by [`crate::sync`] under `cfg(loom)` — [`Mutex`],
+//! [`Condvar`], the atomics, [`thread::spawn`] — route every operation
+//! through a cooperative scheduler: exactly one model thread runs at a
+//! time, every synchronization operation is a *decision point*, and the
+//! explorer enumerates the decision tree by depth-first replay
+//! (re-execute a recorded choice prefix, then take the first untried
+//! branch at the deepest unexhausted node).
+//!
+//! What the explorer guarantees, and what it does not:
+//!
+//! * **Exhaustive over schedules with at most `max_preemptions`
+//!   involuntary context switches** (voluntary switches — blocking on a
+//!   lock, a condvar wait — are free). The CHESS result is that almost
+//!   all real concurrency bugs manifest within two preemptions.
+//! * **Deadlock detection**: if no thread is runnable and not all have
+//!   finished, the run panics with the blocked-thread status table.
+//! * **Sequentially consistent atomics only.** Unlike real loom, the
+//!   explorer does not model weak-memory reorderings; every atomic op is
+//!   executed `SeqCst` regardless of the `Ordering` argument. The
+//!   acquire/release argument for the hogwild cell is made in
+//!   `CONCURRENCY.md` and cross-checked by the ThreadSanitizer CI job;
+//!   the explorer checks the *protocol logic* under all interleavings.
+//! * **No spurious condvar wakeups** — waiters wake only via notify (or
+//!   poisoning), so the explored space is a subset of what the OS may
+//!   do. All primitives in this crate wait in predicate loops, which the
+//!   models exercise directly.
+//!
+//! Model threads are real OS threads serialized by a token (a global
+//! mutex + condvar): only the thread the scheduler activated may run.
+//! This keeps the checker in 100% safe Rust — the real `std` mutex
+//! inside a model [`Mutex`] is only ever locked by the model-level
+//! owner, so it never blocks, and `std`'s own poisoning machinery
+//! provides poison-on-panic for free.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Condvar as RawCondvar, Mutex as RawMutex, OnceLock};
+use std::sync::{Arc, LockResult, PoisonError};
+
+/// Hard cap on explored schedules; a model that exceeds it is too large
+/// to check exhaustively and should be shrunk (fewer threads/ops).
+const MAX_RUNS: u64 = 100_000;
+
+/// Default involuntary-preemption budget (see module docs). Override
+/// per-model with [`model_with`] or globally via the
+/// `LAZYREG_LOOM_PREEMPTIONS` environment variable.
+const DEFAULT_PREEMPTIONS: usize = 2;
+
+/// Decision points allowed in one run. Spin/retry loops whose progress
+/// depends on a thread the scheduler never runs would otherwise loop
+/// forever on the first schedule (classic model-checker livelock); the
+/// bound turns that into a diagnosable failure. Condvar-based code —
+/// everything in this crate — stays far below it.
+const MAX_STEPS: u64 = 20_000;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    BlockedMutex(usize),
+    BlockedCondvar(usize),
+    BlockedJoin(usize),
+    Finished,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Branch {
+    chosen: usize,
+    options: usize,
+}
+
+/// Scheduler state for the run in progress. One global instance; runs
+/// are serialized by [`model`]'s lock.
+struct Exec {
+    running: bool,
+    run_id: u64,
+    status: Vec<Status>,
+    joined: Vec<bool>,
+    panics: Vec<Option<String>>,
+    mutex_owner: Vec<Option<usize>>,
+    n_condvars: usize,
+    active: usize,
+    prefix: Vec<usize>,
+    cursor: usize,
+    trace: Vec<Branch>,
+    preemptions: usize,
+    max_preemptions: usize,
+    steps: u64,
+    completed: bool,
+    error: Option<String>,
+    real: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Exec {
+    fn idle() -> Exec {
+        Exec {
+            running: false,
+            run_id: 0,
+            status: Vec::new(),
+            joined: Vec::new(),
+            panics: Vec::new(),
+            mutex_owner: Vec::new(),
+            n_condvars: 0,
+            active: 0,
+            prefix: Vec::new(),
+            cursor: 0,
+            trace: Vec::new(),
+            preemptions: 0,
+            max_preemptions: 0,
+            steps: 0,
+            completed: false,
+            error: None,
+            real: Vec::new(),
+        }
+    }
+}
+
+struct Control {
+    state: RawMutex<Exec>,
+    cond: RawCondvar,
+}
+
+static CONTROL: OnceLock<Control> = OnceLock::new();
+
+/// Serializes concurrent `model()` calls from parallel test threads.
+static MODEL_LOCK: RawMutex<()> = RawMutex::new(());
+
+fn control() -> &'static Control {
+    CONTROL.get_or_init(|| Control { state: RawMutex::new(Exec::idle()), cond: RawCondvar::new() })
+}
+
+thread_local! {
+    /// `(run_id, tid)` of the model thread running on this OS thread.
+    static CURRENT: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+}
+
+fn current_ids() -> (u64, usize) {
+    CURRENT
+        .with(|c| c.get())
+        .expect("model primitive used outside a model() run — wrap the test body in model(..)")
+}
+
+fn lock_state() -> std::sync::MutexGuard<'static, Exec> {
+    control().state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// First line of defense against using a model thread after its run was
+/// aborted (deadlock elsewhere): bail out by panicking; the wrapper
+/// catches it and the explorer has already been notified.
+fn check_live(st: &Exec, run_id: u64) {
+    if st.run_id != run_id || st.error.is_some() {
+        panic!("model run aborted");
+    }
+}
+
+enum Pick {
+    Next(usize),
+    Completed,
+    Dead(String),
+}
+
+/// Consume one decision from the replay prefix (or take branch 0 past
+/// its end) and record it in the trace. Single-option points are not
+/// recorded, keeping prefixes compact; replay stays aligned because the
+/// rule is deterministic.
+fn choose(st: &mut Exec, options: usize) -> usize {
+    if options <= 1 {
+        return 0;
+    }
+    let c = if st.cursor < st.prefix.len() { st.prefix[st.cursor] } else { 0 };
+    st.cursor += 1;
+    debug_assert!(c < options, "schedule replay diverged");
+    st.trace.push(Branch { chosen: c, options });
+    c
+}
+
+/// Pick the next thread to activate. `me` is the calling model thread;
+/// whether it is still runnable decides preemption accounting.
+fn pick_next(st: &mut Exec, me: usize) -> Pick {
+    st.steps += 1;
+    if st.steps > MAX_STEPS {
+        let desc = format!("livelock: run exceeded {MAX_STEPS} decision points (spin loop?)");
+        st.error = Some(desc.clone());
+        st.completed = true;
+        return Pick::Dead(desc);
+    }
+    let me_runnable = st.status[me] == Status::Runnable;
+    let mut cands: Vec<usize> = Vec::new();
+    if me_runnable {
+        cands.push(me);
+    }
+    for (t, s) in st.status.iter().enumerate() {
+        if t != me && *s == Status::Runnable {
+            cands.push(t);
+        }
+    }
+    if cands.is_empty() {
+        if st.status.iter().all(|s| *s == Status::Finished) {
+            st.completed = true;
+            return Pick::Completed;
+        }
+        let desc = format!("deadlock: no runnable model thread; status = {:?}", st.status);
+        st.error = Some(desc.clone());
+        st.completed = true;
+        return Pick::Dead(desc);
+    }
+    if me_runnable && st.preemptions >= st.max_preemptions {
+        // Preemption budget spent: the active thread keeps running.
+        cands.truncate(1);
+    }
+    let choice = choose(st, cands.len());
+    let next = cands[choice];
+    if me_runnable && next != me {
+        st.preemptions += 1;
+    }
+    st.active = next;
+    Pick::Next(next)
+}
+
+fn wait_for_activation(run_id: u64, tid: usize) {
+    let c = control();
+    let mut st = c.state.lock().unwrap_or_else(PoisonError::into_inner);
+    loop {
+        if st.run_id == run_id && st.error.is_some() {
+            drop(st);
+            panic!("model run aborted");
+        }
+        if st.run_id == run_id && st.active == tid && st.status[tid] == Status::Runnable {
+            return;
+        }
+        if st.run_id > run_id {
+            // Leaked thread from an aborted run: park forever (the
+            // process is about to fail the test anyway).
+            drop(st);
+            loop {
+                std::thread::park();
+            }
+        }
+        st = c.cond.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
+}
+
+/// A decision point for a thread that stays runnable: every atomic op,
+/// lock attempt, and spawn goes through here first.
+pub(crate) fn yield_point() {
+    let (run_id, tid) = current_ids();
+    let c = control();
+    let mut st = lock_state();
+    check_live(&st, run_id);
+    match pick_next(&mut st, tid) {
+        Pick::Next(next) => {
+            if next != tid {
+                drop(st);
+                c.cond.notify_all();
+                wait_for_activation(run_id, tid);
+            }
+        }
+        Pick::Completed => unreachable!("active thread is runnable"),
+        Pick::Dead(msg) => {
+            drop(st);
+            c.cond.notify_all();
+            panic!("model {msg}");
+        }
+    }
+}
+
+/// Block the calling thread with `status`, hand the token to another
+/// thread, and return once re-activated.
+fn block_and_wait(status: Status) {
+    let (run_id, tid) = current_ids();
+    let c = control();
+    let mut st = lock_state();
+    check_live(&st, run_id);
+    st.status[tid] = status;
+    match pick_next(&mut st, tid) {
+        Pick::Next(next) => {
+            debug_assert_ne!(next, tid);
+            drop(st);
+            c.cond.notify_all();
+            wait_for_activation(run_id, tid);
+        }
+        Pick::Completed => unreachable!("a blocked thread is not finished"),
+        Pick::Dead(msg) => {
+            drop(st);
+            c.cond.notify_all();
+            panic!("model {msg}");
+        }
+    }
+}
+
+fn register_mutex() -> usize {
+    let _ids = current_ids();
+    let mut st = lock_state();
+    st.mutex_owner.push(None);
+    st.mutex_owner.len() - 1
+}
+
+fn register_condvar() -> usize {
+    let _ids = current_ids();
+    let mut st = lock_state();
+    st.n_condvars += 1;
+    st.n_condvars - 1
+}
+
+/// Model-level lock acquisition: yields, then loops block-and-retry
+/// until ownership is granted.
+fn mutex_acquire(id: usize) {
+    yield_point();
+    mutex_acquire_no_yield(id);
+}
+
+fn mutex_acquire_no_yield(id: usize) {
+    let (run_id, tid) = current_ids();
+    loop {
+        {
+            let mut st = lock_state();
+            check_live(&st, run_id);
+            if st.mutex_owner[id].is_none() {
+                st.mutex_owner[id] = Some(tid);
+                return;
+            }
+        }
+        block_and_wait(Status::BlockedMutex(id));
+    }
+}
+
+/// Release model-level ownership and wake blocked contenders. `quiet`
+/// skips the trailing yield and never panics — for drops during unwind.
+fn mutex_release(id: usize, quiet: bool) {
+    let Some((run_id, tid)) = CURRENT.with(|c| c.get()) else { return };
+    {
+        let mut st = lock_state();
+        if st.run_id != run_id {
+            return;
+        }
+        debug_assert_eq!(st.mutex_owner[id], Some(tid));
+        st.mutex_owner[id] = None;
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedMutex(id) {
+                *s = Status::Runnable;
+            }
+        }
+    }
+    if !quiet {
+        yield_point();
+    }
+}
+
+/// Condvar wait: atomically (at model level) release the mutex, block
+/// until notified, then re-acquire the mutex.
+fn condvar_wait(cv: usize, mx: usize) {
+    let (run_id, tid) = current_ids();
+    let c = control();
+    let mut st = lock_state();
+    check_live(&st, run_id);
+    debug_assert_eq!(st.mutex_owner[mx], Some(tid));
+    st.mutex_owner[mx] = None;
+    for s in st.status.iter_mut() {
+        if *s == Status::BlockedMutex(mx) {
+            *s = Status::Runnable;
+        }
+    }
+    st.status[tid] = Status::BlockedCondvar(cv);
+    match pick_next(&mut st, tid) {
+        Pick::Next(next) => {
+            debug_assert_ne!(next, tid);
+            drop(st);
+            c.cond.notify_all();
+            wait_for_activation(run_id, tid);
+        }
+        Pick::Completed => unreachable!("a waiting thread is not finished"),
+        Pick::Dead(msg) => {
+            drop(st);
+            c.cond.notify_all();
+            panic!("model {msg}");
+        }
+    }
+    mutex_acquire_no_yield(mx);
+}
+
+/// Wake one waiter — *which* one is a scheduling decision the explorer
+/// branches over (std promises "at least one", not an order).
+fn condvar_notify_one(cv: usize) {
+    yield_point();
+    let (run_id, _tid) = current_ids();
+    let mut st = lock_state();
+    check_live(&st, run_id);
+    let waiters: Vec<usize> = st
+        .status
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| **s == Status::BlockedCondvar(cv))
+        .map(|(t, _)| t)
+        .collect();
+    if !waiters.is_empty() {
+        let choice = choose(&mut st, waiters.len());
+        st.status[waiters[choice]] = Status::Runnable;
+    }
+}
+
+fn condvar_notify_all(cv: usize) {
+    yield_point();
+    let (run_id, _tid) = current_ids();
+    let mut st = lock_state();
+    check_live(&st, run_id);
+    for s in st.status.iter_mut() {
+        if *s == Status::BlockedCondvar(cv) {
+            *s = Status::Runnable;
+        }
+    }
+}
+
+fn register_thread() -> (u64, usize) {
+    let (run_id, _tid) = current_ids();
+    let mut st = lock_state();
+    check_live(&st, run_id);
+    st.status.push(Status::Runnable);
+    st.joined.push(false);
+    st.panics.push(None);
+    (run_id, st.status.len() - 1)
+}
+
+fn finish(run_id: u64, tid: usize, panic_msg: Option<String>) {
+    let c = control();
+    let mut st = lock_state();
+    if st.run_id != run_id {
+        return;
+    }
+    st.panics[tid] = panic_msg;
+    st.status[tid] = Status::Finished;
+    for s in st.status.iter_mut() {
+        if *s == Status::BlockedJoin(tid) {
+            *s = Status::Runnable;
+        }
+    }
+    if st.error.is_some() {
+        return; // aborted run: the explorer was already notified
+    }
+    match pick_next(&mut st, tid) {
+        Pick::Next(_) | Pick::Completed => {
+            drop(st);
+            c.cond.notify_all();
+        }
+        Pick::Dead(_) => {
+            // Deadlock discovered at thread exit: error recorded; wake
+            // the explorer and exit quietly (nothing left to schedule).
+            drop(st);
+            c.cond.notify_all();
+        }
+    }
+}
+
+fn join_wait(tid: usize) {
+    yield_point();
+    let (run_id, _me) = current_ids();
+    loop {
+        {
+            let mut st = lock_state();
+            check_live(&st, run_id);
+            if st.status[tid] == Status::Finished {
+                st.joined[tid] = true;
+                return;
+            }
+        }
+        block_and_wait(Status::BlockedJoin(tid));
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public model types
+// ---------------------------------------------------------------------
+
+/// A model mutex: `std::sync::Mutex` semantics (including poisoning),
+/// with lock/unlock as scheduler decision points.
+pub struct Mutex<T> {
+    id: usize,
+    inner: RawMutex<T>,
+}
+
+/// Guard for [`Mutex`]; releases model ownership on drop.
+pub struct MutexGuard<'a, T> {
+    mx: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    /// Create a mutex. Must be called inside a `model()` run.
+    pub fn new(value: T) -> Mutex<T> {
+        Mutex { id: register_mutex(), inner: RawMutex::new(value) }
+    }
+
+    /// Lock, blocking (at model level) until available. Returns `Err`
+    /// wrapping the guard if a previous holder panicked, like std.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        mutex_acquire(self.id);
+        // Model-level ownership means the real mutex is free: this
+        // never blocks, it only reports poisoning.
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { mx: self, inner: Some(g) }),
+            Err(p) => Err(PoisonError::new(MutexGuard { mx: self, inner: Some(p.into_inner()) })),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("model guard active")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("model guard active")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.inner.take() {
+            // Order matters: drop the real guard (poisoning the real
+            // mutex if we are unwinding) *before* releasing model
+            // ownership to the next thread.
+            drop(g);
+            mutex_release(self.mx.id, std::thread::panicking());
+        }
+    }
+}
+
+/// A model condvar: no spurious wakeups; `notify_one`'s waiter choice
+/// is a scheduler branch.
+pub struct Condvar {
+    id: usize,
+}
+
+impl Condvar {
+    /// Create a condvar. Must be called inside a `model()` run.
+    pub fn new() -> Condvar {
+        Condvar { id: register_condvar() }
+    }
+
+    /// Release `guard`'s mutex, wait for a notification, re-acquire.
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let mx = guard.mx;
+        // Real unlock first so the next model-level owner can lock.
+        drop(guard.inner.take());
+        condvar_wait(self.id, mx.id);
+        match mx.inner.lock() {
+            Ok(g) => {
+                guard.inner = Some(g);
+                Ok(guard)
+            }
+            Err(p) => {
+                guard.inner = Some(p.into_inner());
+                Err(PoisonError::new(guard))
+            }
+        }
+    }
+
+    /// Wake one waiter (scheduler-chosen), if any.
+    pub fn notify_one(&self) {
+        condvar_notify_one(self.id);
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        condvar_notify_all(self.id);
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+macro_rules! model_atomic {
+    ($(#[$doc:meta])* $name:ident, $raw:ident, $ty:ty) => {
+        $(#[$doc])*
+        #[derive(Debug, Default)]
+        pub struct $name {
+            raw: std::sync::atomic::$raw,
+        }
+
+        impl $name {
+            /// Create with an initial value (usable outside runs).
+            pub fn new(v: $ty) -> $name {
+                $name { raw: std::sync::atomic::$raw::new(v) }
+            }
+
+            /// Load. The `Ordering` is accepted for API compatibility;
+            /// the explorer executes every access `SeqCst`.
+            pub fn load(&self, _order: Ordering) -> $ty {
+                yield_point();
+                self.raw.load(Ordering::SeqCst)
+            }
+
+            /// Store (executed `SeqCst`, like every model access).
+            pub fn store(&self, v: $ty, _order: Ordering) {
+                yield_point();
+                self.raw.store(v, Ordering::SeqCst)
+            }
+
+            /// Atomic add, returning the previous value.
+            pub fn fetch_add(&self, v: $ty, _order: Ordering) -> $ty {
+                yield_point();
+                self.raw.fetch_add(v, Ordering::SeqCst)
+            }
+
+            /// Atomic max, returning the previous value.
+            pub fn fetch_max(&self, v: $ty, _order: Ordering) -> $ty {
+                yield_point();
+                self.raw.fetch_max(v, Ordering::SeqCst)
+            }
+
+            /// Compare-exchange (strong).
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                yield_point();
+                self.raw.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+            }
+
+            /// Compare-exchange; the model never fails spuriously.
+            pub fn compare_exchange_weak(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                self.compare_exchange(current, new, success, failure)
+            }
+        }
+    };
+}
+
+model_atomic!(
+    /// Model `AtomicU32` (every access a decision point, run `SeqCst`).
+    AtomicU32,
+    AtomicU32,
+    u32
+);
+model_atomic!(
+    /// Model `AtomicU64` (every access a decision point, run `SeqCst`).
+    AtomicU64,
+    AtomicU64,
+    u64
+);
+model_atomic!(
+    /// Model `AtomicUsize` (every access a decision point, run `SeqCst`).
+    AtomicUsize,
+    AtomicUsize,
+    usize
+);
+
+/// Model `AtomicBool` (every access a decision point, run `SeqCst`).
+#[derive(Debug, Default)]
+pub struct AtomicBool {
+    raw: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    /// Create with an initial value.
+    pub fn new(v: bool) -> AtomicBool {
+        AtomicBool { raw: std::sync::atomic::AtomicBool::new(v) }
+    }
+
+    /// Load (executed `SeqCst`).
+    pub fn load(&self, _order: Ordering) -> bool {
+        yield_point();
+        self.raw.load(Ordering::SeqCst)
+    }
+
+    /// Store (executed `SeqCst`).
+    pub fn store(&self, v: bool, _order: Ordering) {
+        yield_point();
+        self.raw.store(v, Ordering::SeqCst)
+    }
+
+    /// Swap, returning the previous value.
+    pub fn swap(&self, v: bool, _order: Ordering) -> bool {
+        yield_point();
+        self.raw.swap(v, Ordering::SeqCst)
+    }
+}
+
+/// Model threads: spawn/join with scheduler integration.
+pub mod thread {
+    use super::*;
+
+    type ResultSlot<T> = Arc<RawMutex<Option<std::thread::Result<T>>>>;
+
+    /// Handle to a model thread; `join` propagates panics like std.
+    pub struct JoinHandle<T> {
+        tid: usize,
+        slot: ResultSlot<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Wait (at model level) for the thread and take its result.
+        pub fn join(self) -> std::thread::Result<T> {
+            join_wait(self.tid);
+            let taken = self.slot.lock().unwrap_or_else(PoisonError::into_inner).take();
+            taken.expect("model: joined thread left no result")
+        }
+    }
+
+    /// Spawn a model thread. Must be called inside a `model()` run.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let slot: ResultSlot<T> = Arc::new(RawMutex::new(None));
+        let slot2 = Arc::clone(&slot);
+        let (run_id, tid) = register_thread();
+        let handle = std::thread::spawn(move || {
+            CURRENT.with(|c| c.set(Some((run_id, tid))));
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                wait_for_activation(run_id, tid);
+                f()
+            }));
+            let msg = result.as_ref().err().map(|e| panic_message(e.as_ref()));
+            *slot2.lock().unwrap_or_else(PoisonError::into_inner) = Some(result);
+            finish(run_id, tid, msg);
+        });
+        {
+            let mut st = lock_state();
+            st.real.push(handle);
+        }
+        // The spawn itself is a decision point: the child may run
+        // before the parent's next op.
+        yield_point();
+        JoinHandle { tid, slot }
+    }
+
+    /// A pure decision point (parallels `std::thread::yield_now`).
+    pub fn yield_now() {
+        yield_point();
+    }
+}
+
+struct RunOutcome {
+    trace: Vec<Branch>,
+    error: Option<String>,
+    unjoined_panic: Option<String>,
+}
+
+fn run_once(f: Arc<dyn Fn() + Send + Sync>, prefix: &[usize], max_preemptions: usize) -> RunOutcome {
+    let c = control();
+    let run_id = {
+        let mut st = lock_state();
+        assert!(!st.running, "model(): a previous aborted run left the scheduler busy");
+        st.running = true;
+        st.run_id += 1;
+        st.status = vec![Status::Runnable];
+        st.joined = vec![false];
+        st.panics = vec![None];
+        st.mutex_owner.clear();
+        st.n_condvars = 0;
+        st.active = 0;
+        st.prefix = prefix.to_vec();
+        st.cursor = 0;
+        st.trace.clear();
+        st.preemptions = 0;
+        st.max_preemptions = max_preemptions;
+        st.steps = 0;
+        st.completed = false;
+        st.error = None;
+        st.real.clear();
+        st.run_id
+    };
+    // The root model thread (tid 0) runs the closure directly; it is
+    // already the active thread, so no activation wait is needed.
+    let root = std::thread::spawn(move || {
+        CURRENT.with(|cell| cell.set(Some((run_id, 0))));
+        let result = catch_unwind(AssertUnwindSafe(|| f()));
+        let msg = result.err().map(|e| panic_message(e.as_ref()));
+        finish(run_id, 0, msg);
+    });
+    {
+        let mut st = lock_state();
+        st.real.push(root);
+    }
+    c.cond.notify_all();
+
+    let mut st = lock_state();
+    while !st.completed {
+        st = c.cond.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
+    let trace = st.trace.clone();
+    let error = st.error.clone();
+    let unjoined_panic = st
+        .panics
+        .iter()
+        .enumerate()
+        .find(|(t, p)| p.is_some() && !st.joined[*t])
+        .and_then(|(_, p)| p.clone());
+    let real: Vec<std::thread::JoinHandle<()>> = st.real.drain(..).collect();
+    st.running = false;
+    drop(st);
+    if error.is_none() {
+        for h in real {
+            let _ = h.join();
+        }
+    } else {
+        // Blocked threads of an aborted run never exit; detach them.
+        drop(real);
+    }
+    RunOutcome { trace, error, unjoined_panic }
+}
+
+fn next_prefix(trace: &[Branch]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        if trace[i].chosen + 1 < trace[i].options {
+            let mut p: Vec<usize> = trace[..i].iter().map(|b| b.chosen).collect();
+            p.push(trace[i].chosen + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Explore every interleaving of `f` within the default preemption
+/// budget (see module docs). Panics — with the failing schedule — if
+/// any interleaving panics, deadlocks, or fails an assertion.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let bound = std::env::var("LAZYREG_LOOM_PREEMPTIONS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_PREEMPTIONS);
+    model_with(bound, f);
+}
+
+/// [`model`] with an explicit involuntary-preemption budget.
+pub fn model_with<F>(max_preemptions: usize, f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    assert!(
+        CURRENT.with(|c| c.get()).is_none(),
+        "model() cannot be nested inside a model thread"
+    );
+    let _serialize = MODEL_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut runs: u64 = 0;
+    loop {
+        runs += 1;
+        assert!(runs <= MAX_RUNS, "model explored more than {MAX_RUNS} schedules; shrink it");
+        let out = run_once(Arc::clone(&f), &prefix, max_preemptions);
+        if let Some(err) = out.error {
+            panic!("{err} (run {runs}, schedule {:?})", out.trace);
+        }
+        if let Some(msg) = out.unjoined_panic {
+            panic!("model thread panicked: {msg} (run {runs}, schedule {:?})", out.trace);
+        }
+        match next_prefix(&out.trace) {
+            Some(p) => prefix = p,
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::thread as mthread;
+    use super::*;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    #[test]
+    fn explores_more_than_one_schedule() {
+        let runs = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let interleaved = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let r2 = Arc::clone(&runs);
+        let i2 = Arc::clone(&interleaved);
+        model(move || {
+            r2.fetch_add(1, SeqCst);
+            let a = Arc::new(AtomicUsize::new(0));
+            let a2 = Arc::clone(&a);
+            let t = mthread::spawn(move || {
+                a2.store(1, Ordering::SeqCst);
+            });
+            let seen = a.load(Ordering::SeqCst);
+            t.join().unwrap();
+            if seen == 1 {
+                i2.fetch_add(1, SeqCst);
+            }
+        });
+        // Both orders of (store, load) must have been explored.
+        assert!(runs.load(SeqCst) >= 2, "only {} schedules explored", runs.load(SeqCst));
+        let hits = interleaved.load(SeqCst);
+        assert!(hits >= 1, "child-first schedule never explored");
+        assert!(hits < runs.load(SeqCst), "parent-first schedule never explored");
+    }
+
+    #[test]
+    fn finds_lost_update_in_unsynchronized_read_modify_write() {
+        // Two threads doing load-then-store on the same atomic: the
+        // explorer must find the interleaving where one update is lost.
+        let found = catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let a = Arc::new(AtomicUsize::new(0));
+                let mut handles = Vec::new();
+                for _ in 0..2 {
+                    let a2 = Arc::clone(&a);
+                    handles.push(mthread::spawn(move || {
+                        let v = a2.load(Ordering::SeqCst);
+                        a2.store(v + 1, Ordering::SeqCst);
+                    }));
+                }
+                for h in handles {
+                    h.join().unwrap();
+                }
+                assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+            });
+        }));
+        assert!(found.is_err(), "explorer missed the lost-update interleaving");
+    }
+
+    #[test]
+    fn mutex_protects_read_modify_write() {
+        model(|| {
+            let m = Arc::new(Mutex::new(0usize));
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                let m2 = Arc::clone(&m);
+                handles.push(mthread::spawn(move || {
+                    let mut g = m2.lock().unwrap();
+                    *g += 1;
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    fn detects_lock_order_deadlock() {
+        let found = catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                let t = mthread::spawn(move || {
+                    let _ga = a2.lock().unwrap();
+                    let _gb = b2.lock().unwrap();
+                });
+                {
+                    let _gb = b.lock().unwrap();
+                    let _ga = a.lock().unwrap();
+                }
+                t.join().unwrap();
+            });
+        }));
+        assert!(found.is_err(), "explorer missed the AB-BA deadlock");
+    }
+
+    #[test]
+    fn condvar_handoff_works_and_never_hangs() {
+        model(|| {
+            let slot = Arc::new(Mutex::new(None::<u32>));
+            let cv = Arc::new(Condvar::new());
+            let (s2, c2) = (Arc::clone(&slot), Arc::clone(&cv));
+            let consumer = mthread::spawn(move || {
+                let mut g = s2.lock().unwrap();
+                while g.is_none() {
+                    g = c2.wait(g).unwrap();
+                }
+                g.take().unwrap()
+            });
+            {
+                let mut g = slot.lock().unwrap();
+                *g = Some(7);
+            }
+            cv.notify_one();
+            assert_eq!(consumer.join().unwrap(), 7);
+        });
+    }
+
+    #[test]
+    fn join_propagates_panics_and_poisons_mutexes() {
+        model(|| {
+            let m = Arc::new(Mutex::new(0u32));
+            let m2 = Arc::clone(&m);
+            let t = mthread::spawn(move || {
+                let _g = m2.lock().unwrap();
+                panic!("boom");
+            });
+            assert!(t.join().is_err(), "panic not propagated through join");
+            // The panicking holder must have poisoned the mutex.
+            assert!(m.lock().is_err(), "mutex not poisoned");
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! The bounded MPMC queue behind the streaming pipeline, extracted
+//! from `coordinator::pipeline` so it builds against either face of
+//! the [`crate::sync`] facade and can be model-checked under
+//! `--cfg loom` (`tests/loom_models.rs`: close/drain and
+//! poison-wakes-parked-consumer semantics).
+
+use std::collections::VecDeque;
+
+use crate::sync::primitives::POISONED;
+use crate::sync::{Condvar, Mutex};
+
+/// A blocking MPMC bounded queue (Mutex + Condvar; crossbeam channels
+/// are unavailable offline).
+///
+/// Lifecycle: [`BoundedQueue::close`] is the orderly end-of-stream —
+/// producers get `false`, consumers drain then get `None`.
+/// [`BoundedQueue::poison`] is the failure path — a producer that
+/// panics mid-stream poisons the queue so blocked consumers panic
+/// (fail fast) instead of waiting forever on examples that will never
+/// arrive; the message matches the pool's
+/// [`POISONED`](crate::sync::POISONED) contract.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    poisoned: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create with a positive capacity.
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(QueueState {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+                poisoned: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Push, blocking while full. Returns `false` if the queue was
+    /// closed. Panics if the queue was poisoned.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        while st.items.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        assert!(!st.poisoned, "{}", POISONED);
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Pop, blocking while empty. `None` once closed *and* drained.
+    /// Panics if the queue was poisoned (undelivered items are
+    /// abandoned: a poisoned stream has no defined remainder).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            assert!(!st.poisoned, "{}", POISONED);
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close: producers stop, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Fail every current and future `push`/`pop` with a panic — the
+    /// producer-panic path ([module docs](self)). Must not panic
+    /// itself: it runs on unwind cleanup, so a Mutex poisoned by a
+    /// panicking holder is tolerated.
+    pub fn poison(&self) {
+        match self.inner.lock() {
+            Ok(mut st) => {
+                st.poisoned = true;
+                st.closed = true;
+            }
+            Err(p) => {
+                let st = p.into_inner();
+                st.poisoned = true;
+                st.closed = true;
+            }
+        }
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Current queue length (snapshot).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty (snapshot).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn pop_after_close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        q.close();
+        assert!(!q.push(3), "push after close must fail");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None, "closed+drained stays None");
+    }
+
+    #[test]
+    fn poison_wakes_parked_consumer_with_a_panic() {
+        // The producer-panic contract: a consumer blocked on an empty
+        // queue must fail fast when the producer dies, not hang.
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        std::thread::scope(|scope| {
+            let parked = scope.spawn(|| q.pop());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.poison();
+            assert!(parked.join().is_err(), "poisoned consumer should panic, not hang");
+        });
+        // Late arrivals on either side fail immediately too.
+        assert!(catch_unwind(AssertUnwindSafe(|| q.pop())).is_err());
+        assert!(catch_unwind(AssertUnwindSafe(|| q.push(1))).is_err());
+    }
+
+    #[test]
+    fn poison_wakes_parked_producer_with_a_panic() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        assert!(q.push(1)); // fill: the next push parks
+        std::thread::scope(|scope| {
+            let parked = scope.spawn(|| q.push(2));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.poison();
+            assert!(parked.join().is_err(), "poisoned producer should panic, not hang");
+        });
+    }
+}

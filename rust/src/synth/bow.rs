@@ -113,7 +113,9 @@ pub fn generate(spec: &BowSpec, seed: u64) -> SparseDataset {
     // bias = -quantile(logits, 1 - target).
     let sample_n = x.n_rows().min(2_000);
     let mut sample_logits: Vec<f64> = (0..sample_n).map(|r| truth.logit(&x, r)).collect();
-    sample_logits.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN logit (a degenerate spec) must not panic the
+    // generator mid-sort (the PR 6 `partial_cmp` bug class).
+    sample_logits.sort_unstable_by(f64::total_cmp);
     let q = (1.0 - spec.labels.target_positive_rate).clamp(0.0, 1.0);
     let idx = ((q * (sample_n.saturating_sub(1)) as f64).round() as usize).min(sample_n - 1);
     truth.bias = -sample_logits[idx] as f32;

@@ -42,8 +42,15 @@
 //!
 //! ## What is (deliberately) racy
 //!
-//! * A weight's `w` and `ψ` words are separate atomics: a reader can
-//!   pair a fresh `w` with a stale `ψ` or vice versa.
+//! * A weight's `w` and `ψ` words are separate atomics. The one unsafe
+//!   pairing — fresh `w` with stale `ψ`, which would re-apply a
+//!   catch-up the writer already folded in — is ruled out by
+//!   [`HogwildCell`]'s publish/read protocol (ψ bumped with `fetch_max`
+//!   *before* the weight's release store; weight acquired *before* ψ is
+//!   read — see the cell's module docs for the full argument, and
+//!   `tests/loom_models.rs` for the exhaustive check). The benign
+//!   direction — stale `w` with fresh `ψ`, skipping a catch-up another
+//!   worker performed — remains possible and is ordinary HOGWILD noise.
 //! * The read–catchup–update–write sequence is not atomic: concurrent
 //!   writers to the same feature lose updates.
 //! * A worker that reads `ψ ≥ its own position` (another worker ran
@@ -61,8 +68,6 @@
 //! same contiguous split, and the final O(d) materialization happens
 //! once, after the last round.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
-use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -70,49 +75,22 @@ use anyhow::Result;
 use crate::data::CsrMatrix;
 use crate::model::LinearModel;
 use crate::optim::{DpCache, Penalty};
+use crate::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
+use crate::sync::{fetch_add_f64, load_f64, Arc, HogwildCell, Mutex, RoundBarrier, RwLock};
 use crate::util::Rng;
 
 use super::driver::{epoch_order, EpochStats, TrainReport};
 use super::options::TrainOptions;
-use super::pool::{longest_shard, round_slice, shard_range, RoundBarrier};
+use super::pool::{longest_shard, round_slice, shard_range};
 
-/// One f64 stored as bits in a relaxed atomic. Plain loads/stores only
-/// (HOGWILD: racy read-modify-write is the accepted trade); the CAS
-/// loop is reserved for the bias, which every example touches.
-#[inline]
-fn load_f64(cell: &AtomicU64) -> f64 {
-    f64::from_bits(cell.load(Relaxed))
-}
-
-#[inline]
-fn store_f64(cell: &AtomicU64, v: f64) {
-    cell.store(v.to_bits(), Relaxed);
-}
-
-/// Lock-free accumulate for the bias: unlike the weights (sparse
-/// touches, rare collisions) the bias is updated by *every* example, so
-/// a racy read-modify-write would lose a meaningful fraction of its
-/// updates. A CAS loop makes the add atomic; order stays arbitrary.
-fn fetch_add_f64(cell: &AtomicU64, delta: f64) {
-    let mut cur = cell.load(Relaxed);
-    loop {
-        let next = (f64::from_bits(cur) + delta).to_bits();
-        match cell.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
-            Ok(_) => return,
-            Err(seen) => cur = seen,
-        }
-    }
-}
-
-/// Shared state of one lock-free run. The weights/ψ arrays are written
-/// by every worker during rounds; the cache and round metadata are
-/// written only by the coordinator *between* rounds (the barrier's
+/// Shared state of one lock-free run. The weight cells are written by
+/// every worker during rounds; the cache and round metadata are written
+/// only by the coordinator *between* rounds (the barrier's
 /// acquire/release edges publish them to the workers).
 struct Shared {
-    /// f64 bit patterns of the shared weight vector.
-    w: Vec<AtomicU64>,
-    /// ψ stamps: table position each weight is current to.
-    psi: Vec<AtomicU32>,
+    /// The shared weight vector: one `(w, ψ)` cell per feature, racy by
+    /// design — the publish/read protocol lives in [`HogwildCell`].
+    w: Vec<HogwildCell>,
     /// f64 bit pattern of the shared (unregularized) bias.
     bias: AtomicU64,
     /// The shared DP tables. Guards are round-grained: read per worker
@@ -128,7 +106,7 @@ struct Shared {
     round_out: Vec<Mutex<(f64, u64)>>,
     /// This epoch's visit order; published before the round barrier
     /// releases the epoch's first round.
-    order: Mutex<std::sync::Arc<Vec<usize>>>,
+    order: Mutex<Arc<Vec<usize>>>,
     /// Size `workers + 1`: the coordinator participates in every round.
     barrier: RoundBarrier,
 }
@@ -154,14 +132,13 @@ pub(crate) fn run(
         None => DpCache::new(opts.algo, opts.reg, opts.schedule),
     };
     let shared = Shared {
-        w: (0..d).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
-        psi: (0..d).map(|_| AtomicU32::new(0)).collect(),
+        w: (0..d).map(|_| HogwildCell::new(0.0)).collect(),
         bias: AtomicU64::new(0f64.to_bits()),
         cache: RwLock::new(cache),
         k_base: AtomicU32::new(0),
         t_base: AtomicU64::new(0),
         round_out: (0..workers).map(|_| Mutex::new((0.0, 0))).collect(),
-        order: Mutex::new(std::sync::Arc::new(Vec::new())),
+        order: Mutex::new(Arc::new(Vec::new())),
         barrier: RoundBarrier::new(workers + 1),
     };
 
@@ -209,8 +186,8 @@ pub(crate) fn run(
     let cache = shared.cache.into_inner().expect("no thread panicked past the scope");
     let mut model = LinearModel::zeros(d, opts.loss);
     model.penalty = Some(opts.reg.name());
-    for ((out, wc), pc) in model.weights.iter_mut().zip(shared.w.iter()).zip(shared.psi.iter()) {
-        *out = cache.catchup(load_f64(wc), pc.load(Relaxed));
+    for (out, cell) in model.weights.iter_mut().zip(shared.w.iter()) {
+        *out = cache.catchup(cell.value(), cell.stamp());
     }
     model.bias = load_f64(&shared.bias);
 
@@ -242,7 +219,7 @@ fn coordinator_loop(
     rebases: &mut u64,
 ) {
     for epoch in 0..opts.epochs {
-        *shared.order.lock().unwrap() = std::sync::Arc::new(epoch_order(n, opts, rng));
+        *shared.order.lock().unwrap() = Arc::new(epoch_order(n, opts, rng));
         let e0 = Instant::now();
         let mut loss_sum = 0.0f64;
         let mut merge_seconds = 0.0f64;
@@ -261,12 +238,18 @@ fn coordinator_loop(
                 // accounted as merge time, it is this mode's entire
                 // sync cost.
                 if cache.would_rebase_within(round_len) {
-                    flush_shared(&shared.w, &shared.psi, &mut cache);
+                    flush_shared(&shared.w, &mut cache);
                     *rebases += 1;
                 }
                 // Pre-extend: after this the cache is immutable until
                 // the round's second barrier. Every worker position
                 // this round satisfies k_base + p + 1 <= head.
+                //
+                // Ordering audit: `Relaxed` is sufficient for both
+                // stores — no worker reads them until it passes the
+                // round barrier below, and the barrier's internal
+                // mutex gives the release/acquire edge that publishes
+                // everything the coordinator wrote between rounds.
                 shared.k_base.store(cache.k(), Relaxed);
                 shared.t_base.store(cache.global_t(), Relaxed);
                 for _ in 0..round_len {
@@ -291,13 +274,10 @@ fn coordinator_loop(
         // `penalty_value`. Workers are parked; ψ never exceeds the head.
         let cache = shared.cache.read().unwrap();
         let snap = cache.snapshot();
-        let penalty = opts.reg.value_iter(
-            shared
-                .w
-                .iter()
-                .zip(shared.psi.iter())
-                .map(|(wc, pc)| snap.catchup(load_f64(wc), pc.load(Relaxed))),
-        );
+        // Quiescent reads: workers are parked at the barrier, so
+        // `value`/`stamp` are exact here.
+        let penalty =
+            opts.reg.value_iter(shared.w.iter().map(|c| snap.catchup(c.value(), c.stamp())));
         epochs_out.push(EpochStats {
             epoch,
             mean_loss,
@@ -314,11 +294,10 @@ fn coordinator_loop(
 
 /// The coordinated flush: catch every shared weight up to the table
 /// head, reset every ψ, rebase the tables. Runs only between barriers
-/// (no worker live), so plain relaxed loads/stores are exact here.
-fn flush_shared(w: &[AtomicU64], psi: &[AtomicU32], cache: &mut DpCache) {
-    for (wc, pc) in w.iter().zip(psi.iter()) {
-        store_f64(wc, cache.catchup(load_f64(wc), pc.load(Relaxed)));
-        pc.store(0, Relaxed);
+/// (no worker live), so the cells' quiescent accessors are exact here.
+fn flush_shared(w: &[HogwildCell], cache: &mut DpCache) {
+    for cell in w {
+        cell.reset(cache.catchup(cell.value(), cell.stamp()));
     }
     cache.rebase();
 }
@@ -347,13 +326,16 @@ fn worker_loop(
 
     for _epoch in 0..opts.epochs {
         let mut offset = 0usize;
-        let mut order: Option<std::sync::Arc<Vec<usize>>> = None;
+        let mut order: Option<Arc<Vec<usize>>> = None;
         while offset < longest {
             shared.barrier.wait(); // coordinator pre-extended the cache
             let cache = shared.cache.read().unwrap();
             let order = order.get_or_insert_with(|| shared.order.lock().unwrap().clone());
             let shard = &order[range.clone()];
             let slice = round_slice(shard.len(), offset, interval);
+            // Ordering audit: `Relaxed` — the barrier crossed above
+            // synchronizes with the coordinator's round prep, so these
+            // loads cannot observe values from before it.
             let k_base = shared.k_base.load(Relaxed);
             let t_base = shared.t_base.load(Relaxed);
             let mut ls = 0.0f64;
@@ -367,14 +349,17 @@ fn worker_loop(
                 // Pass 1: bring touched weights current to this
                 // worker's position + accumulate the score. ψ at or
                 // past our position means another worker already moved
-                // this weight at least as far: take it as-is.
+                // this weight at least as far: take it as-is. The
+                // cell's `read` guarantees ψ is never older than the
+                // stamp `w` carries, so a catch-up is never applied to
+                // an already-caught-up weight (double-catch-up — see
+                // `sync::hogwild_cell`).
                 let snap = cache.snapshot_at(pos);
                 let mut z = load_f64(&shared.bias);
                 current.clear();
                 for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
                     let j = j as usize;
-                    let psi = shared.psi[j].load(Relaxed);
-                    let w = load_f64(&shared.w[j]);
+                    let (w, psi) = shared.w[j].read();
                     let wj = if psi >= pos { w } else { snap.catchup(w, psi) };
                     current.push(wj);
                     z += f64::from(v) * wj;
@@ -386,16 +371,18 @@ fn worker_loop(
                 let map = opts.reg.step_map(opts.algo, t, eta);
                 let step = eta * dz;
 
-                // Pass 2: gradient + regularization map, written back
-                // with plain stores (the HOGWILD race), ψ stamped to
-                // this worker's next position.
+                // Pass 2: gradient + regularization map, published
+                // through the cell (ψ stamped to this worker's next
+                // position *before* the weight's release store —
+                // concurrent writers still lose whole updates, the
+                // accepted HOGWILD race, but never corrupt a ψ/weight
+                // pairing).
                 for ((&j, &v), &wj) in
                     row.indices.iter().zip(row.values.iter()).zip(current.iter())
                 {
                     let j = j as usize;
                     let wh = wj - step * f64::from(v);
-                    store_f64(&shared.w[j], map.apply(wh));
-                    shared.psi[j].store(pos + 1, Relaxed);
+                    shared.w[j].publish(pos + 1, map.apply(wh));
                 }
                 fetch_add_f64(&shared.bias, -step); // bias: every example
                 count += 1;
@@ -428,13 +415,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn fetch_add_f64_accumulates_exactly_when_uncontended() {
-        let cell = AtomicU64::new(0f64.to_bits());
-        fetch_add_f64(&cell, 1.5);
-        fetch_add_f64(&cell, -0.25);
-        assert_eq!(load_f64(&cell), 1.25);
-    }
+    // `fetch_add_f64` and the cell protocol are unit- and
+    // model-tested where they live: `crate::sync::hogwild_cell`.
 
     #[test]
     fn lock_free_pool_learns_the_signal() {

@@ -117,13 +117,13 @@
 
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::data::CsrMatrix;
 use crate::model::LinearModel;
+use crate::sync::{Arc, Mutex, RoundBarrier, SeqSlot, POISONED};
 use crate::util::Rng;
 
 use super::driver::{epoch_order, EpochStats, TrainReport};
@@ -368,125 +368,6 @@ pub(crate) fn longest_shard(n: usize, workers: usize) -> usize {
 /// examples by construction.)
 pub(crate) fn round_slice(shard_len: usize, offset: usize, interval: usize) -> Range<usize> {
     offset.min(shard_len)..offset.saturating_add(interval).min(shard_len)
-}
-
-/// Message every poisoned primitive panics with — a deliberate panic so
-/// a crashed pool fails the whole run fast instead of deadlocking.
-pub(crate) const POISONED: &str = "worker pool poisoned: a pool thread panicked";
-
-/// A reusable round barrier **with poisoning**. `std::sync::Barrier`
-/// cannot be poisoned: if one participant panics, every other thread
-/// parks at the rendezvous forever and the run hangs (the old
-/// round-spawn engine failed fast through `join().expect`). Here a
-/// panicking participant calls [`RoundBarrier::poison`], which wakes
-/// all current and future waiters with a panic instead. Shared with the
-/// lock-free engine ([`super::hogwild`]), whose coordinated budget
-/// flush reuses the same rendezvous + failure semantics.
-pub(crate) struct RoundBarrier {
-    state: Mutex<BarrierState>,
-    cv: Condvar,
-    parties: usize,
-}
-
-struct BarrierState {
-    arrived: usize,
-    generation: u64,
-    poisoned: bool,
-}
-
-impl RoundBarrier {
-    pub(crate) fn new(parties: usize) -> RoundBarrier {
-        assert!(parties >= 1);
-        RoundBarrier {
-            state: Mutex::new(BarrierState { arrived: 0, generation: 0, poisoned: false }),
-            cv: Condvar::new(),
-            parties,
-        }
-    }
-
-    pub(crate) fn wait(&self) {
-        let mut st = self.state.lock().unwrap();
-        assert!(!st.poisoned, "{}", POISONED);
-        st.arrived += 1;
-        if st.arrived == self.parties {
-            st.arrived = 0;
-            st.generation = st.generation.wrapping_add(1);
-            drop(st);
-            self.cv.notify_all();
-            return;
-        }
-        let gen = st.generation;
-        while st.generation == gen && !st.poisoned {
-            st = self.cv.wait(st).unwrap();
-        }
-        assert!(!st.poisoned, "{}", POISONED);
-    }
-
-    pub(crate) fn poison(&self) {
-        // Tolerate a Mutex poisoned by a panic inside `wait`: this runs
-        // on the cleanup path and must not panic itself.
-        match self.state.lock() {
-            Ok(mut st) => st.poisoned = true,
-            Err(p) => p.into_inner().poisoned = true,
-        }
-        self.cv.notify_all();
-    }
-}
-
-/// A single-value publish/subscribe slot keyed by a monotone sequence
-/// number, with the same poisoning contract as [`RoundBarrier`]. Used
-/// for the per-epoch visit orders (workers block until their epoch's
-/// order is up) and for the pipelined merged-model hand-off (only the
-/// latest value is kept — every consumer takes sequence `s` before the
-/// producer can reach `s + 1`).
-struct SeqSlot<T> {
-    state: Mutex<SeqState<T>>,
-    cv: Condvar,
-}
-
-struct SeqState<T> {
-    poisoned: bool,
-    value: Option<(usize, T)>,
-}
-
-impl<T: Clone> SeqSlot<T> {
-    fn new() -> SeqSlot<T> {
-        SeqSlot { state: Mutex::new(SeqState { poisoned: false, value: None }), cv: Condvar::new() }
-    }
-
-    fn publish(&self, seq: usize, value: T) {
-        self.state.lock().unwrap().value = Some((seq, value));
-        self.cv.notify_all();
-    }
-
-    fn wait_for(&self, seq: usize) -> T {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            assert!(!st.poisoned, "{}", POISONED);
-            if let Some((s, v)) = st.value.as_ref() {
-                debug_assert!(*s <= seq, "seq slot ran ahead");
-                if *s == seq {
-                    return v.clone();
-                }
-            }
-            st = self.cv.wait(st).unwrap();
-        }
-    }
-
-    /// Drop the retained value (releases the slot's `Arc` so the final
-    /// model can be unwrapped without a copy).
-    fn take(&self) -> Option<(usize, T)> {
-        self.state.lock().unwrap().value.take()
-    }
-
-    fn poison(&self) {
-        // See `RoundBarrier::poison` — must not panic on the cleanup path.
-        match self.state.lock() {
-            Ok(mut st) => st.poisoned = true,
-            Err(p) => p.into_inner().poisoned = true,
-        }
-        self.cv.notify_all();
-    }
 }
 
 /// Per-round worker output: (loss sum, examples processed).
@@ -1136,38 +1017,8 @@ mod tests {
         assert_eq!(results, vec![0, 10, 20, 30, 40]);
     }
 
-    #[test]
-    fn poisoned_barrier_wakes_waiters_with_a_panic() {
-        // The fail-fast guarantee: a parked participant must panic when
-        // the pool is poisoned, not hang forever (std::sync::Barrier
-        // would deadlock here).
-        let b = RoundBarrier::new(2);
-        std::thread::scope(|scope| {
-            let parked = scope.spawn(|| b.wait());
-            std::thread::sleep(std::time::Duration::from_millis(20));
-            b.poison();
-            assert!(parked.join().is_err(), "poisoned waiter should panic, not hang");
-        });
-        // Late arrivals fail immediately too.
-        assert!(catch_unwind(AssertUnwindSafe(|| b.wait())).is_err());
-    }
-
-    #[test]
-    fn seq_slot_publishes_and_poisons() {
-        let s: SeqSlot<usize> = SeqSlot::new();
-        s.publish(0, 7);
-        assert_eq!(s.wait_for(0), 7);
-        assert_eq!(s.take(), Some((0, 7)));
-        assert!(s.take().is_none());
-
-        let s: SeqSlot<usize> = SeqSlot::new();
-        std::thread::scope(|scope| {
-            let parked = scope.spawn(|| s.wait_for(3));
-            std::thread::sleep(std::time::Duration::from_millis(20));
-            s.poison();
-            assert!(parked.join().is_err(), "poisoned waiter should panic, not hang");
-        });
-    }
+    // The RoundBarrier/SeqSlot poison tests moved with the primitives
+    // to `crate::sync::primitives`.
 
     #[test]
     fn pool_sync_is_bitwise_identical_to_round_spawn_reference() {

@@ -1,6 +1,11 @@
 //! Integration tests across the data → synth → train → eval stack
 //! (no artifacts required; see runtime_integration.rs for the PJRT path).
 
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
 use lazyreg::coordinator::{train_one_vs_rest, train_streaming};
 use lazyreg::data::libsvm;
 use lazyreg::eval::evaluate;

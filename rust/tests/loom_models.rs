@@ -1,0 +1,222 @@
+//! Exhaustive interleaving checks of the crate's coordination
+//! primitives, run against the **real** types through the model-backed
+//! face of the sync facade:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release -p lazyreg --test loom_models
+//! ```
+//!
+//! Under `--cfg loom` every `crate::sync` Mutex/Condvar/atomic access is
+//! a scheduling decision point and `model(|| ...)` re-runs each closure
+//! under every interleaving within the preemption bound
+//! (`LAZYREG_LOOM_PREEMPTIONS`, default 2 — the CHESS result: almost
+//! all concurrency bugs surface within two preemptions). An assertion
+//! failure in *any* schedule fails the test and prints the schedule.
+//!
+//! The invariants checked here are the ones `CONCURRENCY.md` documents:
+//! barrier rendezvous + poison-wakes-parked-waiter, seq-slot publish
+//! ordering + poison, queue close/drain + poison, and the hogwild
+//! cell's no-double-catch-up pairing rule.
+
+#![cfg(loom)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use lazyreg::sync::atomic::{AtomicUsize, Ordering};
+use lazyreg::sync::model::{model, thread};
+use lazyreg::sync::{Arc, BoundedQueue, HogwildCell, RoundBarrier, SeqSlot};
+
+// ---------------------------------------------------------------- barrier
+
+#[test]
+fn barrier_rendezvous_releases_no_party_early() {
+    model(|| {
+        let barrier = Arc::new(RoundBarrier::new(2));
+        let arrived = Arc::new(AtomicUsize::new(0));
+        let (b2, a2) = (Arc::clone(&barrier), Arc::clone(&arrived));
+        let t = thread::spawn(move || {
+            a2.fetch_add(1, Ordering::SeqCst);
+            b2.wait();
+            // Rendezvous contract: nobody crosses until everybody arrived.
+            assert_eq!(a2.load(Ordering::SeqCst), 2);
+        });
+        arrived.fetch_add(1, Ordering::SeqCst);
+        barrier.wait();
+        assert_eq!(arrived.load(Ordering::SeqCst), 2);
+        t.join().unwrap();
+    });
+}
+
+#[test]
+fn barrier_reuse_across_two_rounds() {
+    model(|| {
+        let barrier = Arc::new(RoundBarrier::new(2));
+        let b2 = Arc::clone(&barrier);
+        let t = thread::spawn(move || {
+            b2.wait();
+            b2.wait();
+        });
+        barrier.wait();
+        barrier.wait();
+        t.join().unwrap();
+    });
+}
+
+#[test]
+fn barrier_poison_wakes_a_parked_waiter_in_every_schedule() {
+    model(|| {
+        let barrier = Arc::new(RoundBarrier::new(2)); // never completed
+        let b2 = Arc::clone(&barrier);
+        // The waiter parks (party 2 never arrives) or hits the poison
+        // flag on entry, depending on the schedule; either way it must
+        // panic, never hang.
+        let t = thread::spawn(move || b2.wait());
+        barrier.poison();
+        assert!(t.join().is_err(), "poisoned waiter should panic, not hang");
+    });
+}
+
+// --------------------------------------------------------------- seq slot
+
+#[test]
+fn seq_slot_waiter_gets_exactly_the_published_sequence() {
+    model(|| {
+        let slot: Arc<SeqSlot<usize>> = Arc::new(SeqSlot::new());
+        let s2 = Arc::clone(&slot);
+        let t = thread::spawn(move || {
+            s2.publish(0, 41);
+            s2.publish(1, 42);
+        });
+        // Consumers take sequences in order; whatever the interleaving,
+        // waiting for seq 1 must return seq 1's value, never seq 0's.
+        assert_eq!(slot.wait_for(1), 42);
+        t.join().unwrap();
+    });
+}
+
+#[test]
+fn seq_slot_poison_wakes_a_parked_waiter_in_every_schedule() {
+    model(|| {
+        let slot: Arc<SeqSlot<usize>> = Arc::new(SeqSlot::new());
+        let s2 = Arc::clone(&slot);
+        let t = thread::spawn(move || s2.wait_for(3)); // never published
+        slot.poison();
+        assert!(t.join().is_err(), "poisoned waiter should panic, not hang");
+    });
+}
+
+// ------------------------------------------------------------------ queue
+
+#[test]
+fn queue_close_semantics_under_every_schedule() {
+    model(|| {
+        // Capacity 1 forces the producer through the full/backpressure
+        // path in some schedules.
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let t = thread::spawn(move || {
+            let a = q2.push(1);
+            let b = q2.push(2);
+            q2.close();
+            (a, b)
+        });
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        let (a, b) = t.join().unwrap();
+        assert!(a && b, "producer finished before close: both pushes accepted");
+        assert_eq!(got, vec![1, 2], "FIFO, nothing lost, None only after drain");
+    });
+}
+
+#[test]
+fn queue_poison_wakes_a_parked_consumer_in_every_schedule() {
+    model(|| {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let t = thread::spawn(move || q2.pop()); // parks: nothing to pop
+        q.poison();
+        assert!(t.join().is_err(), "poisoned consumer should panic, not hang");
+    });
+}
+
+// ----------------------------------------------------------- hogwild cell
+
+#[test]
+fn hogwild_cell_never_pairs_fresh_weight_with_stale_psi() {
+    // The ψ-stamp invariant the lock-free engine's catch-up correctness
+    // rests on: a reader that sees the published weight must see a ψ at
+    // least as new as its stamp — otherwise it would re-apply (double)
+    // the catch-up the writer already folded in.
+    model(|| {
+        let cell = Arc::new(HogwildCell::new(1.0));
+        let c2 = Arc::clone(&cell);
+        let t = thread::spawn(move || c2.publish(1, 2.0));
+        let (w, psi) = cell.read();
+        t.join().unwrap();
+        assert!(
+            !(w == 2.0 && psi < 1),
+            "fresh weight paired with stale ψ: double catch-up (w={w}, psi={psi})"
+        );
+    });
+}
+
+#[test]
+fn hogwild_cell_racing_writers_keep_psi_monotone() {
+    // Two writers at stamps 1 and 2: whatever the interleaving, ψ ends
+    // at 2 (fetch_max), and reading back pairs a ψ no older than the
+    // final weight's stamp. A plain ψ store could end at 1 — a
+    // backwards stamp that re-triggers catch-up on a current weight.
+    model(|| {
+        let cell = Arc::new(HogwildCell::new(0.0));
+        let (c1, c2) = (Arc::clone(&cell), Arc::clone(&cell));
+        let t1 = thread::spawn(move || c1.publish(1, 10.0));
+        let t2 = thread::spawn(move || c2.publish(2, 20.0));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let (w, psi) = cell.read();
+        assert_eq!(psi, 2, "fetch_max must keep the larger stamp");
+        assert!(w == 10.0 || w == 20.0);
+    });
+}
+
+#[test]
+fn hogwild_cell_quiescent_reset_is_exact_once_writers_joined() {
+    model(|| {
+        let cell = Arc::new(HogwildCell::new(0.0));
+        let c2 = Arc::clone(&cell);
+        let t = thread::spawn(move || c2.publish(3, 7.0));
+        t.join().unwrap();
+        // Coordinator between barriers: writers joined, plain reads are
+        // exact and reset restarts the stamps.
+        assert_eq!(cell.value(), 7.0);
+        assert_eq!(cell.stamp(), 3);
+        cell.reset(7.5);
+        assert_eq!(cell.read(), (7.5, 0));
+    });
+}
+
+// ------------------------------------------------- explorer sanity (meta)
+
+#[test]
+fn explorer_still_catches_a_seeded_ordering_bug() {
+    // Meta-check that the model harness is alive in this build: the
+    // store-before-stamp order (the pre-audit protocol) must FAIL.
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        model(|| {
+            let w = Arc::new(lazyreg::sync::atomic::AtomicU64::new(1f64.to_bits()));
+            let psi = Arc::new(lazyreg::sync::atomic::AtomicU32::new(0));
+            let (w2, p2) = (Arc::clone(&w), Arc::clone(&psi));
+            let t = thread::spawn(move || {
+                w2.store(2f64.to_bits(), Ordering::SeqCst); // weight first: bad
+                p2.store(1, Ordering::SeqCst);
+            });
+            let seen_w = f64::from_bits(w.load(Ordering::SeqCst));
+            let seen_psi = psi.load(Ordering::SeqCst);
+            t.join().unwrap();
+            assert!(!(seen_w == 2.0 && seen_psi < 1));
+        });
+    }));
+    assert!(caught.is_err(), "explorer missed the seeded double-catch-up bug");
+}

@@ -19,6 +19,11 @@
 //!   ~1/workers as far per example), so against serial dense we assert
 //!   objective closeness with an honest loose bound, not sig-figs.
 
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
 use lazyreg::data::SparseDataset;
 use lazyreg::model::LinearModel;
 use lazyreg::prelude::*;

@@ -8,6 +8,11 @@
 //! elastic-net-class sparsity and accuracy through the standard
 //! `train_lazy` driver.
 
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
 use lazyreg::data::CsrMatrix;
 use lazyreg::eval::evaluate;
 use lazyreg::optim::{Algo, ElasticNet, Linf, Penalty, Regularizer, Schedule, TruncatedGradient};

@@ -2,6 +2,11 @@
 //! sharded-vs-native bitwise score parity, hot model reload, and
 //! connection-churn behavior of the fixed worker pool.
 
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 

@@ -8,6 +8,11 @@
 //! identical across workers after a sparse sync) is pinned at unit scale
 //! in `train::pool`'s tests; here the whole engine is exercised.
 
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
 use lazyreg::prelude::*;
 use lazyreg::synth::{generate, BowSpec};
 use lazyreg::testing::property;

@@ -1,0 +1,426 @@
+//! The concurrency lint wall (`cargo xtask lint`).
+//!
+//! Clippy cannot express the repo-specific invariants the lock-free
+//! training stack depends on, so this crate enforces them with a
+//! comment-aware textual scan over `rust/src/**/*.rs`:
+//!
+//! * **`std-sync`** — `std::sync` (including `std::sync::atomic`) may
+//!   only be named inside the sync facade (`rust/src/sync/`). Everything
+//!   else goes through `crate::sync`, so the `--cfg loom` build swaps
+//!   every lock/atomic in the crate onto the interleaving explorer at
+//!   once — one stray `std::sync::Mutex` would silently escape model
+//!   checking.
+//! * **`float-partial-cmp`** — no `partial_cmp` outside `rust/src/eval/`.
+//!   Sorting floats by `partial_cmp(..).unwrap()` panics on NaN (the
+//!   PR 6 bug class); use `f64::total_cmp`. `eval` is exempt because
+//!   ranking metrics define their own documented NaN policy.
+//! * **`relaxed-ordering`** — `Ordering::Relaxed` only in
+//!   `rust/src/train/hogwild.rs` and `rust/src/sync/hogwild_cell.rs`,
+//!   the two files whose relaxed accesses carry written memory-ordering
+//!   arguments (see `CONCURRENCY.md`). Everywhere else the default is
+//!   `SeqCst`: coordination code is never hot enough to justify a
+//!   relaxed-ordering proof obligation.
+//! * **`serve-unwrap`** — no `.unwrap()` on the serving request path
+//!   (`rust/src/serve/`, up to its `#[cfg(test)]` module). A handler
+//!   panic must degrade to an error response, not poison the server's
+//!   shared locks; use `crate::sync::lock_ok` / explicit handling.
+//! * **`f32-optin`** — the f32 fast-path kernels (`shrink_f32`,
+//!   `blocked_score_f32`, `build_f32`) may only be called from files
+//!   that mention the `fast_f32` opt-in flag, and the pinned defaults
+//!   `fast_f32: false` in `train/options.rs` and `serve/mod.rs` must
+//!   stay present — the bitwise-pinned f64 path stays the default.
+//!
+//! Comments and string-literal contents are blanked before matching, so
+//! prose mentioning `std::sync` or `Relaxed` is fine. A specific line
+//! can opt out with a `lint:allow(<rule>)` marker anywhere on the line
+//! (conventionally in a trailing comment) — use sparingly and say why.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a specific line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: PathBuf,
+    /// 1-indexed; 0 for file-level violations (missing pin).
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.message)
+    }
+}
+
+/// Result of a full lint run.
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+}
+
+/// Marker that disables one rule on the line it appears on.
+fn line_allows(raw_line: &str, rule: &str) -> bool {
+    raw_line.find("lint:allow(").is_some_and(|i| {
+        raw_line[i + "lint:allow(".len()..]
+            .strip_prefix(rule)
+            .is_some_and(|rest| rest.starts_with(')'))
+    })
+}
+
+/// Blank out comments and string-literal contents, preserving line
+/// structure (every newline survives) so reported line numbers match
+/// the raw file. Handles nested block comments, escapes in string and
+/// char literals, raw strings (`r"…"`, `r#"…"#`, `br#"…"#`), and
+/// lifetimes (`'a` is not a char literal).
+pub fn strip_comments_and_strings(src: &str) -> String {
+    enum St {
+        Code,
+        Line,
+        Block(usize),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match st {
+            St::Code => {
+                if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    st = St::Line;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    st = St::Block(1);
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if c == b'"' {
+                    // Raw string? Look back over `#`s for an `r`.
+                    let mut j = i;
+                    let mut hashes = 0;
+                    while j > 0 && b[j - 1] == b'#' {
+                        j -= 1;
+                        hashes += 1;
+                    }
+                    if j > 0 && b[j - 1] == b'r' {
+                        st = St::RawStr(hashes);
+                    } else {
+                        st = St::Str;
+                    }
+                    out.push(c);
+                    i += 1;
+                } else if c == b'\'' {
+                    // Char literal vs lifetime: a literal is 'x' or
+                    // starts with a backslash escape.
+                    let is_escape = i + 1 < b.len() && b[i + 1] == b'\\';
+                    let is_plain = i + 2 < b.len() && b[i + 1] != b'\\' && b[i + 2] == b'\'';
+                    if is_escape || is_plain {
+                        st = St::Char;
+                    }
+                    out.push(c);
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                if c == b'\n' {
+                    st = St::Code;
+                    out.push(c);
+                } else {
+                    out.push(b' ');
+                }
+                i += 1;
+            }
+            St::Block(depth) => {
+                if c == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    st = St::Block(depth + 1);
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else {
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == b'\\' && i + 1 < b.len() {
+                    out.push(b' ');
+                    // A line-continuation escape must keep its newline
+                    // so line numbers stay aligned with the raw file.
+                    out.push(if b[i + 1] == b'\n' { b'\n' } else { b' ' });
+                    i += 2;
+                } else if c == b'"' {
+                    st = St::Code;
+                    out.push(c);
+                    i += 1;
+                } else {
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == b'"' && b[i + 1..].iter().take_while(|&&x| x == b'#').count() >= hashes {
+                    st = St::Code;
+                    out.push(c);
+                    i += 1 + hashes;
+                    for _ in 0..hashes {
+                        out.push(b'#');
+                    }
+                } else {
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == b'\\' && i + 1 < b.len() {
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if c == b'\'' {
+                    st = St::Code;
+                    out.push(c);
+                    i += 1;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Blanked bytes are ASCII; code bytes are copied verbatim.
+    String::from_utf8(out).expect("stripping preserves UTF-8")
+}
+
+/// Collect every `.rs` file under `dir`, sorted for deterministic output.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            rust_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Path relative to the scan root, with forward slashes, for matching
+/// against the rule tables.
+fn rel_key(root: &Path, file: &Path) -> String {
+    file.strip_prefix(root)
+        .unwrap_or(file)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+struct NeedleRule {
+    name: &'static str,
+    needles: &'static [&'static str],
+    /// Only scan files whose relative path starts with this prefix
+    /// (empty = all files).
+    scope: &'static str,
+    /// Skip files whose relative path contains any of these fragments.
+    exempt: &'static [&'static str],
+    /// Stop scanning a file at its first `#[cfg(test)]` line (test code
+    /// is outside the rule's contract).
+    stop_at_cfg_test: bool,
+    message: &'static str,
+}
+
+const NEEDLE_RULES: &[NeedleRule] = &[
+    NeedleRule {
+        name: "std-sync",
+        needles: &["std::sync"],
+        scope: "",
+        exempt: &["sync/"],
+        stop_at_cfg_test: false,
+        message: "`std::sync` outside the sync facade — import from `crate::sync` so \
+                  the loom build model-checks this code (see rust/src/sync/mod.rs)",
+    },
+    NeedleRule {
+        name: "float-partial-cmp",
+        needles: &["partial_cmp"],
+        scope: "",
+        exempt: &["eval/"],
+        stop_at_cfg_test: false,
+        message: "`partial_cmp` on floats panics/misorders on NaN — use `f64::total_cmp` \
+                  (ranking code with a documented NaN policy lives in eval/)",
+    },
+    NeedleRule {
+        name: "relaxed-ordering",
+        needles: &["Relaxed"],
+        scope: "",
+        exempt: &["train/hogwild.rs", "sync/hogwild_cell.rs"],
+        stop_at_cfg_test: false,
+        message: "`Ordering::Relaxed` outside the audited hogwild files — use SeqCst, or \
+                  move the access behind the documented ψ-stamp argument (CONCURRENCY.md)",
+    },
+    NeedleRule {
+        name: "serve-unwrap",
+        needles: &[".unwrap()"],
+        scope: "serve/",
+        exempt: &[],
+        stop_at_cfg_test: true,
+        message: "`.unwrap()` on the serving request path — a poisoned lock or bad input \
+                  must degrade to an error response (use `crate::sync::lock_ok` or match)",
+    },
+];
+
+/// The f32 fast-path kernels; calls outside their defining modules must
+/// sit in a file that names the `fast_f32` opt-in flag.
+const F32_CALLS: &[&str] = &["shrink_f32(", "blocked_score_f32(", "build_f32("];
+const F32_DEFINING: &[&str] = &["optim/lazy.rs", "predict/mod.rs"];
+const F32_GUARD: &str = "fast_f32";
+
+/// Files that must keep the f32 fast path off by default, and the
+/// literal default they must contain.
+const F32_PINS: &[(&str, &str)] = &[
+    ("train/options.rs", "fast_f32: false"),
+    ("serve/mod.rs", "fast_f32: false"),
+];
+
+/// Run every rule over `<repo_root>/rust/src`.
+pub fn run_lints(repo_root: &Path) -> io::Result<Report> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    rust_files(&src_root, &mut files)?;
+
+    let mut violations = Vec::new();
+    let mut pins_seen = vec![false; F32_PINS.len()];
+
+    for file in &files {
+        let rel = rel_key(&src_root, file);
+        let raw = fs::read_to_string(file)?;
+        let stripped = strip_comments_and_strings(&raw);
+        let raw_lines: Vec<&str> = raw.lines().collect();
+
+        for rule in NEEDLE_RULES {
+            if !rel.starts_with(rule.scope) {
+                continue;
+            }
+            if rule.exempt.iter().any(|e| rel.contains(e)) {
+                continue;
+            }
+            for (idx, line) in stripped.lines().enumerate() {
+                if rule.stop_at_cfg_test && line.contains("#[cfg(test)]") {
+                    break;
+                }
+                if let Some(needle) = rule.needles.iter().find(|n| line.contains(**n)) {
+                    let raw_line = raw_lines.get(idx).copied().unwrap_or("");
+                    if line_allows(raw_line, rule.name) {
+                        continue;
+                    }
+                    violations.push(Violation {
+                        rule: rule.name,
+                        file: file.clone(),
+                        line: idx + 1,
+                        message: format!("`{}`: {}", needle, rule.message),
+                    });
+                }
+            }
+        }
+
+        // f32-optin, part 1: gated use.
+        if !F32_DEFINING.iter().any(|d| rel.ends_with(d)) {
+            for (idx, line) in stripped.lines().enumerate() {
+                if let Some(needle) = F32_CALLS.iter().find(|n| line.contains(**n)) {
+                    let raw_line = raw_lines.get(idx).copied().unwrap_or("");
+                    if line_allows(raw_line, "f32-optin") {
+                        continue;
+                    }
+                    if !stripped.contains(F32_GUARD) {
+                        violations.push(Violation {
+                            rule: "f32-optin",
+                            file: file.clone(),
+                            line: idx + 1,
+                            message: format!(
+                                "`{}` called in a file that never names the `{}` opt-in flag — \
+                                 the f32 fast path must stay behind the per-call opt-in",
+                                needle, F32_GUARD
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+
+        // f32-optin, part 2: record which pins are present.
+        for (i, (pin_file, pin)) in F32_PINS.iter().enumerate() {
+            if rel.ends_with(pin_file) && stripped.contains(pin) {
+                pins_seen[i] = true;
+            }
+        }
+    }
+
+    for (i, (pin_file, pin)) in F32_PINS.iter().enumerate() {
+        if !pins_seen[i] {
+            violations.push(Violation {
+                rule: "f32-optin",
+                file: src_root.join(pin_file),
+                line: 0,
+                message: format!(
+                    "pinned default `{}` not found — the f64 path must stay the default \
+                     (if the struct moved, update F32_PINS in xtask/src/lib.rs)",
+                    pin
+                ),
+            });
+        }
+    }
+
+    violations.sort_by(|a, b| {
+        a.file.cmp(&b.file).then_with(|| a.line.cmp(&b.line)).then_with(|| a.rule.cmp(b.rule))
+    });
+    Ok(Report { violations, files_scanned: files.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripping_blanks_comments_and_strings_but_keeps_lines() {
+        let src = "let a = 1; // std::sync here\nlet s = \"Relaxed\";\n/* partial_cmp\nspans */ let b = 2;\n";
+        let out = strip_comments_and_strings(src);
+        assert_eq!(out.lines().count(), src.lines().count());
+        assert!(!out.contains("std::sync"));
+        assert!(!out.contains("Relaxed"));
+        assert!(!out.contains("partial_cmp"));
+        assert!(out.contains("let a = 1;"));
+        assert!(out.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn stripping_handles_nested_blocks_raw_strings_chars_and_lifetimes() {
+        let src = "/* a /* nested */ still */ keep1\nlet r = r#\"std::sync\"#;\nlet c = '\\'';\nfn f<'a>(x: &'a u32) -> &'a u32 { x } // keep2 in comment\n";
+        let out = strip_comments_and_strings(src);
+        assert!(out.contains("keep1"));
+        assert!(!out.contains("std::sync"));
+        assert!(out.contains("fn f<'a>(x: &'a u32) -> &'a u32 { x }"));
+        assert!(!out.contains("keep2"));
+    }
+
+    #[test]
+    fn escape_marker_is_rule_specific() {
+        assert!(line_allows("use std::sync::Arc; // lint:allow(std-sync): bootstrap", "std-sync"));
+        assert!(!line_allows("use std::sync::Arc; // lint:allow(std-sync)", "relaxed-ordering"));
+        assert!(!line_allows("use std::sync::Arc;", "std-sync"));
+    }
+}

@@ -1,0 +1,60 @@
+//! `cargo xtask lint` — run the concurrency lint wall over `rust/src`.
+//!
+//! Exit status: 0 when clean, 1 when any rule fires, 2 on usage/IO
+//! errors. CI runs this next to `cargo fmt --check` and clippy; the
+//! rules themselves are documented in [`xtask`] (src/lib.rs) and
+//! `CONCURRENCY.md`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo xtask lint [--root <repo-root>]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {}
+        _ => return usage(),
+    }
+    // Default root: the workspace directory containing this crate —
+    // correct both locally and in CI regardless of invocation cwd.
+    let mut root: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level below the repo root")
+        .to_path_buf();
+    while let Some(flag) = args.next() {
+        match flag.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => return usage(),
+            },
+            _ => return usage(),
+        }
+    }
+
+    match xtask::run_lints(&root) {
+        Ok(report) => {
+            for v in &report.violations {
+                eprintln!("{v}");
+            }
+            if report.violations.is_empty() {
+                println!("xtask lint: clean ({} files)", report.files_scanned);
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "xtask lint: {} violation(s) in {} files scanned",
+                    report.violations.len(),
+                    report.files_scanned
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask lint: cannot scan {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}

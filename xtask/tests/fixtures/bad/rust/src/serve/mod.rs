@@ -1,0 +1,17 @@
+//! Fixture: an `.unwrap()` on the request path (before the test
+//! module) must fire; the one inside `#[cfg(test)]` must not. The
+//! `fast_f32: false` pin is also missing from this file.
+
+pub fn handle(line: &str) -> f64 {
+    let stats = STATS.lock().unwrap();
+    stats.score(line)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

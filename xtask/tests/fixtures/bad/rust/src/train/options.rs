@@ -1,0 +1,11 @@
+//! Fixture: the pinned default was flipped — `f32-optin` must fire.
+
+pub struct TrainOptions {
+    pub fast_f32: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> TrainOptions {
+        TrainOptions { fast_f32: true }
+    }
+}

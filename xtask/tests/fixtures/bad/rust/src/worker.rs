@@ -1,0 +1,19 @@
+//! Seeded-violation fixture: every needle rule should fire here.
+//! (Not compiled — scanned by xtask/tests/lint_fixtures.rs.)
+
+// A comment naming std::sync must NOT fire; only the code below does.
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub fn tick(counter: &AtomicUsize) -> usize {
+    counter.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn rank(scores: &mut Vec<f64>) {
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn fast_path(ws: &mut [f32]) {
+    // Calls the f32 kernel but the file never names the opt-in flag.
+    shrink_f32(ws, 0.5, 0.0);
+}

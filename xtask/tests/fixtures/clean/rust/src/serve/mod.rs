@@ -1,0 +1,26 @@
+//! Fixture: poison-tolerant locking on the request path, unwraps only
+//! inside the test module, pinned default present.
+
+pub struct ServeOptions {
+    pub fast_f32: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { fast_f32: false }
+    }
+}
+
+pub fn handle(line: &str) -> f64 {
+    let stats = crate::sync::lock_ok(STATS.lock());
+    stats.score(line)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

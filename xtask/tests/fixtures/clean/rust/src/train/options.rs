@@ -1,0 +1,11 @@
+//! Fixture: the pinned f64-default is intact.
+
+pub struct TrainOptions {
+    pub fast_f32: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> TrainOptions {
+        TrainOptions { fast_f32: false }
+    }
+}

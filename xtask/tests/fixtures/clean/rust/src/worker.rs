@@ -1,0 +1,25 @@
+//! Fixture: the sanctioned idioms — nothing should fire.
+//!
+//! Prose mentions of std::sync, Ordering::Relaxed and partial_cmp are
+//! comments (or strings, below) and must all be ignored.
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Mutex;
+use std::sync::OnceLock; // lint:allow(std-sync): fixture exercising the escape marker
+
+pub fn tick(counter: &AtomicUsize) -> usize {
+    counter.fetch_add(1, Ordering::SeqCst)
+}
+
+pub fn rank(scores: &mut Vec<f64>) {
+    let note = "partial_cmp and Relaxed inside a string are ignored";
+    scores.sort_by(f64::total_cmp);
+    let _ = note;
+}
+
+pub fn fast_path(ws: &mut [f32], fast_f32: bool) {
+    // Gated: the file names the opt-in flag, so the call is allowed.
+    if fast_f32 {
+        shrink_f32(ws, 0.5, 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! The lint wall against its fixtures — and against the real tree.
+//!
+//! `fixtures/bad` seeds one violation per rule (plus comment/string
+//! decoys that must NOT fire); `fixtures/clean` holds the sanctioned
+//! idioms for the same shapes. The last test runs the scanner over the
+//! actual repository, so `cargo test` fails the moment the tree regresses
+//! on any rule — CI runs `cargo xtask lint` separately for a readable
+//! report.
+
+use std::path::{Path, PathBuf};
+
+use xtask::run_lints;
+
+fn fixture(which: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(which)
+}
+
+#[test]
+fn bad_fixture_trips_every_rule_exactly_where_seeded() {
+    let report = run_lints(&fixture("bad")).expect("fixture scan");
+    let hits: Vec<(String, &'static str, usize)> = report
+        .violations
+        .iter()
+        .map(|v| {
+            let file = v.file.file_name().unwrap().to_string_lossy().into_owned();
+            (file, v.rule, v.line)
+        })
+        .collect();
+
+    // worker.rs: two std::sync imports, one Relaxed, one partial_cmp,
+    // one ungated f32 kernel call. The std::sync in a comment (line 4)
+    // must not appear.
+    assert!(hits.contains(&("worker.rs".into(), "std-sync", 5)), "{hits:?}");
+    assert!(hits.contains(&("worker.rs".into(), "std-sync", 6)), "{hits:?}");
+    assert!(!hits.contains(&("worker.rs".into(), "std-sync", 4)), "comment fired: {hits:?}");
+    assert!(hits.contains(&("worker.rs".into(), "relaxed-ordering", 9)), "{hits:?}");
+    assert!(hits.contains(&("worker.rs".into(), "float-partial-cmp", 13)), "{hits:?}");
+    assert!(hits.contains(&("worker.rs".into(), "f32-optin", 18)), "{hits:?}");
+
+    // serve/mod.rs: the request-path unwrap, not the test-module one.
+    let serve_unwraps: Vec<usize> = hits
+        .iter()
+        .filter(|(f, r, _)| f == "mod.rs" && *r == "serve-unwrap")
+        .map(|&(_, _, l)| l)
+        .collect();
+    assert_eq!(serve_unwraps, vec![6], "exactly the pre-#[cfg(test)] unwrap: {hits:?}");
+
+    // Both pinned defaults are missing/flipped (line 0 = file-level).
+    let pin_files: Vec<&str> = hits
+        .iter()
+        .filter(|(_, r, l)| *r == "f32-optin" && *l == 0)
+        .map(|(f, _, _)| f.as_str())
+        .collect();
+    assert_eq!(pin_files, vec!["mod.rs", "options.rs"], "{hits:?}");
+
+    assert_eq!(report.violations.len(), 8, "no extra violations: {hits:?}");
+}
+
+#[test]
+fn clean_fixture_passes_including_escape_marker_and_gated_f32() {
+    let report = run_lints(&fixture("clean")).expect("fixture scan");
+    assert!(
+        report.violations.is_empty(),
+        "clean fixture must pass: {:?}",
+        report.violations
+    );
+    assert_eq!(report.files_scanned, 3);
+}
+
+#[test]
+fn the_real_tree_is_clean() {
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level below the repo root");
+    let report = run_lints(repo_root).expect("repo scan");
+    assert!(
+        report.violations.is_empty(),
+        "rust/src regressed on the lint wall:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned > 30, "scanner found only {} files", report.files_scanned);
+}
