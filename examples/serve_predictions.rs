@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     eprintln!("model trained ({} weights non-zero)", report.model.sparsity().nnz);
 
     // Serve it.
-    let server = Server::spawn_with(report.model.clone(), "127.0.0.1:0", opts)?;
+    let server = Server::spawn_with(report.model.clone(), "127.0.0.1:0", opts.clone())?;
     let addr = server.addr();
     println!("serving on {addr} (shards={}, pool={})", opts.shards, opts.workers);
 

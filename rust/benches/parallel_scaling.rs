@@ -17,7 +17,12 @@
 //! (`merge = none` — one shared weight vector, racing updates, no
 //! gather/average/broadcast at all; its `final_loss` is a different,
 //! non-deterministic estimator, so compare it statistically, not
-//! bitwise). Per-round sync overhead dominates at small
+//! bitwise), and (f) what the wire costs: at workers = 2 a `sparse-tcp`
+//! row runs the same sparse sync through the socket-coordinated cluster
+//! runtime (`lazyreg::net`) over localhost TCP, so the 2-process and
+//! 2-thread cells sit side by side — every cell's JSON records
+//! `transport` (tcp|inproc) and `bytes_per_round` alongside
+//! `touched_frac`. Per-round sync overhead dominates at small
 //! `sync_interval`, which is exactly where the modes separate.
 //!
 //! `cargo bench --bench parallel_scaling`            human-readable table
@@ -81,6 +86,11 @@ struct Cell {
     /// (it ignores the merge knob), "none" for both merge-free rows —
     /// serial and hogwild (the `mode` field tells them apart).
     merge: &'static str,
+    /// How sync traffic moved: "inproc" for shared-memory merges,
+    /// "tcp" for the socket-coordinated cluster cell.
+    transport: &'static str,
+    /// Mean wire bytes per sync round (0 for in-process transports).
+    bytes_per_round: u64,
     report: TrainReport,
 }
 
@@ -106,13 +116,16 @@ impl Cell {
         };
         format!(
             "{{\"bench\":\"parallel_scaling\",\"mode\":\"{}\",\"workers\":{},\
-             \"sync_interval\":{},\"merge\":\"{}\",\"examples_per_sec\":{:.1},\
+             \"sync_interval\":{},\"merge\":\"{}\",\"transport\":\"{}\",\
+             \"bytes_per_round\":{},\"examples_per_sec\":{:.1},\
              \"merge_seconds\":{:.6},\"touched_frac\":{:.6},\"seconds\":{:.6},\
              \"final_loss\":{:.6}}}",
             self.mode,
             self.workers,
             interval,
             self.merge,
+            self.transport,
+            self.bytes_per_round,
             self.report.throughput,
             self.merge_seconds(),
             self.touched_frac(),
@@ -167,7 +180,8 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let mut table = fmt::Table::new([
-        "mode", "workers", "sync", "examples/s", "speedup", "merge s", "touched", "final loss",
+        "mode", "workers", "sync", "examples/s", "speedup", "merge s", "touched", "wire B/rnd",
+        "final loss",
     ]);
     let mut serial_rate = None;
     let mut cells: Vec<Cell> = Vec::new();
@@ -183,16 +197,22 @@ fn main() -> anyhow::Result<()> {
             // sync, and the frozen PR 1 round-spawn engine as the
             // overhead baseline. workers == 1 delegates to the identical
             // serial path in all of them, so one row suffices.
+            // The socket-coordinated sparse sync runs only at the
+            // 2-worker point: the interesting number is the 2-process
+            // vs 2-thread delta, not the tcp scaling curve.
             let modes: &[&'static str] = if workers == 1 {
                 &["serial"]
+            } else if workers == 2 {
+                &["respawn", "pool", "pipeline", "sparse", "sparse-tcp", "hogwild"]
             } else {
                 &["respawn", "pool", "pipeline", "sparse", "hogwild"]
             };
             for &mode in modes {
                 // A sparse cell whose engine silently fell back to the
                 // flat merge would mislabel its own measurements; skip
-                // instead (the engine only falls back on unequal shards).
-                if mode == "sparse" && stats.n_examples % workers != 0 {
+                // instead (the engine only falls back on unequal shards —
+                // and the cluster runtime refuses them outright).
+                if (mode == "sparse" || mode == "sparse-tcp") && stats.n_examples % workers != 0 {
                     eprintln!(
                         "[parallel] skipping sparse cell: n={} % workers={workers} != 0 \
                          would fall back to the flat merge",
@@ -204,30 +224,75 @@ fn main() -> anyhow::Result<()> {
                     "[parallel] mode={mode} workers={workers} sync={:?} ...",
                     interval
                 );
-                let (report, cell_merge) = match mode {
+                let (report, cell_merge, transport, wire) = match mode {
                     // The frozen reference ignores the merge knob: flat.
-                    "respawn" => {
-                        (round_spawn_train_lazy_xy(data.x(), data.labels(), &opts)?, "flat")
-                    }
+                    "respawn" => (
+                        round_spawn_train_lazy_xy(data.x(), data.labels(), &opts)?,
+                        "flat",
+                        "inproc",
+                        0,
+                    ),
                     "pipeline" => {
                         let o = TrainOptions { pipeline_sync: true, ..opts };
-                        (train_parallel(&data, &o)?, merge.name())
+                        (train_parallel(&data, &o)?, merge.name(), "inproc", 0)
                     }
                     "sparse" => {
                         let o = TrainOptions { merge: MergeMode::Sparse, ..opts };
-                        (train_parallel(&data, &o)?, "sparse")
+                        (train_parallel(&data, &o)?, "sparse", "inproc", 0)
+                    }
+                    // The same sparse sync, but every round crosses real
+                    // localhost sockets: a coordinator plus `workers`
+                    // cluster workers (threads here, so the corpus is
+                    // shared — the wire traffic is identical to separate
+                    // processes, which is what the cell measures).
+                    "sparse-tcp" => {
+                        let o = TrainOptions { merge: MergeMode::Sparse, ..opts };
+                        let coord = lazyreg::net::ClusterCoordinator::bind("127.0.0.1:0", workers)?;
+                        let addr = coord.addr().to_string();
+                        let data = &data;
+                        let (report, net) = std::thread::scope(|s| {
+                            let handles: Vec<_> = (0..workers)
+                                .map(|_| {
+                                    let addr = addr.clone();
+                                    s.spawn(move || {
+                                        lazyreg::net::run_worker(
+                                            &addr,
+                                            data.x(),
+                                            data.labels(),
+                                            &o,
+                                        )
+                                    })
+                                })
+                                .collect();
+                            let out = coord.run(data.x(), data.labels(), &o);
+                            for h in handles {
+                                if let Err(e) = h.join().expect("cluster worker thread") {
+                                    eprintln!("[parallel] tcp worker: {e:#}");
+                                }
+                            }
+                            out
+                        })?;
+                        (report, "sparse", "tcp", net.bytes_per_round())
                     }
                     // The lock-free pool: merge = none. The mode field
                     // disambiguates it from the serial row, whose merge
                     // column is also "none" (serial has nothing to merge).
                     "hogwild" => {
                         let o = TrainOptions { merge: MergeMode::None, ..opts };
-                        (train_parallel(&data, &o)?, "none")
+                        (train_parallel(&data, &o)?, "none", "inproc", 0)
                     }
-                    "serial" => (train_parallel(&data, &opts)?, "none"),
-                    _ => (train_parallel(&data, &opts)?, merge.name()),
+                    "serial" => (train_parallel(&data, &opts)?, "none", "inproc", 0),
+                    _ => (train_parallel(&data, &opts)?, merge.name(), "inproc", 0),
                 };
-                cells.push(Cell { mode, workers, interval, merge: cell_merge, report });
+                cells.push(Cell {
+                    mode,
+                    workers,
+                    interval,
+                    merge: cell_merge,
+                    transport,
+                    bytes_per_round: wire,
+                    report,
+                });
             }
             if workers == 1 {
                 serial_rate.get_or_insert(cells.last().expect("just pushed").report.throughput);
@@ -265,6 +330,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}x", c.report.throughput / base_rate),
             format!("{:.3}", c.merge_seconds()),
             format!("{:.1}%", c.touched_frac() * 100.0),
+            if c.bytes_per_round == 0 { "-".into() } else { fmt::count(c.bytes_per_round) },
             format!("{:.5}", c.report.final_loss()),
         ]);
     }

@@ -14,6 +14,12 @@
 //! way, so the kernel ratio is honest (the PR 6 acceptance bar is
 //! f32 ≥ 1.5x f64).
 //!
+//! A `remote` row replays the same workload through a `net/` scoring
+//! shard ([`lazyreg::net::ShardServer`] on localhost): the front end
+//! holds no weights and tree-reduces `ScorePartial`s off the wire, so
+//! the delta against the `shards=1` row is the pure cost of putting TCP
+//! between the protocol and the dot products.
+//!
 //! `cargo bench --bench serve_throughput`
 //! (env LAZYREG_BENCH_REQUESTS to scale, LAZYREG_BENCH_FAST=1 for CI).
 
@@ -30,6 +36,33 @@ type Example = Vec<(u32, f32)>;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Replay `n_requests` examples at the given batch size and return the
+/// end-to-end scored-examples/s rate. Request groups are pre-built so
+/// client-side formatting cost is the same work per example in every
+/// cell.
+fn run_cell(
+    client: &mut Client,
+    examples: &[Example],
+    n_requests: usize,
+    batch: usize,
+) -> anyhow::Result<f64> {
+    let pick = |i: usize| examples[i % examples.len()].clone();
+    let groups: Vec<Vec<Example>> = (0..n_requests.div_ceil(batch))
+        .map(|g| (0..batch).map(|k| pick(g * batch + k)).collect())
+        .collect();
+    let t0 = Instant::now();
+    let mut scored = 0usize;
+    for group in &groups {
+        if batch == 1 {
+            client.predict(&group[0])?;
+        } else {
+            client.predict_batch(group)?;
+        }
+        scored += group.len();
+    }
+    Ok(scored as f64 / t0.elapsed().as_secs_f64())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -75,23 +108,7 @@ fn main() -> anyhow::Result<()> {
         let mut client = Client::connect(server.addr())?;
         let mut single_rate = None;
         for batch in [1usize, 16, 64] {
-            // Pre-build request groups so client-side formatting cost is
-            // the same work per example in every cell.
-            let pick = |i: usize| examples[i % examples.len()].clone();
-            let groups: Vec<Vec<Example>> = (0..n_requests.div_ceil(batch))
-                .map(|g| (0..batch).map(|k| pick(g * batch + k)).collect())
-                .collect();
-            let t0 = Instant::now();
-            let mut scored = 0usize;
-            for group in &groups {
-                if batch == 1 {
-                    client.predict(&group[0])?;
-                } else {
-                    client.predict_batch(group)?;
-                }
-                scored += group.len();
-            }
-            let rate = scored as f64 / t0.elapsed().as_secs_f64();
+            let rate = run_cell(&mut client, &examples, n_requests, batch)?;
             let base = *single_rate.get_or_insert(rate);
             if shards == 1 {
                 if batch == 1 {
@@ -110,6 +127,34 @@ fn main() -> anyhow::Result<()> {
         client.quit()?;
         server.shutdown();
     }
+
+    // The remote row: one `net/` scoring shard on localhost, a front
+    // end that holds no weights. Versions must agree (both 1) or the
+    // front end refuses to score.
+    let shard = lazyreg::net::ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 1)?;
+    let remote_opts = ServeOptions {
+        remote_shards: vec![shard.addr().to_string()],
+        workers: 2,
+        batch_max: 256,
+        ..Default::default()
+    };
+    let server = Server::spawn_with(model.clone(), "127.0.0.1:0", remote_opts)?;
+    let mut client = Client::connect(server.addr())?;
+    let mut single_rate = None;
+    for batch in [1usize, 16, 64] {
+        let rate = run_cell(&mut client, &examples, n_requests, batch)?;
+        let base = *single_rate.get_or_insert(rate);
+        table.row([
+            "remote".to_string(),
+            batch.to_string(),
+            fmt::rate(rate, "ex"),
+            format!("{:.2}x", rate / base),
+        ]);
+    }
+    client.quit()?;
+    server.shutdown();
+    shard.shutdown();
+
     println!("{}", table.render());
     if let Some((single, batch64)) = headline {
         println!(
@@ -120,7 +165,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "sharded scoring is bitwise-identical to native (see \
-         tests/serve_protocol.rs); shards pay off once d outgrows one \
+         tests/serve_protocol.rs; the remote row too — \
+         tests/net_protocol.rs); shards pay off once d outgrows one \
          node's cache — at d=32,768 the win is round-trip amortization"
     );
 

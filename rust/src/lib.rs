@@ -63,8 +63,15 @@
 //!   example-sharded trainer, bitwise-identical scores for any shard
 //!   count via block-partial tree reduction), and `pjrt`
 //!   artifact-batched scoring; [`serve`]: a fixed-worker-pool TCP
-//!   service with batched requests, hot model reload, and per-model
-//!   penalty provenance in `stats`) and CLI (`src/main.rs`). All of it
+//!   service with batched requests, cross-connection request
+//!   coalescing, hot model reload, and per-model penalty provenance in
+//!   `stats`), the **cross-node layer** ([`net`]: a dependency-free
+//!   length-prefixed frame codec ([`net::frame`]), socket-coordinated
+//!   sparse-sync training — the touched-union merge as the wire
+//!   protocol, O(|U|) bytes per round ([`net::cluster`]) — and remote
+//!   serving shards scoring bitwise-identically to the in-process
+//!   [`predict::ShardedModel`] ([`net::shard`]); see `DISTRIBUTED.md`)
+//!   and CLI (`src/main.rs`). All of it
 //!   synchronizes exclusively through the [`sync`] facade: the only
 //!   module allowed to name `std::sync` (lint rule `std-sync`), home of
 //!   the poisonable coordination primitives ([`sync::RoundBarrier`],
@@ -142,6 +149,8 @@ pub mod loss;
 pub mod metrics;
 #[cfg(not(loom))]
 pub mod model;
+#[cfg(not(loom))]
+pub mod net;
 #[cfg(not(loom))]
 pub mod optim;
 #[cfg(not(loom))]

@@ -19,15 +19,27 @@
 //!             --data; --reg selects any registered penalty family,
 //!             e.g. `--reg enet:1e-5:1e-5`, `--reg tg:0.01:10:1.0` for
 //!             truncated gradient with period 10 and ceiling 1.0, or
-//!             `--reg linf:0.1` for an l-inf ball of radius 0.1)
+//!             `--reg linf:0.1` for an l-inf ball of radius 0.1;
+//!             --net coordinator:ADDR --net-workers N runs the sparse
+//!             merge round over TCP against N `--net worker:ADDR`
+//!             processes — every process must be launched with the same
+//!             data/config flags; requires `--merge sparse`)
 //!   eval      evaluate a saved model on a libsvm dataset
 //!   serve     run the TCP prediction service (--shards N feature-sharded
 //!             scoring, --workers K connection pool, --batch-max M,
 //!             --artifact to batch-score through the AOT predict graph,
-//!             --fast-f32 to score through the f32 kernel;
-//!             hot-reloadable via the `reload` protocol command)
+//!             --fast-f32 to score through the f32 kernel,
+//!             --remote-shards A,B,... to score through `shard` server
+//!             processes instead of in-process weights;
+//!             hot-reloadable via the `reload` protocol command unless
+//!             remote shards are configured)
+//!   shard     run one remote scoring shard (--model M --shard I
+//!             --shards N --addr A [--version V]) for
+//!             `serve --remote-shards`
 //!   bench     quick Table-1-style lazy-vs-dense throughput comparison
-//!   info      print artifact + corpus statistics
+//!   info      print artifact + corpus statistics; --model M prints
+//!             model statistics, --compare OTHER [--tol T] diffs two
+//!             saved models (exit 1 when the difference exceeds T)
 //!
 //! Run `lazyreg <cmd> --help` conceptually via README; flags are parsed by
 //! the from-scratch `util::args` (clap is unavailable offline).
@@ -74,11 +86,12 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard") => cmd_shard(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: lazyreg <gen|train|eval|serve|bench|info> [--flags]\n\
+                "usage: lazyreg <gen|train|eval|serve|shard|bench|info> [--flags]\n\
                  see README.md for the full flag reference"
             );
             std::process::exit(2);
@@ -210,6 +223,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (opts, corpus, test_frac, data_seed) = options_from(args)?;
     let data = load_or_generate(args, &corpus, data_seed)?;
     let (train, test) = data.split(test_frac, EVAL_SPLIT_SEED);
+    if let Some(net) = args.opt("net") {
+        return cmd_train_net(net, args, &opts, &train, &test);
+    }
     eprintln!(
         "training on {} examples ({} held out), d={}, workers={} (merge={}, {})",
         train.n_examples(),
@@ -225,8 +241,58 @@ fn cmd_train(args: &Args) -> Result<()> {
         (false, true) => train_parallel(&train, &opts)?,
         (false, false) => train_lazy(&train, &opts)?,
     };
+    report_train(args, opts.workers > 1, &report, &test)
+}
+
+/// `train --net ...`: socket-coordinated sparse-merge training
+/// ([`lazyreg::net::cluster`]). The dataset never crosses the wire —
+/// every participating process must be launched with identical data and
+/// training flags, so each loads (or regenerates) the same corpus and
+/// the coordinator only hands out shard assignments.
+#[cfg(not(loom))]
+fn cmd_train_net(
+    net: &str,
+    args: &Args,
+    opts: &TrainOptions,
+    train: &lazyreg::data::SparseDataset,
+    test: &lazyreg::data::SparseDataset,
+) -> Result<()> {
+    match net.split_once(':') {
+        Some(("coordinator", addr)) => {
+            let workers: usize = args.get_parse("net-workers", 2usize);
+            let coord = lazyreg::net::ClusterCoordinator::bind(addr, workers)?;
+            // stdout (line-buffered), so launchers can scrape the bound
+            // port when started on :0.
+            println!("net: coordinating {workers} workers on {}", coord.addr());
+            let (report, stats) = coord.run(train.x(), train.labels(), opts)?;
+            eprintln!(
+                "net: {} sync rounds, {} bytes/round over TCP",
+                stats.rounds,
+                fmt::count(stats.bytes_per_round())
+            );
+            report_train(args, true, &report, test)
+        }
+        Some(("worker", addr)) => {
+            eprintln!("net: worker training against coordinator {addr}");
+            lazyreg::net::run_worker(addr, train.x(), train.labels(), opts)
+        }
+        _ => anyhow::bail!(
+            "--net must be `coordinator:HOST:PORT` or `worker:HOST:PORT`, got {net:?}"
+        ),
+    }
+}
+
+/// Shared tail of `train`: per-epoch log, held-out evaluation, summary
+/// line, optional `--save`.
+#[cfg(not(loom))]
+fn report_train(
+    args: &Args,
+    show_merge: bool,
+    report: &lazyreg::train::TrainReport,
+    test: &lazyreg::data::SparseDataset,
+) -> Result<()> {
     for e in &report.epochs {
-        let merge = if opts.workers > 1 {
+        let merge = if show_merge {
             format!(", merge {:.3}s touched {:.1}%", e.merge_seconds, e.touched_frac * 100.0)
         } else {
             String::new()
@@ -240,7 +306,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             fmt::rate(e.examples as f64 / e.seconds.max(1e-9), "ex")
         );
     }
-    let (at_half, best) = evaluate(&report.model, &test);
+    let (at_half, best) = evaluate(&report.model, test);
     let sp = report.model.sparsity();
     println!(
         "penalty={} throughput={} loss={:.5} acc={:.4} f1@0.5={:.4} f1*={:.4} nnz(w)={} \
@@ -289,27 +355,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
     let model = load_model(model_path, Loss::Logistic)?;
     let addr = args.get("addr", "127.0.0.1:7878");
+    let remote_shards: Vec<String> = args
+        .opt("remote-shards")
+        .map(|list| {
+            list.split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
     let opts = ServeOptions {
         shards: args.get_parse("shards", 1usize),
         workers: args.get_parse("workers", 4usize),
         batch_max: args.get_parse("batch-max", 256usize),
         artifact: args.flag("artifact"),
         fast_f32: args.flag("fast-f32"),
+        remote_shards,
     };
-    let server = Server::spawn_with(model, &addr, opts)?;
+    let server = Server::spawn_with(model, &addr, opts.clone())?;
     println!(
-        "serving predictions on {} (shards={} workers={} batch_max={} artifact={} f32={})",
+        "serving predictions on {} (shards={} workers={} batch_max={} artifact={} f32={} \
+         remote={})",
         server.addr(),
         opts.shards,
         opts.workers,
         opts.batch_max,
         opts.artifact,
-        opts.fast_f32
+        opts.fast_f32,
+        if opts.remote_shards.is_empty() { "-".to_string() } else { opts.remote_shards.join(",") }
     );
     println!(
         "protocol: `predict idx:val ...` | `batch ex;ex;...` | \
          `reload <model-path>` | `stats` | `quit`"
     );
+    // Run until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// One remote scoring shard for `serve --remote-shards`: owns the
+/// block-aligned feature range `shard/shards` of the saved model and
+/// answers score requests over the binary frame protocol
+/// ([`lazyreg::net::shard`]).
+#[cfg(not(loom))]
+fn cmd_shard(args: &Args) -> Result<()> {
+    let model_path = args.opt("model").context("--model required")?;
+    let model = load_model(model_path, Loss::Logistic)?;
+    let shard: usize = args.get_parse("shard", 0usize);
+    let shards: usize = args.get_parse("shards", 1usize);
+    let addr = args.get("addr", "127.0.0.1:0");
+    // Must match the serving front end's current model version (1 at
+    // spawn, +1 per reload — but reload is refused with remote shards,
+    // so 1 is the steady state).
+    let version: u64 = args.get_parse("version", 1u64);
+    let server = lazyreg::net::ShardServer::spawn(&model, shard, shards, &addr, version)?;
+    // stdout (line-buffered), so launchers can scrape the bound port
+    // when started on :0.
+    println!("shard {shard}/{shards} serving on {} (version {version})", server.addr());
     // Run until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -349,6 +452,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
 #[cfg(not(loom))]
 fn cmd_info(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("model") {
+        let model = load_model(path, Loss::Logistic)?;
+        let sp = model.sparsity();
+        println!(
+            "{path}: d={} bias={:.6} nnz={} ({:.3}% dense) penalty={}",
+            fmt::count(model.dim() as u64),
+            model.bias,
+            fmt::count(sp.nnz as u64),
+            sp.density * 100.0,
+            model.penalty.as_deref().unwrap_or("unrecorded")
+        );
+        if let Some(other_path) = args.opt("compare") {
+            let other = load_model(other_path, Loss::Logistic)?;
+            anyhow::ensure!(
+                model.dim() == other.dim(),
+                "dim mismatch: {path} has {} features, {other_path} has {}",
+                model.dim(),
+                other.dim()
+            );
+            let weight_diff = model.max_weight_diff(&other);
+            let bias_diff = (model.bias - other.bias).abs();
+            println!(
+                "compare {other_path}: max-weight-diff={weight_diff:.3e} \
+                 bias-diff={bias_diff:.3e}"
+            );
+            // With --tol this doubles as a scriptable equality check
+            // (the distributed-training smoke test in CI): exit 1 when
+            // the models differ beyond the tolerance.
+            if let Some(tol) = args.try_parse::<f64>("tol")? {
+                anyhow::ensure!(
+                    weight_diff <= tol && bias_diff <= tol,
+                    "models differ beyond tol {tol:e} (weights {weight_diff:e}, bias {bias_diff:e})"
+                );
+            }
+        }
+    }
     if let Some(path) = args.opt("data") {
         let data = libsvm::read_file(path, None)?;
         let s = data.stats();

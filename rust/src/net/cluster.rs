@@ -1,0 +1,628 @@
+//! Distributed sparse-sync training: the PR 5 touched-union merge
+//! round, over sockets.
+//!
+//! One [`ClusterCoordinator`] process owns the round barrier and the
+//! merge; N worker processes (each started with identical train
+//! arguments, so they load or generate identical data) train disjoint
+//! example shards locally and meet the coordinator at every round
+//! boundary. A round costs O(|U|) bytes per worker — the sorted
+//! touched-feature union — not O(d).
+//!
+//! ## The round protocol (three exchanges per round)
+//!
+//! 1. **`SyncPush`** (worker → coordinator): the worker trains its
+//!    round slice, then pushes its sorted touched list `T_w` with the
+//!    caught-up values at those indices ([`Trainer::gather_current`]),
+//!    plus round loss, bias, and example count.
+//! 2. **`SyncUnion`** / **`SyncVals`**: the coordinator unions the
+//!    lists into U and asks each worker for its values at `U \ T_w` —
+//!    the indices *other* workers touched, which the coordinator cannot
+//!    reconstruct from the push alone. The reply also carries the
+//!    worker's rebase pressure for the coordinated budget flush.
+//!    Gathers are observation-only, so splicing the two gathers equals
+//!    one `gather_current(U)` bitwise.
+//! 3. **`SyncMerged`** (coordinator → workers): the example-weighted
+//!    average over U — accumulated worker-major in worker-index order,
+//!    the exact arithmetic of the in-process pool — plus the flush
+//!    flag. Each worker applies it with [`Trainer::scatter_merged`]
+//!    (and flushes if flagged), leaving every process in the identical
+//!    state the in-process sparse pool would hold.
+//!
+//! Equal per-round counts (`n % workers == 0`, enforced at handshake)
+//! keep every worker's DP tables identical, so the flush decision made
+//! centrally from the workers' reported pressure keeps tables in
+//! lockstep across processes — the same invariant the in-process pool
+//! maintains, now spanning machines. The result matches the in-process
+//! `--merge sparse` pool within 1e-10 on real corpora (asserted by the
+//! multi-process CI smoke; the remaining wiggle is worker count, not
+//! transport — equal worker counts match bitwise).
+//!
+//! Trusted networks only: no authentication, no encryption (see
+//! `DISTRIBUTED.md`).
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::CsrMatrix;
+use crate::model::LinearModel;
+use crate::train::driver::epoch_order;
+use crate::train::pool::{longest_shard, next_round_steps, round_slice, shard_range};
+use crate::train::{EpochStats, LazyTrainer, MergeMode, TrainOptions, TrainReport, Trainer};
+use crate::util::Rng;
+
+use super::frame::{Channel, Frame, ROLE_COORDINATOR, ROLE_WORKER};
+
+/// How long a worker keeps retrying its initial connection (the
+/// coordinator may simply not be up yet).
+const CONNECT_WAIT: Duration = Duration::from_secs(30);
+
+/// Wire-level accounting for one training run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetStats {
+    /// Sync rounds driven over the wire.
+    pub rounds: u64,
+    /// Frame bytes the coordinator sent, summed over workers.
+    pub bytes_sent: u64,
+    /// Frame bytes the coordinator received, summed over workers.
+    pub bytes_received: u64,
+}
+
+impl NetStats {
+    /// Mean frame bytes (both directions) per sync round.
+    pub fn bytes_per_round(&self) -> u64 {
+        (self.bytes_sent + self.bytes_received) / self.rounds.max(1)
+    }
+}
+
+/// The coordinator side: accepts `workers` connections, drives the
+/// round protocol, and assembles the final model and report.
+pub struct ClusterCoordinator {
+    listener: TcpListener,
+    addr: SocketAddr,
+    workers: usize,
+}
+
+impl ClusterCoordinator {
+    /// Bind the coordinator socket (e.g. `127.0.0.1:0`). Workers are
+    /// accepted later, in [`ClusterCoordinator::run`].
+    pub fn bind(addr: &str, workers: usize) -> Result<ClusterCoordinator> {
+        ensure!(workers >= 1, "cluster needs at least one worker");
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding coordinator on {addr}"))?;
+        let addr = listener.local_addr().context("coordinator local_addr")?;
+        Ok(ClusterCoordinator { listener, addr, workers })
+    }
+
+    /// The bound address (useful after binding port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept the workers, validate the shared task shape, and run
+    /// `opts.epochs` of socket-coordinated sparse-merge rounds. The
+    /// coordinator holds the same `(x, labels)` the workers do — it
+    /// never trains, but validates dimensions and computes epoch stats.
+    pub fn run(
+        self,
+        x: &CsrMatrix,
+        labels: &[f32],
+        opts: &TrainOptions,
+    ) -> Result<(TrainReport, NetStats)> {
+        let n = x.n_rows();
+        let d = x.n_cols();
+        let workers = self.workers;
+        ensure!(labels.len() == n, "label count {} does not match {n} rows", labels.len());
+        ensure!(
+            opts.merge == MergeMode::Sparse,
+            "cluster training requires --merge sparse: the wire protocol *is* the \
+             sparse touched-union sync"
+        );
+        ensure!(
+            !opts.pipeline_sync,
+            "cluster training is synchronous; --pipeline-sync is not supported"
+        );
+        ensure!(n > 0, "cluster training requires a non-empty dataset");
+        ensure!(
+            n % workers == 0,
+            "cluster sparse sync requires equal shards: n = {n} is not divisible \
+             by {workers} workers"
+        );
+
+        // Handshake: admit workers in arrival order; arrival order *is*
+        // shard assignment. Every process derives the same epoch orders
+        // from the shared seed, so shard w's contents are identical in
+        // every process — which worker gets which shard is immaterial.
+        let penalty = opts.reg.name();
+        let mut chans: Vec<Channel> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (stream, peer) = self.listener.accept().context("accepting a worker connection")?;
+            let mut chan = Channel::new(stream)?;
+            match chan.recv().context("worker handshake")? {
+                Frame::Hello { role, dim, examples, penalty: worker_penalty, .. }
+                    if role == ROLE_WORKER => {
+                    if dim != d as u64 || examples != n as u64 || worker_penalty != penalty {
+                        let reason = format!(
+                            "worker at {peer} disagrees on the task (dim {dim} vs {d}, \
+                             n {examples} vs {n}, penalty {worker_penalty:?} vs \
+                             {penalty:?}); all processes must run identical train \
+                             arguments"
+                        );
+                        let _ = chan.send(&Frame::Abort { reason: reason.clone() });
+                        abort_all(&mut chans, &reason);
+                        bail!(reason);
+                    }
+                    chan.send(&Frame::Hello {
+                        role: ROLE_COORDINATOR,
+                        shard: w as u32,
+                        shards: workers as u32,
+                        dim: d as u64,
+                        examples: n as u64,
+                        version: 0,
+                        penalty: penalty.clone(),
+                    })?;
+                    eprintln!("[lazyreg] net: worker {}/{workers} joined from {peer}", w + 1);
+                    chans.push(chan);
+                }
+                Frame::Abort { reason } => bail!("worker at {peer} aborted: {reason}"),
+                other => bail!("worker at {peer}: expected Hello, got {}", other.name()),
+            }
+        }
+
+        let interval = opts.sync_interval.unwrap_or(n.max(1));
+        let longest = longest_shard(n, workers);
+        let mut epochs_out = Vec::with_capacity(opts.epochs);
+        let mut rounds = 0u64;
+        // Round scratch, reused: the union U and the merge accumulator.
+        let mut touched: Vec<u32> = Vec::new();
+        let mut merged: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+
+        for epoch in 0..opts.epochs {
+            let e0 = Instant::now();
+            let mut loss_sum = 0.0f64;
+            let mut merge_seconds = 0.0f64;
+            let mut frac_sum = 0.0f64;
+            let mut merges = 0usize;
+            let mut epoch_penalty: Option<f64> = None;
+            let mut offset = 0usize;
+            while offset < longest {
+                let epoch_done = offset.saturating_add(interval) >= longest;
+
+                // Exchange 1: collect pushes in worker-index order (the
+                // loss fold and merge weights are order-sensitive).
+                let mut round_sum = 0.0f64;
+                let mut pushes: Vec<Push> = Vec::with_capacity(workers);
+                for (w, chan) in chans.iter_mut().enumerate() {
+                    match chan
+                        .recv()
+                        .with_context(|| format!("receiving SyncPush from worker {w}"))?
+                    {
+                        Frame::SyncPush { round, examples, loss, bias, indices, values } => {
+                            ensure!(
+                                round == rounds,
+                                "worker {w} pushed round {round}, expected {rounds}"
+                            );
+                            round_sum += loss;
+                            pushes.push(Push { examples, bias, indices, values });
+                        }
+                        Frame::Abort { reason } => bail!("worker {w} aborted: {reason}"),
+                        other => bail!("worker {w}: expected SyncPush, got {}", other.name()),
+                    }
+                }
+                loss_sum += round_sum;
+
+                // The merge window starts once every push is in —
+                // merge_seconds therefore includes the wire time of
+                // exchanges 2 and 3, which is honest: that *is* the
+                // sync cost of the distributed round.
+                let m0 = Instant::now();
+                ensure!(
+                    pushes.iter().all(|p| p.examples == pushes[0].examples),
+                    "sparse sync requires equal per-round counts"
+                );
+                let total: u64 = pushes.iter().map(|p| p.examples).sum();
+                ensure!(total > 0, "empty sync round");
+
+                touched.clear();
+                for p in &pushes {
+                    touched.extend_from_slice(&p.indices);
+                }
+                touched.sort_unstable();
+                touched.dedup();
+                ensure!(
+                    touched.last().is_none_or(|&j| (j as usize) < d),
+                    "pushed indices out of range for dim {d}"
+                );
+                let next = next_round_steps(n, workers, interval, offset, epoch, opts);
+
+                // Exchange 2: ask each worker for its values at the
+                // union indices it did not touch, and its pressure.
+                let mut missings: Vec<Vec<u32>> = Vec::with_capacity(workers);
+                for (w, chan) in chans.iter_mut().enumerate() {
+                    let missing = diff_sorted(&touched, &pushes[w].indices);
+                    chan.send(&Frame::SyncUnion {
+                        round: rounds,
+                        next_steps: next as u64,
+                        indices: missing.clone(),
+                    })?;
+                    missings.push(missing);
+                }
+                let mut pressure_any = false;
+                let mut gathered: Vec<Vec<f64>> = Vec::with_capacity(workers);
+                for (w, chan) in chans.iter_mut().enumerate() {
+                    match chan
+                        .recv()
+                        .with_context(|| format!("receiving SyncVals from worker {w}"))?
+                    {
+                        Frame::SyncVals { round, pressure, values, .. } => {
+                            ensure!(
+                                round == rounds,
+                                "worker {w} answered round {round}, expected {rounds}"
+                            );
+                            ensure!(
+                                values.len() == missings[w].len(),
+                                "worker {w} sent {} values for {} requested indices",
+                                values.len(),
+                                missings[w].len()
+                            );
+                            pressure_any |= pressure;
+                            gathered.push(values);
+                        }
+                        Frame::Abort { reason } => bail!("worker {w} aborted: {reason}"),
+                        other => bail!("worker {w}: expected SyncVals, got {}", other.name()),
+                    }
+                }
+
+                // Merge: splice each worker's two gathers into its full
+                // values over U, then accumulate the example-weighted
+                // average worker-major in index order — the identical
+                // floating-point sequence of the in-process pool.
+                merged.clear();
+                merged.resize(touched.len(), 0.0);
+                let mut bias = 0.0f64;
+                for (w, p) in pushes.iter().enumerate() {
+                    let wgt = p.examples as f64 / total as f64;
+                    splice_accumulate(
+                        &touched,
+                        &p.indices,
+                        &p.values,
+                        &missings[w],
+                        &gathered[w],
+                        wgt,
+                        &mut merged,
+                    )
+                    .with_context(|| format!("merging worker {w}"))?;
+                    bias += wgt * p.bias;
+                }
+                let flush = next > 0 && pressure_any;
+
+                // Exchange 3: broadcast the merged union; worker 0
+                // answers the end-of-epoch objective after scattering
+                // (and flushing), mirroring the in-process timing.
+                for (w, chan) in chans.iter_mut().enumerate() {
+                    chan.send(&Frame::SyncMerged {
+                        round: rounds,
+                        flush,
+                        want_objective: epoch_done && w == 0,
+                        bias,
+                        indices: touched.clone(),
+                        values: merged.clone(),
+                    })?;
+                }
+                if epoch_done {
+                    match chans[0].recv().context("receiving the epoch objective from worker 0")? {
+                        Frame::SyncVals { round, objective: Some(p), .. } => {
+                            ensure!(round == rounds, "objective for round {round}");
+                            epoch_penalty = Some(p);
+                        }
+                        other => bail!("expected the epoch objective, got {}", other.name()),
+                    }
+                }
+
+                frac_sum += touched.len() as f64 / d.max(1) as f64;
+                merges += 1;
+                merge_seconds += m0.elapsed().as_secs_f64();
+                rounds += 1;
+                offset = offset.saturating_add(interval);
+            }
+            let mean_loss = loss_sum / n.max(1) as f64;
+            epochs_out.push(EpochStats {
+                epoch,
+                mean_loss,
+                objective: mean_loss + epoch_penalty.unwrap_or(0.0),
+                examples: n,
+                seconds: e0.elapsed().as_secs_f64(),
+                merge_seconds,
+                touched_frac: if merges > 0 {
+                    frac_sum / merges as f64
+                } else {
+                    0.0
+                },
+            });
+        }
+
+        // Final exchange: worker 0 ships the finalized model (every
+        // worker holds the identical state), then everyone gets a Bye.
+        chans[0].send(&Frame::ModelReq)?;
+        let (model, worker_rebases) = match chans[0]
+            .recv()
+            .context("receiving the final model from worker 0")?
+        {
+            Frame::Model { dim, bias, rebases, penalty: model_penalty, indices, values } => {
+                ensure!(dim as usize == d, "worker 0 returned a dim-{dim} model, expected {d}");
+                let mut m = LinearModel::zeros(d, opts.loss);
+                for (&j, &v) in indices.iter().zip(values.iter()) {
+                    ensure!((j as usize) < d, "model index {j} out of range for dim {d}");
+                    m.weights[j as usize] = v;
+                }
+                m.bias = bias;
+                m.penalty = (!model_penalty.is_empty()).then_some(model_penalty);
+                (m, rebases)
+            }
+            Frame::Abort { reason } => bail!("worker 0 aborted: {reason}"),
+            other => bail!("expected the final model, got {}", other.name()),
+        };
+        for chan in &mut chans {
+            chan.send(&Frame::Bye)?;
+        }
+
+        let seconds = t0.elapsed().as_secs_f64();
+        let examples = (n * opts.epochs) as u64;
+        let stats = NetStats {
+            rounds,
+            bytes_sent: chans.iter().map(Channel::bytes_sent).sum(),
+            bytes_received: chans.iter().map(Channel::bytes_received).sum(),
+        };
+        Ok((
+            TrainReport {
+                model,
+                examples,
+                seconds,
+                throughput: if seconds > 0.0 {
+                    examples as f64 / seconds
+                } else {
+                    0.0
+                },
+                epochs: epochs_out,
+                // Equal-step DP tables are identical across workers, so
+                // each rebased the same number of times; the in-process
+                // pool reports the sum over workers.
+                rebases: worker_rebases * workers as u64,
+                penalty,
+            },
+            stats,
+        ))
+    }
+}
+
+/// One worker's phase-1 push, held until the round's merge.
+struct Push {
+    examples: u64,
+    bias: f64,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+fn abort_all(chans: &mut [Channel], reason: &str) {
+    for chan in chans {
+        let _ = chan.send(&Frame::Abort { reason: reason.to_string() });
+    }
+}
+
+/// `touched \ tw` for sorted, deduplicated inputs.
+fn diff_sorted(touched: &[u32], tw: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(touched.len().saturating_sub(tw.len()));
+    let mut i = 0usize;
+    for &u in touched {
+        if i < tw.len() && tw[i] == u {
+            i += 1;
+        } else {
+            out.push(u);
+        }
+    }
+    out
+}
+
+/// Splice one worker's `(T_w, values)` push and `(U \ T_w, values)`
+/// gather back into its full value sequence over `touched` = U, and
+/// fold `acc[i] += wgt * v` — the same per-worker accumulation
+/// [`Trainer::accumulate_current`] performs in process.
+fn splice_accumulate(
+    touched: &[u32],
+    tw: &[u32],
+    tw_vals: &[f64],
+    missing: &[u32],
+    miss_vals: &[f64],
+    wgt: f64,
+    acc: &mut [f64],
+) -> Result<()> {
+    let (mut i, mut j) = (0usize, 0usize);
+    for (a, &u) in acc.iter_mut().zip(touched) {
+        let v = if i < tw.len() && tw[i] == u {
+            i += 1;
+            tw_vals[i - 1]
+        } else if j < missing.len() && missing[j] == u {
+            j += 1;
+            miss_vals[j - 1]
+        } else {
+            bail!("values misaligned with the merge union at feature {u}");
+        };
+        *a += wgt * v;
+    }
+    ensure!(i == tw.len() && j == missing.len(), "values outside the merge union");
+    Ok(())
+}
+
+/// The worker side: connect to `addr` (retrying while the coordinator
+/// comes up), train the assigned shard with a local [`LazyTrainer`],
+/// and meet the coordinator at every round boundary. `(x, labels)` and
+/// `opts` must be identical across all processes — the shared seed
+/// derives identical epoch orders everywhere, which is what makes the
+/// coordinator's shard assignment arbitrary.
+pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -> Result<()> {
+    let n = x.n_rows();
+    let d = x.n_cols();
+    ensure!(labels.len() == n, "label count {} does not match {n} rows", labels.len());
+    let stream = connect_retry(addr, CONNECT_WAIT)?;
+    let mut chan = Channel::new(stream)?;
+    chan.send(&Frame::Hello {
+        role: ROLE_WORKER,
+        shard: 0,
+        shards: 0,
+        dim: d as u64,
+        examples: n as u64,
+        version: 0,
+        penalty: opts.reg.name(),
+    })?;
+    let (w, workers) = match chan.recv().context("coordinator handshake")? {
+        Frame::Hello { role, shard, shards, .. } if role == ROLE_COORDINATOR => {
+            (shard as usize, shards as usize)
+        }
+        Frame::Abort { reason } => bail!("coordinator refused the handshake: {reason}"),
+        other => bail!("expected Hello from the coordinator, got {}", other.name()),
+    };
+    ensure!(workers >= 1 && w < workers, "coordinator assigned an invalid shard {w} of {workers}");
+    ensure!(n % workers == 0, "n = {n} is not divisible by {workers} workers");
+    eprintln!("[lazyreg] net: assigned shard {w} of {workers}");
+
+    let mut trainer = LazyTrainer::new(d, opts);
+    let range = shard_range(n, workers, w);
+    let interval = opts.sync_interval.unwrap_or(n.max(1));
+    let longest = longest_shard(n, workers);
+    let mut rng = Rng::new(opts.seed);
+    let mut round = 0u64;
+    let mut tv: Vec<u32> = Vec::new();
+    for _epoch in 0..opts.epochs {
+        let order = epoch_order(n, opts, &mut rng);
+        let shard = &order[range.clone()];
+        let mut offset = 0usize;
+        while offset < longest {
+            // Train the round slice, collecting the touched features in
+            // parallel with the pass — the exact in-process worker loop.
+            let slice = round_slice(shard.len(), offset, interval);
+            let (lo, hi) = (slice.start, slice.end);
+            let mut ls = 0.0f64;
+            tv.clear();
+            for &r in &shard[lo..hi] {
+                let row = x.row(r);
+                tv.extend_from_slice(row.indices);
+                ls += trainer.process_example(row, f64::from(labels[r]));
+            }
+            tv.sort_unstable();
+            tv.dedup();
+
+            // Exchange 1: push the touched list with caught-up values.
+            let values = trainer.gather_current(&tv);
+            chan.send(&Frame::SyncPush {
+                round,
+                examples: (hi - lo) as u64,
+                loss: ls,
+                bias: trainer.bias(),
+                indices: tv.clone(),
+                values,
+            })?;
+
+            // Exchange 2: supply values at the union indices we did not
+            // touch. Pressure is evaluated here, *before* the scatter —
+            // equivalent to the in-process post-scatter evaluation,
+            // because the scatter never grows the DP table.
+            let (next_steps, missing) = match chan.recv().context("waiting for SyncUnion")? {
+                Frame::SyncUnion { round: r, next_steps, indices } => {
+                    ensure!(r == round, "coordinator sent round {r}, expected {round}");
+                    // Sorted (decode-validated), so the last index is
+                    // the max: keep the gather in bounds.
+                    ensure!(
+                        indices.last().is_none_or(|&j| (j as usize) < d),
+                        "union indices out of range for dim {d}"
+                    );
+                    (next_steps as usize, indices)
+                }
+                Frame::Abort { reason } => bail!("coordinator aborted: {reason}"),
+                other => bail!("expected SyncUnion, got {}", other.name()),
+            };
+            let miss_vals = trainer.gather_current(&missing);
+            let pressure = next_steps > 0 && trainer.rebase_pressure(next_steps);
+            chan.send(&Frame::SyncVals { round, pressure, objective: None, values: miss_vals })?;
+
+            // Exchange 3: apply the merged union (and the coordinated
+            // flush); worker 0 answers the epoch objective afterwards.
+            match chan.recv().context("waiting for SyncMerged")? {
+                Frame::SyncMerged { round: r, flush, want_objective, bias, indices, values } => {
+                    ensure!(r == round, "coordinator merged round {r}, expected {round}");
+                    ensure!(
+                        indices.last().is_none_or(|&j| (j as usize) < d),
+                        "merged indices out of range for dim {d}"
+                    );
+                    trainer.scatter_merged(&indices, &values, bias);
+                    if flush {
+                        trainer.flush();
+                    }
+                    if want_objective {
+                        chan.send(&Frame::SyncVals {
+                            round,
+                            pressure: false,
+                            objective: Some(trainer.penalty_value()),
+                            values: Vec::new(),
+                        })?;
+                    }
+                }
+                Frame::Abort { reason } => bail!("coordinator aborted: {reason}"),
+                other => bail!("expected SyncMerged, got {}", other.name()),
+            }
+            round += 1;
+            offset = offset.saturating_add(interval);
+        }
+    }
+
+    // Wind-down: ship the model if asked (worker 0), wait for Bye.
+    let mut trainer = Some(trainer);
+    loop {
+        match chan.recv().context("waiting for the wind-down")? {
+            Frame::ModelReq => {
+                let Some(tr) = trainer.take() else {
+                    bail!("coordinator requested the model twice");
+                };
+                let rebases = tr.rebases();
+                let model = tr.into_model();
+                let mut indices = Vec::new();
+                let mut values = Vec::new();
+                for (j, &v) in model.weights.iter().enumerate() {
+                    if v != 0.0 {
+                        indices.push(j as u32);
+                        values.push(v);
+                    }
+                }
+                chan.send(&Frame::Model {
+                    dim: model.dim() as u64,
+                    bias: model.bias,
+                    rebases,
+                    penalty: model.penalty.clone().unwrap_or_default(),
+                    indices,
+                    values,
+                })?;
+            }
+            Frame::Bye => return Ok(()),
+            Frame::Abort { reason } => bail!("coordinator aborted: {reason}"),
+            other => bail!("unexpected {} during wind-down", other.name()),
+        }
+    }
+}
+
+fn connect_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + budget;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("coordinator at {addr} unreachable within {budget:?}")));
+                }
+                thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}

@@ -1,0 +1,1044 @@
+//! The wire format: length-prefixed binary frames with a magic/version
+//! header.
+//!
+//! Every message on a cluster or shard socket is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"LZNP"
+//! 4       2     protocol version, u16 LE (currently 1)
+//! 6       1     frame type tag (see [`Frame`])
+//! 7       1     reserved, must be 0
+//! 8       4     payload length, u32 LE (<= MAX_PAYLOAD)
+//! 12      n     payload (typed fields, all little-endian)
+//! ```
+//!
+//! The decoder mirrors serve's byte-cap discipline: every length and
+//! element count is validated against the bytes actually present
+//! *before* any allocation, strings and payloads have hard caps, index
+//! lists must be strictly increasing where the protocol says "sorted",
+//! and trailing bytes after a well-formed payload are an error. A
+//! malformed frame is a structured [`FrameError`], never a panic — the
+//! `serve-unwrap` lint rule extends over this module to keep it that
+//! way.
+//!
+//! The format is for **trusted networks only** (see `DISTRIBUTED.md`):
+//! there is no authentication or encryption, only robustness against
+//! malformed bytes.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+
+/// Frame magic: "LaZyreg Net Protocol".
+pub const MAGIC: [u8; 4] = *b"LZNP";
+/// Wire protocol version carried in every header.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 12;
+/// Hard cap on a single frame payload (64 MiB).
+pub const MAX_PAYLOAD: u64 = 64 * 1024 * 1024;
+/// Cap on penalty-name strings in `Hello`/`Model`.
+pub const MAX_NAME_BYTES: usize = 256;
+/// Cap on `Abort` reason strings.
+pub const MAX_REASON_BYTES: usize = 1024;
+
+/// `Hello.role` — a training worker connecting to a coordinator.
+pub const ROLE_WORKER: u8 = 1;
+/// `Hello.role` — a coordinator answering a worker.
+pub const ROLE_COORDINATOR: u8 = 2;
+/// `Hello.role` — a scoring client connecting to a shard server.
+pub const ROLE_CLIENT: u8 = 3;
+/// `Hello.role` — a shard server answering a client.
+pub const ROLE_SHARD: u8 = 4;
+
+/// Structured decode/transport error. `Truncated` covers EOF mid-frame
+/// (a peer that hung up or a short read); everything else states which
+/// invariant the bytes broke.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Underlying transport error other than a clean mid-frame EOF.
+    Io(io::Error),
+    /// The stream ended inside a header or payload.
+    Truncated,
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Header carried an unsupported protocol version.
+    BadVersion(u16),
+    /// Header carried a frame-type tag this decoder does not know.
+    UnknownType(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized { len: u64, max: u64 },
+    /// Payload bytes violate the frame's structural invariants.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+            FrameError::Truncated => write!(f, "frame truncated (peer closed mid-frame)"),
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (expected {VERSION})")
+            }
+            FrameError::UnknownType(t) => write!(f, "unknown frame type {t}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds the {max}-byte cap")
+            }
+            FrameError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    }
+}
+
+/// One typed wire message. Tags are stable: new frame types append, and
+/// incompatible field changes bump [`VERSION`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Handshake, both directions. `penalty` is empty where not
+    /// applicable (shard scoring).
+    Hello {
+        role: u8,
+        shard: u32,
+        shards: u32,
+        dim: u64,
+        examples: u64,
+        version: u64,
+        penalty: String,
+    },
+    /// Clean goodbye; the sender will close the connection.
+    Bye,
+    /// Protocol-level refusal with a human-readable reason.
+    Abort { reason: String },
+    /// Worker → coordinator at the round barrier: the shard's sorted
+    /// touched indices with their caught-up values, plus the round's
+    /// example count (merge weight) and summed loss.
+    SyncPush {
+        round: u64,
+        examples: u64,
+        loss: f64,
+        bias: f64,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    },
+    /// Coordinator → worker: the part of the union this worker did not
+    /// touch (`U \ T_w`), plus the next round's step count so the
+    /// worker can evaluate its rebase pressure.
+    SyncUnion {
+        round: u64,
+        next_steps: u64,
+        indices: Vec<u32>,
+    },
+    /// Worker → coordinator: caught-up values for a previously sent
+    /// index list, plus rebase pressure; worker 0 also answers the
+    /// end-of-epoch objective request here (after scattering).
+    SyncVals {
+        round: u64,
+        pressure: bool,
+        objective: Option<f64>,
+        values: Vec<f64>,
+    },
+    /// Coordinator → workers: merged values over the full union U, the
+    /// merged bias, and the centrally decided budget-flush flag.
+    SyncMerged {
+        round: u64,
+        flush: bool,
+        want_objective: bool,
+        bias: f64,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    },
+    /// Client → shard server: a CSR slice of rows to score. Row
+    /// indices are sorted within each row (validated at decode, so the
+    /// server's binary searches cannot go out of bounds).
+    ScoreReq {
+        seq: u64,
+        indptr: Vec<u32>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
+    /// Shard server → client: per-row `(block, partial)` lists for the
+    /// server's feature range, echoing `seq` and the model version the
+    /// partials were computed against.
+    ScorePartial {
+        seq: u64,
+        version: u64,
+        rows: Vec<Vec<(u32, f64)>>,
+    },
+    /// Coordinator → worker 0: request the final trained model.
+    ModelReq,
+    /// Worker 0 → coordinator: the finalized model as sorted nonzero
+    /// `(index, weight)` pairs plus bias and per-worker rebase count.
+    Model {
+        dim: u64,
+        bias: f64,
+        rebases: u64,
+        penalty: String,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    },
+}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::Bye => 2,
+            Frame::Abort { .. } => 3,
+            Frame::SyncPush { .. } => 4,
+            Frame::SyncUnion { .. } => 5,
+            Frame::SyncVals { .. } => 6,
+            Frame::SyncMerged { .. } => 7,
+            Frame::ScoreReq { .. } => 8,
+            Frame::ScorePartial { .. } => 9,
+            Frame::ModelReq => 10,
+            Frame::Model { .. } => 11,
+        }
+    }
+
+    /// Short name for logs and errors.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::Bye => "Bye",
+            Frame::Abort { .. } => "Abort",
+            Frame::SyncPush { .. } => "SyncPush",
+            Frame::SyncUnion { .. } => "SyncUnion",
+            Frame::SyncVals { .. } => "SyncVals",
+            Frame::SyncMerged { .. } => "SyncMerged",
+            Frame::ScoreReq { .. } => "ScoreReq",
+            Frame::ScorePartial { .. } => "ScorePartial",
+            Frame::ModelReq => "ModelReq",
+            Frame::Model { .. } => "Model",
+        }
+    }
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            out.push(1);
+            put_f64(out, x);
+        }
+        None => out.push(0),
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str, cap: usize) -> Result<(), FrameError> {
+    if s.len() > cap {
+        return Err(FrameError::Malformed("string exceeds its cap"));
+    }
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn count_of(len: usize) -> Result<u32, FrameError> {
+    u32::try_from(len).map_err(|_| FrameError::Malformed("element count exceeds u32"))
+}
+
+fn put_vec_u32(out: &mut Vec<u8>, v: &[u32]) -> Result<(), FrameError> {
+    put_u32(out, count_of(v.len())?);
+    for &x in v {
+        put_u32(out, x);
+    }
+    Ok(())
+}
+
+fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) -> Result<(), FrameError> {
+    put_u32(out, count_of(v.len())?);
+    for &x in v {
+        put_f32(out, x);
+    }
+    Ok(())
+}
+
+fn put_vec_f64(out: &mut Vec<u8>, v: &[f64]) -> Result<(), FrameError> {
+    put_u32(out, count_of(v.len())?);
+    for &x in v {
+        put_f64(out, x);
+    }
+    Ok(())
+}
+
+fn encode_payload(frame: &Frame, out: &mut Vec<u8>) -> Result<(), FrameError> {
+    match frame {
+        Frame::Hello {
+            role,
+            shard,
+            shards,
+            dim,
+            examples,
+            version,
+            penalty,
+        } => {
+            put_u8(out, *role);
+            put_u32(out, *shard);
+            put_u32(out, *shards);
+            put_u64(out, *dim);
+            put_u64(out, *examples);
+            put_u64(out, *version);
+            put_str(out, penalty, MAX_NAME_BYTES)?;
+        }
+        Frame::Bye | Frame::ModelReq => {}
+        Frame::Abort { reason } => put_str(out, reason, MAX_REASON_BYTES)?,
+        Frame::SyncPush {
+            round,
+            examples,
+            loss,
+            bias,
+            indices,
+            values,
+        } => {
+            if values.len() != indices.len() {
+                return Err(FrameError::Malformed("value count differs from index count"));
+            }
+            put_u64(out, *round);
+            put_u64(out, *examples);
+            put_f64(out, *loss);
+            put_f64(out, *bias);
+            put_vec_u32(out, indices)?;
+            put_vec_f64(out, values)?;
+        }
+        Frame::SyncUnion {
+            round,
+            next_steps,
+            indices,
+        } => {
+            put_u64(out, *round);
+            put_u64(out, *next_steps);
+            put_vec_u32(out, indices)?;
+        }
+        Frame::SyncVals {
+            round,
+            pressure,
+            objective,
+            values,
+        } => {
+            put_u64(out, *round);
+            put_bool(out, *pressure);
+            put_opt_f64(out, *objective);
+            put_vec_f64(out, values)?;
+        }
+        Frame::SyncMerged {
+            round,
+            flush,
+            want_objective,
+            bias,
+            indices,
+            values,
+        } => {
+            if values.len() != indices.len() {
+                return Err(FrameError::Malformed("value count differs from index count"));
+            }
+            put_u64(out, *round);
+            put_bool(out, *flush);
+            put_bool(out, *want_objective);
+            put_f64(out, *bias);
+            put_vec_u32(out, indices)?;
+            put_vec_f64(out, values)?;
+        }
+        Frame::ScoreReq {
+            seq,
+            indptr,
+            indices,
+            values,
+        } => {
+            put_u64(out, *seq);
+            put_vec_u32(out, indptr)?;
+            put_vec_u32(out, indices)?;
+            put_vec_f32(out, values)?;
+        }
+        Frame::ScorePartial { seq, version, rows } => {
+            put_u64(out, *seq);
+            put_u64(out, *version);
+            put_u32(out, count_of(rows.len())?);
+            for row in rows {
+                put_u32(out, count_of(row.len())?);
+                for &(block, partial) in row {
+                    put_u32(out, block);
+                    put_f64(out, partial);
+                }
+            }
+        }
+        Frame::Model {
+            dim,
+            bias,
+            rebases,
+            penalty,
+            indices,
+            values,
+        } => {
+            if values.len() != indices.len() {
+                return Err(FrameError::Malformed("value count differs from index count"));
+            }
+            put_u64(out, *dim);
+            put_f64(out, *bias);
+            put_u64(out, *rebases);
+            put_str(out, penalty, MAX_NAME_BYTES)?;
+            put_vec_u32(out, indices)?;
+            put_vec_f64(out, values)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Checked cursor over a payload: every read validates the bytes are
+/// present, every count is validated against the remaining length
+/// *before* allocating.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if n > self.remaining() {
+            return Err(FrameError::Malformed("payload shorter than declared contents"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, FrameError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn boolean(&mut self) -> Result<bool, FrameError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(FrameError::Malformed("boolean byte out of range")),
+        }
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>, FrameError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            _ => Err(FrameError::Malformed("option tag out of range")),
+        }
+    }
+
+    fn string(&mut self, cap: usize) -> Result<String, FrameError> {
+        let len = self.u32()? as usize;
+        if len > cap {
+            return Err(FrameError::Malformed("string exceeds its cap"));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::Malformed("string is not UTF-8"))
+    }
+
+    /// Read an element count and validate `count * elem_bytes` fits in
+    /// the remaining payload before the caller allocates.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, FrameError> {
+        let count = self.u32()? as usize;
+        if count.checked_mul(elem_bytes).is_none_or(|b| b > self.remaining()) {
+            return Err(FrameError::Malformed("element count exceeds payload"));
+        }
+        Ok(count)
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>, FrameError> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>, FrameError> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>, FrameError> {
+        let n = self.count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn finish(self) -> Result<(), FrameError> {
+        if self.pos != self.buf.len() {
+            return Err(FrameError::Malformed("trailing bytes after frame payload"));
+        }
+        Ok(())
+    }
+}
+
+fn check_sorted(indices: &[u32]) -> Result<(), FrameError> {
+    if indices.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(FrameError::Malformed("indices not strictly increasing"));
+    }
+    Ok(())
+}
+
+fn check_paired(indices: &[u32], values: usize) -> Result<(), FrameError> {
+    if indices.len() != values {
+        return Err(FrameError::Malformed("value count differs from index count"));
+    }
+    Ok(())
+}
+
+fn decode_payload(tag: u8, payload: &[u8]) -> Result<Frame, FrameError> {
+    let mut c = Cur::new(payload);
+    let frame = match tag {
+        1 => {
+            let role = c.u8()?;
+            if !(ROLE_WORKER..=ROLE_SHARD).contains(&role) {
+                return Err(FrameError::Malformed("unknown Hello role"));
+            }
+            Frame::Hello {
+                role,
+                shard: c.u32()?,
+                shards: c.u32()?,
+                dim: c.u64()?,
+                examples: c.u64()?,
+                version: c.u64()?,
+                penalty: c.string(MAX_NAME_BYTES)?,
+            }
+        }
+        2 => Frame::Bye,
+        3 => Frame::Abort {
+            reason: c.string(MAX_REASON_BYTES)?,
+        },
+        4 => {
+            let round = c.u64()?;
+            let examples = c.u64()?;
+            let loss = c.f64()?;
+            let bias = c.f64()?;
+            let indices = c.vec_u32()?;
+            let values = c.vec_f64()?;
+            check_sorted(&indices)?;
+            check_paired(&indices, values.len())?;
+            Frame::SyncPush {
+                round,
+                examples,
+                loss,
+                bias,
+                indices,
+                values,
+            }
+        }
+        5 => {
+            let round = c.u64()?;
+            let next_steps = c.u64()?;
+            let indices = c.vec_u32()?;
+            check_sorted(&indices)?;
+            Frame::SyncUnion {
+                round,
+                next_steps,
+                indices,
+            }
+        }
+        6 => Frame::SyncVals {
+            round: c.u64()?,
+            pressure: c.boolean()?,
+            objective: c.opt_f64()?,
+            values: c.vec_f64()?,
+        },
+        7 => {
+            let round = c.u64()?;
+            let flush = c.boolean()?;
+            let want_objective = c.boolean()?;
+            let bias = c.f64()?;
+            let indices = c.vec_u32()?;
+            let values = c.vec_f64()?;
+            check_sorted(&indices)?;
+            check_paired(&indices, values.len())?;
+            Frame::SyncMerged {
+                round,
+                flush,
+                want_objective,
+                bias,
+                indices,
+                values,
+            }
+        }
+        8 => {
+            let seq = c.u64()?;
+            let indptr = c.vec_u32()?;
+            let indices = c.vec_u32()?;
+            let values = c.vec_f32()?;
+            validate_csr(&indptr, &indices, values.len())?;
+            Frame::ScoreReq {
+                seq,
+                indptr,
+                indices,
+                values,
+            }
+        }
+        9 => {
+            let seq = c.u64()?;
+            let version = c.u64()?;
+            // Each row costs at least its own 4-byte count.
+            let n_rows = c.count(4)?;
+            let mut rows = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                let n_pairs = c.count(12)?;
+                let mut row = Vec::with_capacity(n_pairs);
+                for _ in 0..n_pairs {
+                    row.push((c.u32()?, c.f64()?));
+                }
+                rows.push(row);
+            }
+            Frame::ScorePartial { seq, version, rows }
+        }
+        10 => Frame::ModelReq,
+        11 => {
+            let dim = c.u64()?;
+            let bias = c.f64()?;
+            let rebases = c.u64()?;
+            let penalty = c.string(MAX_NAME_BYTES)?;
+            let indices = c.vec_u32()?;
+            let values = c.vec_f64()?;
+            check_sorted(&indices)?;
+            check_paired(&indices, values.len())?;
+            Frame::Model {
+                dim,
+                bias,
+                rebases,
+                penalty,
+                indices,
+                values,
+            }
+        }
+        t => return Err(FrameError::UnknownType(t)),
+    };
+    c.finish()?;
+    Ok(frame)
+}
+
+/// CSR invariants for [`Frame::ScoreReq`]: indptr starts at 0, is
+/// non-decreasing, ends at the data length, and every row's indices
+/// are strictly increasing (so the shard server's binary searches and
+/// block kernel stay in bounds on any accepted input).
+fn validate_csr(indptr: &[u32], indices: &[u32], n_values: usize) -> Result<(), FrameError> {
+    let Some((&first, &last)) = indptr.first().zip(indptr.last()) else {
+        return Err(FrameError::Malformed("CSR indptr is empty"));
+    };
+    if first != 0 {
+        return Err(FrameError::Malformed("CSR indptr does not start at 0"));
+    }
+    if indptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(FrameError::Malformed("CSR indptr is not non-decreasing"));
+    }
+    if last as usize != indices.len() || indices.len() != n_values {
+        return Err(FrameError::Malformed("CSR lengths disagree"));
+    }
+    for w in indptr.windows(2) {
+        let row = &indices[w[0] as usize..w[1] as usize];
+        check_sorted(row)?;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ transport
+
+/// Encode `frame` and write header + payload. Returns bytes written.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<u64, FrameError> {
+    let mut payload = Vec::new();
+    encode_payload(frame, &mut payload)?;
+    if payload.len() as u64 > MAX_PAYLOAD {
+        return Err(FrameError::Oversized {
+            len: payload.len() as u64,
+            max: MAX_PAYLOAD,
+        });
+    }
+    let mut header = [0u8; HEADER_BYTES];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[6] = frame.tag();
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(&payload)?;
+    Ok((HEADER_BYTES + payload.len()) as u64)
+}
+
+/// Read and decode one frame. Returns the frame and the bytes consumed.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(Frame, u64), FrameError> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header)?;
+    if header[..4] != MAGIC {
+        return Err(FrameError::BadMagic([header[0], header[1], header[2], header[3]]));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(FrameError::BadVersion(version));
+    }
+    if header[7] != 0 {
+        return Err(FrameError::Malformed("reserved header byte is not zero"));
+    }
+    let len = u64::from(u32::from_le_bytes([header[8], header[9], header[10], header[11]]));
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized {
+            len,
+            max: MAX_PAYLOAD,
+        });
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let frame = decode_payload(header[6], &payload)?;
+    Ok((frame, HEADER_BYTES as u64 + len))
+}
+
+/// A framed, buffered TCP connection: one `BufReader`/`BufWriter` pair
+/// over the same stream, with sent/received byte counters (the bench's
+/// bytes-per-round cell) and an out-of-band [`Channel::shutdown`] that
+/// unblocks a peer parked in [`Channel::recv`].
+pub struct Channel {
+    reader: io::BufReader<TcpStream>,
+    writer: io::BufWriter<TcpStream>,
+    sent: u64,
+    received: u64,
+}
+
+impl Channel {
+    /// Wrap a connected stream. Disables Nagle: sync rounds are
+    /// latency-bound request/response exchanges.
+    pub fn new(stream: TcpStream) -> Result<Channel, FrameError> {
+        stream.set_nodelay(true)?;
+        let reader = io::BufReader::new(stream.try_clone()?);
+        Ok(Channel {
+            reader,
+            writer: io::BufWriter::new(stream),
+            sent: 0,
+            received: 0,
+        })
+    }
+
+    /// Encode, write, and flush one frame.
+    pub fn send(&mut self, frame: &Frame) -> Result<(), FrameError> {
+        let n = write_frame(&mut self.writer, frame)?;
+        self.writer.flush()?;
+        self.sent += n;
+        Ok(())
+    }
+
+    /// Block until one full frame arrives.
+    pub fn recv(&mut self) -> Result<Frame, FrameError> {
+        let (frame, n) = read_frame(&mut self.reader)?;
+        self.received += n;
+        Ok(frame)
+    }
+
+    /// Total frame bytes written so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    /// Total frame bytes read so far.
+    pub fn bytes_received(&self) -> u64 {
+        self.received
+    }
+
+    /// Peer address, for log lines.
+    pub fn peer_addr(&self) -> Option<std::net::SocketAddr> {
+        self.writer.get_ref().peer_addr().ok()
+    }
+
+    /// Clone the underlying stream handle (for a shutdown registry).
+    pub fn try_clone_stream(&self) -> Result<TcpStream, FrameError> {
+        Ok(self.writer.get_ref().try_clone()?)
+    }
+
+    /// Shut both directions down; a thread blocked in `recv` on this
+    /// stream (or its clones) gets an immediate error instead of
+    /// hanging.
+    pub fn shutdown(&self) {
+        let _ = self.writer.get_ref().shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        let written = write_frame(&mut buf, frame).expect("encode");
+        assert_eq!(written as usize, buf.len());
+        let (decoded, read) = read_frame(&mut buf.as_slice()).expect("decode");
+        assert_eq!(read as usize, buf.len());
+        decoded
+    }
+
+    #[test]
+    fn empty_frames_round_trip() {
+        assert_eq!(round_trip(&Frame::Bye), Frame::Bye);
+        assert_eq!(round_trip(&Frame::ModelReq), Frame::ModelReq);
+    }
+
+    #[test]
+    fn hello_round_trips() {
+        let f = Frame::Hello {
+            role: ROLE_WORKER,
+            shard: 3,
+            shards: 8,
+            dim: 260_941,
+            examples: 12_500,
+            version: 7,
+            penalty: "elastic:0.1:0.5".to_string(),
+        };
+        assert_eq!(round_trip(&f), f);
+    }
+
+    #[test]
+    fn sync_push_rejects_mismatched_lengths() {
+        let f = Frame::SyncPush {
+            round: 1,
+            examples: 64,
+            loss: 0.5,
+            bias: 0.1,
+            indices: vec![1, 2, 3],
+            values: vec![0.0; 2],
+        };
+        let mut buf = Vec::new();
+        assert!(matches!(
+            write_frame(&mut buf, &f),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn unsorted_indices_rejected_at_decode() {
+        let f = Frame::SyncUnion {
+            round: 0,
+            next_steps: 64,
+            indices: vec![5, 5, 9],
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).expect("encode");
+        assert!(matches!(
+            read_frame(&mut buf.as_slice()),
+            Err(FrameError::Malformed("indices not strictly increasing"))
+        ));
+    }
+
+    #[test]
+    fn truncated_header_and_payload_are_structured_errors() {
+        let f = Frame::Abort {
+            reason: "nope".to_string(),
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).expect("encode");
+        for cut in 0..buf.len() {
+            let err = read_frame(&mut &buf[..cut]).expect_err("prefix must fail");
+            assert!(
+                matches!(err, FrameError::Truncated),
+                "cut at {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_type_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Bye).expect("encode");
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(FrameError::BadMagic(_))
+        ));
+
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(FrameError::BadVersion(99))
+        ));
+
+        let mut bad = buf.clone();
+        bad[6] = 200;
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(FrameError::UnknownType(200))
+        ));
+
+        let mut bad = buf;
+        bad[7] = 1;
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_declared_payload_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Bye).expect("encode");
+        buf[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut buf.as_slice()),
+            Err(FrameError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn element_count_is_validated_before_allocation() {
+        // A SyncUnion claiming 2^31 indices inside a 32-byte payload.
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0);
+        put_u64(&mut payload, 64);
+        put_u32(&mut payload, 1 << 31);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(5);
+        buf.push(0);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        assert!(matches!(
+            read_frame(&mut buf.as_slice()),
+            Err(FrameError::Malformed("element count exceeds payload"))
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_after_payload_are_rejected() {
+        let f = Frame::Abort {
+            reason: "x".to_string(),
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).expect("encode");
+        // Grow the declared length and append a stray byte: the decoder
+        // must notice the frame does not consume its whole payload.
+        let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) + 1;
+        buf[8..12].copy_from_slice(&len.to_le_bytes());
+        buf.push(0xAB);
+        assert!(matches!(
+            read_frame(&mut buf.as_slice()),
+            Err(FrameError::Malformed("trailing bytes after frame payload"))
+        ));
+    }
+
+    #[test]
+    fn score_req_csr_is_validated() {
+        let bad = Frame::ScoreReq {
+            seq: 1,
+            indptr: vec![0, 2, 1],
+            indices: vec![4, 9],
+            values: vec![1.0, 2.0],
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &bad).expect("encode");
+        assert!(matches!(
+            read_frame(&mut buf.as_slice()),
+            Err(FrameError::Malformed("CSR indptr is not non-decreasing"))
+        ));
+    }
+
+    #[test]
+    fn channel_counts_bytes_both_ways() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().expect("accept");
+            let mut chan = Channel::new(stream).expect("server channel");
+            let frame = chan.recv().expect("recv");
+            chan.send(&frame).expect("echo");
+            chan.bytes_received()
+        });
+        let mut chan =
+            Channel::new(TcpStream::connect(addr).expect("connect")).expect("client channel");
+        let f = Frame::SyncUnion {
+            round: 9,
+            next_steps: 64,
+            indices: vec![1, 5, 7],
+        };
+        chan.send(&f).expect("send");
+        assert_eq!(chan.recv().expect("echo back"), f);
+        let server_received = t.join().expect("server thread");
+        assert_eq!(chan.bytes_sent(), server_received);
+        assert_eq!(chan.bytes_received(), server_received);
+    }
+}

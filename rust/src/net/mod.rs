@@ -1,0 +1,34 @@
+//! Cross-node training and serving over plain TCP — dependency-free
+//! (`std::net` only), three layers:
+//!
+//! * [`frame`] — the length-prefixed binary wire format: typed frames
+//!   behind a magic/version header, hard size caps, and structured
+//!   errors (never a panic) on malformed input.
+//! * [`cluster`] — distributed sparse-sync training: a
+//!   [`ClusterCoordinator`] drives the PR 5 touched-union merge round
+//!   over sockets while [`run_worker`] processes train shards locally,
+//!   so a sync round ships O(|U|) bytes instead of O(d). CLI:
+//!   `train --net coordinator:ADDR --net-workers N` /
+//!   `train --net worker:ADDR`.
+//! * [`shard`] — remote serving shards: a [`ShardServer`] owns one
+//!   block-aligned feature range behind a socket, and
+//!   [`RemoteShardModel`] (a [`crate::predict::Predictor`]) fans
+//!   requests out and tree-reduces the partials bitwise-identically to
+//!   the in-process [`crate::predict::ShardedModel`], with stale-shard
+//!   refusal via model versions and bounded per-shard reconnect. CLI:
+//!   `shard --model M --shard I --shards N --addr A` and
+//!   `serve --remote-shards A,B,...`.
+//!
+//! **Trusted networks only.** Like the serve protocol, there is no
+//! authentication or encryption — the hardening here is against
+//! malformed bytes and dropped peers, not adversaries. Bind to
+//! loopback or a private interface; see `DISTRIBUTED.md` for the frame
+//! tables and the failure/reconnect model.
+
+pub mod cluster;
+pub mod frame;
+pub mod shard;
+
+pub use cluster::{run_worker, ClusterCoordinator, NetStats};
+pub use frame::{Channel, Frame, FrameError};
+pub use shard::{RemoteShardModel, ShardServer};

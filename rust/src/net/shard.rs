@@ -1,0 +1,505 @@
+//! Remote serving shards: [`ShardServer`] holds one block-aligned
+//! feature range of a model behind a socket; [`RemoteShardModel`] is a
+//! [`Predictor`] that fans each batch out to N shard servers and
+//! tree-reduces their [`Frame::ScorePartial`] replies.
+//!
+//! ## Bitwise equality with in-process sharding
+//!
+//! Both sides reuse the exact machinery of
+//! [`crate::predict::ShardedModel`]: the server partitions with
+//! `shard_bounds`, slices each row with the same two binary searches,
+//! and runs the same [`block_partials`] kernel; the client reduces with
+//! the shared `reduce_partials` concatenation and the single
+//! [`fold_score`] rounding chain. The socket moves bytes, not floats
+//! through extra arithmetic — so remote scores equal in-process sharded
+//! scores bit for bit, for any shard count.
+//!
+//! ## Staleness and failure
+//!
+//! Every `ScorePartial` carries the model version the server was
+//! started with. The client refuses (a structured error, logged by the
+//! serve layer — never a silently mixed model) any reply whose version
+//! differs from the one it was built against. A transport error on one
+//! shard triggers a bounded reconnect (fresh handshake, then the
+//! stateless request is simply resent); after the retry budget the
+//! batch fails as a whole.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::RowView;
+use crate::loss::Loss;
+use crate::model::LinearModel;
+use crate::predict::sharded::{reduce_partials, shard_bounds, RowPartials};
+use crate::predict::{block_partials, fold_score, Predictor};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{lock_ok, Arc, Mutex};
+
+use super::frame::{Channel, Frame, FrameError, ROLE_CLIENT, ROLE_SHARD};
+
+/// Reconnect backoff schedule: one fresh connection attempt per entry.
+const RECONNECT_BACKOFF: [Duration; 3] = [
+    Duration::from_millis(10),
+    Duration::from_millis(50),
+    Duration::from_millis(250),
+];
+
+/// Poll interval of the non-blocking accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// The immutable state one shard server holds: its weight slice and
+/// identity. Shared read-only across connection handler threads.
+struct ShardState {
+    weights: Vec<f64>,
+    lo: u32,
+    hi: u32,
+    shard: u32,
+    shards: u32,
+    dim: u64,
+    version: u64,
+}
+
+/// A server holding shard `shard` of `shards` for one model version,
+/// answering [`Frame::ScoreReq`] over TCP. Spawned in-process by tests
+/// and benches, or as its own process via the `shard` CLI subcommand.
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start serving `model`'s
+    /// shard `shard` of `shards`. The server copies its weight slice;
+    /// the caller keeps the model.
+    pub fn spawn(
+        model: &LinearModel,
+        shard: usize,
+        shards: usize,
+        addr: &str,
+        version: u64,
+    ) -> Result<ShardServer> {
+        ensure!(shards >= 1, "shard count must be at least 1");
+        ensure!(shard < shards, "shard index {shard} out of range for {shards} shards");
+        let dim = model.dim();
+        let (lo, hi) = shard_bounds(dim, shards, shard);
+        let state = Arc::new(ShardState {
+            weights: model.weights[lo..hi].to_vec(),
+            lo: lo as u32,
+            hi: hi as u32,
+            shard: shard as u32,
+            shards: shards as u32,
+            dim: dim as u64,
+            version,
+        });
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding shard server on {addr}"))?;
+        let local = listener.local_addr().context("shard server local_addr")?;
+        listener.set_nonblocking(true).context("shard server set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            thread::spawn(move || accept_loop(&listener, &state, &stop, &conns))
+        };
+        Ok(ShardServer { addr: local, stop, conns, accept: Some(accept) })
+    }
+
+    /// The bound address (useful after binding port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, unblock and join every connection handler.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Handlers block in `recv`; shutting their streams down turns
+        // the block into an immediate error. The accept loop re-drains
+        // the registry on exit to cover a connection that raced in.
+        for s in lock_ok(self.conns.lock()).drain(..) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    state: &Arc<ShardState>,
+    stop: &AtomicBool,
+    conns: &Arc<Mutex<Vec<TcpStream>>>,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Ok(clone) = stream.try_clone() {
+                    lock_ok(conns.lock()).push(clone);
+                }
+                let state = state.clone();
+                handlers.push(thread::spawn(move || {
+                    match serve_conn(stream, &state) {
+                        // A peer hanging up mid-frame is the normal way
+                        // connections end; anything else is worth a line.
+                        Ok(()) | Err(FrameError::Truncated) => {}
+                        Err(e) => eprintln!("shard {}: connection ended: {e}", state.shard),
+                    }
+                }));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
+            Err(e) => {
+                eprintln!("shard: accept failed: {e}");
+                thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+    // Cover the shutdown race: a connection accepted while the stop
+    // flag was being set registered itself after the external drain.
+    for s in lock_ok(conns.lock()).drain(..) {
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// One client connection: handshake, then `ScoreReq` → `ScorePartial`
+/// until `Bye` or disconnect. Malformed or unexpected frames get an
+/// `Abort` and a close — never a panic.
+fn serve_conn(stream: TcpStream, state: &ShardState) -> Result<(), FrameError> {
+    let mut chan = Channel::new(stream)?;
+    match chan.recv()? {
+        Frame::Hello { role, shard, shards, dim, .. }
+            if role == ROLE_CLIENT
+                && shard == state.shard
+                && shards == state.shards
+                && dim == state.dim => {}
+        Frame::Hello { .. } => {
+            let _ = chan.send(&Frame::Abort {
+                reason: format!(
+                    "handshake mismatch: this server is shard {}/{} of a dim-{} model",
+                    state.shard, state.shards, state.dim
+                ),
+            });
+            return Ok(());
+        }
+        other => {
+            let _ = chan.send(&Frame::Abort {
+                reason: format!("expected Hello, got {}", other.name()),
+            });
+            return Ok(());
+        }
+    }
+    chan.send(&Frame::Hello {
+        role: ROLE_SHARD,
+        shard: state.shard,
+        shards: state.shards,
+        dim: state.dim,
+        examples: 0,
+        version: state.version,
+        penalty: String::new(),
+    })?;
+    loop {
+        match chan.recv() {
+            Ok(Frame::ScoreReq { seq, indptr, indices, values }) => {
+                let rows = score_rows(state, &indptr, &indices, &values);
+                chan.send(&Frame::ScorePartial { seq, version: state.version, rows })?;
+            }
+            Ok(Frame::Bye) => return Ok(()),
+            Ok(other) => {
+                let _ = chan.send(&Frame::Abort {
+                    reason: format!("expected ScoreReq, got {}", other.name()),
+                });
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// The shard's half of the canonical blocked score, row by row — the
+/// same two binary searches and [`block_partials`] call as the
+/// in-process `shard_loop`. Decode already validated the CSR shape and
+/// per-row sort order, so the slices here cannot go out of bounds.
+fn score_rows(
+    state: &ShardState,
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+) -> Vec<RowPartials> {
+    let mut rows = Vec::with_capacity(indptr.len().saturating_sub(1));
+    for w in indptr.windows(2) {
+        let (s, e) = (w[0] as usize, w[1] as usize);
+        let idx = &indices[s..e];
+        let a = idx.partition_point(|&j| j < state.lo);
+        let b = idx.partition_point(|&j| j < state.hi);
+        let slice = RowView { indices: &idx[a..b], values: &values[s + a..s + b] };
+        let mut partials = RowPartials::new();
+        block_partials(slice, &state.weights, state.lo, &mut partials);
+        rows.push(partials);
+    }
+    rows
+}
+
+// ---------------------------------------------------------------- client
+
+/// One persistent connection to a shard server, with its identity for
+/// reconnects and error messages.
+struct ShardConn {
+    addr: String,
+    shard: u32,
+    shards: u32,
+    dim: u64,
+    chan: Channel,
+}
+
+impl ShardConn {
+    fn open(addr: &str, shard: u32, shards: u32, dim: u64) -> Result<ShardConn> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to shard server {addr}"))?;
+        let mut chan = Channel::new(stream)?;
+        chan.send(&Frame::Hello {
+            role: ROLE_CLIENT,
+            shard,
+            shards,
+            dim,
+            examples: 0,
+            version: 0,
+            penalty: String::new(),
+        })?;
+        match chan.recv()? {
+            Frame::Hello { role, shard: s, shards: n, dim: d, .. } if role == ROLE_SHARD => {
+                ensure!(
+                    s == shard && n == shards && d == dim,
+                    "shard server {addr} identifies as shard {s}/{n} of a dim-{d} model, \
+                     expected shard {shard}/{shards} of dim {dim}"
+                );
+            }
+            Frame::Abort { reason } => bail!("shard server {addr} refused the handshake: {reason}"),
+            other => bail!("shard server {addr}: expected Hello, got {}", other.name()),
+        }
+        Ok(ShardConn { addr: addr.to_string(), shard, shards, dim, chan })
+    }
+
+    /// Replace a broken connection: close it, then retry the full
+    /// handshake once per [`RECONNECT_BACKOFF`] entry.
+    fn reopen(&mut self) -> Result<()> {
+        self.chan.shutdown();
+        let mut last: Option<anyhow::Error> = None;
+        for backoff in RECONNECT_BACKOFF {
+            thread::sleep(backoff);
+            match ShardConn::open(&self.addr, self.shard, self.shards, self.dim) {
+                Ok(fresh) => {
+                    self.chan = fresh.chan;
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => Err(e.context(format!(
+                "shard {} at {} unreachable after {} reconnect attempts",
+                self.shard,
+                self.addr,
+                RECONNECT_BACKOFF.len()
+            ))),
+            None => bail!("empty reconnect schedule"),
+        }
+    }
+}
+
+/// A [`Predictor`] whose weight vector lives behind N shard-server
+/// sockets. Scores are bitwise-identical to
+/// [`crate::predict::ShardedModel`] over the same model and shard
+/// count; see the module docs for why. Batches are serialized through
+/// one connection set — the serve pool's coalescer already merges
+/// concurrent requests upstream of this.
+pub struct RemoteShardModel {
+    dim: usize,
+    bias: f64,
+    loss: Loss,
+    version: u64,
+    conns: Mutex<Vec<ShardConn>>,
+    seq: AtomicU64,
+}
+
+impl RemoteShardModel {
+    /// Connect to every address in `addrs` (shard `s` is `addrs[s]`)
+    /// and validate each server's identity against `model`'s shape.
+    /// Versions are checked per reply, not here, so a shard restarted
+    /// with a newer model is caught on the next request.
+    pub fn connect(
+        model: &LinearModel,
+        addrs: &[String],
+        version: u64,
+    ) -> Result<RemoteShardModel> {
+        ensure!(!addrs.is_empty(), "remote shard address list is empty");
+        let dim = model.dim();
+        let shards = addrs.len();
+        let mut conns = Vec::with_capacity(shards);
+        for (s, addr) in addrs.iter().enumerate() {
+            conns.push(ShardConn::open(addr, s as u32, shards as u32, dim as u64)?);
+        }
+        Ok(RemoteShardModel {
+            dim,
+            bias: model.bias,
+            loss: model.loss,
+            version,
+            conns: Mutex::new(conns),
+            seq: AtomicU64::new(1),
+        })
+    }
+
+    /// Number of remote shards.
+    pub fn n_shards(&self) -> usize {
+        lock_ok(self.conns.lock()).len()
+    }
+
+    /// Fan a batch out to every shard and fold the replies. Transport
+    /// errors reconnect and resend (score requests are stateless);
+    /// version or protocol mismatches fail the batch with a structured
+    /// error.
+    fn remote_score_batch(&self, rows: &[RowView<'_>]) -> Result<Vec<f64>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0u32);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for row in rows {
+            indices.extend_from_slice(row.indices);
+            values.extend_from_slice(row.values);
+            let total = u32::try_from(indices.len())
+                .map_err(|_| anyhow::anyhow!("batch exceeds u32 nonzero capacity"))?;
+            indptr.push(total);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let req = Frame::ScoreReq { seq, indptr, indices, values };
+        let mut conns = lock_ok(self.conns.lock());
+        // Phase 1: send to every shard so they compute concurrently.
+        for conn in conns.iter_mut() {
+            if let Err(e) = conn.chan.send(&req) {
+                eprintln!(
+                    "net: shard {} at {}: send failed ({e}); reconnecting",
+                    conn.shard, conn.addr
+                );
+                conn.reopen()?;
+                conn.chan.send(&req)?;
+            }
+        }
+        // Phase 2: collect replies in shard order.
+        let mut per_shard: Vec<Vec<RowPartials>> = Vec::with_capacity(conns.len());
+        for conn in conns.iter_mut() {
+            let reply = match conn.chan.recv() {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!(
+                        "net: shard {} at {}: recv failed ({e}); reconnecting",
+                        conn.shard, conn.addr
+                    );
+                    conn.reopen()?;
+                    conn.chan.send(&req)?;
+                    conn.chan.recv()?
+                }
+            };
+            match reply {
+                Frame::ScorePartial { seq: rseq, version, rows: shard_rows } => {
+                    ensure!(
+                        rseq == seq,
+                        "shard {} at {} answered request {rseq}, expected {seq}",
+                        conn.shard,
+                        conn.addr
+                    );
+                    ensure!(
+                        version == self.version,
+                        "shard {} at {} serves model version {version}, expected {}; \
+                         refusing to mix model versions",
+                        conn.shard,
+                        conn.addr,
+                        self.version
+                    );
+                    ensure!(
+                        shard_rows.len() == rows.len(),
+                        "shard {} at {} returned {} rows for a {}-row request",
+                        conn.shard,
+                        conn.addr,
+                        shard_rows.len(),
+                        rows.len()
+                    );
+                    per_shard.push(shard_rows);
+                }
+                Frame::Abort { reason } => {
+                    bail!("shard {} at {} aborted: {reason}", conn.shard, conn.addr)
+                }
+                other => bail!(
+                    "shard {} at {}: unexpected {} reply",
+                    conn.shard,
+                    conn.addr,
+                    other.name()
+                ),
+            }
+        }
+        drop(conns);
+        let merged = reduce_partials(per_shard);
+        Ok(merged.into_iter().map(|ps| fold_score(self.bias, &ps)).collect())
+    }
+}
+
+impl Predictor for RemoteShardModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.loss
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn score(&self, row: RowView<'_>) -> f64 {
+        self.score_batch(&[row]).first().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Infallible trait surface: a failed batch logs and scores NaN.
+    /// The serve request path uses [`Predictor::try_score_batch`]
+    /// instead, which surfaces the error to the client.
+    fn score_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+        match self.remote_score_batch(rows) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("net: remote shard scoring failed: {e:#}");
+                vec![f64::NAN; rows.len()]
+            }
+        }
+    }
+
+    fn try_score_batch(&self, rows: &[RowView<'_>]) -> Result<Vec<f64>> {
+        self.remote_score_batch(rows)
+    }
+
+    fn try_predict_batch(&self, rows: &[RowView<'_>]) -> Result<Vec<f64>> {
+        let loss = self.loss;
+        Ok(self.remote_score_batch(rows)?.into_iter().map(|z| loss.predict(z)).collect())
+    }
+}

@@ -224,6 +224,24 @@ pub trait Predictor: Send + Sync {
         let rows: Vec<RowView<'_>> = x.rows().collect();
         self.score_batch(&rows)
     }
+
+    /// Fallible [`Predictor::score_batch`]. In-process predictors cannot
+    /// fail, so the default wraps the infallible path; predictors with a
+    /// remote dependency ([`crate::net::RemoteShardModel`]) override
+    /// this to surface transport/staleness errors. The serve request
+    /// path calls the `try_` variants so an upstream failure becomes an
+    /// `err` reply instead of a NaN score.
+    fn try_score_batch(&self, rows: &[RowView<'_>]) -> anyhow::Result<Vec<f64>> {
+        Ok(self.score_batch(rows))
+    }
+
+    /// Fallible [`Predictor::predict_batch`]; see
+    /// [`Predictor::try_score_batch`]. The default delegates to
+    /// `predict_batch` so implementations with a genuine batch path
+    /// (like [`ArtifactBatcher`]) keep their override.
+    fn try_predict_batch(&self, rows: &[RowView<'_>]) -> anyhow::Result<Vec<f64>> {
+        Ok(self.predict_batch(rows))
+    }
 }
 
 /// The native in-process scorer.
@@ -292,6 +310,14 @@ impl<P: Predictor> Predictor for Versioned<P> {
 
     fn predict_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
         self.inner.predict_batch(rows)
+    }
+
+    fn try_score_batch(&self, rows: &[RowView<'_>]) -> anyhow::Result<Vec<f64>> {
+        self.inner.try_score_batch(rows)
+    }
+
+    fn try_predict_batch(&self, rows: &[RowView<'_>]) -> anyhow::Result<Vec<f64>> {
+        self.inner.try_predict_batch(rows)
     }
 }
 

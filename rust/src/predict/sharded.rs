@@ -30,7 +30,42 @@ use crate::model::LinearModel;
 use super::{block_partials, fold_score, Predictor, SCORE_BLOCK};
 
 /// Ordered `(block id, partial sum)` pairs for one row.
-type RowPartials = Vec<(u32, f64)>;
+pub(crate) type RowPartials = Vec<(u32, f64)>;
+
+/// Feature range `[lo, hi)` owned by shard `s` of `n_shards`: block-
+/// aligned so within-block accumulation never crosses a shard. One
+/// formula for both shard threads and remote shard servers
+/// ([`crate::net::ShardServer`]) — bitwise equality between them rests
+/// on partitioning identically.
+pub(crate) fn shard_bounds(dim: usize, n_shards: usize, s: usize) -> (usize, usize) {
+    let block = SCORE_BLOCK as usize;
+    let n_blocks = dim.div_ceil(block);
+    let lo = (s * n_blocks / n_shards * block).min(dim);
+    let hi = ((s + 1) * n_blocks / n_shards * block).min(dim);
+    (lo, hi)
+}
+
+/// Tree-reduce per-shard row results (indexed by shard) into one
+/// per-row block-partial list. Merging two shards concatenates each
+/// row's ordered list — associative, so the tree shape cannot change
+/// the result. Shared by [`ShardedModel`] and the remote
+/// [`crate::net::RemoteShardModel`] so both reduce identically.
+pub(crate) fn reduce_partials(mut layer: Vec<Vec<RowPartials>>) -> Vec<RowPartials> {
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                for (l, r) in left.iter_mut().zip(right) {
+                    l.extend(r);
+                }
+            }
+            next.push(left);
+        }
+        layer = next;
+    }
+    layer.pop().unwrap_or_default()
+}
 
 /// A batch of owned rows, shared with every shard worker.
 ///
@@ -121,12 +156,9 @@ impl ShardedModel {
     pub fn spawn(model: &LinearModel, n_shards: usize, version: u64) -> ShardedModel {
         let n_shards = n_shards.max(1);
         let dim = model.weights.len();
-        let block = SCORE_BLOCK as usize;
-        let n_blocks = dim.div_ceil(block);
         let mut workers = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
-            let lo = (s * n_blocks / n_shards * block).min(dim);
-            let hi = ((s + 1) * n_blocks / n_shards * block).min(dim);
+            let (lo, hi) = shard_bounds(dim, n_shards, s);
             let weights = model.weights[lo..hi].to_vec();
             let (tx, rx) = mpsc::channel::<Job>();
             let handle =
@@ -213,23 +245,7 @@ impl Predictor for ShardedModel {
             return Vec::new();
         }
         let shared = Arc::new(SharedRows::from_views(rows, self.dim));
-        let mut layer = self.broadcast(shared);
-        // Tree-reduce: merging two shards concatenates each row's ordered
-        // block-partial list, so the tree shape cannot change the result.
-        while layer.len() > 1 {
-            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
-            let mut it = layer.into_iter();
-            while let Some(mut left) = it.next() {
-                if let Some(right) = it.next() {
-                    for (l, r) in left.iter_mut().zip(right) {
-                        l.extend(r);
-                    }
-                }
-                next.push(left);
-            }
-            layer = next;
-        }
-        let merged = layer.pop().expect("at least one shard");
+        let merged = reduce_partials(self.broadcast(shared));
         merged.into_iter().map(|ps| fold_score(self.bias, &ps)).collect()
     }
 }

@@ -7,8 +7,17 @@
 //! scores through the shared `Arc<RwLock<Arc<dyn Predictor>>>` slot, so a
 //! `reload` swaps the model for all connections without dropping any.
 //! The predictor is built by [`crate::predict::build`]: in-process native
-//! scoring, or feature-sharded across shard worker threads
-//! ([`ServeOptions::shards`]).
+//! scoring, feature-sharded across shard worker threads
+//! ([`ServeOptions::shards`]), or fanned out to **remote shard servers**
+//! over TCP ([`ServeOptions::remote_shards`], [`crate::net::shard`]) —
+//! bitwise-identical scores by construction, but `reload` is refused
+//! because the weights live in other processes.
+//!
+//! Concurrent single-row `predict` requests from *different
+//! connections* are coalesced into one batched scoring call (at most
+//! [`ServeOptions::batch_max`] rows) by a dynamic leader ([`Coalescer`]),
+//! so point-lookup traffic amortizes per-batch costs the way an explicit
+//! `batch` does, while `stats` latency is still recorded per request.
 //!
 //! Protocol (text, one message per line):
 //!
@@ -58,7 +67,7 @@ use crate::metrics::LatencyHistogram;
 use crate::model::LinearModel;
 use crate::predict::{self, Predictor};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::sync::{lock_ok, Arc, Mutex, RwLock};
+use crate::sync::{lock_ok, mpsc, Arc, Mutex, RwLock};
 
 /// Connections waiting for a worker before the accept loop blocks.
 const ACCEPT_QUEUE_DEPTH: usize = 128;
@@ -100,7 +109,7 @@ const PER_EXAMPLE_LINE_BYTES: usize = 64 << 10;
 const QUEUE_WAIT_LIMIT: std::time::Duration = std::time::Duration::from_secs(30);
 
 /// Serving configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServeOptions {
     /// Feature shards of the weight vector (1 = in-process native).
     pub shards: usize,
@@ -119,11 +128,25 @@ pub struct ServeOptions {
     /// ([`crate::predict::build_f32`]) instead of the bitwise-pinned
     /// f64 path. Unsharded; incompatible with `artifact`.
     pub fast_f32: bool,
+    /// Shard-server addresses to score through over TCP
+    /// ([`crate::net::RemoteShardModel`]), one per feature shard in
+    /// shard order. Non-empty supersedes `shards` (the remote shard
+    /// count is `remote_shards.len()`), excludes `artifact`/`fast_f32`,
+    /// and makes `reload` refuse — the weights live in the shard
+    /// processes, which this server cannot swap.
+    pub remote_shards: Vec<String>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { shards: 1, workers: 4, batch_max: 256, artifact: false, fast_f32: false }
+        ServeOptions {
+            shards: 1,
+            workers: 4,
+            batch_max: 256,
+            artifact: false,
+            fast_f32: false,
+            remote_shards: Vec::new(),
+        }
     }
 }
 
@@ -139,15 +162,29 @@ fn penalty_of(model: &LinearModel) -> Arc<str> {
     }
 }
 
-/// Build the predictor a server (or a `reload`) installs.
-fn build_predictor(model: LinearModel, opts: &ServeOptions, version: u64) -> Arc<dyn Predictor> {
-    if opts.fast_f32 {
+/// Build the predictor a server (or a `reload`) installs. Fallible
+/// because the remote-shard path dials real sockets; the in-process
+/// paths cannot fail.
+fn build_predictor(
+    model: LinearModel,
+    opts: &ServeOptions,
+    version: u64,
+) -> Result<Arc<dyn Predictor>> {
+    if !opts.remote_shards.is_empty() {
+        anyhow::ensure!(
+            !opts.fast_f32 && !opts.artifact,
+            "serve: remote shards score through the pinned f64 path only"
+        );
+        let remote = crate::net::RemoteShardModel::connect(&model, &opts.remote_shards, version)?;
+        return Ok(Arc::new(remote));
+    }
+    Ok(if opts.fast_f32 {
         predict::build_f32(model, opts.shards, version)
     } else if opts.artifact {
         predict::build_with_artifact(model, opts.shards, version)
     } else {
         predict::build(model, opts.shards, version)
-    }
+    })
 }
 
 /// The served model slot: the predictor plus the training provenance of
@@ -170,7 +207,120 @@ struct Shared {
     /// stale ones can be shed.
     queue: BoundedQueue<(Instant, TcpStream)>,
     stop: AtomicBool,
+    /// Cross-connection funnel for single-row `predict` requests.
+    coalesce: Coalescer,
     opts: ServeOptions,
+}
+
+/// A single-row request parked in the [`Coalescer`].
+struct PendingPredict {
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    /// Request arrival, so coalesced scoring still records *per-request*
+    /// latency (queue wait plus its share of the batch) in `stats`.
+    t0: Instant,
+    reply: mpsc::Sender<Option<f64>>,
+}
+
+/// Cross-connection request coalescing. Concurrent single-row `predict`
+/// requests from different connections are drained into one
+/// `predict_batch` call (at most `batch_max` rows) by whichever pool
+/// worker finds no leader active. Under contention this turns N
+/// separate scoring calls into `ceil(N / batch_max)` batch calls —
+/// point-lookup traffic amortizes shard fan-out and lock traffic the
+/// way an explicit `batch` line does — while an uncontended request
+/// degenerates to a batch of one with no added latency.
+struct Coalescer {
+    state: Mutex<CoalesceState>,
+}
+
+struct CoalesceState {
+    pending: Vec<PendingPredict>,
+    /// True while some worker is draining. Cleared under the same lock
+    /// as the emptiness check, so a new arrival either joins a live
+    /// leader's queue or becomes the leader itself — never neither.
+    leader: bool,
+}
+
+impl Coalescer {
+    fn new() -> Coalescer {
+        Coalescer { state: Mutex::new(CoalesceState { pending: Vec::new(), leader: false }) }
+    }
+
+    /// Score one row through the funnel. `None` means the predictor
+    /// failed (remote shards unreachable or stale) or a hot reload
+    /// shrank the model out from under the already-parsed row.
+    fn submit(&self, indices: Vec<u32>, values: Vec<f32>, shared: &Shared) -> Option<f64> {
+        let (tx, rx) = mpsc::channel();
+        let lead = {
+            let mut st = lock_ok(self.state.lock());
+            st.pending.push(PendingPredict { indices, values, t0: Instant::now(), reply: tx });
+            !std::mem::replace(&mut st.leader, true)
+        };
+        if lead {
+            self.drain(shared);
+        }
+        // Every path in `drain` either replies or drops the sender (a
+        // panicking predictor included), so this cannot hang.
+        rx.recv().ok().flatten()
+    }
+
+    fn drain(&self, shared: &Shared) {
+        // If the predictor panics mid-chunk, that chunk's senders drop
+        // (those requests fail cleanly), but the leader flag must not
+        // stay stuck or every later request would park forever.
+        struct Unlead<'a>(&'a Coalescer);
+        impl Drop for Unlead<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    lock_ok(self.0.state.lock()).leader = false;
+                }
+            }
+        }
+        let _unlead = Unlead(self);
+        loop {
+            let chunk: Vec<PendingPredict> = {
+                let mut st = lock_ok(self.state.lock());
+                if st.pending.is_empty() {
+                    st.leader = false; // same lock as the check: no lost leader
+                    return;
+                }
+                let take = st.pending.len().min(shared.opts.batch_max);
+                st.pending.drain(..take).collect()
+            };
+            let predictor = lock_ok(shared.predictor.read()).0.clone();
+            let dim = predictor.dim();
+            // A reload between a request's parse and this drain can
+            // shrink the model; rows that no longer fit must fail
+            // cleanly instead of reaching a predictor that would index
+            // out of range. Dropping their senders does exactly that.
+            let (fit, dropped): (Vec<_>, Vec<_>) = chunk
+                .into_iter()
+                .partition(|p| p.indices.last().is_none_or(|&j| (j as usize) < dim));
+            drop(dropped);
+            if fit.is_empty() {
+                continue;
+            }
+            let rows: Vec<RowView<'_>> =
+                fit.iter().map(|p| RowView { indices: &p.indices, values: &p.values }).collect();
+            match predictor.try_predict_batch(&rows) {
+                Ok(probs) => {
+                    let mut hist = lock_ok(shared.hist.lock());
+                    for (p, prob) in fit.iter().zip(probs) {
+                        hist.record(p.t0.elapsed());
+                        let _ = p.reply.send(Some(prob));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("serve: coalesced predict failed: {e:#}");
+                    for p in &fit {
+                        let _ = p.reply.send(None);
+                    }
+                }
+            }
+        }
+    }
+
 }
 
 /// A running prediction server.
@@ -201,20 +351,22 @@ impl Server {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let penalty = penalty_of(&model);
+        let pool_size = opts.workers;
         let shared = Arc::new(Shared {
-            predictor: RwLock::new((build_predictor(model, &opts, 1), penalty)),
+            predictor: RwLock::new((build_predictor(model, &opts, 1)?, penalty)),
             reload_lock: Mutex::new(()),
             hist: Mutex::new(LatencyHistogram::new()),
             conns: AtomicU64::new(0),
             queue: BoundedQueue::new(ACCEPT_QUEUE_DEPTH),
             stop: AtomicBool::new(false),
+            coalesce: Coalescer::new(),
             opts,
         });
         let accept = {
             let sh = shared.clone();
             std::thread::spawn(move || accept_loop(listener, &sh))
         };
-        let workers = (0..opts.workers)
+        let workers = (0..pool_size)
             .map(|_| {
                 let sh = shared.clone();
                 std::thread::spawn(move || worker_loop(&sh))
@@ -375,14 +527,15 @@ fn dispatch(line: &str, shared: &Shared) -> Dispatch {
 }
 
 fn cmd_predict(rest: &str, shared: &Shared) -> String {
-    let t0 = Instant::now();
-    let predictor = lock_ok(shared.predictor.read()).0.clone();
-    match parse_features(rest, predictor.dim()) {
-        Some((indices, values)) => {
-            let p = predictor.predict(RowView { indices: &indices, values: &values });
-            lock_ok(shared.hist.lock()).record(t0.elapsed());
-            format!("ok {p:.6}")
-        }
+    let dim = lock_ok(shared.predictor.read()).0.dim();
+    match parse_features(rest, dim) {
+        // Scoring (and the per-request latency record) happens inside
+        // the coalescer, batched with whatever concurrent `predict`
+        // requests other connections have in flight.
+        Some((indices, values)) => match shared.coalesce.submit(indices, values, shared) {
+            Some(p) => format!("ok {p:.6}"),
+            None => "err upstream-unavailable".to_string(),
+        },
         None => "err bad-features".to_string(),
     }
 }
@@ -405,7 +558,15 @@ fn cmd_batch(rest: &str, shared: &Shared) -> String {
     }
     let rows: Vec<RowView<'_>> =
         parsed.iter().map(|(i, v)| RowView { indices: i, values: v }).collect();
-    let probs = predictor.predict_batch(&rows);
+    let probs = match predictor.try_predict_batch(&rows) {
+        Ok(probs) => probs,
+        Err(e) => {
+            // Transport detail goes to the server log; the peer learns
+            // only that scoring is down, same shape as `reload-failed`.
+            eprintln!("serve: batch scoring failed: {e:#}");
+            return "err upstream-unavailable".to_string();
+        }
+    };
     // Per-example latency, once per example: `stats` percentiles stay in
     // "one prediction" units across the single-row and batch paths.
     let n = rows.len().max(1) as u32;
@@ -418,6 +579,13 @@ fn cmd_batch(rest: &str, shared: &Shared) -> String {
 }
 
 fn cmd_reload(path: &str, shared: &Shared) -> String {
+    if !shared.opts.remote_shards.is_empty() {
+        // The weights live in the shard processes; swapping only this
+        // server's view would mix model versions across shards, which
+        // the remote predictor exists to refuse. Restart the shard
+        // servers with the new model instead.
+        return "err reload-remote-shards".to_string();
+    }
     match crate::model::io::load(path) {
         Ok(model) => {
             // The reload lock (not the predictor RwLock) serializes
@@ -431,7 +599,13 @@ fn cmd_reload(path: &str, shared: &Shared) -> String {
             let _serialized = lock_ok(shared.reload_lock.lock());
             let version = lock_ok(shared.predictor.read()).0.version() + 1;
             let penalty = penalty_of(&model);
-            let fresh = build_predictor(model, &shared.opts, version);
+            let fresh = match build_predictor(model, &shared.opts, version) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("serve: reload {path:?} rebuild failed: {e:#}");
+                    return "err reload-failed".to_string();
+                }
+            };
             let old =
                 std::mem::replace(&mut *lock_ok(shared.predictor.write()), (fresh, penalty));
             drop(old);
@@ -747,5 +921,133 @@ mod tests {
         let server = Server::spawn_with(model(), "127.0.0.1:0", opts).unwrap();
         assert_eq!(server.worker_count(), 2);
         server.shutdown();
+    }
+
+    /// A `Shared` with no live sockets, for driving the coalescer and
+    /// `dispatch` directly.
+    fn shared_with(pred: Arc<dyn Predictor>, opts: ServeOptions) -> Arc<Shared> {
+        Arc::new(Shared {
+            predictor: RwLock::new((pred, "test".into())),
+            reload_lock: Mutex::new(()),
+            hist: Mutex::new(LatencyHistogram::new()),
+            conns: AtomicU64::new(0),
+            queue: BoundedQueue::new(1),
+            stop: AtomicBool::new(false),
+            coalesce: Coalescer::new(),
+            opts,
+        })
+    }
+
+    #[test]
+    fn coalescer_batches_concurrent_singles() {
+        use crate::sync::Condvar;
+
+        /// Blocks every `score_batch` until released, recording batch
+        /// sizes — so the test can stage requests behind a busy leader.
+        struct Gated {
+            sizes: Mutex<Vec<usize>>,
+            open: Mutex<bool>,
+            cv: Condvar,
+            entered: Mutex<bool>,
+            entered_cv: Condvar,
+        }
+        impl Predictor for Gated {
+            fn dim(&self) -> usize {
+                10
+            }
+            fn loss(&self) -> Loss {
+                Loss::Logistic
+            }
+            fn version(&self) -> u64 {
+                1
+            }
+            fn score(&self, row: RowView<'_>) -> f64 {
+                self.score_batch(&[row])[0]
+            }
+            fn score_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
+                lock_ok(self.sizes.lock()).push(rows.len());
+                *lock_ok(self.entered.lock()) = true;
+                self.entered_cv.notify_all();
+                let mut open = lock_ok(self.open.lock());
+                while !*open {
+                    open = lock_ok(self.cv.wait(open));
+                }
+                vec![0.0; rows.len()]
+            }
+        }
+
+        let gated = Arc::new(Gated {
+            sizes: Mutex::new(Vec::new()),
+            open: Mutex::new(false),
+            cv: Condvar::new(),
+            entered: Mutex::new(false),
+            entered_cv: Condvar::new(),
+        });
+        let shared = shared_with(gated.clone(), ServeOptions::default());
+
+        // Leader: becomes the drainer and blocks inside score_batch on
+        // its own batch of one.
+        let sh = shared.clone();
+        let leader = std::thread::spawn(move || sh.coalesce.submit(vec![3], vec![1.0], &sh));
+        {
+            let mut entered = lock_ok(gated.entered.lock());
+            while !*entered {
+                entered = lock_ok(gated.entered_cv.wait(entered));
+            }
+        }
+
+        // Two followers park behind the busy leader.
+        let followers: Vec<_> = (0..2)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || sh.coalesce.submit(vec![3], vec![1.0], &sh))
+            })
+            .collect();
+        while lock_ok(shared.coalesce.state.lock()).pending.len() < 2 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+
+        // Release: the leader finishes its batch of 1, then drains both
+        // parked requests as one batch of 2.
+        *lock_ok(gated.open.lock()) = true;
+        gated.cv.notify_all();
+        assert!(leader.join().unwrap().is_some());
+        for f in followers {
+            assert!(f.join().unwrap().is_some());
+        }
+        assert_eq!(*lock_ok(gated.sizes.lock()), vec![1, 2]);
+
+        // Latency is still recorded once per request, not per batch.
+        let summary = lock_ok(shared.hist.lock()).summary();
+        assert!(summary.contains("n=3"), "{summary}");
+    }
+
+    #[test]
+    fn coalescer_surfaces_upstream_failure() {
+        struct Failing;
+        impl Predictor for Failing {
+            fn dim(&self) -> usize {
+                10
+            }
+            fn loss(&self) -> Loss {
+                Loss::Logistic
+            }
+            fn version(&self) -> u64 {
+                1
+            }
+            fn score(&self, _row: RowView<'_>) -> f64 {
+                f64::NAN
+            }
+            fn try_predict_batch(&self, _rows: &[RowView<'_>]) -> Result<Vec<f64>> {
+                anyhow::bail!("shards offline")
+            }
+        }
+        let shared = shared_with(Arc::new(Failing), ServeOptions::default());
+        assert!(shared.coalesce.submit(vec![3], vec![1.0], &shared).is_none());
+        // The line protocol maps the failure to an err reply, not a NaN.
+        match dispatch("predict 3:1", &shared) {
+            Dispatch::Reply(r) => assert_eq!(r, "err upstream-unavailable"),
+            Dispatch::Quit => panic!("predict must not quit"),
+        }
     }
 }

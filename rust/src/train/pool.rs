@@ -788,7 +788,9 @@ fn coordinator_loop<T: Trainer>(
 /// ended at `offset` — 0 when training ends there. Sparse mode only,
 /// where every shard has the same length (`n % workers == 0`), so the
 /// answer is worker-independent; drives the coordinated budget flush.
-fn next_round_steps(
+/// Crate-visible: the socket coordinator ([`crate::net::cluster`]) must
+/// make the identical flush decision for remote workers.
+pub(crate) fn next_round_steps(
     n: usize,
     workers: usize,
     interval: usize,

@@ -1,0 +1,209 @@
+//! Multi-process localhost smoke for the `net/` subsystem, through the
+//! real CLI binary:
+//!
+//! * a coordinator process plus two worker processes train over TCP
+//!   with `--merge sparse` on a small Medline-shaped corpus, and the
+//!   saved model matches a single-process `--workers 2 --merge sparse`
+//!   run within 1e-10 (checked by `info --compare --tol`, the same
+//!   scriptable gate CI uses);
+//! * a `shard` child process serves one remote scoring shard, and a
+//!   front end configured with `--remote-shards` returns the same
+//!   predictions as a plain in-process server — while refusing `reload`.
+//!
+//! Every training process is launched with identical data/config flags:
+//! the dataset never crosses the wire, each process regenerates it.
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use lazyreg::serve::{Client, ServeOptions, Server};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::train::{train_lazy, TrainOptions};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_lazyreg")
+}
+
+/// Kill-on-drop child guard: a failed assertion must not leak training
+/// or shard processes into the test harness (or CI runner).
+struct Guard(Child);
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_success(child: &mut Child, limit: Duration, who: &str) {
+    let t0 = Instant::now();
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => {
+                assert!(status.success(), "{who} exited with {status}");
+                return;
+            }
+            None => {
+                assert!(t0.elapsed() < limit, "{who} still running after {limit:?}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Read the child's stdout until a line contains `marker`; return the
+/// whitespace-delimited token right after it (how both the cluster
+/// coordinator and the shard server publish their ephemeral port).
+fn scrape_token(child: &mut Child, marker: &str) -> String {
+    let stdout = child.stdout.take().expect("child stdout piped");
+    let reader = BufReader::new(stdout);
+    for line in reader.lines() {
+        let line = line.expect("child stdout read");
+        if let Some(pos) = line.find(marker) {
+            let token = line[pos + marker.len()..]
+                .split_whitespace()
+                .next()
+                .unwrap_or_else(|| panic!("no token after {marker:?} in {line:?}"))
+                .to_string();
+            // Keep draining in the background so the child can never
+            // block on a full stdout pipe.
+            std::thread::spawn(move || for _ in reader.lines() {});
+            return token;
+        }
+    }
+    panic!("child exited without printing {marker:?}");
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lazyreg_net_dist_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir.join(name)
+}
+
+/// The shared training configuration — identical for the single-process
+/// reference and for every cluster process, so they all regenerate the
+/// same corpus and make the same split. n=600 with the default 10% test
+/// split leaves 540 training examples, divisible by 2 workers (the
+/// equal-shard case the wire protocol requires).
+fn train_args() -> Vec<&'static str> {
+    vec![
+        "--n", "600", "--d", "5000", "--epochs", "2", "--workers", "2", "--merge", "sparse",
+        "--sync-interval", "50", "--seed", "13", "--reg", "enet:1e-4:1e-4",
+    ]
+}
+
+#[test]
+fn multi_process_cluster_training_matches_single_process() {
+    let ref_model = scratch("ref.model");
+    let net_model = scratch("net.model");
+
+    // Single-process reference: the in-process sparse-merge engine.
+    let status = Command::new(bin())
+        .arg("train")
+        .args(train_args())
+        .arg("--save")
+        .arg(&ref_model)
+        .status()
+        .expect("run single-process reference");
+    assert!(status.success(), "reference train exited with {status}");
+
+    // Coordinator on an ephemeral port; scrape the bound address.
+    let coord = Command::new(bin())
+        .arg("train")
+        .args(train_args())
+        .args(["--net", "coordinator:127.0.0.1:0", "--net-workers", "2"])
+        .arg("--save")
+        .arg(&net_model)
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn coordinator");
+    let mut coord = Guard(coord);
+    let addr = scrape_token(&mut coord.0, "workers on ");
+
+    // Two worker processes join the round protocol.
+    let mut workers: Vec<Guard> = (0..2)
+        .map(|w| {
+            let child = Command::new(bin())
+                .arg("train")
+                .args(train_args())
+                .args(["--net", &format!("worker:{addr}")])
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawn worker {w}: {e}"));
+            Guard(child)
+        })
+        .collect();
+
+    let limit = Duration::from_secs(120);
+    for (w, g) in workers.iter_mut().enumerate() {
+        wait_success(&mut g.0, limit, &format!("worker {w}"));
+    }
+    wait_success(&mut coord.0, limit, "coordinator");
+
+    // The scriptable equality gate: exit 0 iff the two saved models
+    // agree within 1e-10 (weights and bias).
+    let compare: ExitStatus = Command::new(bin())
+        .arg("info")
+        .arg("--model")
+        .arg(&ref_model)
+        .arg("--compare")
+        .arg(&net_model)
+        .args(["--tol", "1e-10"])
+        .status()
+        .expect("run info --compare");
+    assert!(compare.success(), "cluster-trained model differs from single-process model");
+}
+
+#[test]
+fn serve_with_remote_shard_process_matches_in_process_scores() {
+    // A quick real model, saved for the shard child process.
+    let data = generate(&BowSpec::tiny(), 7);
+    let report =
+        train_lazy(&data, &TrainOptions { epochs: 1, ..Default::default() }).expect("train");
+    let model_path = scratch("serve.model");
+    lazyreg::model::io::save(&model_path, &report.model).expect("save model");
+
+    // One remote shard in a child process, on an ephemeral port.
+    let shard = Command::new(bin())
+        .arg("shard")
+        .arg("--model")
+        .arg(&model_path)
+        .args(["--shard", "0", "--shards", "1", "--addr", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn shard");
+    let mut shard = Guard(shard);
+    let addr = scrape_token(&mut shard.0, "serving on ");
+
+    // Front end A scores through the child process; front end B holds
+    // the weights in-process.
+    let remote_opts = ServeOptions { remote_shards: vec![addr], ..Default::default() };
+    let remote_srv =
+        Server::spawn_with(report.model.clone(), "127.0.0.1:0", remote_opts).expect("remote serve");
+    let plain_srv = Server::spawn(report.model.clone(), "127.0.0.1:0").expect("plain serve");
+
+    let mut rc = Client::connect(remote_srv.addr()).expect("connect remote");
+    let mut pc = Client::connect(plain_srv.addr()).expect("connect plain");
+    let examples: Vec<Vec<(u32, f32)>> =
+        vec![vec![(3, 1.0)], vec![(40, 2.0), (1_999, -1.0)], vec![]];
+    for ex in &examples {
+        let remote = rc.predict(ex).expect("remote predict");
+        let plain = pc.predict(ex).expect("plain predict");
+        assert_eq!(remote, plain, "{ex:?}");
+    }
+
+    // Hot reload is refused while remote shards are configured: the
+    // weights live in the shard process, which this server cannot swap.
+    let err = rc.reload(model_path.to_str().expect("utf8 path")).expect_err("reload must refuse");
+    assert!(err.to_string().contains("reload-remote-shards"), "{err:#}");
+
+    rc.quit().expect("quit");
+    remote_srv.shutdown();
+    plain_srv.shutdown();
+    drop(shard);
+}

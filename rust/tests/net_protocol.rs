@@ -1,0 +1,375 @@
+//! The `net/` subsystem against its promises, in one process:
+//!
+//! * frame codec round-trips every frame type over randomized payloads,
+//!   and rejects truncated / oversized / wrong-magic / wrong-version /
+//!   malformed bytes with a structured error (never a panic, and — all
+//!   decoding here runs over in-memory slices — never a hang);
+//! * remote shard scoring is bitwise-identical to the in-process
+//!   predictor at shard counts {1, 2, 7} (7 > the block count, so some
+//!   shards own no blocks at all);
+//! * a stale shard (model-version mismatch) is refused, not mixed in;
+//! * a shard connection survives its server restarting (bounded
+//!   retry/backoff reconnect);
+//! * socket-coordinated sparse-merge training matches the in-process
+//!   `--merge sparse` engine within 1e-10.
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
+use lazyreg::data::RowView;
+use lazyreg::loss::Loss;
+use lazyreg::model::LinearModel;
+use lazyreg::net::frame::{read_frame, write_frame, Frame, FrameError, MAX_PAYLOAD};
+use lazyreg::net::{run_worker, ClusterCoordinator, RemoteShardModel, ShardServer};
+use lazyreg::optim::Regularizer;
+use lazyreg::predict::{self, Predictor};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::train::{train_parallel, MergeMode, TrainOptions};
+use lazyreg::util::Rng;
+
+// ---------------------------------------------------------------- codec
+
+fn sorted_indices(rng: &mut Rng, max_len: usize, dim: u32) -> Vec<u32> {
+    let len = rng.index(max_len + 1);
+    let mut v: Vec<u32> = (0..len).map(|_| rng.below(dim as u64) as u32).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn values_for(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// One randomized instance of every frame type.
+fn random_frames(rng: &mut Rng) -> Vec<Frame> {
+    let dim = 1 + rng.below(100_000) as u32;
+
+    let push_idx = sorted_indices(rng, 40, dim);
+    let push_vals = values_for(rng, push_idx.len());
+    let merged_idx = sorted_indices(rng, 40, dim);
+    let merged_vals = values_for(rng, merged_idx.len());
+    let model_idx = sorted_indices(rng, 40, dim);
+    let model_vals = values_for(rng, model_idx.len());
+
+    // A small CSR slice: sorted indices within each row.
+    let n_rows = rng.index(5);
+    let mut indptr = vec![0u32];
+    let mut csr_idx = Vec::new();
+    let mut csr_vals = Vec::new();
+    for _ in 0..n_rows {
+        let row = sorted_indices(rng, 12, dim);
+        for &j in &row {
+            csr_idx.push(j);
+            csr_vals.push(rng.f32());
+        }
+        indptr.push(csr_idx.len() as u32);
+    }
+
+    let partial_rows: Vec<Vec<(u32, f64)>> = (0..rng.index(4))
+        .map(|_| (0..rng.index(6)).map(|_| (rng.below(64) as u32, rng.normal())).collect())
+        .collect();
+
+    vec![
+        Frame::Hello {
+            role: 1 + rng.below(4) as u8,
+            shard: rng.below(8) as u32,
+            shards: 1 + rng.below(8) as u32,
+            dim: dim as u64,
+            examples: rng.below(1 << 20),
+            version: rng.below(10),
+            penalty: "enet:1e-5:1e-5".to_string(),
+        },
+        Frame::Bye,
+        Frame::Abort { reason: "synthetic refusal".to_string() },
+        Frame::SyncPush {
+            round: rng.below(1 << 30),
+            examples: rng.below(1 << 16),
+            loss: rng.normal(),
+            bias: rng.normal(),
+            indices: push_idx,
+            values: push_vals,
+        },
+        Frame::SyncUnion {
+            round: rng.below(1 << 30),
+            next_steps: rng.below(1 << 16),
+            indices: sorted_indices(rng, 40, dim),
+        },
+        Frame::SyncVals {
+            round: rng.below(1 << 30),
+            pressure: rng.bool(0.5),
+            objective: if rng.bool(0.5) { Some(rng.normal()) } else { None },
+            values: values_for(rng, rng.index(40)),
+        },
+        Frame::SyncMerged {
+            round: rng.below(1 << 30),
+            flush: rng.bool(0.5),
+            want_objective: rng.bool(0.5),
+            bias: rng.normal(),
+            indices: merged_idx,
+            values: merged_vals,
+        },
+        Frame::ScoreReq { seq: rng.below(1 << 40), indptr, indices: csr_idx, values: csr_vals },
+        Frame::ScorePartial {
+            seq: rng.below(1 << 40),
+            version: rng.below(10),
+            rows: partial_rows,
+        },
+        Frame::ModelReq,
+        Frame::Model {
+            dim: dim as u64,
+            bias: rng.normal(),
+            rebases: rng.below(100),
+            penalty: "tg:0.01:10:1.5".to_string(),
+            indices: model_idx,
+            values: model_vals,
+        },
+    ]
+}
+
+#[test]
+fn every_frame_type_round_trips_over_random_payloads() {
+    let mut rng = Rng::new(0xF4A3E);
+    for case in 0..50 {
+        for frame in random_frames(&mut rng) {
+            let mut buf = Vec::new();
+            let written = write_frame(&mut buf, &frame)
+                .unwrap_or_else(|e| panic!("case {case}: encode {}: {e}", frame.name()));
+            assert_eq!(written, buf.len() as u64);
+            let (decoded, read) = read_frame(&mut buf.as_slice())
+                .unwrap_or_else(|e| panic!("case {case}: decode {}: {e}", frame.name()));
+            assert_eq!(read, written);
+            assert_eq!(decoded, frame, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn every_truncation_of_every_frame_type_is_a_structured_error() {
+    let mut rng = Rng::new(0x7D06);
+    for frame in random_frames(&mut rng) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).expect("encode");
+        for cut in 0..buf.len() {
+            match read_frame(&mut &buf[..cut]) {
+                Err(FrameError::Truncated) => {}
+                other => panic!(
+                    "{} cut at {cut}/{}: expected Truncated, got {other:?}",
+                    frame.name(),
+                    buf.len()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupted_headers_are_rejected_with_the_specific_error() {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &Frame::Bye).expect("encode");
+
+    let mut bad_magic = buf.clone();
+    bad_magic[0] = b'X';
+    assert!(matches!(read_frame(&mut bad_magic.as_slice()), Err(FrameError::BadMagic(_))));
+
+    let mut bad_version = buf.clone();
+    bad_version[4] = 0xFF;
+    bad_version[5] = 0xFF;
+    assert!(matches!(
+        read_frame(&mut bad_version.as_slice()),
+        Err(FrameError::BadVersion(0xFFFF))
+    ));
+
+    let mut bad_type = buf.clone();
+    bad_type[6] = 200;
+    assert!(matches!(read_frame(&mut bad_type.as_slice()), Err(FrameError::UnknownType(200))));
+
+    // A header *declaring* an oversized payload is refused before any
+    // allocation or read of the payload itself.
+    let mut oversized = buf.clone();
+    let len = (MAX_PAYLOAD as u32) + 1;
+    oversized[8..12].copy_from_slice(&len.to_le_bytes());
+    assert!(matches!(
+        read_frame(&mut oversized.as_slice()),
+        Err(FrameError::Oversized { .. })
+    ));
+}
+
+#[test]
+fn structurally_invalid_payloads_are_malformed_not_panics() {
+    // Unsorted sync indices: encodable (the encoder checks only length
+    // pairing), but the decoder must refuse them — the trainers index
+    // slots straight off these lists.
+    let mut buf = Vec::new();
+    let unsorted = Frame::SyncUnion { round: 0, next_steps: 1, indices: vec![5, 3] };
+    write_frame(&mut buf, &unsorted).expect("encode");
+    assert!(matches!(read_frame(&mut buf.as_slice()), Err(FrameError::Malformed(_))));
+
+    // A CSR slice whose row indices are unsorted is equally refused, so
+    // the shard server's binary searches stay in bounds.
+    let mut buf = Vec::new();
+    let bad_csr = Frame::ScoreReq {
+        seq: 1,
+        indptr: vec![0, 2],
+        indices: vec![9, 2],
+        values: vec![1.0, 1.0],
+    };
+    write_frame(&mut buf, &bad_csr).expect("encode");
+    assert!(matches!(read_frame(&mut buf.as_slice()), Err(FrameError::Malformed(_))));
+}
+
+// ------------------------------------------------------- remote shards
+
+/// A model wide enough for 3 score blocks (dim 10_000, block 4096), so
+/// 7 shards leave some shards with no blocks at all.
+fn random_model(d: usize, seed: u64) -> LinearModel {
+    let mut rng = Rng::new(seed);
+    let mut m = LinearModel::zeros(d, Loss::Logistic);
+    for w in m.weights.iter_mut() {
+        if rng.bool(0.3) {
+            *w = rng.normal();
+        }
+    }
+    m.bias = rng.normal();
+    m
+}
+
+fn random_rows(d: usize, n: usize, seed: u64) -> Vec<(Vec<u32>, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = sorted_indices(&mut rng, 30, d as u32);
+        let vals = idx.iter().map(|_| rng.f32()).collect();
+        rows.push((idx, vals));
+    }
+    // Degenerate rows ride along: empty, and one touching both ends.
+    rows.push((Vec::new(), Vec::new()));
+    rows.push((vec![0, (d - 1) as u32], vec![1.0, -1.0]));
+    rows
+}
+
+#[test]
+fn remote_shard_scoring_is_bitwise_identical_to_in_process() {
+    let d = 10_000;
+    let model = random_model(d, 0xA11CE);
+    let examples = random_rows(d, 20, 0xB0B);
+    let rows: Vec<RowView<'_>> =
+        examples.iter().map(|(i, v)| RowView { indices: i, values: v }).collect();
+
+    for &shards in &[1usize, 2, 7] {
+        let servers: Vec<ShardServer> = (0..shards)
+            .map(|s| {
+                ShardServer::spawn(&model, s, shards, "127.0.0.1:0", 1)
+                    .unwrap_or_else(|e| panic!("spawn shard {s}/{shards}: {e:#}"))
+            })
+            .collect();
+        let addrs: Vec<String> = servers.iter().map(|s| s.addr().to_string()).collect();
+
+        let remote = RemoteShardModel::connect(&model, &addrs, 1)
+            .unwrap_or_else(|e| panic!("connect {shards} shards: {e:#}"));
+        let local = predict::build(model.clone(), shards, 1);
+
+        let want = local.score_batch(&rows);
+        let got = remote.try_score_batch(&rows).expect("remote scoring");
+        assert_eq!(got.len(), want.len());
+        for (r, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "shards={shards} row {r}: remote {g:?} != local {w:?}"
+            );
+        }
+        // Empty batches are legal frames too.
+        assert!(remote.try_score_batch(&[]).expect("empty batch").is_empty());
+
+        for s in servers {
+            s.shutdown();
+        }
+    }
+}
+
+#[test]
+fn stale_shard_version_is_refused_not_mixed() {
+    let d = 5_000;
+    let model = random_model(d, 0x57A1E);
+    // Server believes it holds version 2; the front end expects 1.
+    let server = ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 2).expect("spawn");
+    let addrs = vec![server.addr().to_string()];
+    let remote = RemoteShardModel::connect(&model, &addrs, 1).expect("connect");
+
+    let row = (vec![3u32, 17], vec![1.0f32, 2.0]);
+    let rows = [RowView { indices: &row.0, values: &row.1 }];
+    let err = remote.try_score_batch(&rows).expect_err("stale shard must refuse");
+    assert!(err.to_string().contains("version"), "unexpected error: {err:#}");
+    // The infallible trait path degrades to NaN instead of panicking.
+    assert!(remote.score(rows[0]).is_nan());
+    server.shutdown();
+}
+
+#[test]
+fn shard_connection_reconnects_after_server_restart() {
+    let d = 5_000;
+    let model = random_model(d, 0xDEAD);
+    let server = ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 1).expect("spawn");
+    let addr = server.addr().to_string();
+    let remote = RemoteShardModel::connect(&model, &[addr.clone()], 1).expect("connect");
+
+    let row = (vec![5u32, 4_000], vec![1.5f32, -0.5]);
+    let rows = [RowView { indices: &row.0, values: &row.1 }];
+    let before = remote.try_score_batch(&rows).expect("first score");
+
+    // Kill the server, restart it on the same port (std listeners set
+    // SO_REUSEADDR on unix), and score again: the per-shard reconnect
+    // with bounded backoff must recover without a new `connect`.
+    server.shutdown();
+    let revived = ShardServer::spawn(&model, 0, 1, &addr, 1).expect("respawn");
+    let after = remote.try_score_batch(&rows).expect("score after restart");
+    assert_eq!(before[0].to_bits(), after[0].to_bits());
+    revived.shutdown();
+}
+
+// ------------------------------------------------- distributed training
+
+#[test]
+fn tcp_cluster_matches_in_process_sparse_merge() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let opts = TrainOptions {
+        epochs: 2,
+        workers: 2,
+        merge: MergeMode::Sparse,
+        sync_interval: Some(50),
+        reg: Regularizer::elastic_net(1e-4, 1e-4),
+        seed: 13,
+        ..Default::default()
+    };
+    let reference = train_parallel(&data, &opts).expect("in-process sparse");
+
+    let coord = ClusterCoordinator::bind("127.0.0.1:0", 2).expect("bind");
+    let addr = coord.addr().to_string();
+    let (report, stats) = std::thread::scope(|s| {
+        for w in 0..2 {
+            let addr = addr.clone();
+            let data = &data;
+            let opts = &opts;
+            s.spawn(move || {
+                run_worker(&addr, data.x(), data.labels(), opts)
+                    .unwrap_or_else(|e| panic!("worker {w}: {e:#}"))
+            });
+        }
+        coord.run(data.x(), data.labels(), &opts).expect("coordinator")
+    });
+
+    let diff = report.model.max_weight_diff(&reference.model);
+    assert!(diff < 1e-10, "tcp vs in-process sparse merge: weight diff {diff}");
+    assert!((report.model.bias - reference.model.bias).abs() < 1e-10);
+    assert_eq!(report.penalty, reference.penalty);
+    assert_eq!(report.examples, reference.examples);
+    assert_eq!(report.epochs.len(), reference.epochs.len());
+    for (a, b) in report.epochs.iter().zip(reference.epochs.iter()) {
+        assert!((a.mean_loss - b.mean_loss).abs() < 1e-9, "{} vs {}", a.mean_loss, b.mean_loss);
+        assert!((a.objective - b.objective).abs() < 1e-9);
+        assert!(a.touched_frac > 0.0, "sparse rounds must report touched fractions");
+    }
+    assert!(stats.rounds > 0);
+    assert!(stats.bytes_per_round() > 0, "sync rounds must ship bytes");
+}

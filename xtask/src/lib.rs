@@ -20,10 +20,12 @@
 //!   arguments (see `CONCURRENCY.md`). Everywhere else the default is
 //!   `SeqCst`: coordination code is never hot enough to justify a
 //!   relaxed-ordering proof obligation.
-//! * **`serve-unwrap`** — no `.unwrap()` on the serving request path
-//!   (`rust/src/serve/`, up to its `#[cfg(test)]` module). A handler
-//!   panic must degrade to an error response, not poison the server's
-//!   shared locks; use `crate::sync::lock_ok` / explicit handling.
+//! * **`serve-unwrap`** — no `.unwrap()` or `.expect(` on the request
+//!   paths (`rust/src/serve/` and `rust/src/net/`, each up to its
+//!   `#[cfg(test)]` module). A handler panic must degrade to an error
+//!   response — and on the binary wire path a panic tears down a whole
+//!   training cluster or scoring fan-out, not just one request; use
+//!   `crate::sync::lock_ok` / explicit handling.
 //! * **`f32-optin`** — the f32 fast-path kernels (`shrink_f32`,
 //!   `blocked_score_f32`, `build_f32`) may only be called from files
 //!   that mention the `fast_f32` opt-in flag, and the pinned defaults
@@ -234,9 +236,9 @@ fn rel_key(root: &Path, file: &Path) -> String {
 struct NeedleRule {
     name: &'static str,
     needles: &'static [&'static str],
-    /// Only scan files whose relative path starts with this prefix
-    /// (empty = all files).
-    scope: &'static str,
+    /// Only scan files whose relative path starts with one of these
+    /// prefixes (empty slice = all files).
+    scopes: &'static [&'static str],
     /// Skip files whose relative path contains any of these fragments.
     exempt: &'static [&'static str],
     /// Stop scanning a file at its first `#[cfg(test)]` line (test code
@@ -249,7 +251,7 @@ const NEEDLE_RULES: &[NeedleRule] = &[
     NeedleRule {
         name: "std-sync",
         needles: &["std::sync"],
-        scope: "",
+        scopes: &[],
         exempt: &["sync/"],
         stop_at_cfg_test: false,
         message: "`std::sync` outside the sync facade — import from `crate::sync` so \
@@ -258,7 +260,7 @@ const NEEDLE_RULES: &[NeedleRule] = &[
     NeedleRule {
         name: "float-partial-cmp",
         needles: &["partial_cmp"],
-        scope: "",
+        scopes: &[],
         exempt: &["eval/"],
         stop_at_cfg_test: false,
         message: "`partial_cmp` on floats panics/misorders on NaN — use `f64::total_cmp` \
@@ -267,7 +269,7 @@ const NEEDLE_RULES: &[NeedleRule] = &[
     NeedleRule {
         name: "relaxed-ordering",
         needles: &["Relaxed"],
-        scope: "",
+        scopes: &[],
         exempt: &["train/hogwild.rs", "sync/hogwild_cell.rs"],
         stop_at_cfg_test: false,
         message: "`Ordering::Relaxed` outside the audited hogwild files — use SeqCst, or \
@@ -275,12 +277,13 @@ const NEEDLE_RULES: &[NeedleRule] = &[
     },
     NeedleRule {
         name: "serve-unwrap",
-        needles: &[".unwrap()"],
-        scope: "serve/",
+        needles: &[".unwrap()", ".expect("],
+        scopes: &["serve/", "net/"],
         exempt: &[],
         stop_at_cfg_test: true,
-        message: "`.unwrap()` on the serving request path — a poisoned lock or bad input \
-                  must degrade to an error response (use `crate::sync::lock_ok` or match)",
+        message: "panic on the serving/wire request path — a poisoned lock, bad input, or \
+                  malformed frame must degrade to an error response, not tear the process \
+                  down (use `crate::sync::lock_ok`, `FrameError`, or match)",
     },
 ];
 
@@ -313,7 +316,7 @@ pub fn run_lints(repo_root: &Path) -> io::Result<Report> {
         let raw_lines: Vec<&str> = raw.lines().collect();
 
         for rule in NEEDLE_RULES {
-            if !rel.starts_with(rule.scope) {
+            if !(rule.scopes.is_empty() || rule.scopes.iter().any(|s| rel.starts_with(s))) {
                 continue;
             }
             if rule.exempt.iter().any(|e| rel.contains(e)) {

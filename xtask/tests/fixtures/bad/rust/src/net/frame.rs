@@ -1,0 +1,16 @@
+//! Fixture: an `.expect(` on the wire path (before the test module)
+//! must fire serve-unwrap; the unwrap inside `#[cfg(test)]` must not.
+
+pub fn read_header(buf: &[u8]) -> u32 {
+    let bytes: [u8; 4] = buf[..4].try_into().expect("short header");
+    u32::from_le_bytes(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

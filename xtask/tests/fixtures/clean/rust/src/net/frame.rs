@@ -1,0 +1,18 @@
+//! Fixture: the wire path returns structured errors instead of
+//! panicking; unwraps only inside the test module.
+
+pub fn read_header(buf: &[u8]) -> Result<u32, &'static str> {
+    match buf.get(..4) {
+        Some(b) => Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+        None => Err("truncated header"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -45,6 +45,14 @@ fn bad_fixture_trips_every_rule_exactly_where_seeded() {
         .collect();
     assert_eq!(serve_unwraps, vec![6], "exactly the pre-#[cfg(test)] unwrap: {hits:?}");
 
+    // net/frame.rs: the wire-path `.expect(`, not the test-module unwrap.
+    let net_panics: Vec<usize> = hits
+        .iter()
+        .filter(|(f, r, _)| f == "frame.rs" && *r == "serve-unwrap")
+        .map(|&(_, _, l)| l)
+        .collect();
+    assert_eq!(net_panics, vec![5], "exactly the pre-#[cfg(test)] expect: {hits:?}");
+
     // Both pinned defaults are missing/flipped (line 0 = file-level).
     let pin_files: Vec<&str> = hits
         .iter()
@@ -53,7 +61,7 @@ fn bad_fixture_trips_every_rule_exactly_where_seeded() {
         .collect();
     assert_eq!(pin_files, vec!["mod.rs", "options.rs"], "{hits:?}");
 
-    assert_eq!(report.violations.len(), 8, "no extra violations: {hits:?}");
+    assert_eq!(report.violations.len(), 9, "no extra violations: {hits:?}");
 }
 
 #[test]
@@ -64,7 +72,7 @@ fn clean_fixture_passes_including_escape_marker_and_gated_f32() {
         "clean fixture must pass: {:?}",
         report.violations
     );
-    assert_eq!(report.files_scanned, 3);
+    assert_eq!(report.files_scanned, 4);
 }
 
 #[test]
