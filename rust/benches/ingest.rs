@@ -1,0 +1,175 @@
+//! E11 — ingest: libsvm text parse vs `LZBC` binary cache load.
+//!
+//! A Medline-shaped corpus (d = 260,941, ~88 nonzeros/row) is written
+//! to libsvm text once; the bench then times (a) the streaming text
+//! parse ([`lazyreg::data::libsvm`]) and (b) the zero-parse cache load
+//! ([`lazyreg::data::cache`]) over the same bytes, and checks the two
+//! paths produce *equal* datasets — a fast loader that loads something
+//! else would be worthless. The PR 9 acceptance bar is cache-load ≥ 5x
+//! the parse.
+//!
+//! Peak memory is reported through the `VmHWM` high-water mark from
+//! `/proc/self/status` (a proxy: the kernel's per-process peak, sampled
+//! after each phase — the cache phase runs first so the parse phase's
+//! transient tokenizer allocations show up as HWM growth). On platforms
+//! without procfs the column reads `-`.
+//!
+//! `cargo bench --bench ingest`            human-readable table
+//! `cargo bench --bench ingest -- --json`  one JSON record per mode,
+//!     shaped like `parallel_scaling` rows (also env LAZYREG_BENCH_JSON)
+//!
+//! Env knobs: LAZYREG_BENCH_N (rows), LAZYREG_BENCH_REPS (timed reps per
+//! mode), LAZYREG_BENCH_FAST=1 (CI smoke).
+
+use std::time::Instant;
+
+use lazyreg::data::{cache, libsvm, SparseDataset};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::util::fmt;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// `VmHWM` (peak resident set, kB) from procfs; `None` off Linux.
+fn vm_hwm_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+struct Cell {
+    mode: &'static str,
+    seconds: f64,
+    rows_per_sec: f64,
+    mb_per_sec: f64,
+    vm_hwm_kb: Option<u64>,
+}
+
+impl Cell {
+    fn json(&self, n: usize, d: usize, nnz: usize) -> String {
+        format!(
+            "{{\"bench\":\"ingest\",\"mode\":\"{}\",\"n\":{},\"d\":{},\"nnz\":{},\
+             \"seconds\":{:.6},\"rows_per_sec\":{:.1},\"mb_per_sec\":{:.2},\
+             \"vm_hwm_kb\":{}}}",
+            self.mode,
+            n,
+            d,
+            nnz,
+            self.seconds,
+            self.rows_per_sec,
+            self.mb_per_sec,
+            self.vm_hwm_kb.map_or("null".into(), |k| k.to_string()),
+        )
+    }
+}
+
+fn time_reps<F: FnMut() -> anyhow::Result<SparseDataset>>(
+    reps: usize,
+    mut f: F,
+) -> anyhow::Result<(f64, SparseDataset)> {
+    // One warm-load outside the clock fills the page cache, so both
+    // modes measure decode work, not first-touch disk latency.
+    let mut out = f()?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        out = f()?;
+    }
+    Ok((t0.elapsed().as_secs_f64() / reps as f64, out))
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("LAZYREG_BENCH_FAST").is_ok();
+    let json = std::env::args().any(|a| a == "--json")
+        || std::env::var("LAZYREG_BENCH_JSON").is_ok();
+    let n = env_usize("LAZYREG_BENCH_N", if fast { 2_000 } else { 20_000 });
+    let reps = env_usize("LAZYREG_BENCH_REPS", if fast { 2 } else { 3 });
+
+    // The paper's Medline shape: wide and sparse.
+    let spec = BowSpec { n_examples: n, n_features: 260_941, avg_nnz: 88.0, ..Default::default() };
+    let data = generate(&spec, 17);
+    let stats = data.stats();
+
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let src = dir.join(format!("lazyreg_ingest_bench_{pid}.svm"));
+    libsvm::write_file(&src, &data)?;
+    let src_bytes = std::fs::metadata(&src)?.len();
+    let cache_path = cache::default_path(&src);
+    cache::write_file(&cache_path, &data, cache::stamp_of(&src)?)
+        .map_err(anyhow::Error::new)?;
+    let cache_bytes = std::fs::metadata(&cache_path)?.len();
+
+    if !json {
+        println!(
+            "\n## E11 — ingest (n={}, d={}, nnz={}, text {} / cache {} bytes, {} reps)",
+            fmt::count(stats.n_examples as u64),
+            fmt::count(stats.n_features as u64),
+            fmt::count(stats.nnz as u64),
+            fmt::count(src_bytes),
+            fmt::count(cache_bytes),
+            reps
+        );
+    }
+
+    // Cache first: its HWM sample then excludes the parser's transient
+    // allocations (see module docs).
+    let (load_s, loaded) = time_reps(reps, || {
+        let (d, _) = cache::read_file(&cache_path).map_err(anyhow::Error::new)?;
+        Ok(d)
+    })?;
+    let load_hwm = vm_hwm_kb();
+    let (parse_s, parsed) = time_reps(reps, || libsvm::read_file(&src, None))?;
+    let parse_hwm = vm_hwm_kb();
+
+    // A fast loader that loads the wrong thing is worthless.
+    anyhow::ensure!(loaded == data, "cache load must equal the generated dataset");
+    anyhow::ensure!(parsed == data, "libsvm parse must equal the generated dataset");
+
+    let cells = [
+        Cell {
+            mode: "cache-load",
+            seconds: load_s,
+            rows_per_sec: n as f64 / load_s,
+            mb_per_sec: cache_bytes as f64 / 1e6 / load_s,
+            vm_hwm_kb: load_hwm,
+        },
+        Cell {
+            mode: "libsvm-parse",
+            seconds: parse_s,
+            rows_per_sec: n as f64 / parse_s,
+            mb_per_sec: src_bytes as f64 / 1e6 / parse_s,
+            vm_hwm_kb: parse_hwm,
+        },
+    ];
+
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_file(&cache_path);
+
+    if json {
+        for c in &cells {
+            println!("{}", c.json(n, stats.n_features, stats.nnz));
+        }
+        return Ok(());
+    }
+
+    let mut table = fmt::Table::new(["mode", "seconds", "rows/s", "MB/s", "VmHWM"]);
+    for c in &cells {
+        table.row([
+            c.mode.to_string(),
+            format!("{:.4}", c.seconds),
+            fmt::rate(c.rows_per_sec, "row"),
+            format!("{:.1}", c.mb_per_sec),
+            c.vm_hwm_kb.map_or("-".into(), |k| format!("{} kB", fmt::count(k))),
+        ]);
+    }
+    println!("{}", table.render());
+    let speedup = parse_s / load_s;
+    println!(
+        "cache-load vs libsvm-parse: {:.2}x {} | cache/text bytes: {:.0}%",
+        speedup,
+        if speedup >= 5.0 { "(>= 5x: PASS)" } else { "(< 5x)" },
+        cache_bytes as f64 / src_bytes as f64 * 100.0
+    );
+    Ok(())
+}

@@ -10,9 +10,10 @@
 //!
 //! A second, in-process cell compares the scoring kernels themselves —
 //! the canonical f64 blocked reduction vs the opt-in f32 fast path
-//! ([`lazyreg::predict::build_f32`]) — with no protocol or socket in the
-//! way, so the kernel ratio is honest (the PR 6 acceptance bar is
-//! f32 ≥ 1.5x f64).
+//! ([`lazyreg::predict::build_f32`]) and the nonzero-support merge-join
+//! ([`lazyreg::predict::build_sparse`], bitwise-equal to f64 by
+//! construction) — with no protocol or socket in the way, so the kernel
+//! ratios are honest (the PR 6 acceptance bar is f32 ≥ 1.5x f64).
 //!
 //! A `remote` row replays the same workload through a `net/` scoring
 //! shard ([`lazyreg::net::ShardServer`] on localhost): the front end
@@ -188,23 +189,34 @@ fn main() -> anyhow::Result<()> {
         let rate = (reps * rows.len()) as f64 / t0.elapsed().as_secs_f64();
         (rate, sink)
     };
+    let sparse_pred = lazyreg::predict::build_sparse(model.clone(), 1, 1);
     let (r64, s64) = kernel_rate(&f64_pred);
     let (r32, s32) = kernel_rate(&f32_pred);
-    // The two kernels score the same model: sanity-check agreement so a
-    // broken fast path can't post a fraudulent speedup.
+    let (rsp, ssp) = kernel_rate(&sparse_pred);
+    // The kernels score the same model: sanity-check agreement so a
+    // broken fast path can't post a fraudulent speedup. The sparse
+    // merge-join is bitwise-equal to f64 by construction — hold it to
+    // exactly that.
     let denom = s64.abs().max(1.0);
     anyhow::ensure!(
         (s64 - s32).abs() / denom < 1e-3,
         "f32 kernel disagrees with f64: {s64} vs {s32}"
     );
+    anyhow::ensure!(
+        ssp.to_bits() == s64.to_bits(),
+        "sparse-model kernel must be bitwise-equal to f64: {ssp} vs {s64}"
+    );
     println!(
-        "kernel-only (in-process, d={}, {} scores): f64 {} | f32 {} | f32/f64 {:.2}x {}",
+        "kernel-only (in-process, d={}, {} scores): f64 {} | f32 {} | f32/f64 {:.2}x {} | \
+         sparse-model {} ({:.2}x, bitwise = f64)",
         fmt::count(dim as u64),
         fmt::count((reps * rows.len()) as u64),
         fmt::rate(r64, "ex"),
         fmt::rate(r32, "ex"),
         r32 / r64,
-        if r32 >= 1.5 * r64 { "(>= 1.5x: PASS)" } else { "(< 1.5x)" }
+        if r32 >= 1.5 * r64 { "(>= 1.5x: PASS)" } else { "(< 1.5x)" },
+        fmt::rate(rsp, "ex"),
+        rsp / r64
     );
     Ok(())
 }

@@ -1,0 +1,479 @@
+//! Binary dataset cache (`LZBC`) — the zero-parse ingest path.
+//!
+//! Parsing libsvm text costs a float parse per token; for a
+//! Medline-shape corpus (~88 nonzeros × tens of thousands of rows) that
+//! dominates cold-start `train`. This module persists the parsed CSR
+//! arrays once and reloads them with large sequential reads straight
+//! into the final buffers, so repeat runs skip the tokenizer entirely
+//! (`benches/ingest.rs` measures the ratio; the PR 9 bar is ≥ 5x).
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! | offset | size            | field                                   |
+//! |-------:|-----------------|-----------------------------------------|
+//! | 0      | 4               | magic `"LZBC"`                          |
+//! | 4      | 2               | format version (`u16`, currently 1)     |
+//! | 6      | 2               | reserved, must be 0                     |
+//! | 8      | 8               | `n_rows` (`u64`)                        |
+//! | 16     | 8               | `n_cols` (`u64`)                        |
+//! | 24     | 8               | `nnz` (`u64`)                           |
+//! | 32     | 8               | source file length (`u64`, staleness)   |
+//! | 40     | 8               | source mtime, unix seconds (`u64`)      |
+//! | 48     | 16              | reserved, must be 0                     |
+//! | 64     | `(n_rows+1)×8`  | `indptr` (`u64` each)                   |
+//! | …      | `nnz×4` (+pad)  | `indices` (`u32` each), zero-pad to 8   |
+//! | …      | `nnz×4` (+pad)  | `values` (`f32` bits), zero-pad to 8    |
+//! | …      | `n_rows×4`(+pad)| `labels` (`f32` bits), zero-pad to 8    |
+//!
+//! Every record starts on an 8-byte boundary and the header is a fixed
+//! 64 bytes, so a future mmap path can cast sections in place without a
+//! format change (mmap itself stays out of this crate:
+//! `#![forbid(unsafe_code)]`, zero deps).
+//!
+//! ## Caps and error taxonomy
+//!
+//! In the style of [`crate::net::frame`]: counts are capped
+//! ([`MAX_ROWS`], [`MAX_COLS`], [`MAX_NNZ`]) and the exact byte length
+//! implied by the header is checked against the bytes actually present
+//! **before any allocation**, so a hostile length field yields
+//! [`CacheError::Oversized`] or [`CacheError::Truncated`], never an
+//! attempted huge `Vec`. Structural violations (non-zero padding,
+//! unsorted column indices, broken `indptr`) are
+//! [`CacheError::Malformed`]; decoding re-validates through
+//! [`CsrMatrix::from_parts`], so a cache file can never smuggle an
+//! invariant-breaking matrix into the trainer. Malformed bytes can only
+//! yield a structured error — never a panic.
+//!
+//! ## Staleness
+//!
+//! The header stamps the source file's length and mtime at write time;
+//! [`load_fresh`] re-stats the source and treats any mismatch as a miss
+//! (`Ok(None)`), which the CLI answers by re-parsing and rewriting.
+
+use std::fs;
+use std::io::{self, Read};
+use std::path::{Path, PathBuf};
+use std::time::UNIX_EPOCH;
+
+use super::csr::CsrMatrix;
+use super::dataset::SparseDataset;
+
+/// Cache magic: "LaZyreg Binary Cache".
+pub const MAGIC: [u8; 4] = *b"LZBC";
+/// Format version carried in every header.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes (8-byte aligned).
+pub const HEADER_BYTES: usize = 64;
+/// Hard cap on `n_rows` (and therefore labels).
+pub const MAX_ROWS: u64 = u32::MAX as u64;
+/// Hard cap on `n_cols` — column indices are `u32`.
+pub const MAX_COLS: u64 = 1 << 32;
+/// Hard cap on total stored non-zeros (2^40 ≈ 4 TiB of values).
+pub const MAX_NNZ: u64 = 1 << 40;
+
+/// Structured decode error. `Truncated` covers files that end inside a
+/// declared section; everything else states which invariant the bytes
+/// broke.
+#[derive(Debug)]
+pub enum CacheError {
+    /// Underlying file I/O error other than a clean mid-section EOF.
+    Io(io::Error),
+    /// The file ended inside the header or a declared section.
+    Truncated,
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Header carried an unsupported format version.
+    BadVersion(u16),
+    /// A declared count exceeds its hard cap.
+    Oversized { field: &'static str, value: u64, max: u64 },
+    /// Bytes violate the format's structural invariants.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::Io(e) => write!(f, "cache io error: {e}"),
+            CacheError::Truncated => write!(f, "cache file truncated"),
+            CacheError::BadMagic(m) => write!(f, "bad cache magic {m:02x?}"),
+            CacheError::BadVersion(v) => {
+                write!(f, "unsupported cache version {v} (expected {VERSION})")
+            }
+            CacheError::Oversized { field, value, max } => {
+                write!(f, "cache header {field}={value} exceeds the cap of {max}")
+            }
+            CacheError::Malformed(why) => write!(f, "malformed cache file: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CacheError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for CacheError {
+    fn from(e: io::Error) -> Self {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            CacheError::Truncated
+        } else {
+            CacheError::Io(e)
+        }
+    }
+}
+
+/// The source file's identity at cache-write time: byte length and
+/// mtime (unix seconds; 0 when the filesystem reports none). Stored in
+/// the header and compared on load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SourceStamp {
+    /// Source file byte length.
+    pub len: u64,
+    /// Source file mtime in unix seconds (0 if unavailable).
+    pub mtime: u64,
+}
+
+/// Stat `path` into a [`SourceStamp`].
+pub fn stamp_of(path: &Path) -> io::Result<SourceStamp> {
+    let meta = fs::metadata(path)?;
+    let mtime = meta
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(UNIX_EPOCH).ok())
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Ok(SourceStamp { len: meta.len(), mtime })
+}
+
+/// The conventional cache path for a source file: `<src>.lzbc`.
+pub fn default_path(src: &Path) -> PathBuf {
+    let mut name = src.as_os_str().to_os_string();
+    name.push(".lzbc");
+    PathBuf::from(name)
+}
+
+fn pad8(len: usize) -> usize {
+    len.next_multiple_of(8)
+}
+
+/// Encode a dataset (plus its source stamp) into the `LZBC` byte
+/// layout. Infallible: every in-memory [`SparseDataset`] is within the
+/// caps (`u32` column indices, `usize` rows).
+pub fn encode(data: &SparseDataset, stamp: SourceStamp) -> Vec<u8> {
+    let x = data.x();
+    let (n_rows, n_cols, nnz) = (x.n_rows(), x.n_cols(), x.nnz());
+    let body = pad8((n_rows + 1) * 8) + pad8(nnz * 4) + pad8(nnz * 4) + pad8(n_rows * 4);
+    let mut out = Vec::with_capacity(HEADER_BYTES + body);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(n_rows as u64).to_le_bytes());
+    out.extend_from_slice(&(n_cols as u64).to_le_bytes());
+    out.extend_from_slice(&(nnz as u64).to_le_bytes());
+    out.extend_from_slice(&stamp.len.to_le_bytes());
+    out.extend_from_slice(&stamp.mtime.to_le_bytes());
+    out.extend_from_slice(&[0u8; 16]);
+    debug_assert_eq!(out.len(), HEADER_BYTES);
+    for &p in x.indptr() {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    pad_to8(&mut out);
+    for &j in x.indices() {
+        out.extend_from_slice(&j.to_le_bytes());
+    }
+    pad_to8(&mut out);
+    for &v in x.values() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    pad_to8(&mut out);
+    for &y in data.labels() {
+        out.extend_from_slice(&y.to_le_bytes());
+    }
+    pad_to8(&mut out);
+    out
+}
+
+fn pad_to8(out: &mut Vec<u8>) {
+    while out.len() % 8 != 0 {
+        out.push(0);
+    }
+}
+
+/// A bounds-checked cursor over the encoded bytes: every read states
+/// its length up front and yields [`CacheError::Truncated`] instead of
+/// slicing out of range.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CacheError> {
+        let end = self.pos.checked_add(n).ok_or(CacheError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CacheError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, CacheError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("length checked")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CacheError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("length checked")))
+    }
+
+    /// Consume zero padding up to the next 8-byte boundary; non-zero
+    /// padding bytes are malformed, not ignored.
+    fn pad8(&mut self) -> Result<(), CacheError> {
+        let n = pad8(self.pos) - self.pos;
+        if self.take(n)?.iter().any(|&b| b != 0) {
+            return Err(CacheError::Malformed("non-zero padding"));
+        }
+        Ok(())
+    }
+}
+
+fn le_u64s(bytes: &[u8]) -> Vec<u64> {
+    bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().expect("chunk is 8"))).collect()
+}
+
+fn le_u32s(bytes: &[u8]) -> Vec<u32> {
+    bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().expect("chunk is 4"))).collect()
+}
+
+fn le_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("chunk is 4"))).collect()
+}
+
+fn cap(field: &'static str, value: u64, max: u64) -> Result<usize, CacheError> {
+    if value > max {
+        return Err(CacheError::Oversized { field, value, max });
+    }
+    usize::try_from(value).map_err(|_| CacheError::Oversized { field, value, max })
+}
+
+/// Decode an `LZBC` byte buffer back into the dataset and its source
+/// stamp. The expected total length is computed from the header and
+/// checked against `bytes.len()` before any array is allocated;
+/// trailing bytes are rejected.
+pub fn decode(bytes: &[u8]) -> Result<(SparseDataset, SourceStamp), CacheError> {
+    let mut cur = Cur { buf: bytes, pos: 0 };
+    let magic: [u8; 4] = cur.take(4)?.try_into().expect("length checked");
+    if magic != MAGIC {
+        return Err(CacheError::BadMagic(magic));
+    }
+    let version = cur.u16()?;
+    if version != VERSION {
+        return Err(CacheError::BadVersion(version));
+    }
+    if cur.u16()? != 0 {
+        return Err(CacheError::Malformed("reserved header bytes non-zero"));
+    }
+    let n_rows = cap("n_rows", cur.u64()?, MAX_ROWS)?;
+    let n_cols = cap("n_cols", cur.u64()?, MAX_COLS)?;
+    let nnz = cap("nnz", cur.u64()?, MAX_NNZ)?;
+    let stamp = SourceStamp { len: cur.u64()?, mtime: cur.u64()? };
+    if cur.take(16)?.iter().any(|&b| b != 0) {
+        return Err(CacheError::Malformed("reserved header bytes non-zero"));
+    }
+
+    // The whole-file length check: header counts fully determine the
+    // size, so hostile counts fail here before any allocation. Computed
+    // in u64 — within the caps the sum is ≤ ~2^43 and cannot overflow.
+    let p8 = |n: u64| n.next_multiple_of(8);
+    let expected = HEADER_BYTES as u64
+        + p8((n_rows as u64 + 1) * 8)
+        + p8(nnz as u64 * 4)
+        + p8(nnz as u64 * 4)
+        + p8(n_rows as u64 * 4);
+    if (bytes.len() as u64) < expected {
+        return Err(CacheError::Truncated);
+    }
+    if bytes.len() as u64 > expected {
+        return Err(CacheError::Malformed("trailing bytes after last section"));
+    }
+
+    let indptr = le_u64s(cur.take((n_rows + 1) * 8)?);
+    cur.pad8()?;
+    let indices = le_u32s(cur.take(nnz * 4)?);
+    cur.pad8()?;
+    let values = le_f32s(cur.take(nnz * 4)?);
+    cur.pad8()?;
+    let labels = le_f32s(cur.take(n_rows * 4)?);
+    cur.pad8()?;
+    debug_assert_eq!(cur.pos, bytes.len());
+
+    let x = CsrMatrix::from_parts(n_rows, n_cols, indptr, indices, values)
+        .map_err(|_| CacheError::Malformed("csr invariants violated"))?;
+    let data = SparseDataset::new(x, labels)
+        .map_err(|_| CacheError::Malformed("labels length mismatch"))?;
+    Ok((data, stamp))
+}
+
+/// Write the cache file for `data` at `path`, stamped with `stamp`.
+pub fn write_file(path: &Path, data: &SparseDataset, stamp: SourceStamp) -> Result<(), CacheError> {
+    Ok(fs::write(path, encode(data, stamp))?)
+}
+
+/// Read and decode a cache file (one sequential read of the whole
+/// file).
+pub fn read_file(path: &Path) -> Result<(SparseDataset, SourceStamp), CacheError> {
+    let mut bytes = Vec::new();
+    fs::File::open(path)?.read_to_end(&mut bytes)?;
+    decode(&bytes)
+}
+
+/// Load the cache at `cache` iff it exists and its stored stamp still
+/// matches the source file `src`. Returns `Ok(None)` on a miss (cache
+/// or source missing, or stamp mismatch — the caller re-parses and
+/// rewrites); decode errors on an *existing* cache file propagate so
+/// corruption is visible rather than silently re-parsed.
+pub fn load_fresh(cache: &Path, src: &Path) -> Result<Option<SparseDataset>, CacheError> {
+    let Ok(current) = stamp_of(src) else {
+        return Ok(None);
+    };
+    let bytes = match fs::read(cache) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let (data, stored) = decode(&bytes)?;
+    if stored != current {
+        return Ok(None);
+    }
+    Ok(Some(data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SparseDataset {
+        let mut x = CsrMatrix::empty(7);
+        x.push_row(vec![(0, 1.5), (3, -2.0)]);
+        x.push_row(vec![]);
+        x.push_row(vec![(1, 0.25), (4, 4.0), (6, -0.5)]);
+        SparseDataset::new(x, vec![1.0, 0.0, 1.0]).unwrap()
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let data = sample();
+        let stamp = SourceStamp { len: 123, mtime: 456 };
+        let bytes = encode(&data, stamp);
+        assert_eq!(bytes.len() % 8, 0, "encoded length is 8-byte aligned");
+        let (back, stamp2) = decode(&bytes).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(stamp2, stamp);
+    }
+
+    #[test]
+    fn header_is_64_bytes_and_sections_are_aligned() {
+        let bytes = encode(&sample(), SourceStamp::default());
+        assert_eq!(&bytes[..4], b"LZBC");
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), VERSION);
+        // indptr begins right after the fixed header.
+        assert_eq!(u64::from_le_bytes(bytes[64..72].try_into().unwrap()), 0);
+    }
+
+    #[test]
+    fn every_truncation_is_a_structured_error() {
+        let bytes = encode(&sample(), SourceStamp { len: 9, mtime: 9 });
+        for cut in 0..bytes.len() {
+            match decode(&bytes[..cut]) {
+                Err(CacheError::Truncated) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_counts_are_rejected_before_allocation() {
+        let mut bytes = encode(&sample(), SourceStamp::default());
+        // nnz at offset 24: declare 2^63 nonzeros in a tiny file.
+        bytes[24..32].copy_from_slice(&(1u64 << 63).to_le_bytes());
+        match decode(&bytes) {
+            Err(CacheError::Oversized { field: "nnz", .. }) => {}
+            other => panic!("expected Oversized nnz, got {other:?}"),
+        }
+        // Within the cap but far beyond the bytes present: Truncated,
+        // still without allocating.
+        let mut bytes = encode(&sample(), SourceStamp::default());
+        bytes[24..32].copy_from_slice(&(1u64 << 39).to_le_bytes());
+        match decode(&bytes) {
+            Err(CacheError::Truncated) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_headers_are_rejected_with_the_specific_error() {
+        let good = encode(&sample(), SourceStamp::default());
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode(&bad), Err(CacheError::BadMagic(_))));
+        let mut bad = good.clone();
+        bad[4] = 0xFF;
+        bad[5] = 0xFF;
+        assert!(matches!(decode(&bad), Err(CacheError::BadVersion(0xFFFF))));
+        let mut bad = good.clone();
+        bad[6] = 1;
+        assert!(matches!(decode(&bad), Err(CacheError::Malformed(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = encode(&sample(), SourceStamp::default());
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(decode(&bytes), Err(CacheError::Malformed(_))));
+    }
+
+    #[test]
+    fn structural_corruption_is_malformed_not_panic() {
+        let data = sample();
+        let bytes = encode(&data, SourceStamp::default());
+        // Swap the first row's two column indices (offset of indices
+        // section = 64 + pad8((3+1)*8) = 96).
+        let mut bad = bytes.clone();
+        let (a, b) = (96, 100);
+        for k in 0..4 {
+            bad.swap(a + k, b + k);
+        }
+        assert!(matches!(decode(&bad), Err(CacheError::Malformed(_))));
+    }
+
+    #[test]
+    fn file_round_trip_and_freshness() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let src = dir.join(format!("lzbc_test_src_{pid}.svm"));
+        let cache = dir.join(format!("lzbc_test_{pid}.lzbc"));
+        fs::write(&src, b"1 1:1.5\n").unwrap();
+        let stamp = stamp_of(&src).unwrap();
+        let data = sample();
+        write_file(&cache, &data, stamp).unwrap();
+        let hit = load_fresh(&cache, &src).unwrap();
+        assert_eq!(hit.as_ref(), Some(&data));
+        // Changing the source invalidates the cache (length differs).
+        fs::write(&src, b"1 1:1.5 2:2.0\n").unwrap();
+        assert!(load_fresh(&cache, &src).unwrap().is_none());
+        // Missing source or cache is a miss, not an error.
+        assert!(load_fresh(&cache, &dir.join("no_such_src")).unwrap().is_none());
+        assert!(load_fresh(&dir.join("no_such_cache"), &src).unwrap().is_none());
+        let _ = fs::remove_file(&src);
+        let _ = fs::remove_file(&cache);
+    }
+
+    #[test]
+    fn default_path_appends_extension() {
+        assert_eq!(default_path(Path::new("/tmp/a.svm")), Path::new("/tmp/a.svm.lzbc"));
+    }
+}

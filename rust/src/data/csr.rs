@@ -162,6 +162,28 @@ impl CsrMatrix {
         self.indices.len()
     }
 
+    /// The raw row-pointer array (`n_rows + 1` entries, non-decreasing,
+    /// `indptr[0] == 0`, tail == nnz). Exposed read-only for the binary
+    /// dataset cache writer ([`super::cache`]); loading goes back through
+    /// [`CsrMatrix::from_parts`] so the invariants are re-checked.
+    #[inline]
+    pub fn indptr(&self) -> &[u64] {
+        &self.indptr
+    }
+
+    /// The raw column-index array (strictly increasing within each row).
+    /// See [`CsrMatrix::indptr`].
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// The raw value array, parallel to [`CsrMatrix::indices`].
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
     /// Average non-zeros per row (the paper's `p`).
     pub fn avg_nnz(&self) -> f64 {
         if self.n_rows == 0 {

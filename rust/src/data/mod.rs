@@ -1,11 +1,20 @@
 //! Sparse data substrate: CSR matrices, libsvm IO, datasets and batching.
+//!
+//! Two ingest paths feed the trainer: the streaming libsvm text parser
+//! ([`libsvm`]) and the `LZBC` binary dataset cache ([`cache`]), which
+//! persists the parsed CSR arrays so repeat runs skip tokenization
+//! entirely. The cache module's docs carry the full format table
+//! (header layout, caps, error taxonomy); malformed cache bytes can
+//! only yield a structured [`cache::CacheError`], never a panic.
 
 pub mod batch;
+pub mod cache;
 pub mod csr;
 pub mod dataset;
 pub mod libsvm;
 
 pub use batch::{BatchIter, DenseBatch};
+pub use cache::CacheError;
 pub use csr::{CsrMatrix, RowView};
 pub use dataset::{DatasetStats, SparseDataset};
 pub use libsvm::IndexBase;

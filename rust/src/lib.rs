@@ -25,7 +25,10 @@
 //! ## Architecture (three layers)
 //!
 //! * **Layer 3 (this crate)** — the training coordinator: sparse data
-//!   pipeline ([`data`]), synthetic corpus generation ([`synth`]), the
+//!   pipeline ([`data`], including the zero-parse `LZBC` binary dataset
+//!   cache [`data::cache`] — parsed CSR arrays on disk, validated caps
+//!   before allocation, loaded without touching the libsvm text),
+//!   synthetic corpus generation ([`synth`]), the
 //!   lazy update engine ([`optim`]: the [`optim::Penalty`] families,
 //!   [`optim::DpCache`], the closed forms in [`optim::lazy`]; [`train`]:
 //!   lazy/dense trainers behind the [`train::Trainer`] trait), the
@@ -57,14 +60,23 @@
 //!   multi-worker orchestration ([`coordinator`]: one-vs-rest tagging
 //!   and sharded bounded-queue streaming, both running on the same
 //!   pool), evaluation
-//!   ([`eval`]), the **serving layer** ([`predict`]: the
-//!   [`predict::Predictor`] trait over native, **feature-sharded**
+//!   ([`eval`]), model persistence ([`model`]: the sparse text format
+//!   plus the compact binary `LZMC` artifact [`model::compact`] —
+//!   sorted nonzero indices + weights, f64 by default with opt-in f32
+//!   quantization, sniffed transparently by [`model::io::load`]), the
+//!   **serving layer** ([`predict`]: the
+//!   [`predict::Predictor`] trait over native, nonzero-support
+//!   merge-join ([`predict::SparseModel`] — the in-memory dual of the
+//!   compact artifact, f64 scores bitwise-equal to the dense blocked
+//!   kernel), **feature-sharded**
 //!   ([`predict::ShardedModel`] — the serving dual of the
 //!   example-sharded trainer, bitwise-identical scores for any shard
-//!   count via block-partial tree reduction), and `pjrt`
+//!   count via block-partial tree reduction, each worker holding only
+//!   its range's nonzeros), and `pjrt`
 //!   artifact-batched scoring; [`serve`]: a fixed-worker-pool TCP
 //!   service with batched requests, cross-connection request
-//!   coalescing, hot model reload, and per-model penalty provenance in
+//!   coalescing, hot model reload, and per-model penalty/size
+//!   provenance in
 //!   `stats`), the **cross-node layer** ([`net`]: a dependency-free
 //!   length-prefixed frame codec ([`net::frame`]), socket-coordinated
 //!   sparse-sync training — the touched-union merge as the wire

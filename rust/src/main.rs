@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   gen       generate a synthetic Medline-like corpus to libsvm
+//!   cache     parse a libsvm file once and write the `LZBC` binary
+//!             dataset cache next to it (--data D [--out O] [--dims N]
+//!             [--base B]); later `train --cache` / `eval --cache` runs
+//!             load the CSR arrays directly, skipping the text parse
 //!   train     train a model (lazy by default; --dense baseline;
 //!             --workers N shards across the persistent worker pool,
 //!             with --sync-interval M examples between model-averaging
@@ -23,12 +27,18 @@
 //!             --net coordinator:ADDR --net-workers N runs the sparse
 //!             merge round over TCP against N `--net worker:ADDR`
 //!             processes — every process must be launched with the same
-//!             data/config flags; requires `--merge sparse`)
-//!   eval      evaluate a saved model on a libsvm dataset
+//!             data/config flags; requires `--merge sparse`;
+//!             --cache loads --data through the `LZBC` binary cache,
+//!             --save with --compact / --compact-f32 writes the binary
+//!             `LZMC` sparse artifact instead of the text format)
+//!   eval      evaluate a saved model on a libsvm dataset (--cache as
+//!             in train; --model accepts text or compact artifacts)
 //!   serve     run the TCP prediction service (--shards N feature-sharded
 //!             scoring, --workers K connection pool, --batch-max M,
 //!             --artifact to batch-score through the AOT predict graph,
 //!             --fast-f32 to score through the f32 kernel,
+//!             --sparse to score the model's nonzero support only
+//!             (bitwise-equal f64 merge-join kernel, O(nnz) memory),
 //!             --remote-shards A,B,... to score through `shard` server
 //!             processes instead of in-process weights;
 //!             hot-reloadable via the `reload` protocol command unless
@@ -38,8 +48,10 @@
 //!             `serve --remote-shards`
 //!   bench     quick Table-1-style lazy-vs-dense throughput comparison
 //!   info      print artifact + corpus statistics; --model M prints
-//!             model statistics, --compare OTHER [--tol T] diffs two
-//!             saved models (exit 1 when the difference exceeds T)
+//!             model statistics (nnz, density, on-disk bytes — text or
+//!             compact), --compare OTHER [--tol T] diffs two saved
+//!             models in any format mix (exit 1 when the difference
+//!             exceeds T)
 //!
 //! Run `lazyreg <cmd> --help` conceptually via README; flags are parsed by
 //! the from-scratch `util::args` (clap is unavailable offline).
@@ -83,6 +95,7 @@ fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("gen") => cmd_gen(&args),
+        Some("cache") => cmd_cache(&args),
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
@@ -91,7 +104,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: lazyreg <gen|train|eval|serve|shard|bench|info> [--flags]\n\
+                "usage: lazyreg <gen|cache|train|eval|serve|shard|bench|info> [--flags]\n\
                  see README.md for the full flag reference"
             );
             std::process::exit(2);
@@ -166,11 +179,7 @@ fn load_or_generate(
     data_seed: u64,
 ) -> Result<lazyreg::data::SparseDataset> {
     match args.opt("data") {
-        Some(path) => {
-            let base = index_base(args)?;
-            libsvm::read_file_with(path, args.try_parse::<usize>("dims")?, base)
-                .with_context(|| format!("load {path}"))
-        }
+        Some(path) => load_libsvm(args, path, args.try_parse::<usize>("dims")?),
         None => {
             eprintln!(
                 "generating synthetic corpus: n={} d={} p~{}",
@@ -190,6 +199,39 @@ fn index_base(args: &Args) -> Result<libsvm::IndexBase> {
     }
 }
 
+/// Load a libsvm dataset, optionally through the `LZBC` binary cache
+/// (`--cache`): a fresh sibling `<path>.lzbc` whose dims match is
+/// loaded without touching the text; otherwise the text is parsed and
+/// the cache (re)written for next time. A *corrupt* cache file is a
+/// hard error rather than a silent re-parse — delete it explicitly.
+#[cfg(not(loom))]
+fn load_libsvm(
+    args: &Args,
+    path: &str,
+    dims: Option<usize>,
+) -> Result<lazyreg::data::SparseDataset> {
+    use lazyreg::data::cache;
+    let base = index_base(args)?;
+    if !args.flag("cache") {
+        return libsvm::read_file_with(path, dims, base).with_context(|| format!("load {path}"));
+    }
+    let src = Path::new(path);
+    let cache_path = cache::default_path(src);
+    match cache::load_fresh(&cache_path, src)? {
+        Some(data) if dims.is_none_or(|d| data.n_features() == d) => {
+            eprintln!("cache: hit {} (libsvm parse skipped)", cache_path.display());
+            return Ok(data);
+        }
+        Some(_) => eprintln!("cache: dims mismatch, re-parsing {path}"),
+        None => eprintln!("cache: miss, parsing {path}"),
+    }
+    let data =
+        libsvm::read_file_with(path, dims, base).with_context(|| format!("load {path}"))?;
+    cache::write_file(&cache_path, &data, cache::stamp_of(src)?)?;
+    eprintln!("cache: wrote {}", cache_path.display());
+    Ok(data)
+}
+
 #[cfg(not(loom))]
 fn cmd_gen(args: &Args) -> Result<()> {
     let (_, corpus, _, data_seed) = options_from(args)?;
@@ -204,6 +246,34 @@ fn cmd_gen(args: &Args) -> Result<()> {
         fmt::count(s.nnz as u64),
         s.avg_nnz,
         s.ideal_speedup
+    );
+    Ok(())
+}
+
+/// `cache --data D [--out O] [--dims N] [--base B]`: parse a libsvm
+/// file once and write its `LZBC` binary dataset cache, the file
+/// `--cache` loads on later runs.
+#[cfg(not(loom))]
+fn cmd_cache(args: &Args) -> Result<()> {
+    use lazyreg::data::cache;
+    let path = args.opt("data").context("--data required")?;
+    let data = libsvm::read_file_with(path, args.try_parse::<usize>("dims")?, index_base(args)?)
+        .with_context(|| format!("load {path}"))?;
+    let src = Path::new(path);
+    let out = match args.opt("out") {
+        Some(o) => std::path::PathBuf::from(o),
+        None => cache::default_path(src),
+    };
+    cache::write_file(&out, &data, cache::stamp_of(src)?)?;
+    let s = data.stats();
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "cached {path} -> {}: n={} d={} nnz={} bytes={}",
+        out.display(),
+        fmt::count(s.n_examples as u64),
+        fmt::count(s.n_features as u64),
+        fmt::count(s.nnz as u64),
+        fmt::count(bytes)
     );
     Ok(())
 }
@@ -322,8 +392,16 @@ fn report_train(
         report.rebases
     );
     if let Some(path) = args.opt("save") {
-        save_model(path, &report.model)?;
-        eprintln!("saved model to {path}");
+        if args.flag("compact-f32") {
+            lazyreg::model::compact::save_f32(path, &report.model)?;
+            eprintln!("saved compact f32 model to {path}");
+        } else if args.flag("compact") {
+            lazyreg::model::compact::save(path, &report.model)?;
+            eprintln!("saved compact model to {path}");
+        } else {
+            save_model(path, &report.model)?;
+            eprintln!("saved model to {path}");
+        }
     }
     Ok(())
 }
@@ -337,7 +415,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model_path = args.opt("model").context("--model required")?;
     let data_path = args.opt("data").context("--data required")?;
     let model = load_model(model_path, Loss::Logistic)?;
-    let data = libsvm::read_file_with(data_path, Some(model.dim()), index_base(args)?)?;
+    let data = load_libsvm(args, data_path, Some(model.dim()))?;
     let (at_half, best) = evaluate(&model, &data);
     let p: Vec<f64> = (0..data.n_examples()).map(|r| model.predict(data.x().row(r))).collect();
     let auc = lazyreg::eval::auc(&p, data.labels());
@@ -370,18 +448,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_max: args.get_parse("batch-max", 256usize),
         artifact: args.flag("artifact"),
         fast_f32: args.flag("fast-f32"),
+        sparse: args.flag("sparse"),
         remote_shards,
     };
     let server = Server::spawn_with(model, &addr, opts.clone())?;
     println!(
         "serving predictions on {} (shards={} workers={} batch_max={} artifact={} f32={} \
-         remote={})",
+         sparse={} remote={})",
         server.addr(),
         opts.shards,
         opts.workers,
         opts.batch_max,
         opts.artifact,
         opts.fast_f32,
+        opts.sparse,
         if opts.remote_shards.is_empty() { "-".to_string() } else { opts.remote_shards.join(",") }
     );
     println!(
@@ -455,12 +535,18 @@ fn cmd_info(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("model") {
         let model = load_model(path, Loss::Logistic)?;
         let sp = model.sparsity();
+        // On-disk bytes of the artifact as saved (text or compact) plus
+        // what the same model would cost as a compact `LZMC` file, so
+        // the compression win is visible without re-saving.
+        let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
         println!(
-            "{path}: d={} bias={:.6} nnz={} ({:.3}% dense) penalty={}",
+            "{path}: d={} bias={:.6} nnz={} ({:.3}% dense) bytes={} compact-bytes={} penalty={}",
             fmt::count(model.dim() as u64),
             model.bias,
             fmt::count(sp.nnz as u64),
             sp.density * 100.0,
+            fmt::count(bytes),
+            fmt::count(lazyreg::model::compact::encoded_len(&model)),
             model.penalty.as_deref().unwrap_or("unrecorded")
         );
         if let Some(other_path) = args.opt("compare") {

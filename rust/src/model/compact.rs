@@ -1,0 +1,536 @@
+//! Compact binary model artifact (`LZMC`) — the serve-side sibling of
+//! the text format in [`super::io`].
+//!
+//! After ℓ1 training a model is mostly zeros; shipping it as text costs
+//! a float parse per nonzero and ~25 bytes each. This format stores the
+//! sorted nonzero support directly — `indices` + `weights` arrays, the
+//! exact shape the [`crate::predict::SparseModel`] merge-join kernel
+//! and the sharded scorers consume — so a model loads in O(nnz), not
+//! O(d) text work, and a remote shard ships only its slice of the
+//! arrays.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! | offset | size           | field                                       |
+//! |-------:|----------------|---------------------------------------------|
+//! | 0      | 4              | magic `"LZMC"`                              |
+//! | 4      | 2              | format version (`u16`, currently 1)         |
+//! | 6      | 1              | weight kind: 0 = `f64`, 1 = `f32` quantized |
+//! | 7      | 1              | loss tag: 0 logistic, 1 squared, 2 hinge    |
+//! | 8      | 8              | `dim` (`u64`)                               |
+//! | 16     | 8              | `nnz` (`u64`)                               |
+//! | 24     | 8              | `bias` (`f64` bits)                         |
+//! | 32     | 4              | penalty provenance length (`u32`, 0 = none) |
+//! | 36     | 4              | reserved, must be 0                         |
+//! | 40     | penalty bytes  | UTF-8, trimmed single line, zero-pad to 8   |
+//! | …      | `nnz×4` (+pad) | `indices` (`u32`, strictly increasing < dim)|
+//! | …      | `nnz×8` or `nnz×4` (+pad) | `weights` (`f64` / `f32` bits)   |
+//!
+//! ## Caps and error taxonomy
+//!
+//! In the style of [`crate::net::frame`]: [`MAX_DIM`] bounds `dim`,
+//! `nnz` may not exceed `dim`, [`MAX_PENALTY_BYTES`] bounds the
+//! provenance string, and the exact byte length implied by the header
+//! is checked against the bytes present **before any array is
+//! allocated** — hostile length fields yield
+//! [`CompactError::Oversized`] or [`CompactError::Truncated`], never an
+//! attempted huge `Vec`. (Decoding then materializes the dense
+//! `LinearModel`, which is O(`dim`) — the same cost the text reader has
+//! always paid for its `dim` header.) Unsorted or out-of-range indices,
+//! non-zero padding, broken UTF-8 or multi-line penalties are
+//! [`CompactError::Malformed`]. Malformed bytes can only yield a
+//! structured error — never a panic.
+//!
+//! ## f32 quantization is opt-in
+//!
+//! The default weight kind is `f64`: a save/load round trip is bitwise
+//! exact, so compact artifacts compare clean under
+//! `info --compare --tol 0`. [`save_f32`] halves the weight bytes by
+//! storing `f32` (widened back on load — lossy), and is gated exactly
+//! like the other `f32` fast paths: the `cargo xtask lint` `f32-optin`
+//! rule requires every caller outside this file to opt in via the
+//! `fast_f32` machinery.
+
+use std::fmt;
+use std::io;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::loss::Loss;
+
+use super::LinearModel;
+
+/// Artifact magic: "LaZyreg Model Compact".
+pub const MAGIC: [u8; 4] = *b"LZMC";
+/// Format version carried in every header.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes (8-byte aligned).
+pub const HEADER_BYTES: usize = 40;
+/// Hard cap on `dim` — column indices are `u32`.
+pub const MAX_DIM: u64 = 1 << 32;
+/// Cap on the penalty provenance string (mirrors the wire protocol's
+/// name cap).
+pub const MAX_PENALTY_BYTES: usize = 256;
+/// Weight kind tag: 8-byte `f64` weights (the default; bitwise exact).
+pub const WKIND_F64: u8 = 0;
+/// Weight kind tag: 4-byte `f32` quantized weights (opt-in; lossy).
+pub const WKIND_F32: u8 = 1;
+
+/// Structured decode error. `Truncated` covers files that end inside a
+/// declared section; everything else states which invariant the bytes
+/// broke.
+#[derive(Debug)]
+pub enum CompactError {
+    /// Underlying file I/O error other than a clean mid-section EOF.
+    Io(io::Error),
+    /// The file ended inside the header or a declared section.
+    Truncated,
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Header carried an unsupported format version.
+    BadVersion(u16),
+    /// A declared count exceeds its hard cap.
+    Oversized { field: &'static str, value: u64, max: u64 },
+    /// Bytes violate the format's structural invariants.
+    Malformed(&'static str),
+}
+
+impl fmt::Display for CompactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompactError::Io(e) => write!(f, "compact model io error: {e}"),
+            CompactError::Truncated => write!(f, "compact model file truncated"),
+            CompactError::BadMagic(m) => write!(f, "bad compact model magic {m:02x?}"),
+            CompactError::BadVersion(v) => {
+                write!(f, "unsupported compact model version {v} (expected {VERSION})")
+            }
+            CompactError::Oversized { field, value, max } => {
+                write!(f, "compact model header {field}={value} exceeds the cap of {max}")
+            }
+            CompactError::Malformed(why) => write!(f, "malformed compact model: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CompactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CompactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for CompactError {
+    fn from(e: io::Error) -> Self {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            CompactError::Truncated
+        } else {
+            CompactError::Io(e)
+        }
+    }
+}
+
+fn loss_tag(loss: Loss) -> u8 {
+    match loss {
+        Loss::Logistic => 0,
+        Loss::Squared => 1,
+        Loss::Hinge => 2,
+    }
+}
+
+fn loss_from_tag(tag: u8) -> Option<Loss> {
+    match tag {
+        0 => Some(Loss::Logistic),
+        1 => Some(Loss::Squared),
+        2 => Some(Loss::Hinge),
+        _ => None,
+    }
+}
+
+/// Does this byte buffer start with the `LZMC` magic? Used by
+/// [`super::io::load`] to dispatch between the text and compact
+/// readers.
+pub fn is_compact(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && bytes[..4] == MAGIC
+}
+
+fn pad_to8(out: &mut Vec<u8>) {
+    while out.len() % 8 != 0 {
+        out.push(0);
+    }
+}
+
+/// Exact encoded size in bytes of `model`'s compact `f64` artifact,
+/// without encoding it. Serves the `model_bytes=` stats field and
+/// `info`.
+pub fn encoded_len(model: &LinearModel) -> u64 {
+    let nnz = model.weights.iter().filter(|&&w| w != 0.0).count() as u64;
+    let penalty = model.penalty.as_deref().map_or(0, |p| p.len()) as u64;
+    HEADER_BYTES as u64
+        + penalty.next_multiple_of(8)
+        + (nnz * 4).next_multiple_of(8)
+        + nnz * 8
+}
+
+fn encode_with(model: &LinearModel, wkind: u8) -> Result<Vec<u8>> {
+    ensure!(
+        (model.dim() as u64) <= MAX_DIM,
+        "model dim {} exceeds the u32 index space",
+        model.dim()
+    );
+    let penalty: &str = model.penalty.as_deref().unwrap_or("");
+    if !penalty.is_empty() {
+        // Same guard as the text writer: provenance must survive a
+        // round trip (and here also fit the wire-style cap).
+        ensure!(
+            penalty.trim() == penalty && !penalty.contains(|c| c == '\n' || c == '\r'),
+            "model penalty provenance must be a trimmed, single-line string: {penalty:?}"
+        );
+        ensure!(
+            penalty.len() <= MAX_PENALTY_BYTES,
+            "model penalty provenance exceeds {MAX_PENALTY_BYTES} bytes"
+        );
+    }
+    let nnz = model.weights.iter().filter(|&&w| w != 0.0).count();
+    let mut out = Vec::with_capacity(HEADER_BYTES + penalty.len() + nnz * 12 + 16);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(wkind);
+    out.push(loss_tag(model.loss));
+    out.extend_from_slice(&(model.dim() as u64).to_le_bytes());
+    out.extend_from_slice(&(nnz as u64).to_le_bytes());
+    out.extend_from_slice(&model.bias.to_le_bytes());
+    out.extend_from_slice(&(penalty.len() as u32).to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    debug_assert_eq!(out.len(), HEADER_BYTES);
+    out.extend_from_slice(penalty.as_bytes());
+    pad_to8(&mut out);
+    for (j, &w) in model.weights.iter().enumerate() {
+        if w != 0.0 {
+            out.extend_from_slice(&(j as u32).to_le_bytes());
+        }
+    }
+    pad_to8(&mut out);
+    for &w in model.weights.iter() {
+        if w != 0.0 {
+            match wkind {
+                WKIND_F64 => out.extend_from_slice(&w.to_le_bytes()),
+                _ => out.extend_from_slice(&(w as f32).to_le_bytes()),
+            }
+        }
+    }
+    pad_to8(&mut out);
+    Ok(out)
+}
+
+/// Encode with full-precision `f64` weights (the default; a save/load
+/// round trip is bitwise exact).
+pub fn encode(model: &LinearModel) -> Result<Vec<u8>> {
+    encode_with(model, WKIND_F64)
+}
+
+/// Encode with `f32`-quantized weights — half the weight bytes, lossy.
+/// Opt-in like the other f32 fast paths (see the module docs).
+pub fn encode_f32(model: &LinearModel) -> Result<Vec<u8>> {
+    encode_with(model, WKIND_F32)
+}
+
+/// Save the compact `f64` artifact to a file.
+pub fn save<P: AsRef<Path>>(path: P, model: &LinearModel) -> Result<()> {
+    let bytes = encode(model)?;
+    std::fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("write {}", path.as_ref().display()))
+}
+
+/// Save the `f32`-quantized compact artifact to a file. Opt-in (see the
+/// module docs).
+pub fn save_f32<P: AsRef<Path>>(path: P, model: &LinearModel) -> Result<()> {
+    let bytes = encode_f32(model)?;
+    std::fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("write {}", path.as_ref().display()))
+}
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CompactError> {
+        let end = self.pos.checked_add(n).ok_or(CompactError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CompactError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, CompactError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("length checked")))
+    }
+
+    fn u32(&mut self) -> Result<u32, CompactError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("length checked")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CompactError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("length checked")))
+    }
+
+    fn f64(&mut self) -> Result<f64, CompactError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("length checked")))
+    }
+
+    fn pad8(&mut self) -> Result<(), CompactError> {
+        let n = self.pos.next_multiple_of(8) - self.pos;
+        if self.take(n)?.iter().any(|&b| b != 0) {
+            return Err(CompactError::Malformed("non-zero padding"));
+        }
+        Ok(())
+    }
+}
+
+/// Decode an `LZMC` byte buffer back into a dense [`LinearModel`].
+/// `f32`-quantized weights are widened to `f64` (lossy —
+/// `info --compare --tol` quantifies the drift against the full-
+/// precision artifact). Trailing bytes are rejected.
+pub fn decode(bytes: &[u8]) -> Result<LinearModel, CompactError> {
+    let mut cur = Cur { buf: bytes, pos: 0 };
+    let magic: [u8; 4] = cur.take(4)?.try_into().expect("length checked");
+    if magic != MAGIC {
+        return Err(CompactError::BadMagic(magic));
+    }
+    let version = cur.u16()?;
+    if version != VERSION {
+        return Err(CompactError::BadVersion(version));
+    }
+    let wkind = cur.take(1)?[0];
+    if wkind != WKIND_F64 && wkind != WKIND_F32 {
+        return Err(CompactError::Malformed("unknown weight kind"));
+    }
+    let loss = loss_from_tag(cur.take(1)?[0])
+        .ok_or(CompactError::Malformed("unknown loss tag"))?;
+    let dim64 = cur.u64()?;
+    if dim64 > MAX_DIM {
+        return Err(CompactError::Oversized { field: "dim", value: dim64, max: MAX_DIM });
+    }
+    let nnz64 = cur.u64()?;
+    if nnz64 > dim64 {
+        return Err(CompactError::Oversized { field: "nnz", value: nnz64, max: dim64 });
+    }
+    let bias = cur.f64()?;
+    let penalty_len = cur.u32()? as u64;
+    if penalty_len > MAX_PENALTY_BYTES as u64 {
+        return Err(CompactError::Oversized {
+            field: "penalty_len",
+            value: penalty_len,
+            max: MAX_PENALTY_BYTES as u64,
+        });
+    }
+    if cur.u32()? != 0 {
+        return Err(CompactError::Malformed("reserved header bytes non-zero"));
+    }
+
+    // Whole-file length check before any allocation (u64 math; within
+    // the caps the sum cannot overflow).
+    let wbytes: u64 = if wkind == WKIND_F64 { 8 } else { 4 };
+    let expected = HEADER_BYTES as u64
+        + penalty_len.next_multiple_of(8)
+        + (nnz64 * 4).next_multiple_of(8)
+        + (nnz64 * wbytes).next_multiple_of(8);
+    if (bytes.len() as u64) < expected {
+        return Err(CompactError::Truncated);
+    }
+    if bytes.len() as u64 > expected {
+        return Err(CompactError::Malformed("trailing bytes after last section"));
+    }
+    let dim = usize::try_from(dim64)
+        .map_err(|_| CompactError::Oversized { field: "dim", value: dim64, max: MAX_DIM })?;
+    let nnz = nnz64 as usize;
+
+    let penalty_bytes = cur.take(penalty_len as usize)?;
+    let penalty = std::str::from_utf8(penalty_bytes)
+        .map_err(|_| CompactError::Malformed("penalty is not UTF-8"))?;
+    if !penalty.is_empty()
+        && (penalty.trim() != penalty || penalty.contains(|c| c == '\n' || c == '\r'))
+    {
+        return Err(CompactError::Malformed("penalty is not a trimmed single line"));
+    }
+    cur.pad8()?;
+
+    let idx_bytes = cur.take(nnz * 4)?;
+    cur.pad8()?;
+    let w_bytes = cur.take(nnz * wbytes as usize)?;
+    cur.pad8()?;
+    debug_assert_eq!(cur.pos, bytes.len());
+
+    let mut model = LinearModel::zeros(dim, loss);
+    model.bias = bias;
+    model.penalty = if penalty.is_empty() { None } else { Some(penalty.to_string()) };
+    let mut prev: Option<u32> = None;
+    for (k, c) in idx_bytes.chunks_exact(4).enumerate() {
+        let j = u32::from_le_bytes(c.try_into().expect("chunk is 4"));
+        if prev.is_some_and(|p| j <= p) {
+            return Err(CompactError::Malformed("indices not strictly increasing"));
+        }
+        if u64::from(j) >= dim64 {
+            return Err(CompactError::Malformed("index >= dim"));
+        }
+        prev = Some(j);
+        let w = if wkind == WKIND_F64 {
+            let c = &w_bytes[k * 8..k * 8 + 8];
+            f64::from_le_bytes(c.try_into().expect("chunk is 8"))
+        } else {
+            let c = &w_bytes[k * 4..k * 4 + 4];
+            f64::from(f32::from_le_bytes(c.try_into().expect("chunk is 4")))
+        };
+        model.weights[j as usize] = w;
+    }
+    Ok(model)
+}
+
+/// Load a compact artifact from a file. Most callers want
+/// [`super::io::load`], which sniffs the magic and accepts text and
+/// compact files alike.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<LinearModel> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    decode(&bytes).with_context(|| format!("decode {}", path.as_ref().display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> LinearModel {
+        let mut m = LinearModel::zeros(100, Loss::Logistic);
+        m.bias = -0.5;
+        m.weights[3] = 1.25;
+        m.weights[42] = 3.5e-11;
+        m.weights[97] = -2.5e-7;
+        m.penalty = Some("enet:0.001:0.01".into());
+        m
+    }
+
+    #[test]
+    fn f64_round_trip_is_bitwise() {
+        let m = model();
+        let bytes = encode(&m).unwrap();
+        assert_eq!(bytes.len() as u64, encoded_len(&m));
+        let m2 = decode(&bytes).unwrap();
+        assert_eq!(m2.dim(), m.dim());
+        assert_eq!(m2.loss, m.loss);
+        assert_eq!(m2.penalty, m.penalty);
+        assert_eq!(m2.bias.to_bits(), m.bias.to_bits());
+        for (a, b) in m.weights.iter().zip(&m2.weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_round_trip_quantizes() {
+        // The f32 artifact is explicitly lossy: weights come back as
+        // the nearest f32 (the fast_f32-style opt-in trade).
+        let m = model();
+        let m2 = decode(&encode_f32(&m).unwrap()).unwrap();
+        for (a, b) in m.weights.iter().zip(&m2.weights) {
+            assert_eq!(*b, f64::from(*a as f32));
+        }
+        assert_eq!(m2.bias.to_bits(), m.bias.to_bits(), "bias stays f64");
+    }
+
+    #[test]
+    fn no_penalty_round_trips_as_none() {
+        let mut m = model();
+        m.penalty = None;
+        assert_eq!(decode(&encode(&m).unwrap()).unwrap().penalty, None);
+    }
+
+    #[test]
+    fn every_truncation_is_a_structured_error() {
+        let bytes = encode(&model()).unwrap();
+        for cut in 0..bytes.len() {
+            match decode(&bytes[..cut]) {
+                Err(CompactError::Truncated) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_headers_are_rejected_with_the_specific_error() {
+        let good = encode(&model()).unwrap();
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode(&bad), Err(CompactError::BadMagic(_))));
+        let mut bad = good.clone();
+        bad[4] = 0xFF;
+        bad[5] = 0xFF;
+        assert!(matches!(decode(&bad), Err(CompactError::BadVersion(0xFFFF))));
+        let mut bad = good.clone();
+        bad[6] = 9; // weight kind
+        assert!(matches!(decode(&bad), Err(CompactError::Malformed(_))));
+        let mut bad = good.clone();
+        bad[7] = 9; // loss tag
+        assert!(matches!(decode(&bad), Err(CompactError::Malformed(_))));
+        // Hostile dim / nnz / penalty_len.
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(CompactError::Oversized { field: "dim", .. })));
+        let mut bad = good.clone();
+        bad[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(CompactError::Oversized { field: "nnz", .. })));
+        let mut bad = good.clone();
+        bad[32..36].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode(&bad),
+            Err(CompactError::Oversized { field: "penalty_len", .. })
+        ));
+    }
+
+    #[test]
+    fn unsorted_or_out_of_range_indices_are_malformed() {
+        let m = model();
+        let bytes = encode(&m).unwrap();
+        // Index section offset: 40 + pad8(15) = 40 + 16 = 56.
+        let base = 56;
+        let mut bad = bytes.clone();
+        for k in 0..4 {
+            bad.swap(base + k, base + 4 + k);
+        }
+        assert!(matches!(decode(&bad), Err(CompactError::Malformed(_))));
+        let mut bad = bytes.clone();
+        bad[base..base + 4].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(CompactError::Malformed(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = encode(&model()).unwrap();
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(decode(&bytes), Err(CompactError::Malformed(_))));
+    }
+
+    #[test]
+    fn preserves_loss_kind() {
+        for loss in [Loss::Logistic, Loss::Squared, Loss::Hinge] {
+            let mut m = LinearModel::zeros(3, loss);
+            m.weights[1] = 1.0;
+            assert_eq!(decode(&encode(&m).unwrap()).unwrap().loss, loss);
+        }
+    }
+
+    #[test]
+    fn write_guards_mirror_the_text_writer() {
+        let mut bad = model();
+        bad.penalty = Some("x\ny".into());
+        assert!(encode(&bad).is_err());
+        bad.penalty = Some(" x".into());
+        assert!(encode(&bad).is_err());
+        bad.penalty = Some("p".repeat(MAX_PENALTY_BYTES + 1));
+        assert!(encode(&bad).is_err());
+    }
+}

@@ -127,11 +127,21 @@ pub fn save<P: AsRef<Path>>(path: P, model: &LinearModel) -> Result<()> {
     write(f, model)
 }
 
-/// Load from a file path.
+/// Load from a file path. Sniffs the leading bytes: a file starting
+/// with the `LZMC` magic is decoded by the binary compact reader
+/// ([`super::compact`]); anything else goes through the text [`read`].
+/// Every model consumer (`eval`, `serve`, `shard`, `info`, hot
+/// `reload`) loads through here, so compact artifacts work everywhere
+/// the text format does.
 pub fn load<P: AsRef<Path>>(path: P) -> Result<LinearModel> {
-    let f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("open {}", path.as_ref().display()))?;
-    read(f)
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if super::compact::is_compact(&bytes) {
+        return super::compact::decode(&bytes)
+            .with_context(|| format!("decode compact model {}", path.display()));
+    }
+    read(bytes.as_slice())
 }
 
 #[cfg(test)]
@@ -173,6 +183,16 @@ mod tests {
         let path = std::env::temp_dir().join("lazyreg_model_io_test.model");
         let m = model();
         save(&path, &m).unwrap();
+        let m2 = load(&path).unwrap();
+        assert_eq!(m, m2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_sniffs_compact_magic() {
+        let path = std::env::temp_dir().join("lazyreg_model_io_sniff_test.model");
+        let m = model();
+        crate::model::compact::save(&path, &m).unwrap();
         let m2 = load(&path).unwrap();
         assert_eq!(m, m2);
         std::fs::remove_file(&path).ok();

@@ -3,7 +3,17 @@
 //! Weights are stored in f64 for exact lazy-vs-dense equivalence tests;
 //! the XLA artifacts use f32 and conversions happen at the runtime
 //! boundary.
+//!
+//! Two persistence formats, both loaded transparently by [`io::load`]
+//! (the first bytes decide): the line-oriented text format ([`io`],
+//! `lazyreg-model v1`/`v2`) and the binary compact sparse artifact
+//! ([`compact`], `LZMC` magic — sorted nonzero indices + weights, `f64`
+//! default with opt-in `f32` quantization). The compact module's docs
+//! carry the full format table (header layout, caps, error taxonomy);
+//! malformed compact bytes can only yield a structured
+//! [`compact::CompactError`], never a panic.
 
+pub mod compact;
 pub mod io;
 
 use crate::data::RowView;

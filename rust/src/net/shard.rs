@@ -7,12 +7,16 @@
 //!
 //! Both sides reuse the exact machinery of
 //! [`crate::predict::ShardedModel`]: the server partitions with
-//! `shard_bounds`, slices each row with the same two binary searches,
-//! and runs the same [`block_partials`] kernel; the client reduces with
+//! `shard_bounds`, holds only its range's sorted nonzero
+//! `(index, weight)` pairs — an ℓ1-sparse model ships O(range nnz)
+//! bytes to each shard process, not O(range) — slices each row with the
+//! same two binary searches, and runs the same
+//! [`sparse_block_partials`] merge-join kernel; the client reduces with
 //! the shared `reduce_partials` concatenation and the single
 //! [`fold_score`] rounding chain. The socket moves bytes, not floats
 //! through extra arithmetic — so remote scores equal in-process sharded
-//! scores bit for bit, for any shard count.
+//! scores bit for bit, for any shard count (dropping zero weights
+//! cannot change any partial bitwise; see [`crate::predict::sparse`]).
 //!
 //! ## Staleness and failure
 //!
@@ -35,7 +39,7 @@ use crate::data::RowView;
 use crate::loss::Loss;
 use crate::model::LinearModel;
 use crate::predict::sharded::{reduce_partials, shard_bounds, RowPartials};
-use crate::predict::{block_partials, fold_score, Predictor};
+use crate::predict::{fold_score, sparse_block_partials, Predictor};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::{lock_ok, Arc, Mutex};
 
@@ -51,9 +55,11 @@ const RECONNECT_BACKOFF: [Duration; 3] = [
 /// Poll interval of the non-blocking accept loop.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
 
-/// The immutable state one shard server holds: its weight slice and
-/// identity. Shared read-only across connection handler threads.
+/// The immutable state one shard server holds: the compact nonzero
+/// support of its weight range (absolute feature indices, sorted) and
+/// its identity. Shared read-only across connection handler threads.
 struct ShardState {
+    indices: Vec<u32>,
     weights: Vec<f64>,
     lo: u32,
     hi: u32,
@@ -88,8 +94,19 @@ impl ShardServer {
         ensure!(shard < shards, "shard index {shard} out of range for {shards} shards");
         let dim = model.dim();
         let (lo, hi) = shard_bounds(dim, shards, shard);
+        // Compact the range: the server holds only its nonzeros, with
+        // absolute indices (the merge-join kernel needs no base offset).
+        let mut indices = Vec::new();
+        let mut weights = Vec::new();
+        for (k, &w) in model.weights[lo..hi].iter().enumerate() {
+            if w != 0.0 {
+                indices.push((lo + k) as u32);
+                weights.push(w);
+            }
+        }
         let state = Arc::new(ShardState {
-            weights: model.weights[lo..hi].to_vec(),
+            indices,
+            weights,
             lo: lo as u32,
             hi: hi as u32,
             shard: shard as u32,
@@ -236,7 +253,7 @@ fn serve_conn(stream: TcpStream, state: &ShardState) -> Result<(), FrameError> {
 }
 
 /// The shard's half of the canonical blocked score, row by row — the
-/// same two binary searches and [`block_partials`] call as the
+/// same two binary searches and [`sparse_block_partials`] call as the
 /// in-process `shard_loop`. Decode already validated the CSR shape and
 /// per-row sort order, so the slices here cannot go out of bounds.
 fn score_rows(
@@ -253,7 +270,7 @@ fn score_rows(
         let b = idx.partition_point(|&j| j < state.hi);
         let slice = RowView { indices: &idx[a..b], values: &values[s + a..s + b] };
         let mut partials = RowPartials::new();
-        block_partials(slice, &state.weights, state.lo, &mut partials);
+        sparse_block_partials(slice, &state.indices, &state.weights, &mut partials);
         rows.push(partials);
     }
     rows

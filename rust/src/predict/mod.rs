@@ -6,9 +6,16 @@
 //!
 //! * [`LinearModel`] itself — the native in-process scorer (wrapped in
 //!   [`Versioned`] when the server needs reload version tracking);
+//! * [`SparseModel`] — the model held as sorted nonzero
+//!   `(index, weight)` pairs (the in-memory dual of the compact `LZMC`
+//!   artifact, [`crate::model::compact`]), scored by a sorted
+//!   merge-join over example × model nonzeros that is bitwise-equal to
+//!   the dense blocked kernel — see [`sparse`];
 //! * [`ShardedModel`] — the weight vector partitioned by feature range
 //!   across N persistent worker threads, the serving dual of the
-//!   example-sharded training engine in [`crate::train::parallel`];
+//!   example-sharded training engine in [`crate::train::parallel`]
+//!   (each worker holds only its range's nonzeros and runs the
+//!   merge-join kernel);
 //! * [`ArtifactBatcher`] — batch scoring through the AOT `predict`
 //!   artifact via [`crate::runtime`] (requires the `pjrt` feature at
 //!   runtime; the stub runtime's `load` errors and the batcher is never
@@ -35,9 +42,11 @@
 
 pub mod artifact;
 pub mod sharded;
+pub mod sparse;
 
 pub use artifact::ArtifactBatcher;
 pub use sharded::ShardedModel;
+pub use sparse::{sparse_block_partials, SparseModel};
 
 use crate::sync::Arc;
 
@@ -340,6 +349,23 @@ pub fn build_f32(model: LinearModel, shards: usize, version: u64) -> Arc<dyn Pre
         eprintln!("predict: the f32 fast path is unsharded; ignoring shards={shards}");
     }
     Arc::new(F32Model::from_model(&model, version))
+}
+
+/// [`build`] for the sparse merge-join path: serve from the model's
+/// nonzero support only ([`SparseModel`], `serve --sparse`). Scores are
+/// bitwise-identical to [`build`]'s (see [`sparse`]); memory and
+/// weight-gather traffic drop from O(d) to O(nnz). For `shards > 1` the
+/// sharded pool already holds only its ranges' nonzeros, so the request
+/// degrades to [`build`] with a note rather than silently.
+pub fn build_sparse(model: LinearModel, shards: usize, version: u64) -> Arc<dyn Predictor> {
+    if shards > 1 {
+        eprintln!(
+            "predict: sharded workers already hold compact nonzero ranges; \
+             serving sharded at shards={shards}"
+        );
+        return build(model, shards, version);
+    }
+    Arc::new(SparseModel::from_model(&model, version))
 }
 
 /// Like [`build`], but prefer batch scoring through the AOT `predict`

@@ -5,9 +5,12 @@
 //! ([`crate::train::parallel`]): where training splits *examples* across
 //! workers, serving a model too large for one node's cache (or node)
 //! splits the *weight vector*. Each shard owns a contiguous range of
-//! [`SCORE_BLOCK`]-aligned features; a request broadcasts the (owned)
-//! rows to every shard, each computes the block partial dot products of
-//! its range, and the results are tree-reduced.
+//! [`SCORE_BLOCK`]-aligned features — stored compactly as the range's
+//! sorted nonzero `(index, weight)` pairs, so an ℓ1-sparse model costs
+//! each worker O(range nnz) memory, not O(range) — a request broadcasts
+//! the (owned) rows to every shard, each computes the block partial dot
+//! products of its range with the sparse merge-join kernel
+//! ([`sparse_block_partials`]), and the results are tree-reduced.
 //!
 //! ## Why the scores are bitwise-exact
 //!
@@ -18,7 +21,10 @@
 //! and only the final [`fold_score`] performs the cross-block floating
 //! point additions, in exactly the canonical order. Hence
 //! `ShardedModel::score` equals the trait score of the unsharded
-//! [`LinearModel`] bit for bit, for **any** shard count.
+//! [`LinearModel`] bit for bit, for **any** shard count. Dropping the
+//! zero weights does not disturb this: the merge-join emits the same
+//! block list and skips only exact-`±0.0` products, which cannot change
+//! any partial bitwise (see [`super::sparse`]).
 
 use crate::sync::{lock_ok, mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -27,7 +33,7 @@ use crate::data::RowView;
 use crate::loss::Loss;
 use crate::model::LinearModel;
 
-use super::{block_partials, fold_score, Predictor, SCORE_BLOCK};
+use super::{fold_score, sparse_block_partials, Predictor, SCORE_BLOCK};
 
 /// Ordered `(block id, partial sum)` pairs for one row.
 pub(crate) type RowPartials = Vec<(u32, f64)>;
@@ -159,10 +165,21 @@ impl ShardedModel {
         let mut workers = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
             let (lo, hi) = shard_bounds(dim, n_shards, s);
-            let weights = model.weights[lo..hi].to_vec();
+            // Compact the range: the worker holds only its nonzeros,
+            // with *absolute* feature indices (the merge-join kernel
+            // needs no base offset).
+            let mut indices = Vec::new();
+            let mut weights = Vec::new();
+            for (k, &w) in model.weights[lo..hi].iter().enumerate() {
+                if w != 0.0 {
+                    indices.push((lo + k) as u32);
+                    weights.push(w);
+                }
+            }
             let (tx, rx) = mpsc::channel::<Job>();
-            let handle =
-                std::thread::spawn(move || shard_loop(s, lo as u32, hi as u32, weights, rx));
+            let handle = std::thread::spawn(move || {
+                shard_loop(s, lo as u32, hi as u32, indices, weights, rx)
+            });
             workers.push(ShardWorker { tx: Mutex::new(tx), handle: Some(handle) });
         }
         ShardedModel { workers, dim, bias: model.bias, loss: model.loss, version }
@@ -198,7 +215,14 @@ impl ShardedModel {
     }
 }
 
-fn shard_loop(shard: usize, lo: u32, hi: u32, weights: Vec<f64>, rx: mpsc::Receiver<Job>) {
+fn shard_loop(
+    shard: usize,
+    lo: u32,
+    hi: u32,
+    indices: Vec<u32>,
+    weights: Vec<f64>,
+    rx: mpsc::Receiver<Job>,
+) {
     while let Ok(job) = rx.recv() {
         match job {
             Job::Score { rows, reply } => {
@@ -213,7 +237,7 @@ fn shard_loop(shard: usize, lo: u32, hi: u32, weights: Vec<f64>, rx: mpsc::Recei
                     let idx = &row.indices[a..b];
                     let val = &row.values[a..b];
                     let slice = RowView { indices: idx, values: val };
-                    block_partials(slice, &weights, lo, &mut partials);
+                    sparse_block_partials(slice, &indices, &weights, &mut partials);
                     out.push(partials);
                 }
                 let _ = reply.send(ShardResult { shard, rows: out });

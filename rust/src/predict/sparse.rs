@@ -1,0 +1,225 @@
+//! [`SparseModel`]: scoring over the model's nonzero support only.
+//!
+//! After ℓ1 training most weights are exactly zero, so the dense
+//! blocked kernel spends most of its weight-gather bandwidth loading
+//! zeros. This module stores the model as sorted `(indices, weights)`
+//! nonzero pairs — the exact shape of the compact `LZMC` artifact
+//! ([`crate::model::compact`]) — and scores with a **sorted merge-join**
+//! over example × model nonzeros: both index lists are ascending, so
+//! one forward pointer over the model support finds every match without
+//! touching the zeros.
+//!
+//! ## Bitwise equality with the dense blocked kernel
+//!
+//! [`sparse_block_partials`] walks the row exactly like
+//! [`super::block_partials`] — same blocks opened and emitted, same
+//! ascending accumulation order — and skips only terms whose model
+//! weight is exactly zero. Each skipped dense term is `v × (±0.0)`,
+//! i.e. `±0.0`; the dense accumulator starts at `+0.0` and under IEEE
+//! 754 round-to-nearest a sum starting at `+0.0` can never become
+//! `-0.0` (`+0.0 + -0.0 = +0.0`, and exact cancellation `x + (-x)`
+//! rounds to `+0.0`), and `x + ±0.0 == x` **bitwise** for every `x`
+//! other than `-0.0`. So dropping those terms leaves every partial —
+//! and therefore [`super::fold_score`] — bit-for-bit unchanged. The one
+//! caveat: a non-finite row value against a zero weight would give
+//! `NaN` densely (`inf × 0`) and be skipped here; CSR rows come from
+//! parsers that only produce finite values, and the property suite pins
+//! the equality with `.to_bits()` over randomized models and rows.
+//!
+//! The same argument makes the compacted shard scorers
+//! ([`super::ShardedModel`], [`crate::net::ShardServer`]) bitwise-equal
+//! to their dense predecessors: they emit identical block-partial
+//! lists, and the fold order is unchanged.
+
+use crate::data::RowView;
+use crate::loss::Loss;
+use crate::model::LinearModel;
+
+use super::{fold_score, Predictor, SCORE_BLOCK};
+
+/// Append `row`'s non-empty `(block id, partial sum)` pairs to `out`,
+/// accumulating only the features present in the sorted model support
+/// `indices`/`weights` (absolute feature indices; parallel arrays).
+///
+/// Emits a pair for every block the **row** touches — including blocks
+/// where no index matches, whose partial is then `+0.0` — so the output
+/// block list is identical to [`super::block_partials`] over the dense
+/// vector, and the partials are bitwise-equal (see the module docs).
+/// `O(row.nnz + matched support span)`: the forward pointer `p` only
+/// ever advances, so scoring a row costs the merge-join, never `O(d)`.
+pub fn sparse_block_partials(
+    row: RowView<'_>,
+    indices: &[u32],
+    weights: &[f64],
+    out: &mut Vec<(u32, f64)>,
+) {
+    debug_assert_eq!(indices.len(), weights.len());
+    let mut cur = 0u32;
+    let mut acc = 0.0f64;
+    let mut open = false;
+    let mut p = 0usize;
+    for (j, v) in row.iter() {
+        let b = j / SCORE_BLOCK;
+        if open && b != cur {
+            out.push((cur, acc));
+            acc = 0.0;
+        }
+        cur = b;
+        open = true;
+        while p < indices.len() && indices[p] < j {
+            p += 1;
+        }
+        if p < indices.len() && indices[p] == j {
+            acc += f64::from(v) * weights[p];
+        }
+    }
+    if open {
+        out.push((cur, acc));
+    }
+}
+
+/// The model as sorted nonzero `(index, weight)` pairs plus bias — the
+/// in-memory dual of the compact `LZMC` artifact, scored by the
+/// merge-join kernel. `f64` scores are bitwise-equal to the dense
+/// blocked kernel (module docs); memory and weight-gather traffic are
+/// O(nnz), not O(d).
+pub struct SparseModel {
+    dim: usize,
+    indices: Vec<u32>,
+    weights: Vec<f64>,
+    bias: f64,
+    loss: Loss,
+    version: u64,
+}
+
+impl SparseModel {
+    /// Extract the nonzero support of `model`; `version` is reported
+    /// verbatim.
+    pub fn from_model(model: &LinearModel, version: u64) -> SparseModel {
+        let mut indices = Vec::new();
+        let mut weights = Vec::new();
+        for (j, &w) in model.weights.iter().enumerate() {
+            if w != 0.0 {
+                indices.push(j as u32);
+                weights.push(w);
+            }
+        }
+        SparseModel {
+            dim: model.dim(),
+            indices,
+            weights,
+            bias: model.bias,
+            loss: model.loss,
+            version,
+        }
+    }
+
+    /// Number of stored nonzero weights.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+impl Predictor for SparseModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.loss
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn score(&self, row: RowView<'_>) -> f64 {
+        let mut partials = Vec::new();
+        sparse_block_partials(row, &self.indices, &self.weights, &mut partials);
+        fold_score(self.bias, &partials)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predict::{block_partials, blocked_score};
+    use crate::util::Rng;
+
+    fn random_model(dim: usize, density: f64, seed: u64) -> LinearModel {
+        let mut m = LinearModel::zeros(dim, Loss::Logistic);
+        let mut rng = Rng::new(seed);
+        for w in m.weights.iter_mut() {
+            if rng.bool(density) {
+                *w = rng.normal();
+            }
+        }
+        m.bias = rng.normal();
+        m
+    }
+
+    fn random_row(dim: usize, nnz: usize, rng: &mut Rng) -> (Vec<u32>, Vec<f32>) {
+        let idx = rng.sample_distinct(dim, nnz.min(dim));
+        idx.into_iter().map(|j| (j as u32, rng.normal() as f32)).unzip()
+    }
+
+    #[test]
+    fn partials_match_dense_bitwise_including_blocks() {
+        let dim = 3 * SCORE_BLOCK as usize + 17;
+        let mut rng = Rng::new(5);
+        for seed in 0..20u64 {
+            let m = random_model(dim, 0.02, seed);
+            let sm = SparseModel::from_model(&m, 0);
+            let (indices, values) = random_row(dim, 150, &mut rng);
+            let row = RowView { indices: &indices, values: &values };
+            let mut dense = Vec::new();
+            block_partials(row, &m.weights, 0, &mut dense);
+            let mut sparse = Vec::new();
+            sparse_block_partials(row, &sm.indices, &sm.weights, &mut sparse);
+            assert_eq!(dense.len(), sparse.len(), "same blocks emitted");
+            for (a, b) in dense.iter().zip(&sparse) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "block {} partial", a.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scores_match_dense_blocked_kernel_bitwise() {
+        let dim = 2 * SCORE_BLOCK as usize + 5;
+        let mut rng = Rng::new(9);
+        for seed in 0..20u64 {
+            let m = random_model(dim, 0.05, seed);
+            let sm = SparseModel::from_model(&m, 3);
+            for nnz in [0usize, 1, 7, 120] {
+                let (indices, values) = random_row(dim, nnz, &mut rng);
+                let row = RowView { indices: &indices, values: &values };
+                let dense = blocked_score(m.bias, row, &m.weights);
+                assert_eq!(sm.score(row).to_bits(), dense.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_support_scores_bias_for_any_row() {
+        let m = LinearModel::zeros(100, Loss::Squared);
+        let sm = SparseModel::from_model(&m, 0);
+        assert_eq!(sm.nnz(), 0);
+        let indices = [3u32, 50];
+        let values = [1.0f32, -2.0];
+        let row = RowView { indices: &indices, values: &values };
+        assert_eq!(sm.score(row).to_bits(), m.bias.to_bits());
+    }
+
+    #[test]
+    fn reports_model_shape() {
+        let mut m = LinearModel::zeros(64, Loss::Hinge);
+        m.weights[10] = 1.0;
+        m.weights[63] = -2.0;
+        let sm = SparseModel::from_model(&m, 11);
+        assert_eq!(sm.dim(), 64);
+        assert_eq!(sm.nnz(), 2);
+        assert_eq!(sm.version(), 11);
+        assert_eq!(sm.loss(), Loss::Hinge);
+    }
+}

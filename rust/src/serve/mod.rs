@@ -29,7 +29,7 @@
 //! -> reload /path/to/retrained.model
 //! <- ok version=2
 //! -> stats
-//! <- ok version=2 penalty=enet:1e-5:1e-5 conns=4 n=12 mean=18.21µs p50=16.00µs p99=64.00µs max=81.00µs
+//! <- ok version=2 penalty=enet:1e-5:1e-5 nnz=812 model_bytes=11832 conns=4 n=12 mean=18.21µs p50=16.00µs p99=64.00µs max=81.00µs
 //! -> quit
 //! <- ok bye
 //! ```
@@ -37,10 +37,15 @@
 //! `batch` scores up to [`ServeOptions::batch_max`] `;`-separated
 //! examples in one round trip (an empty segment is an empty example).
 //! `stats` reports, besides the latency percentiles, the current model
-//! version and its training provenance (`penalty=`, the penalty `name()`
+//! version, its training provenance (`penalty=`, the penalty `name()`
 //! recorded in the model file — `unrecorded` for models saved before the
-//! penalty API), so a hot-reloaded model's regularization setup is
-//! visible from the wire protocol.
+//! penalty API), and its size (`nnz=`, the nonzero weight count, and
+//! `model_bytes=`, the compact `LZMC` artifact size
+//! [`crate::model::compact::encoded_len`] — a path-independent measure
+//! of what the model costs on the wire, however it was loaded), so a
+//! hot-reloaded model's regularization setup and sparsity are visible
+//! from the wire protocol. All four fields live in one slot behind one
+//! lock and are swapped together by `reload`.
 //! A fixed pool must defend itself against client misbehavior the seed's
 //! thread-per-connection design merely leaked threads on: idle
 //! connections are dropped after `IDLE_LIMIT`, a started line must
@@ -128,6 +133,14 @@ pub struct ServeOptions {
     /// ([`crate::predict::build_f32`]) instead of the bitwise-pinned
     /// f64 path. Unsharded; incompatible with `artifact`.
     pub fast_f32: bool,
+    /// Score through the nonzero-support merge-join predictor
+    /// ([`crate::predict::build_sparse`]): the served weights are the
+    /// model's sorted nonzeros only, the in-memory dual of the compact
+    /// `LZMC` artifact. Bitwise-identical f64 scores to the dense
+    /// blocked kernel, O(nnz) memory. Incompatible with `artifact` and
+    /// `fast_f32`; with `shards > 1` the sharded workers already hold
+    /// compact ranges, so sharding wins.
+    pub sparse: bool,
     /// Shard-server addresses to score through over TCP
     /// ([`crate::net::RemoteShardModel`]), one per feature shard in
     /// shard order. Non-empty supersedes `shards` (the remote shard
@@ -145,6 +158,7 @@ impl Default for ServeOptions {
             batch_max: 256,
             artifact: false,
             fast_f32: false,
+            sparse: false,
             remote_shards: Vec::new(),
         }
     }
@@ -182,17 +196,50 @@ fn build_predictor(
         predict::build_f32(model, opts.shards, version)
     } else if opts.artifact {
         predict::build_with_artifact(model, opts.shards, version)
+    } else if opts.sparse {
+        predict::build_sparse(model, opts.shards, version)
     } else {
         predict::build(model, opts.shards, version)
     })
 }
 
-/// The served model slot: the predictor plus the training provenance of
-/// the model behind it (the penalty `name()` string recorded in the
-/// model file; `"unrecorded"` for legacy or hand-built models). One
-/// tuple behind one lock, so a `reload` swap is atomic and `stats` can
-/// never pair a new `version=` with the previous model's `penalty=`.
-type ModelSlot = (Arc<dyn Predictor>, Arc<str>);
+/// The served model slot: the predictor plus everything `stats` reports
+/// about the model behind it — training provenance (the penalty
+/// `name()` string recorded in the model file; `"unrecorded"` for
+/// legacy or hand-built models), nonzero weight count, and the byte
+/// size of its compact `LZMC` encoding. One struct behind one lock, so
+/// a `reload` swap is atomic and `stats` can never pair a new
+/// `version=` with a previous model's `penalty=`, `nnz=`, or
+/// `model_bytes=`.
+struct ModelSlot {
+    predictor: Arc<dyn Predictor>,
+    penalty: Arc<str>,
+    /// Nonzero weight count of the served model.
+    nnz: u64,
+    /// [`crate::model::compact::encoded_len`] of the served model: what
+    /// it costs as a compact artifact, regardless of the file format it
+    /// was actually loaded from.
+    model_bytes: u64,
+}
+
+impl ModelSlot {
+    /// Capture the `stats` metadata of `model` (which `build_predictor`
+    /// is about to consume) alongside its freshly built predictor.
+    fn new(predictor: Arc<dyn Predictor>, model_meta: (Arc<str>, u64, u64)) -> ModelSlot {
+        let (penalty, nnz, model_bytes) = model_meta;
+        ModelSlot { predictor, penalty, nnz, model_bytes }
+    }
+}
+
+/// The `stats` metadata of a model, taken before the predictor build
+/// consumes it.
+fn meta_of(model: &LinearModel) -> (Arc<str>, u64, u64) {
+    (
+        penalty_of(model),
+        model.sparsity().nnz as u64,
+        crate::model::compact::encoded_len(model),
+    )
+}
 
 /// State shared by the accept loop and every connection worker.
 struct Shared {
@@ -288,7 +335,7 @@ impl Coalescer {
                 let take = st.pending.len().min(shared.opts.batch_max);
                 st.pending.drain(..take).collect()
             };
-            let predictor = lock_ok(shared.predictor.read()).0.clone();
+            let predictor = lock_ok(shared.predictor.read()).predictor.clone();
             let dim = predictor.dim();
             // A reload between a request's parse and this drain can
             // shrink the model; rows that no longer fit must fail
@@ -347,13 +394,17 @@ impl Server {
             !(opts.fast_f32 && opts.artifact),
             "serve: fast_f32 and artifact are mutually exclusive scoring paths"
         );
+        anyhow::ensure!(
+            !(opts.sparse && (opts.fast_f32 || opts.artifact)),
+            "serve: sparse is a pinned f64 native path; it excludes fast_f32 and artifact"
+        );
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let penalty = penalty_of(&model);
+        let meta = meta_of(&model);
         let pool_size = opts.workers;
         let shared = Arc::new(Shared {
-            predictor: RwLock::new((build_predictor(model, &opts, 1)?, penalty)),
+            predictor: RwLock::new(ModelSlot::new(build_predictor(model, &opts, 1)?, meta)),
             reload_lock: Mutex::new(()),
             hist: Mutex::new(LatencyHistogram::new()),
             conns: AtomicU64::new(0),
@@ -387,7 +438,7 @@ impl Server {
 
     /// Current model version (1 at spawn, bumped by each `reload`).
     pub fn version(&self) -> u64 {
-        lock_ok(self.shared.predictor.read()).0.version()
+        lock_ok(self.shared.predictor.read()).predictor.version()
     }
 
     fn stop_threads(&mut self) {
@@ -507,15 +558,16 @@ fn dispatch(line: &str, shared: &Shared) -> Dispatch {
     } else if let Some(rest) = strip_cmd(line, "reload") {
         cmd_reload(rest.trim(), shared)
     } else if line == "stats" {
-        // One read guard for both: version and provenance always describe
-        // the same model, even mid-reload.
-        let (version, penalty) = {
+        // One read guard for all model fields: version, provenance, and
+        // size always describe the same model, even mid-reload.
+        let (version, penalty, nnz, model_bytes) = {
             let slot = lock_ok(shared.predictor.read());
-            (slot.0.version(), slot.1.clone())
+            (slot.predictor.version(), slot.penalty.clone(), slot.nnz, slot.model_bytes)
         };
         let conns = shared.conns.load(Ordering::SeqCst);
         format!(
-            "ok version={version} penalty={penalty} conns={conns} {}",
+            "ok version={version} penalty={penalty} nnz={nnz} model_bytes={model_bytes} \
+             conns={conns} {}",
             lock_ok(shared.hist.lock()).summary()
         )
     } else if line == "quit" {
@@ -527,7 +579,7 @@ fn dispatch(line: &str, shared: &Shared) -> Dispatch {
 }
 
 fn cmd_predict(rest: &str, shared: &Shared) -> String {
-    let dim = lock_ok(shared.predictor.read()).0.dim();
+    let dim = lock_ok(shared.predictor.read()).predictor.dim();
     match parse_features(rest, dim) {
         // Scoring (and the per-request latency record) happens inside
         // the coalescer, batched with whatever concurrent `predict`
@@ -542,7 +594,7 @@ fn cmd_predict(rest: &str, shared: &Shared) -> String {
 
 fn cmd_batch(rest: &str, shared: &Shared) -> String {
     let t0 = Instant::now();
-    let predictor = lock_ok(shared.predictor.read()).0.clone();
+    let predictor = lock_ok(shared.predictor.read()).predictor.clone();
     let dim = predictor.dim();
     let mut parsed: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
     for seg in rest.split(';') {
@@ -597,8 +649,8 @@ fn cmd_reload(path: &str, shared: &Shared) -> String {
             // usually right here, at worst a one-off blip appended to an
             // in-flight request.
             let _serialized = lock_ok(shared.reload_lock.lock());
-            let version = lock_ok(shared.predictor.read()).0.version() + 1;
-            let penalty = penalty_of(&model);
+            let version = lock_ok(shared.predictor.read()).predictor.version() + 1;
+            let meta = meta_of(&model);
             let fresh = match build_predictor(model, &shared.opts, version) {
                 Ok(p) => p,
                 Err(e) => {
@@ -606,8 +658,10 @@ fn cmd_reload(path: &str, shared: &Shared) -> String {
                     return "err reload-failed".to_string();
                 }
             };
-            let old =
-                std::mem::replace(&mut *lock_ok(shared.predictor.write()), (fresh, penalty));
+            let old = std::mem::replace(
+                &mut *lock_ok(shared.predictor.write()),
+                ModelSlot::new(fresh, meta),
+            );
             drop(old);
             format!("ok version={version}")
         }
@@ -825,15 +879,21 @@ mod tests {
 
     #[test]
     fn stats_reports_penalty_provenance_across_reload() {
-        // Hand-built model: provenance unrecorded.
+        // Hand-built model: provenance unrecorded; size fields reflect
+        // the 2-nonzero model.
         let server = Server::spawn(model(), "127.0.0.1:0").unwrap();
         let mut c = Client::connect(server.addr()).unwrap();
         let stats = c.stats().unwrap();
         assert!(stats.contains("penalty=unrecorded"), "{stats}");
+        let bytes0 = crate::model::compact::encoded_len(&model());
+        assert!(stats.contains("nnz=2"), "{stats}");
+        assert!(stats.contains(&format!("model_bytes={bytes0}")), "{stats}");
 
-        // Reload a model that carries a penalty name: stats must show it.
+        // Reload a model that carries a penalty name and an extra
+        // nonzero: stats must swap all model fields together.
         let mut m = model();
         m.penalty = Some("tg:0.01:10:1.5".into());
+        m.weights[5] = 0.25;
         let path = std::env::temp_dir().join("lazyreg_serve_penalty_test.model");
         crate::model::io::save(&path, &m).unwrap();
         let v = c.reload(path.to_str().unwrap()).unwrap();
@@ -841,6 +901,10 @@ mod tests {
         let stats = c.stats().unwrap();
         assert!(stats.contains("penalty=tg:0.01:10:1.5"), "{stats}");
         assert!(stats.contains("version=2"), "{stats}");
+        assert!(stats.contains("nnz=3"), "{stats}");
+        let bytes1 = crate::model::compact::encoded_len(&m);
+        assert!(bytes1 > bytes0);
+        assert!(stats.contains(&format!("model_bytes={bytes1}")), "{stats}");
 
         // A provenance header smuggling whitespace must not be echoed
         // into the space-delimited stats line.
@@ -903,6 +967,27 @@ mod tests {
     }
 
     #[test]
+    fn sparse_serving_matches_dense_bitwise() {
+        let opts = ServeOptions { sparse: true, ..Default::default() };
+        let sparse = Server::spawn_with(model(), "127.0.0.1:0", opts).unwrap();
+        let dense = Server::spawn(model(), "127.0.0.1:0").unwrap();
+        let mut cs = Client::connect(sparse.addr()).unwrap();
+        let mut cd = Client::connect(dense.addr()).unwrap();
+        for ex in [vec![], vec![(3, 1.0)], vec![(3, 0.5), (7, -2.0)], vec![(9, 4.0)]] {
+            let ps = cs.predict(&ex).unwrap();
+            let pd = cd.predict(&ex).unwrap();
+            assert_eq!(ps.to_bits(), pd.to_bits(), "{ex:?}");
+        }
+        // The f32 kernel and the sparse merge-join are different paths.
+        let bad = ServeOptions { sparse: true, fast_f32: true, ..Default::default() };
+        assert!(Server::spawn_with(model(), "127.0.0.1:0", bad).is_err());
+        cs.quit().unwrap();
+        cd.quit().unwrap();
+        sparse.shutdown();
+        dense.shutdown();
+    }
+
+    #[test]
     fn batch_size_limit_enforced() {
         let opts = ServeOptions { batch_max: 2, ..Default::default() };
         let server = Server::spawn_with(model(), "127.0.0.1:0", opts).unwrap();
@@ -926,8 +1011,10 @@ mod tests {
     /// A `Shared` with no live sockets, for driving the coalescer and
     /// `dispatch` directly.
     fn shared_with(pred: Arc<dyn Predictor>, opts: ServeOptions) -> Arc<Shared> {
+        let slot =
+            ModelSlot { predictor: pred, penalty: "test".into(), nnz: 0, model_bytes: 0 };
         Arc::new(Shared {
-            predictor: RwLock::new((pred, "test".into())),
+            predictor: RwLock::new(slot),
             reload_lock: Mutex::new(()),
             hist: Mutex::new(LatencyHistogram::new()),
             conns: AtomicU64::new(0),

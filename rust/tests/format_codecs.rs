@@ -1,0 +1,220 @@
+//! The two binary formats (`LZBC` dataset cache, `LZMC` compact model)
+//! against their promises, in one process — the format-level sibling of
+//! `net_protocol.rs`:
+//!
+//! * the dataset cache round-trips synthetic corpora of several shapes
+//!   exactly, and the cached load equals the libsvm parse it replaces;
+//! * corruption of an existing cache file is a structured error, never
+//!   a silent re-parse and never a panic;
+//! * the compact model artifact round-trips randomized sparse models
+//!   bitwise in `f64`, quantizes exactly to `f32` when opted in, and
+//!   loads interchangeably with the text format through
+//!   `model::io::load`'s magic sniffing;
+//! * scoring a compact-round-tripped model through the merge-join
+//!   `SparseModel` is bitwise-identical to the dense blocked kernel;
+//! * the compact artifact of an ℓ1-sparse model stays under 25% of the
+//!   dense weight-dump size (8 bytes × dim) and under the text artifact
+//!   it replaces;
+//! * v1/v2 text model files still load with correct provenance.
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
+use lazyreg::data::{cache, libsvm, RowView, SparseDataset};
+use lazyreg::loss::Loss;
+use lazyreg::model::{compact, io as model_io, LinearModel};
+use lazyreg::predict::{self, Predictor, SparseModel};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::util::Rng;
+
+fn corpus(n: usize, d: usize, p: f64, seed: u64) -> SparseDataset {
+    let spec = BowSpec { n_examples: n, n_features: d, avg_nnz: p, ..Default::default() };
+    generate(&spec, seed)
+}
+
+fn random_model(dim: usize, density: f64, seed: u64) -> LinearModel {
+    let mut m = LinearModel::zeros(dim, Loss::Logistic);
+    let mut rng = Rng::new(seed);
+    for w in m.weights.iter_mut() {
+        if rng.bool(density) {
+            *w = rng.normal();
+        }
+    }
+    m.bias = rng.normal();
+    m.penalty = Some("enet:1e-5:1e-5".into());
+    m
+}
+
+fn temp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lazyreg_codecs_{}_{name}", std::process::id()))
+}
+
+// ------------------------------------------------------- dataset cache
+
+#[test]
+fn cache_round_trips_corpora_of_several_shapes() {
+    for (i, (n, d, p)) in [(1usize, 1usize, 0.5f64), (40, 500, 8.0), (200, 4096, 30.0)]
+        .into_iter()
+        .enumerate()
+    {
+        let data = corpus(n, d, p, 100 + i as u64);
+        let stamp = cache::SourceStamp { len: 7 * i as u64, mtime: 9 };
+        let (back, stamp2) = cache::decode(&cache::encode(&data, stamp)).unwrap();
+        assert_eq!(back, data, "shape {i}");
+        assert_eq!(stamp2, stamp);
+    }
+}
+
+#[test]
+fn cached_load_equals_the_libsvm_parse_it_replaces() {
+    let data = corpus(60, 800, 10.0, 11);
+    let src = temp("roundtrip.svm");
+    libsvm::write_file(&src, &data).unwrap();
+    let parsed = libsvm::read_file(src.to_str().unwrap(), None).unwrap();
+
+    let cache_path = cache::default_path(&src);
+    cache::write_file(&cache_path, &parsed, cache::stamp_of(&src).unwrap()).unwrap();
+    let hit = cache::load_fresh(&cache_path, &src).unwrap().expect("fresh cache must hit");
+    assert_eq!(hit, parsed, "cache load must equal the parse it replaces");
+
+    // Touching the source (longer content) turns the hit into a miss.
+    std::fs::write(&src, b"1 1:1 2:2 3:3 4:4 5:5 6:6 7:7 8:8 9:9\n").unwrap();
+    assert!(cache::load_fresh(&cache_path, &src).unwrap().is_none());
+
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_file(&cache_path);
+}
+
+#[test]
+fn corrupt_cache_file_is_an_error_not_a_silent_reparse() {
+    let data = corpus(20, 300, 6.0, 3);
+    let src = temp("corrupt.svm");
+    libsvm::write_file(&src, &data).unwrap();
+    let cache_path = cache::default_path(&src);
+    cache::write_file(&cache_path, &data, cache::stamp_of(&src).unwrap()).unwrap();
+
+    // Flip a reserved header byte: the file still "exists and is fresh",
+    // so the corruption must surface as Err, not Ok(None).
+    let mut bytes = std::fs::read(&cache_path).unwrap();
+    bytes[6] = 1;
+    std::fs::write(&cache_path, &bytes).unwrap();
+    match cache::load_fresh(&cache_path, &src) {
+        Err(cache::CacheError::Malformed(_)) => {}
+        other => panic!("expected Malformed, got {other:?}"),
+    }
+
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_file(&cache_path);
+}
+
+// ------------------------------------------------- compact model (LZMC)
+
+#[test]
+fn compact_round_trips_random_models_bitwise() {
+    for seed in 0..10u64 {
+        let m = random_model(5_000, 0.01, seed);
+        let bytes = compact::encode(&m).unwrap();
+        assert_eq!(bytes.len() as u64, compact::encoded_len(&m), "seed {seed}");
+        let m2 = compact::decode(&bytes).unwrap();
+        assert_eq!(m2.dim(), m.dim());
+        assert_eq!(m2.penalty, m.penalty);
+        assert_eq!(m2.bias.to_bits(), m.bias.to_bits());
+        for (a, b) in m.weights.iter().zip(&m2.weights) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+        // The opt-in f32 artifact quantizes each weight to the nearest
+        // f32 and nothing else.
+        let q = compact::decode(&compact::encode_f32(&m).unwrap()).unwrap();
+        for (a, b) in m.weights.iter().zip(&q.weights) {
+            assert_eq!(*b, f64::from(*a as f32), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn compact_and_text_artifacts_load_the_same_model() {
+    let m = random_model(2_000, 0.02, 42);
+    let text_path = temp("same.model");
+    let compact_path = temp("same.lzmc");
+    model_io::save(&text_path, &m).unwrap();
+    compact::save(&compact_path, &m).unwrap();
+    // One loader, two formats: `load` sniffs the magic.
+    let from_text = model_io::load(&text_path).unwrap();
+    let from_compact = model_io::load(&compact_path).unwrap();
+    assert_eq!(from_compact, m, "compact round trip is exact");
+    assert_eq!(from_text.dim(), from_compact.dim());
+    assert_eq!(from_text.penalty, from_compact.penalty);
+    // Text float printing is shortest-round-trip, so the text path is
+    // exact too — the two loads must agree bitwise.
+    for (a, b) in from_text.weights.iter().zip(&from_compact.weights) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let _ = std::fs::remove_file(&text_path);
+    let _ = std::fs::remove_file(&compact_path);
+}
+
+#[test]
+fn sparse_scoring_of_a_compact_round_trip_is_bitwise_dense() {
+    let dim = 3 * 4096 + 123;
+    let m = random_model(dim, 0.03, 7);
+    let loaded = compact::decode(&compact::encode(&m).unwrap()).unwrap();
+    let sparse = SparseModel::from_model(&loaded, 1);
+    let dense = predict::build(m.clone(), 1, 1);
+    let mut rng = Rng::new(13);
+    for _ in 0..50 {
+        let nnz = rng.index(200);
+        let idx = rng.sample_distinct(dim, nnz);
+        let (indices, values): (Vec<u32>, Vec<f32>) =
+            idx.into_iter().map(|j| (j as u32, rng.normal() as f32)).unzip();
+        let row = RowView { indices: &indices, values: &values };
+        assert_eq!(sparse.score(row).to_bits(), dense.score(row).to_bits());
+    }
+}
+
+#[test]
+fn compact_artifact_is_small_for_l1_sparse_models() {
+    // Medline-shaped support: ~1% of 50k weights survive ℓ1.
+    let m = random_model(50_000, 0.01, 5);
+    let nnz = m.sparsity().nnz as u64;
+    assert!(nnz > 100, "degenerate support ({nnz}) would make the ratio meaningless");
+    let compact_bytes = compact::encode(&m).unwrap().len() as u64;
+    let dense_dump = 8 * m.dim() as u64; // f64 per weight, zeros included
+    assert!(
+        compact_bytes * 4 <= dense_dump,
+        "compact artifact must be <= 25% of the dense dump: {compact_bytes} vs {dense_dump}"
+    );
+    // And it beats the text artifact it replaces outright.
+    let mut text = Vec::new();
+    model_io::write(&mut text, &m).unwrap();
+    assert!(
+        compact_bytes < text.len() as u64,
+        "compact ({compact_bytes}) must undercut text ({})",
+        text.len()
+    );
+}
+
+// -------------------------------------------------- text-format regression
+
+#[test]
+fn v1_and_v2_text_files_still_load_with_correct_provenance() {
+    let v1 = "lazyreg-model v1\nloss logistic\ndim 6\nbias 0.25\n2:1.5\n5:-0.5\n";
+    let m1 = model_io::read(v1.as_bytes()).unwrap();
+    assert_eq!(m1.dim(), 6);
+    assert_eq!(m1.penalty, None);
+    assert_eq!(m1.bias, 0.25);
+    assert_eq!(m1.weights[2], 1.5);
+    assert_eq!(m1.weights[5], -0.5);
+
+    let v2 = "lazyreg-model v2\nloss hinge\npenalty tg:0.01:10:1.5\ndim 4\nbias -1\n0:2\n";
+    let m2 = model_io::read(v2.as_bytes()).unwrap();
+    assert_eq!(m2.loss, Loss::Hinge);
+    assert_eq!(m2.penalty.as_deref(), Some("tg:0.01:10:1.5"));
+    assert_eq!(m2.weights[0], 2.0);
+
+    // Legacy files re-save through the current writer and reload equal.
+    let path = temp("regression.model");
+    model_io::save(&path, &m2).unwrap();
+    assert_eq!(model_io::load(&path).unwrap(), m2);
+    let _ = std::fs::remove_file(&path);
+}

@@ -289,8 +289,9 @@ const NEEDLE_RULES: &[NeedleRule] = &[
 
 /// The f32 fast-path kernels; calls outside their defining modules must
 /// sit in a file that names the `fast_f32` opt-in flag.
-const F32_CALLS: &[&str] = &["shrink_f32(", "blocked_score_f32(", "build_f32("];
-const F32_DEFINING: &[&str] = &["optim/lazy.rs", "predict/mod.rs"];
+const F32_CALLS: &[&str] =
+    &["shrink_f32(", "blocked_score_f32(", "build_f32(", "save_f32(", "encode_f32("];
+const F32_DEFINING: &[&str] = &["optim/lazy.rs", "predict/mod.rs", "model/compact.rs"];
 const F32_GUARD: &str = "fast_f32";
 
 /// Files that must keep the f32 fast path off by default, and the
