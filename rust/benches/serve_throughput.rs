@@ -19,7 +19,9 @@
 //! shard ([`lazyreg::net::ShardServer`] on localhost): the front end
 //! holds no weights and tree-reduces `ScorePartial`s off the wire, so
 //! the delta against the `shards=1` row is the pure cost of putting TCP
-//! between the protocol and the dot products.
+//! between the protocol and the dot products. A `failover` row repeats
+//! that with a replica group whose first replica is dead, pricing the
+//! steady state after a failover (sticky connections make it ~free).
 //!
 //! `cargo bench --bench serve_throughput`
 //! (env LAZYREG_BENCH_REQUESTS to scale, LAZYREG_BENCH_FAST=1 for CI).
@@ -155,6 +157,41 @@ fn main() -> anyhow::Result<()> {
     client.quit()?;
     server.shutdown();
     shard.shutdown();
+
+    // The failover row: a replica group whose first replica is already
+    // dead (a port we bound and released), so every batch rides the
+    // failover path's sticky-active connection to the live sibling.
+    // The delta against the `remote` row is the steady-state cost of
+    // replication — which should be ~zero once the first request has
+    // failed over.
+    let dead_addr = {
+        let placeholder = std::net::TcpListener::bind("127.0.0.1:0")?;
+        placeholder.local_addr()?.to_string()
+        // Dropping the listener frees the port: connecting now refuses.
+    };
+    let live = lazyreg::net::ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 1)?;
+    let failover_opts = ServeOptions {
+        remote_shards: vec![format!("{dead_addr}|{}", live.addr())],
+        workers: 2,
+        batch_max: 256,
+        ..Default::default()
+    };
+    let server = Server::spawn_with(model.clone(), "127.0.0.1:0", failover_opts)?;
+    let mut client = Client::connect(server.addr())?;
+    let mut single_rate = None;
+    for batch in [1usize, 16, 64] {
+        let rate = run_cell(&mut client, &examples, n_requests, batch)?;
+        let base = *single_rate.get_or_insert(rate);
+        table.row([
+            "failover".to_string(),
+            batch.to_string(),
+            fmt::rate(rate, "ex"),
+            format!("{:.2}x", rate / base),
+        ]);
+    }
+    client.quit()?;
+    server.shutdown();
+    live.shutdown();
 
     println!("{}", table.render());
     if let Some((single, batch64)) = headline {

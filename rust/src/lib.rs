@@ -78,11 +78,20 @@
 //!   coalescing, hot model reload, and per-model penalty/size
 //!   provenance in
 //!   `stats`), the **cross-node layer** ([`net`]: a dependency-free
-//!   length-prefixed frame codec ([`net::frame`]), socket-coordinated
+//!   length-prefixed frame codec with per-socket deadlines and
+//!   `Ping`/`Pong` heartbeats ([`net::frame`], [`net::Deadlines`] —
+//!   a stalled peer is a structured `Timeout`, never a hang, enforced
+//!   tree-wide by the `net-deadline` lint), socket-coordinated
 //!   sparse-sync training — the touched-union merge as the wire
-//!   protocol, O(|U|) bytes per round ([`net::cluster`]) — and remote
+//!   protocol, O(|U|) bytes per round ([`net::cluster`]) — with
+//!   atomic round-boundary `LZCK` checkpoints and `--resume`
+//!   ([`net::checkpoint`]), remote
 //!   serving shards scoring bitwise-identically to the in-process
-//!   [`predict::ShardedModel`] ([`net::shard`]); see `DISTRIBUTED.md`)
+//!   [`predict::ShardedModel`] ([`net::shard`]), replica groups with
+//!   sticky-active failover and rolling-restart quarantine, and a
+//!   seeded in-process TCP fault proxy ([`net::chaos`]) driving the
+//!   deterministic chaos suite in `tests/net_chaos.rs`; see
+//!   `DISTRIBUTED.md`)
 //!   and CLI (`src/main.rs`). All of it
 //!   synchronizes exclusively through the [`sync`] facade: the only
 //!   module allowed to name `std::sync` (lint rule `std-sync`), home of

@@ -28,6 +28,10 @@
 //!             merge round over TCP against N `--net worker:ADDR`
 //!             processes — every process must be launched with the same
 //!             data/config flags; requires `--merge sparse`;
+//!             the coordinator takes --checkpoint P [--checkpoint-every R]
+//!             to persist an `LZCK` round snapshot, --resume to restart
+//!             a killed job from it, and --net-halt-after R as the
+//!             deterministic kill drill the CI resume smoke uses;
 //!             --cache loads --data through the `LZBC` binary cache,
 //!             --save with --compact / --compact-f32 writes the binary
 //!             `LZMC` sparse artifact instead of the text format)
@@ -39,8 +43,10 @@
 //!             --fast-f32 to score through the f32 kernel,
 //!             --sparse to score the model's nonzero support only
 //!             (bitwise-equal f64 merge-join kernel, O(nnz) memory),
-//!             --remote-shards A,B,... to score through `shard` server
-//!             processes instead of in-process weights;
+//!             --remote-shards A1|A2,B1|B2,... to score through `shard`
+//!             server processes instead of in-process weights — comma
+//!             separates feature ranges, `|` separates replicas of one
+//!             range, and scoring fails over between replicas;
 //!             hot-reloadable via the `reload` protocol command unless
 //!             remote shards are configured)
 //!   shard     run one remote scoring shard (--model M --shard I
@@ -330,11 +336,26 @@ fn cmd_train_net(
     match net.split_once(':') {
         Some(("coordinator", addr)) => {
             let workers: usize = args.get_parse("net-workers", 2usize);
+            let ckpt = match args.opt("checkpoint") {
+                Some(path) => Some(lazyreg::net::CheckpointConfig {
+                    path: std::path::PathBuf::from(path),
+                    every: args.get_parse("checkpoint-every", 1u64),
+                    resume: args.flag("resume"),
+                    halt_after: args.try_parse::<u64>("net-halt-after")?,
+                }),
+                None => {
+                    anyhow::ensure!(
+                        !args.flag("resume"),
+                        "--resume needs --checkpoint PATH to know what to resume from"
+                    );
+                    None
+                }
+            };
             let coord = lazyreg::net::ClusterCoordinator::bind(addr, workers)?;
             // stdout (line-buffered), so launchers can scrape the bound
             // port when started on :0.
             println!("net: coordinating {workers} workers on {}", coord.addr());
-            let (report, stats) = coord.run(train.x(), train.labels(), opts)?;
+            let (report, stats) = coord.run_with(train.x(), train.labels(), opts, ckpt.as_ref())?;
             eprintln!(
                 "net: {} sync rounds, {} bytes/round over TCP",
                 stats.rounds,

@@ -1,0 +1,524 @@
+//! Deterministic fault injection for the net stack: [`ChaosProxy`] is
+//! an in-process TCP relay that sits between a client and an upstream
+//! (coordinator, worker, or shard server) and replays a [`FaultPlan`] —
+//! a byte-offset-keyed script of drops, stalls, bit-flips, and
+//! duplicated segments — against the first connection through it.
+//!
+//! The point is *determinism*: a fault test does not wait for the
+//! network to misbehave, it states exactly which byte of which
+//! direction dies and asserts the structured outcome ([`FrameError`]
+//! variants, failover, or byte-identical resume — never a hang). Plans
+//! can be written literally or derived from a seed with
+//! [`FaultPlan::seeded`] via the same Xoshiro generator the trainers
+//! use, so a failing seed reproduces exactly.
+//!
+//! Faults are scripted per direction (`to_upstream` /
+//! `to_client`) and fire in byte-offset order. Connections after the
+//! first relay clean — so a test can inject one fault and watch the
+//! reconnect succeed through the same proxy address.
+//!
+//! [`FrameError`]: super::frame::FrameError
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{lock_ok, Arc, Mutex};
+use crate::util::rng::Rng;
+
+/// Poll interval for relay reads and the accept loop: short enough
+/// that [`ChaosProxy::shutdown`] is prompt, long enough to stay off
+/// the profiler.
+const POLL: Duration = Duration::from_millis(10);
+
+/// Write bound on relayed bytes — a wedged *destination* should not
+/// wedge the proxy thread forever either.
+const RELAY_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// History kept per direction for [`Fault::Duplicate`] replays.
+const HISTORY_CAP: usize = 1 << 20;
+
+/// One scripted fault, keyed by the absolute byte offset of the
+/// direction it is planted in (offset 0 = the first byte relayed in
+/// that direction on the faulted connection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Relay exactly `after` bytes, then close both directions — a
+    /// peer dying mid-frame. Downstream sees [`FrameError::Truncated`].
+    ///
+    /// [`FrameError::Truncated`]: super::frame::FrameError::Truncated
+    Drop { after: u64 },
+    /// Relay `after` bytes, stop relaying for `pause`, then resume — a
+    /// partitioned or wedged peer. A `pause` past the reader's deadline
+    /// turns into [`FrameError::Timeout`]; a shorter one must be
+    /// absorbed without any observable effect.
+    ///
+    /// [`FrameError::Timeout`]: super::frame::FrameError::Timeout
+    Stall { after: u64, pause: Duration },
+    /// XOR bit `bit` (0–7) of the byte at offset `at` — wire
+    /// corruption. Aimed at a frame header it must surface as a
+    /// structured decode error (bad magic/version/type/length), never
+    /// a silently wrong payload accepted as valid.
+    Flip { at: u64, bit: u8 },
+    /// After relaying `at` bytes, re-send the previous `len` relayed
+    /// bytes — a duplicated segment that desynchronizes framing.
+    Duplicate { at: u64, len: u64 },
+}
+
+impl Fault {
+    /// The byte offset at which this fault fires.
+    fn offset(&self) -> u64 {
+        match *self {
+            Fault::Drop { after } => after,
+            Fault::Stall { after, .. } => after,
+            Fault::Flip { at, .. } => at,
+            Fault::Duplicate { at, .. } => at,
+        }
+    }
+}
+
+/// The per-direction fault script one [`ChaosProxy`] replays against
+/// its first connection. Within a direction, faults fire in byte-offset
+/// order regardless of the order they were pushed in.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Faults on client → upstream bytes.
+    pub to_upstream: Vec<Fault>,
+    /// Faults on upstream → client bytes.
+    pub to_client: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// No faults: the proxy relays transparently (the control arm of
+    /// every chaos test — the stack must behave identically through a
+    /// clean proxy).
+    pub fn clean() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// One pseudorandom fault in a pseudorandom direction, derived
+    /// deterministically from `seed` (same Xoshiro generator as the
+    /// trainers, so a failing seed reproduces bit-for-bit). `stall` is
+    /// the pause used if the drawn fault is a [`Fault::Stall`] — the
+    /// caller picks it relative to the deadlines under test.
+    pub fn seeded(seed: u64, stall: Duration) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        // Land inside the early protocol frames: past the first header
+        // for drops/stalls/duplicates, inside the first header for
+        // flips (where every bit is covered by a structured check).
+        let after = 12 + rng.below(200);
+        let fault = match rng.below(4) {
+            0 => Fault::Drop { after },
+            1 => Fault::Stall { after, pause: stall },
+            2 => Fault::Flip { at: rng.below(6), bit: rng.below(8) as u8 },
+            _ => Fault::Duplicate { at: after, len: 1 + rng.below(after) },
+        };
+        let mut plan = FaultPlan::default();
+        if rng.bool(0.5) {
+            plan.to_upstream.push(fault);
+        } else {
+            plan.to_client.push(fault);
+        }
+        plan
+    }
+}
+
+/// The in-process relay. Bind with [`ChaosProxy::spawn`], point the
+/// component under test at [`ChaosProxy::addr`], and the plan plays
+/// out on the first connection; later connections (reconnects under
+/// test) relay clean.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind a loopback port and relay every connection to `upstream`,
+    /// applying `plan` to the first one.
+    pub fn spawn(upstream: &str, plan: FaultPlan) -> Result<ChaosProxy> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding chaos proxy listener")?;
+        let addr = listener.local_addr().context("chaos proxy local_addr")?;
+        listener.set_nonblocking(true).context("chaos proxy set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let upstream = upstream.to_string();
+            thread::spawn(move || accept_loop(&listener, &upstream, plan, &stop, &conns))
+        };
+        Ok(ChaosProxy { addr, stop, conns, accept: Some(accept) })
+    }
+
+    /// The proxy's listen address — hand this to the client under test.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop relaying, sever every live connection, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for s in lock_ok(self.conns.lock()).drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    upstream: &str,
+    plan: FaultPlan,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<Mutex<Vec<TcpStream>>>,
+) {
+    let mut relays: Vec<JoinHandle<()>> = Vec::new();
+    let mut first = Some(plan);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((client, _)) => {
+                // Relay reads poll so the stop flag is honored; writes
+                // are bounded so a wedged peer cannot park the relay.
+                if client.set_read_timeout(Some(POLL)).is_err()
+                    || client.set_write_timeout(Some(RELAY_WRITE_TIMEOUT)).is_err()
+                {
+                    continue;
+                }
+                let up = match TcpStream::connect(upstream) {
+                    Ok(s)
+                        if s.set_read_timeout(Some(POLL)).is_ok()
+                            && s.set_write_timeout(Some(RELAY_WRITE_TIMEOUT)).is_ok() =>
+                    {
+                        s
+                    }
+                    _ => {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                };
+                let conn_plan = first.take().unwrap_or_default();
+                {
+                    let mut reg = lock_ok(conns.lock());
+                    if let Ok(c) = client.try_clone() {
+                        reg.push(c);
+                    }
+                    if let Ok(u) = up.try_clone() {
+                        reg.push(u);
+                    }
+                }
+                match (client.try_clone(), up.try_clone()) {
+                    (Ok(client2), Ok(up2)) => {
+                        // Two half-duplex relays; each closes both
+                        // streams when its direction dies, which ends
+                        // the sibling's read loop too.
+                        relays.push(spawn_relay(client, up, conn_plan.to_upstream, stop.clone()));
+                        relays.push(spawn_relay(up2, client2, conn_plan.to_client, stop.clone()));
+                    }
+                    _ => {
+                        let _ = client.shutdown(Shutdown::Both);
+                        let _ = up.shutdown(Shutdown::Both);
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(POLL),
+            Err(_) => thread::sleep(POLL),
+        }
+    }
+    for s in lock_ok(conns.lock()).drain(..) {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for h in relays {
+        let _ = h.join();
+    }
+}
+
+fn spawn_relay(
+    src: TcpStream,
+    dst: TcpStream,
+    mut faults: Vec<Fault>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    faults.sort_by_key(Fault::offset);
+    thread::spawn(move || {
+        relay(src, dst, &faults, &stop);
+    })
+}
+
+/// Pump bytes `src` → `dst`, firing each fault at its offset. Any I/O
+/// failure (including the injected ones) severs both streams so the
+/// sibling relay and both endpoints observe the death promptly.
+fn relay(mut src: TcpStream, mut dst: TcpStream, faults: &[Fault], stop: &Arc<AtomicBool>) {
+    let keep_history = faults.iter().any(|f| matches!(f, Fault::Duplicate { .. }));
+    let mut history: Vec<u8> = Vec::new();
+    let mut pending = faults.iter().copied().collect::<std::collections::VecDeque<_>>();
+    let mut pos: u64 = 0;
+    let mut buf = [0u8; 4096];
+    'pump: loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let n = match src.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        };
+        let mut i = 0usize;
+        while i < n {
+            // Fire every fault scheduled at (or before) this offset.
+            // `Flip` mutates the next byte, so it waits until one is in
+            // hand — which it is, since i < n.
+            while let Some(&f) = pending.front() {
+                if f.offset() > pos {
+                    break;
+                }
+                pending.pop_front();
+                match f {
+                    Fault::Drop { .. } => {
+                        break 'pump;
+                    }
+                    Fault::Stall { pause, .. } => sleep_unless_stopped(pause, stop),
+                    Fault::Flip { bit, .. } => buf[i] ^= 1 << (bit & 7),
+                    Fault::Duplicate { len, .. } => {
+                        let take = (len as usize).min(history.len());
+                        let replay = history[history.len() - take..].to_vec();
+                        if dst.write_all(&replay).is_err() {
+                            break 'pump;
+                        }
+                    }
+                }
+            }
+            // Relay up to the next fault boundary.
+            let lim = pending
+                .front()
+                .map(|f| (f.offset() - pos) as usize)
+                .unwrap_or(n - i)
+                .min(n - i)
+                .max(1);
+            if dst.write_all(&buf[i..i + lim]).is_err() {
+                break 'pump;
+            }
+            if keep_history {
+                history.extend_from_slice(&buf[i..i + lim]);
+                if history.len() > HISTORY_CAP {
+                    let cut = history.len() - HISTORY_CAP;
+                    history.drain(..cut);
+                }
+            }
+            pos += lim as u64;
+            i += lim;
+        }
+        if dst.flush().is_err() {
+            break;
+        }
+    }
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+/// Sleep `total` in [`POLL`] slices so a proxy shutdown mid-stall
+/// returns promptly.
+fn sleep_unless_stopped(total: Duration, stop: &Arc<AtomicBool>) {
+    let end = Instant::now() + total;
+    while !stop.load(Ordering::SeqCst) {
+        let left = end.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        thread::sleep(left.min(POLL));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// Echo server: serially accepts `accepts` connections, echoing
+    /// bytes on each until EOF.
+    fn echo_server_n(accepts: usize) -> (SocketAddr, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind echo");
+        let addr = listener.local_addr().expect("echo addr");
+        let h = thread::spawn(move || {
+            for _ in 0..accepts {
+                if let Ok((mut s, _)) = listener.accept() {
+                    let mut buf = [0u8; 1024];
+                    while let Ok(n) = s.read(&mut buf) {
+                        if n == 0 || s.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+        });
+        (addr, h)
+    }
+
+    fn echo_server() -> (SocketAddr, JoinHandle<()>) {
+        echo_server_n(1)
+    }
+
+    #[test]
+    fn clean_plan_relays_transparently() {
+        let (upstream, server) = echo_server();
+        let proxy = ChaosProxy::spawn(&upstream.to_string(), FaultPlan::clean()).expect("proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("connect");
+        c.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        let msg = b"through the proxy and back";
+        c.write_all(msg).expect("write");
+        let mut back = vec![0u8; msg.len()];
+        c.read_exact(&mut back).expect("read");
+        assert_eq!(&back, msg);
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    #[test]
+    fn drop_fault_severs_at_exact_offset() {
+        let (upstream, server) = echo_server();
+        let plan = FaultPlan {
+            to_client: vec![Fault::Drop { after: 4 }],
+            ..FaultPlan::default()
+        };
+        let proxy = ChaosProxy::spawn(&upstream.to_string(), plan).expect("proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("connect");
+        c.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        c.write_all(b"0123456789").expect("write");
+        let mut got = Vec::new();
+        let n = c.read_to_end(&mut got).unwrap_or(0);
+        // Exactly the first 4 echoed bytes arrive, then EOF.
+        assert_eq!(n, 4, "got {got:?}");
+        assert_eq!(&got, b"0123");
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    #[test]
+    fn flip_fault_corrupts_one_bit() {
+        let (upstream, server) = echo_server();
+        let plan = FaultPlan {
+            to_client: vec![Fault::Flip { at: 2, bit: 0 }],
+            ..FaultPlan::default()
+        };
+        let proxy = ChaosProxy::spawn(&upstream.to_string(), plan).expect("proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("connect");
+        c.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        c.write_all(b"abcd").expect("write");
+        let mut back = [0u8; 4];
+        c.read_exact(&mut back).expect("read");
+        assert_eq!(&back, &[b'a', b'b', b'c' ^ 1, b'd']);
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    #[test]
+    fn duplicate_fault_replays_history() {
+        let (upstream, server) = echo_server();
+        let plan = FaultPlan {
+            to_client: vec![Fault::Duplicate { at: 4, len: 2 }],
+            ..FaultPlan::default()
+        };
+        let proxy = ChaosProxy::spawn(&upstream.to_string(), plan).expect("proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("connect");
+        c.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        c.write_all(b"abcdef").expect("write");
+        let mut back = [0u8; 8];
+        c.read_exact(&mut back).expect("read");
+        assert_eq!(&back, b"abcdcdef");
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    #[test]
+    fn second_connection_is_clean() {
+        let (upstream, server) = echo_server_n(2);
+        let plan = FaultPlan {
+            to_client: vec![Fault::Drop { after: 0 }],
+            ..FaultPlan::default()
+        };
+        let proxy = ChaosProxy::spawn(&upstream.to_string(), plan).expect("proxy");
+        {
+            // First connection: the fault kills the echo before its
+            // first byte makes it back.
+            let mut c = TcpStream::connect(proxy.addr()).expect("connect");
+            c.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+            c.write_all(b"dead").expect("write");
+            let mut got = Vec::new();
+            assert_eq!(c.read_to_end(&mut got).unwrap_or(0), 0);
+        }
+        // Second connection through the same proxy relays clean — the
+        // reconnect-and-recover path every failover test relies on.
+        let mut c = TcpStream::connect(proxy.addr()).expect("reconnect");
+        c.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        c.write_all(b"alive").expect("write");
+        let mut back = [0u8; 5];
+        c.read_exact(&mut back).expect("read");
+        assert_eq!(&back, b"alive");
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        for seed in 0..32 {
+            let a = FaultPlan::seeded(seed, Duration::from_millis(50));
+            let b = FaultPlan::seeded(seed, Duration::from_millis(50));
+            assert_eq!(a.to_upstream, b.to_upstream);
+            assert_eq!(a.to_client, b.to_client);
+            assert_eq!(a.to_upstream.len() + a.to_client.len(), 1);
+        }
+    }
+
+    #[test]
+    fn stall_fault_delays_but_delivers() {
+        let (upstream, server) = echo_server();
+        let plan = FaultPlan {
+            to_client: vec![Fault::Stall { after: 2, pause: Duration::from_millis(150) }],
+            ..FaultPlan::default()
+        };
+        let proxy = ChaosProxy::spawn(&upstream.to_string(), plan).expect("proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("connect");
+        c.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        c.write_all(b"wxyz").expect("write");
+        let start = Instant::now();
+        let mut back = [0u8; 4];
+        c.read_exact(&mut back).expect("read");
+        assert_eq!(&back, b"wxyz");
+        assert!(
+            start.elapsed() >= Duration::from_millis(100),
+            "stall was not applied: {:?}",
+            start.elapsed()
+        );
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+}

@@ -1,0 +1,537 @@
+//! `LZCK` — the round-boundary training checkpoint for `--net`
+//! coordinators.
+//!
+//! At a checkpoint round the coordinator forces a cluster-wide budget
+//! flush (semantically neutral — flush-equivalence is a tested trainer
+//! invariant), materializes its mirror of the merged model, and writes
+//! this file *atomically* (temp file + rename, the same discipline as
+//! the `LZBC` dataset cache): a reader either sees the previous
+//! complete checkpoint or the new one, never a torn write.
+//!
+//! A checkpoint binds the model to the exact run configuration the
+//! cluster handshake validates (dim, examples, penalty) plus the
+//! schedule-determining knobs (workers, seed, epochs, sync interval):
+//! `train --net coordinator:… --resume` refuses a checkpoint whose
+//! configuration differs, because the equal-shard sparse merge is only
+//! exact when every process replays the identical schedule.
+//!
+//! Layout (all little-endian, sections padded to 8 bytes):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic b"LZCK"
+//! 4       2     format version, u16 (currently 1)
+//! 6       2     reserved, must be 0
+//! 8       8     dim, u64
+//! 16      8     examples (training rows), u64
+//! 24      4     workers, u32
+//! 28      4     penalty byte length, u32 (≤ 256)
+//! 32      8     data-order seed, u64
+//! 40      8     epochs, u64
+//! 48      8     sync interval, u64 (0 = unset/default)
+//! 56      8     next round counter, u64
+//! 64      8     epoch position, u64
+//! 72      8     offset within epoch, u64
+//! 80      8     per-worker DP clock (steps), u64
+//! 88      8     per-worker rebase count, u64
+//! 96      8     bias, f64
+//! 104     8     nnz, u64
+//! 112     …     penalty string bytes, zero-padded to 8
+//! …       …     sorted nonzero indices, nnz × u32, zero-padded to 8
+//! …       …     weights, nnz × f64
+//! ```
+//!
+//! Every count is validated in u64 math against hard caps *before* any
+//! allocation, indices must be strictly increasing and `< dim`, and
+//! trailing bytes are rejected — the same decoder discipline as the
+//! wire frames and the `LZMC` artifact.
+
+use std::fmt;
+use std::io;
+use std::path::Path;
+
+/// Checkpoint magic: "LaZy ChecKpoint".
+pub const MAGIC: [u8; 4] = *b"LZCK";
+/// Format version written and required.
+pub const VERSION: u16 = 1;
+/// Fixed-size header bytes before the variable sections.
+pub const HEADER_BYTES: usize = 112;
+/// `dim` must fit the u32 feature-index space.
+pub const MAX_DIM: u64 = 1 << 32;
+/// Cap on the recorded penalty string.
+pub const MAX_PENALTY_BYTES: usize = 256;
+
+/// Structured load error; mirrors `CompactError`/`FrameError` — a
+/// corrupt or mismatched checkpoint is a clean refusal, never a panic.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Underlying filesystem error.
+    Io(io::Error),
+    /// The file ends inside a declared section.
+    Truncated,
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unsupported format version.
+    BadVersion(u16),
+    /// A declared size exceeds its hard cap.
+    Oversized { field: &'static str, value: u64, max: u64 },
+    /// Bytes violate a structural invariant.
+    Malformed(&'static str),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CheckpointError::Truncated => write!(f, "checkpoint truncated"),
+            CheckpointError::BadMagic(m) => write!(f, "bad checkpoint magic {m:02x?}"),
+            CheckpointError::BadVersion(v) => {
+                write!(f, "unsupported checkpoint version {v} (expected {VERSION})")
+            }
+            CheckpointError::Oversized { field, value, max } => {
+                write!(f, "checkpoint {field} of {value} exceeds the cap of {max}")
+            }
+            CheckpointError::Malformed(why) => write!(f, "malformed checkpoint: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for CheckpointError {
+    fn from(e: io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// One materialized round-boundary checkpoint: run identity, resume
+/// position, and the merged model as sorted nonzeros.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Feature-space dimension of the run.
+    pub dim: u64,
+    /// Training-set size every process must load.
+    pub examples: u64,
+    /// Cluster worker count (shard count).
+    pub workers: u32,
+    /// Data-order seed.
+    pub seed: u64,
+    /// Total epochs of the run.
+    pub epochs: u64,
+    /// Sync interval in examples (0 = unset, i.e. epoch-length rounds).
+    pub sync_interval: u64,
+    /// Penalty provenance string, as in the `Hello` handshake.
+    pub penalty: String,
+    /// The next round to run (rounds `0..round` are inside the model).
+    pub round: u64,
+    /// Epoch position at the checkpoint.
+    pub epoch: u64,
+    /// Offset within the epoch (examples consumed, longest shard).
+    pub offset: u64,
+    /// Per-worker DP clock: examples each worker had consumed.
+    pub steps: u64,
+    /// Per-worker budget-flush count at the checkpoint.
+    pub rebases: u64,
+    /// Merged bias.
+    pub bias: f64,
+    /// Sorted nonzero feature indices of the merged model.
+    pub indices: Vec<u32>,
+    /// Weights paired with `indices`.
+    pub values: Vec<f64>,
+}
+
+fn pad_to8(out: &mut Vec<u8>) {
+    while out.len() % 8 != 0 {
+        out.push(0);
+    }
+}
+
+impl Checkpoint {
+    /// Encode to the `LZCK` byte layout.
+    pub fn encode(&self) -> Result<Vec<u8>, CheckpointError> {
+        if self.dim > MAX_DIM {
+            return Err(CheckpointError::Oversized { field: "dim", value: self.dim, max: MAX_DIM });
+        }
+        if self.penalty.len() > MAX_PENALTY_BYTES {
+            return Err(CheckpointError::Oversized {
+                field: "penalty_len",
+                value: self.penalty.len() as u64,
+                max: MAX_PENALTY_BYTES as u64,
+            });
+        }
+        if self.indices.len() != self.values.len() {
+            return Err(CheckpointError::Malformed("value count differs from index count"));
+        }
+        if self.indices.len() as u64 > self.dim {
+            return Err(CheckpointError::Oversized {
+                field: "nnz",
+                value: self.indices.len() as u64,
+                max: self.dim,
+            });
+        }
+        let nnz = self.indices.len();
+        let mut out = Vec::with_capacity(HEADER_BYTES + self.penalty.len() + nnz * 12 + 16);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.dim.to_le_bytes());
+        out.extend_from_slice(&self.examples.to_le_bytes());
+        out.extend_from_slice(&self.workers.to_le_bytes());
+        out.extend_from_slice(&(self.penalty.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.epochs.to_le_bytes());
+        out.extend_from_slice(&self.sync_interval.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.offset.to_le_bytes());
+        out.extend_from_slice(&self.steps.to_le_bytes());
+        out.extend_from_slice(&self.rebases.to_le_bytes());
+        out.extend_from_slice(&self.bias.to_le_bytes());
+        out.extend_from_slice(&(nnz as u64).to_le_bytes());
+        debug_assert_eq!(out.len(), HEADER_BYTES);
+        out.extend_from_slice(self.penalty.as_bytes());
+        pad_to8(&mut out);
+        for &j in &self.indices {
+            out.extend_from_slice(&j.to_le_bytes());
+        }
+        pad_to8(&mut out);
+        for &w in &self.values {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    /// Decode an `LZCK` byte buffer, validating every cap and invariant.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        let mut cur = Cur { buf: bytes, pos: 0 };
+        let magic = cur.take(4)?;
+        if magic != MAGIC {
+            return Err(CheckpointError::BadMagic([magic[0], magic[1], magic[2], magic[3]]));
+        }
+        let version = cur.u16()?;
+        if version != VERSION {
+            return Err(CheckpointError::BadVersion(version));
+        }
+        if cur.u16()? != 0 {
+            return Err(CheckpointError::Malformed("reserved header bytes non-zero"));
+        }
+        let dim = cur.u64()?;
+        if dim > MAX_DIM {
+            return Err(CheckpointError::Oversized { field: "dim", value: dim, max: MAX_DIM });
+        }
+        let examples = cur.u64()?;
+        let workers = cur.u32()?;
+        let penalty_len = u64::from(cur.u32()?);
+        if penalty_len > MAX_PENALTY_BYTES as u64 {
+            return Err(CheckpointError::Oversized {
+                field: "penalty_len",
+                value: penalty_len,
+                max: MAX_PENALTY_BYTES as u64,
+            });
+        }
+        let seed = cur.u64()?;
+        let epochs = cur.u64()?;
+        let sync_interval = cur.u64()?;
+        let round = cur.u64()?;
+        let epoch = cur.u64()?;
+        let offset = cur.u64()?;
+        let steps = cur.u64()?;
+        let rebases = cur.u64()?;
+        let bias = cur.f64()?;
+        let nnz = cur.u64()?;
+        if nnz > dim {
+            return Err(CheckpointError::Oversized { field: "nnz", value: nnz, max: dim });
+        }
+
+        // Whole-file length check in u64 math before any allocation
+        // (within the caps the sum cannot overflow).
+        let expected = HEADER_BYTES as u64
+            + penalty_len.next_multiple_of(8)
+            + (nnz * 4).next_multiple_of(8)
+            + nnz * 8;
+        if (bytes.len() as u64) < expected {
+            return Err(CheckpointError::Truncated);
+        }
+        if bytes.len() as u64 > expected {
+            return Err(CheckpointError::Malformed("trailing bytes after last section"));
+        }
+
+        let penalty_bytes = cur.take(penalty_len as usize)?;
+        let penalty = match std::str::from_utf8(penalty_bytes) {
+            Ok(s) => s.to_string(),
+            Err(_) => return Err(CheckpointError::Malformed("penalty is not UTF-8")),
+        };
+        cur.pad8()?;
+        let idx_bytes = cur.take(nnz as usize * 4)?;
+        cur.pad8()?;
+        let val_bytes = cur.take(nnz as usize * 8)?;
+        debug_assert_eq!(cur.pos, bytes.len());
+
+        let mut indices = Vec::with_capacity(nnz as usize);
+        let mut prev: Option<u32> = None;
+        for c in idx_bytes.chunks_exact(4) {
+            let j = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            if prev.is_some_and(|p| j <= p) {
+                return Err(CheckpointError::Malformed("indices not strictly increasing"));
+            }
+            if u64::from(j) >= dim {
+                return Err(CheckpointError::Malformed("index >= dim"));
+            }
+            prev = Some(j);
+            indices.push(j);
+        }
+        let values: Vec<f64> = val_bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect();
+
+        Ok(Checkpoint {
+            dim,
+            examples,
+            workers,
+            seed,
+            epochs,
+            sync_interval,
+            penalty,
+            round,
+            epoch,
+            offset,
+            steps,
+            rebases,
+            bias,
+            indices,
+            values,
+        })
+    }
+
+    /// Save atomically: write `<path>.tmp`, then rename over `path`.
+    /// A crash mid-write leaves the previous checkpoint intact.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<(), CheckpointError> {
+        let path = path.as_ref();
+        let bytes = self.encode()?;
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and validate a checkpoint file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint, CheckpointError> {
+        let bytes = std::fs::read(path.as_ref())?;
+        Checkpoint::decode(&bytes)
+    }
+
+    /// Refuse to resume under a different run configuration: returns
+    /// the first mismatched field name, or `None` when compatible.
+    pub fn config_mismatch(
+        &self,
+        dim: u64,
+        examples: u64,
+        workers: u32,
+        seed: u64,
+        epochs: u64,
+        sync_interval: u64,
+        penalty: &str,
+    ) -> Option<&'static str> {
+        if self.dim != dim {
+            return Some("dim");
+        }
+        if self.examples != examples {
+            return Some("examples");
+        }
+        if self.workers != workers {
+            return Some("workers");
+        }
+        if self.seed != seed {
+            return Some("seed");
+        }
+        if self.epochs != epochs {
+            return Some("epochs");
+        }
+        if self.sync_interval != sync_interval {
+            return Some("sync-interval");
+        }
+        if self.penalty != penalty {
+            return Some("penalty");
+        }
+        None
+    }
+}
+
+/// Checked little-endian cursor (no panics on short input — the
+/// `serve-unwrap` lint rule covers this module).
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        let end = match self.pos.checked_add(n) {
+            Some(e) if e <= self.buf.len() => e,
+            _ => return Err(CheckpointError::Truncated),
+        };
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, CheckpointError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn pad8(&mut self) -> Result<(), CheckpointError> {
+        let n = self.pos.next_multiple_of(8) - self.pos;
+        if self.take(n)?.iter().any(|&b| b != 0) {
+            return Err(CheckpointError::Malformed("non-zero padding"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            dim: 5000,
+            examples: 600,
+            workers: 2,
+            seed: 13,
+            epochs: 2,
+            sync_interval: 50,
+            penalty: "enet:1e-4:1e-4".to_string(),
+            round: 7,
+            epoch: 1,
+            offset: 150,
+            steps: 450,
+            rebases: 1,
+            bias: -0.125,
+            indices: vec![0, 3, 4999],
+            values: vec![0.5, -2.5, 1.0e-9],
+        }
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        let ck = sample();
+        let bytes = ck.encode().expect("encode");
+        let back = Checkpoint::decode(&bytes).expect("decode");
+        assert_eq!(back, ck);
+        for (a, b) in ck.values.iter().zip(&back.values) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_structured_error() {
+        let bytes = sample().encode().expect("encode");
+        for cut in 0..bytes.len() {
+            let err = Checkpoint::decode(&bytes[..cut]).expect_err("prefix must fail");
+            assert!(
+                matches!(err, CheckpointError::Truncated | CheckpointError::BadMagic(_)),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_headers_are_rejected() {
+        let good = sample().encode().expect("encode");
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(Checkpoint::decode(&bad), Err(CheckpointError::BadMagic(_))));
+
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(matches!(Checkpoint::decode(&bad), Err(CheckpointError::BadVersion(99))));
+
+        let mut bad = good.clone();
+        bad[6] = 1; // reserved
+        assert!(matches!(Checkpoint::decode(&bad), Err(CheckpointError::Malformed(_))));
+
+        // A hostile nnz cannot force an allocation: it is checked
+        // against dim and the file length first.
+        let mut bad = good.clone();
+        bad[104..112].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(Checkpoint::decode(&bad), Err(CheckpointError::Oversized { .. })));
+
+        let mut bad = good;
+        bad.push(0);
+        assert!(matches!(Checkpoint::decode(&bad), Err(CheckpointError::Malformed(_))));
+    }
+
+    #[test]
+    fn unsorted_or_out_of_range_indices_are_rejected() {
+        let mut ck = sample();
+        ck.indices = vec![3, 3, 9];
+        let bytes = ck.encode().expect("encode");
+        assert!(matches!(
+            Checkpoint::decode(&bytes),
+            Err(CheckpointError::Malformed("indices not strictly increasing"))
+        ));
+
+        let mut ck = sample();
+        ck.indices = vec![0, 3, 5000]; // == dim
+        let bytes = ck.encode().expect("encode");
+        assert!(matches!(
+            Checkpoint::decode(&bytes),
+            Err(CheckpointError::Malformed("index >= dim"))
+        ));
+    }
+
+    #[test]
+    fn save_is_atomic_and_load_round_trips() {
+        let dir = std::env::temp_dir().join(format!("lzck_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("run.lzck");
+        let ck = sample();
+        ck.save(&path).expect("save");
+        assert!(!path.with_extension("tmp").exists(), "tmp must be renamed away");
+        let back = Checkpoint::load(&path).expect("load");
+        assert_eq!(back, ck);
+        // Overwrite with a later checkpoint; the file is replaced whole.
+        let mut later = ck.clone();
+        later.round = 9;
+        later.save(&path).expect("re-save");
+        assert_eq!(Checkpoint::load(&path).expect("reload").round, 9);
+        std::fs::remove_dir_all(&dir).expect("cleanup");
+    }
+
+    #[test]
+    fn config_mismatch_names_the_field() {
+        let ck = sample();
+        assert_eq!(ck.config_mismatch(5000, 600, 2, 13, 2, 50, "enet:1e-4:1e-4"), None);
+        assert_eq!(
+            ck.config_mismatch(5000, 600, 4, 13, 2, 50, "enet:1e-4:1e-4"),
+            Some("workers")
+        );
+        assert_eq!(ck.config_mismatch(5000, 600, 2, 14, 2, 50, "enet:1e-4:1e-4"), Some("seed"));
+        assert_eq!(ck.config_mismatch(5000, 600, 2, 13, 2, 50, "l1:0.1"), Some("penalty"));
+    }
+}

@@ -37,10 +37,38 @@
 //! multi-process CI smoke; the remaining wiggle is worker count, not
 //! transport — equal worker counts match bitwise).
 //!
+//! ## Liveness and faults
+//!
+//! Every socket carries [`Deadlines`]: workers emit `Ping` heartbeats
+//! while training their round slice, so the coordinator waits under the
+//! short *silence* bound even through long rounds; workers waiting out
+//! the round barrier (the coordinator is gated by the slowest worker
+//! and, being single-threaded, cannot heartbeat) use the generous
+//! *round* bound. A stalled or partitioned peer therefore surfaces as a
+//! structured [`FrameError::Timeout`] within a configured bound — never
+//! an infinite `read_exact`. A fired deadline is connection-fatal: the
+//! job aborts fast, and `--resume` restarts it from the last round
+//! checkpoint (see [`CheckpointConfig`]).
+//!
+//! ## Round checkpoints
+//!
+//! The coordinator keeps a *mirror* [`LazyTrainer`] in lockstep with
+//! the fleet: [`LazyTrainer::advance_clock`] replays each round's step
+//! count (equal shards ⇒ identical DP tables), then the round's merged
+//! union is scattered on top — exactly what every worker holds at the
+//! round boundary. At checkpoint rounds the flush flag is forced
+//! (semantically neutral by the lazy-vs-eager equivalence), the mirror
+//! materializes, and the LZCK snapshot is written atomically. Resume
+//! rebuilds every worker from the snapshot via `load_weights` +
+//! `restore_clock` and fast-forwards the shared epoch-order RNG, making
+//! the resumed model bitwise-identical to an uninterrupted run with the
+//! same checkpoint cadence.
+//!
 //! Trusted networks only: no authentication, no encryption (see
 //! `DISTRIBUTED.md`).
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -53,11 +81,33 @@ use crate::train::pool::{longest_shard, next_round_steps, round_slice, shard_ran
 use crate::train::{EpochStats, LazyTrainer, MergeMode, TrainOptions, TrainReport, Trainer};
 use crate::util::Rng;
 
-use super::frame::{Channel, Frame, ROLE_COORDINATOR, ROLE_WORKER};
+use super::checkpoint::Checkpoint;
+#[allow(unused_imports)] // referenced by the module docs
+use super::frame::FrameError;
+use super::frame::{Channel, Deadlines, Frame, ROLE_COORDINATOR, ROLE_WORKER};
 
 /// How long a worker keeps retrying its initial connection (the
 /// coordinator may simply not be up yet).
 const CONNECT_WAIT: Duration = Duration::from_secs(30);
+
+/// Round-checkpoint policy for a coordinated training run.
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Where the LZCK snapshot lives (written atomically, overwritten
+    /// at each checkpoint round).
+    pub path: PathBuf,
+    /// Write a checkpoint every `every` completed rounds (0 disables
+    /// the cadence; a checkpoint is still forced by `halt_after`).
+    pub every: u64,
+    /// Restart from `path` instead of from scratch: workers are handed
+    /// the snapshot during the handshake and training resumes at the
+    /// checkpointed (epoch, offset) with the round counter restored.
+    pub resume: bool,
+    /// Fault drill: after completing round `r` (and writing a forced
+    /// checkpoint), abort the fleet and exit nonzero — the CI resume
+    /// smoke kills the coordinator deterministically with this.
+    pub halt_after: Option<u64>,
+}
 
 /// Wire-level accounting for one training run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,17 +133,29 @@ pub struct ClusterCoordinator {
     listener: TcpListener,
     addr: SocketAddr,
     workers: usize,
+    deadlines: Deadlines,
 }
 
 impl ClusterCoordinator {
-    /// Bind the coordinator socket (e.g. `127.0.0.1:0`). Workers are
-    /// accepted later, in [`ClusterCoordinator::run`].
+    /// Bind the coordinator socket (e.g. `127.0.0.1:0`) with deadlines
+    /// from the environment. Workers are accepted later, in
+    /// [`ClusterCoordinator::run`].
     pub fn bind(addr: &str, workers: usize) -> Result<ClusterCoordinator> {
+        ClusterCoordinator::bind_with(addr, workers, Deadlines::from_env())
+    }
+
+    /// [`ClusterCoordinator::bind`] with explicit deadlines — the fault
+    /// tests inject short bounds here.
+    pub fn bind_with(
+        addr: &str,
+        workers: usize,
+        deadlines: Deadlines,
+    ) -> Result<ClusterCoordinator> {
         ensure!(workers >= 1, "cluster needs at least one worker");
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding coordinator on {addr}"))?;
         let addr = listener.local_addr().context("coordinator local_addr")?;
-        Ok(ClusterCoordinator { listener, addr, workers })
+        Ok(ClusterCoordinator { listener, addr, workers, deadlines })
     }
 
     /// The bound address (useful after binding port 0).
@@ -111,9 +173,24 @@ impl ClusterCoordinator {
         labels: &[f32],
         opts: &TrainOptions,
     ) -> Result<(TrainReport, NetStats)> {
+        self.run_with(x, labels, opts, None)
+    }
+
+    /// [`ClusterCoordinator::run`] with a round-checkpoint policy: the
+    /// coordinator mirrors the fleet state, persists it at checkpoint
+    /// rounds, and (with `resume`) restarts a killed job from the
+    /// snapshot instead of from scratch.
+    pub fn run_with(
+        self,
+        x: &CsrMatrix,
+        labels: &[f32],
+        opts: &TrainOptions,
+        ckpt: Option<&CheckpointConfig>,
+    ) -> Result<(TrainReport, NetStats)> {
         let n = x.n_rows();
         let d = x.n_cols();
         let workers = self.workers;
+        let deadlines = self.deadlines;
         ensure!(labels.len() == n, "label count {} does not match {n} rows", labels.len());
         ensure!(
             opts.merge == MergeMode::Sparse,
@@ -131,14 +208,58 @@ impl ClusterCoordinator {
              by {workers} workers"
         );
 
+        let penalty = opts.reg.name();
+        let interval = opts.sync_interval.unwrap_or(n.max(1));
+
+        // Resume: load and vet the snapshot before admitting anyone, so
+        // a config mismatch refuses the job instead of corrupting it.
+        let resume: Option<Checkpoint> = match ckpt {
+            Some(cfg) if cfg.resume => {
+                let c = Checkpoint::load(&cfg.path)
+                    .with_context(|| format!("loading checkpoint {}", cfg.path.display()))?;
+                if let Some(field) = c.config_mismatch(
+                    d as u64,
+                    n as u64,
+                    workers as u32,
+                    opts.seed,
+                    opts.epochs as u64,
+                    interval as u64,
+                    &penalty,
+                ) {
+                    bail!(
+                        "checkpoint {} disagrees with this run on `{field}`; resume \
+                         requires identical train arguments",
+                        cfg.path.display()
+                    );
+                }
+                ensure!(
+                    (c.epoch as usize) < opts.epochs,
+                    "checkpoint {} is already past the final epoch ({} of {})",
+                    cfg.path.display(),
+                    c.epoch,
+                    opts.epochs
+                );
+                eprintln!(
+                    "[lazyreg] net: resuming from {} (round {}, epoch {}, offset {})",
+                    cfg.path.display(),
+                    c.round,
+                    c.epoch,
+                    c.offset
+                );
+                Some(c)
+            }
+            _ => None,
+        };
+        let resume_round = resume.as_ref().map_or(0, |c| c.round);
+
         // Handshake: admit workers in arrival order; arrival order *is*
         // shard assignment. Every process derives the same epoch orders
         // from the shared seed, so shard w's contents are identical in
         // every process — which worker gets which shard is immaterial.
-        let penalty = opts.reg.name();
         let mut chans: Vec<Channel> = Vec::with_capacity(workers);
         for w in 0..workers {
             let (stream, peer) = self.listener.accept().context("accepting a worker connection")?;
+            deadlines.apply_to(&stream).context("arming worker socket deadlines")?;
             let mut chan = Channel::new(stream)?;
             match chan.recv().context("worker handshake")? {
                 Frame::Hello { role, dim, examples, penalty: worker_penalty, .. }
@@ -160,9 +281,23 @@ impl ClusterCoordinator {
                         shards: workers as u32,
                         dim: d as u64,
                         examples: n as u64,
-                        version: 0,
+                        // A nonzero version announces a resume; the
+                        // snapshot follows as a Resume frame.
+                        version: resume_round,
                         penalty: penalty.clone(),
                     })?;
+                    if let Some(c) = &resume {
+                        chan.send(&Frame::Resume {
+                            round: c.round,
+                            epoch: c.epoch,
+                            offset: c.offset,
+                            steps: c.steps,
+                            rebases: c.rebases,
+                            bias: c.bias,
+                            indices: c.indices.clone(),
+                            values: c.values.clone(),
+                        })?;
+                    }
                     eprintln!("[lazyreg] net: worker {}/{workers} joined from {peer}", w + 1);
                     chans.push(chan);
                 }
@@ -170,24 +305,47 @@ impl ClusterCoordinator {
                 other => bail!("worker at {peer}: expected Hello, got {}", other.name()),
             }
         }
+        // Rounds are long but workers heartbeat while training, so the
+        // coordinator only ever waits under the silence bound.
+        for chan in &chans {
+            chan.set_read_deadline(deadlines.silence)
+                .context("arming the coordinator silence deadline")?;
+        }
 
-        let interval = opts.sync_interval.unwrap_or(n.max(1));
+        // The checkpoint mirror: one more LazyTrainer, clock-advanced in
+        // lockstep with the fleet and overwritten by each round's merge.
+        let mut mirror = LazyTrainer::new(d, opts);
+        let (start_epoch, start_offset, mut rounds) = match &resume {
+            Some(c) => {
+                let mut dense = vec![0.0f64; d];
+                for (&j, &v) in c.indices.iter().zip(c.values.iter()) {
+                    dense[j as usize] = v;
+                }
+                mirror.load_weights(&dense, c.bias);
+                mirror.restore_clock(c.steps);
+                mirror.rebases = c.rebases;
+                (c.epoch as usize, c.offset as usize, c.round)
+            }
+            None => (0, 0, 0u64),
+        };
+
         let longest = longest_shard(n, workers);
-        let mut epochs_out = Vec::with_capacity(opts.epochs);
-        let mut rounds = 0u64;
+        let mut epochs_out = Vec::with_capacity(opts.epochs - start_epoch);
+        let mut examples_done = 0u64;
         // Round scratch, reused: the union U and the merge accumulator.
         let mut touched: Vec<u32> = Vec::new();
         let mut merged: Vec<f64> = Vec::new();
         let t0 = Instant::now();
 
-        for epoch in 0..opts.epochs {
+        for epoch in start_epoch..opts.epochs {
             let e0 = Instant::now();
             let mut loss_sum = 0.0f64;
             let mut merge_seconds = 0.0f64;
             let mut frac_sum = 0.0f64;
             let mut merges = 0usize;
             let mut epoch_penalty: Option<f64> = None;
-            let mut offset = 0usize;
+            let mut epoch_examples = 0u64;
+            let mut offset = if epoch == start_epoch { start_offset } else { 0 };
             while offset < longest {
                 let epoch_done = offset.saturating_add(interval) >= longest;
 
@@ -197,7 +355,7 @@ impl ClusterCoordinator {
                 let mut pushes: Vec<Push> = Vec::with_capacity(workers);
                 for (w, chan) in chans.iter_mut().enumerate() {
                     match chan
-                        .recv()
+                        .recv_live()
                         .with_context(|| format!("receiving SyncPush from worker {w}"))?
                     {
                         Frame::SyncPush { round, examples, loss, bias, indices, values } => {
@@ -225,6 +383,7 @@ impl ClusterCoordinator {
                 );
                 let total: u64 = pushes.iter().map(|p| p.examples).sum();
                 ensure!(total > 0, "empty sync round");
+                epoch_examples += total;
 
                 touched.clear();
                 for p in &pushes {
@@ -254,7 +413,7 @@ impl ClusterCoordinator {
                 let mut gathered: Vec<Vec<f64>> = Vec::with_capacity(workers);
                 for (w, chan) in chans.iter_mut().enumerate() {
                     match chan
-                        .recv()
+                        .recv_live()
                         .with_context(|| format!("receiving SyncVals from worker {w}"))?
                     {
                         Frame::SyncVals { round, pressure, values, .. } => {
@@ -297,7 +456,16 @@ impl ClusterCoordinator {
                     .with_context(|| format!("merging worker {w}"))?;
                     bias += wgt * p.bias;
                 }
-                let flush = next > 0 && pressure_any;
+                // Checkpoint rounds force the flush: a flush is
+                // semantically neutral (lazy == eager), and it leaves
+                // every trainer at ψ = 0 so the snapshot is a plain
+                // materialize. Pointless on the very last round.
+                let due = ckpt.filter(|cfg| {
+                    next > 0
+                        && ((cfg.every > 0 && (rounds + 1) % cfg.every == 0)
+                            || cfg.halt_after == Some(rounds))
+                });
+                let flush = (next > 0 && pressure_any) || due.is_some();
 
                 // Exchange 3: broadcast the merged union; worker 0
                 // answers the end-of-epoch objective after scattering
@@ -313,12 +481,69 @@ impl ClusterCoordinator {
                     })?;
                 }
                 if epoch_done {
-                    match chans[0].recv().context("receiving the epoch objective from worker 0")? {
+                    match chans[0]
+                        .recv_live()
+                        .context("receiving the epoch objective from worker 0")?
+                    {
                         Frame::SyncVals { round, objective: Some(p), .. } => {
                             ensure!(round == rounds, "objective for round {round}");
                             epoch_penalty = Some(p);
                         }
                         other => bail!("expected the epoch objective, got {}", other.name()),
+                    }
+                }
+
+                // Mirror the round: replay the fleet's per-worker step
+                // count (equal shards keep the DP tables identical),
+                // then overwrite with the merge every worker just got.
+                mirror.advance_clock(pushes[0].examples);
+                mirror.scatter_merged(&touched, &merged, bias);
+                if flush {
+                    mirror.flush_and_rebase();
+                }
+                if let Some(cfg) = due {
+                    mirror.finalize();
+                    let mut ck_idx: Vec<u32> = Vec::new();
+                    let mut ck_val: Vec<f64> = Vec::new();
+                    for (j, &v) in mirror.model().weights.iter().enumerate() {
+                        if v != 0.0 {
+                            ck_idx.push(j as u32);
+                            ck_val.push(v);
+                        }
+                    }
+                    let (next_epoch, next_offset) = if offset.saturating_add(interval) < longest {
+                        (epoch, offset + interval)
+                    } else {
+                        (epoch + 1, 0)
+                    };
+                    let snap = Checkpoint {
+                        dim: d as u64,
+                        examples: n as u64,
+                        workers: workers as u32,
+                        seed: opts.seed,
+                        epochs: opts.epochs as u64,
+                        sync_interval: interval as u64,
+                        penalty: penalty.clone(),
+                        round: rounds + 1,
+                        epoch: next_epoch as u64,
+                        offset: next_offset as u64,
+                        steps: mirror.cache().global_t(),
+                        rebases: mirror.rebases,
+                        bias: mirror.bias(),
+                        indices: ck_idx,
+                        values: ck_val,
+                    };
+                    snap.save(&cfg.path)
+                        .with_context(|| format!("writing checkpoint {}", cfg.path.display()))?;
+                    eprintln!(
+                        "[lazyreg] net: checkpoint after round {rounds} -> {}",
+                        cfg.path.display()
+                    );
+                    if cfg.halt_after == Some(rounds) {
+                        let reason =
+                            format!("coordinator halting after round {rounds} (checkpoint drill)");
+                        abort_all(&mut chans, &reason);
+                        bail!(reason);
                     }
                 }
 
@@ -328,12 +553,13 @@ impl ClusterCoordinator {
                 rounds += 1;
                 offset = offset.saturating_add(interval);
             }
-            let mean_loss = loss_sum / n.max(1) as f64;
+            examples_done += epoch_examples;
+            let mean_loss = loss_sum / epoch_examples.max(1) as f64;
             epochs_out.push(EpochStats {
                 epoch,
                 mean_loss,
                 objective: mean_loss + epoch_penalty.unwrap_or(0.0),
-                examples: n,
+                examples: epoch_examples as usize,
                 seconds: e0.elapsed().as_secs_f64(),
                 merge_seconds,
                 touched_frac: if merges > 0 {
@@ -348,7 +574,7 @@ impl ClusterCoordinator {
         // worker holds the identical state), then everyone gets a Bye.
         chans[0].send(&Frame::ModelReq)?;
         let (model, worker_rebases) = match chans[0]
-            .recv()
+            .recv_live()
             .context("receiving the final model from worker 0")?
         {
             Frame::Model { dim, bias, rebases, penalty: model_penalty, indices, values } => {
@@ -370,19 +596,18 @@ impl ClusterCoordinator {
         }
 
         let seconds = t0.elapsed().as_secs_f64();
-        let examples = (n * opts.epochs) as u64;
         let stats = NetStats {
-            rounds,
+            rounds: rounds - resume_round,
             bytes_sent: chans.iter().map(Channel::bytes_sent).sum(),
             bytes_received: chans.iter().map(Channel::bytes_received).sum(),
         };
         Ok((
             TrainReport {
                 model,
-                examples,
+                examples: examples_done,
                 seconds,
                 throughput: if seconds > 0.0 {
-                    examples as f64 / seconds
+                    examples_done as f64 / seconds
                 } else {
                     0.0
                 },
@@ -463,11 +688,26 @@ fn splice_accumulate(
 /// derives identical epoch orders everywhere, which is what makes the
 /// coordinator's shard assignment arbitrary.
 pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions) -> Result<()> {
+    run_worker_with(addr, x, labels, opts, &Deadlines::from_env())
+}
+
+/// [`run_worker`] with explicit deadlines — the fault tests inject
+/// short bounds here.
+pub fn run_worker_with(
+    addr: &str,
+    x: &CsrMatrix,
+    labels: &[f32],
+    opts: &TrainOptions,
+    deadlines: &Deadlines,
+) -> Result<()> {
     let n = x.n_rows();
     let d = x.n_cols();
     ensure!(labels.len() == n, "label count {} does not match {n} rows", labels.len());
-    let stream = connect_retry(addr, CONNECT_WAIT)?;
+    let stream = connect_retry(addr, CONNECT_WAIT, deadlines)?;
     let mut chan = Channel::new(stream)?;
+    // The Hello reply waits for the *whole fleet* to connect — admission
+    // is sequential — so the handshake gets the round bound, not reply.
+    chan.set_read_deadline(deadlines.round).context("arming the handshake deadline")?;
     chan.send(&Frame::Hello {
         role: ROLE_WORKER,
         shard: 0,
@@ -477,9 +717,9 @@ pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions
         version: 0,
         penalty: opts.reg.name(),
     })?;
-    let (w, workers) = match chan.recv().context("coordinator handshake")? {
-        Frame::Hello { role, shard, shards, .. } if role == ROLE_COORDINATOR => {
-            (shard as usize, shards as usize)
+    let (w, workers, resume_round) = match chan.recv().context("coordinator handshake")? {
+        Frame::Hello { role, shard, shards, version, .. } if role == ROLE_COORDINATOR => {
+            (shard as usize, shards as usize, version)
         }
         Frame::Abort { reason } => bail!("coordinator refused the handshake: {reason}"),
         other => bail!("expected Hello from the coordinator, got {}", other.name()),
@@ -489,27 +729,78 @@ pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions
     eprintln!("[lazyreg] net: assigned shard {w} of {workers}");
 
     let mut trainer = LazyTrainer::new(d, opts);
+    let mut rng = Rng::new(opts.seed);
+    let mut round = 0u64;
+    let mut start_epoch = 0usize;
+    let mut start_offset = 0usize;
+    if resume_round > 0 {
+        // A nonzero handshake version announces a resume; the snapshot
+        // arrives next and replaces "train from scratch".
+        match chan.recv().context("waiting for the resume snapshot")? {
+            Frame::Resume { round: r, epoch, offset, steps, rebases, bias, indices, values } => {
+                ensure!(
+                    r == resume_round,
+                    "resume snapshot is for round {r}, handshake announced {resume_round}"
+                );
+                ensure!(
+                    (epoch as usize) < opts.epochs,
+                    "resume epoch {epoch} is past the final epoch {}",
+                    opts.epochs
+                );
+                ensure!(
+                    indices.last().is_none_or(|&j| (j as usize) < d),
+                    "resume indices out of range for dim {d}"
+                );
+                let mut dense = vec![0.0f64; d];
+                for (&j, &v) in indices.iter().zip(values.iter()) {
+                    dense[j as usize] = v;
+                }
+                trainer.load_weights(&dense, bias);
+                trainer.restore_clock(steps);
+                trainer.rebases = rebases;
+                // Fast-forward the shared epoch-order RNG through the
+                // completed epochs so the resumed orders line up.
+                for _ in 0..epoch {
+                    let _ = epoch_order(n, opts, &mut rng);
+                }
+                round = r;
+                start_epoch = epoch as usize;
+                start_offset = offset as usize;
+                eprintln!("[lazyreg] net: resuming at round {r} (epoch {epoch}, offset {offset})");
+            }
+            Frame::Abort { reason } => bail!("coordinator aborted: {reason}"),
+            other => bail!("expected the resume snapshot, got {}", other.name()),
+        }
+    }
+
     let range = shard_range(n, workers, w);
     let interval = opts.sync_interval.unwrap_or(n.max(1));
     let longest = longest_shard(n, workers);
-    let mut rng = Rng::new(opts.seed);
-    let mut round = 0u64;
+    let mut nonce = 0u64;
     let mut tv: Vec<u32> = Vec::new();
-    for _epoch in 0..opts.epochs {
+    for epoch in start_epoch..opts.epochs {
         let order = epoch_order(n, opts, &mut rng);
         let shard = &order[range.clone()];
-        let mut offset = 0usize;
+        let mut offset = if epoch == start_epoch { start_offset } else { 0 };
         while offset < longest {
             // Train the round slice, collecting the touched features in
             // parallel with the pass — the exact in-process worker loop.
+            // Heartbeat while training, so the coordinator's silence
+            // bound stays short even through long rounds.
             let slice = round_slice(shard.len(), offset, interval);
             let (lo, hi) = (slice.start, slice.end);
             let mut ls = 0.0f64;
+            let mut beat = Instant::now();
             tv.clear();
             for &r in &shard[lo..hi] {
                 let row = x.row(r);
                 tv.extend_from_slice(row.indices);
                 ls += trainer.process_example(row, f64::from(labels[r]));
+                if beat.elapsed() >= deadlines.heartbeat {
+                    nonce = nonce.wrapping_add(1);
+                    chan.send(&Frame::Ping { nonce })?;
+                    beat = Instant::now();
+                }
             }
             tv.sort_unstable();
             tv.dedup();
@@ -528,8 +819,10 @@ pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions
             // Exchange 2: supply values at the union indices we did not
             // touch. Pressure is evaluated here, *before* the scatter —
             // equivalent to the in-process post-scatter evaluation,
-            // because the scatter never grows the DP table.
-            let (next_steps, missing) = match chan.recv().context("waiting for SyncUnion")? {
+            // because the scatter never grows the DP table. The wait is
+            // under the round bound: the coordinator is gated by the
+            // slowest worker and cannot heartbeat.
+            let (next_steps, missing) = match chan.recv_live().context("waiting for SyncUnion")? {
                 Frame::SyncUnion { round: r, next_steps, indices } => {
                     ensure!(r == round, "coordinator sent round {r}, expected {round}");
                     // Sorted (decode-validated), so the last index is
@@ -549,7 +842,7 @@ pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions
 
             // Exchange 3: apply the merged union (and the coordinated
             // flush); worker 0 answers the epoch objective afterwards.
-            match chan.recv().context("waiting for SyncMerged")? {
+            match chan.recv_live().context("waiting for SyncMerged")? {
                 Frame::SyncMerged { round: r, flush, want_objective, bias, indices, values } => {
                     ensure!(r == round, "coordinator merged round {r}, expected {round}");
                     ensure!(
@@ -577,10 +870,12 @@ pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions
         }
     }
 
-    // Wind-down: ship the model if asked (worker 0), wait for Bye.
+    // Wind-down: ship the model if asked (worker 0), wait for Bye. The
+    // coordinator answers promptly here, so drop back to silence.
+    chan.set_read_deadline(deadlines.silence).context("arming the wind-down deadline")?;
     let mut trainer = Some(trainer);
     loop {
-        match chan.recv().context("waiting for the wind-down")? {
+        match chan.recv_live().context("waiting for the wind-down")? {
             Frame::ModelReq => {
                 let Some(tr) = trainer.take() else {
                     bail!("coordinator requested the model twice");
@@ -611,11 +906,14 @@ pub fn run_worker(addr: &str, x: &CsrMatrix, labels: &[f32], opts: &TrainOptions
     }
 }
 
-fn connect_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
+fn connect_retry(addr: &str, budget: Duration, deadlines: &Deadlines) -> Result<TcpStream> {
     let deadline = Instant::now() + budget;
     loop {
         match TcpStream::connect(addr) {
-            Ok(s) => return Ok(s),
+            Ok(s) => {
+                deadlines.apply_to(&s).context("arming worker socket deadlines")?;
+                return Ok(s);
+            }
             Err(e) => {
                 if Instant::now() >= deadline {
                     return Err(anyhow::Error::new(e)

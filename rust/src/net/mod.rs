@@ -1,34 +1,56 @@
 //! Cross-node training and serving over plain TCP — dependency-free
-//! (`std::net` only), three layers:
+//! (`std::net` only), five layers:
 //!
 //! * [`frame`] — the length-prefixed binary wire format: typed frames
 //!   behind a magic/version header, hard size caps, and structured
-//!   errors (never a panic) on malformed input.
+//!   errors (never a panic) on malformed input. Home of [`Deadlines`],
+//!   the liveness policy every socket in this tree is armed with (the
+//!   `net-deadline` lint rule enforces that), and of the
+//!   `Ping`/`Pong` heartbeats that keep long rounds distinguishable
+//!   from dead peers.
 //! * [`cluster`] — distributed sparse-sync training: a
 //!   [`ClusterCoordinator`] drives the PR 5 touched-union merge round
 //!   over sockets while [`run_worker`] processes train shards locally,
 //!   so a sync round ships O(|U|) bytes instead of O(d). CLI:
 //!   `train --net coordinator:ADDR --net-workers N` /
 //!   `train --net worker:ADDR`.
-//! * [`shard`] — remote serving shards: a [`ShardServer`] owns one
-//!   block-aligned feature range behind a socket, and
-//!   [`RemoteShardModel`] (a [`crate::predict::Predictor`]) fans
-//!   requests out and tree-reduces the partials bitwise-identically to
-//!   the in-process [`crate::predict::ShardedModel`], with stale-shard
-//!   refusal via model versions and bounded per-shard reconnect. CLI:
-//!   `shard --model M --shard I --shards N --addr A` and
-//!   `serve --remote-shards A,B,...`.
+//! * [`checkpoint`] — the `LZCK` round snapshot a coordinator persists
+//!   at round boundaries (atomic tmp+rename) and `--resume` restarts
+//!   from, bitwise-faithfully; [`CheckpointConfig`] is the CLI knob
+//!   bundle (`--checkpoint`, `--checkpoint-every`, `--resume`,
+//!   `--net-halt-after`).
+//! * [`shard`] — remote serving shards with replication: a
+//!   [`ShardServer`] owns one block-aligned feature range behind a
+//!   socket, and [`RemoteShardModel`] (a [`crate::predict::Predictor`])
+//!   fans requests out over replica groups
+//!   (`serve --remote-shards A1|A2,B1|B2`), failing over between
+//!   replicas within a [`Deadlines::failover`] budget and tree-reducing
+//!   the partials bitwise-identically to the in-process
+//!   [`crate::predict::ShardedModel`]. Version-skewed replicas are
+//!   quarantined (rolling restarts keep serving); a range with no
+//!   usable replica fails with [`ShardUnavailable`], which the serve
+//!   layer maps to `err shard-unavailable`.
+//! * [`chaos`] — a deterministic in-process fault-injection proxy
+//!   ([`ChaosProxy`]) that replays a seeded [`FaultPlan`] (drops,
+//!   stalls, header bit-flips, duplicated bytes) against any of the
+//!   above, so the fault tests can prove every failure ends in a
+//!   structured error, a successful failover, or a byte-identical
+//!   resume — never a hang, never silent corruption.
 //!
 //! **Trusted networks only.** Like the serve protocol, there is no
 //! authentication or encryption — the hardening here is against
-//! malformed bytes and dropped peers, not adversaries. Bind to
-//! loopback or a private interface; see `DISTRIBUTED.md` for the frame
-//! tables and the failure/reconnect model.
+//! malformed bytes, dropped peers, and stalled links, not adversaries.
+//! Bind to loopback or a private interface; see `DISTRIBUTED.md` for
+//! the frame tables and the failure/reconnect model.
 
+pub mod chaos;
+pub mod checkpoint;
 pub mod cluster;
 pub mod frame;
 pub mod shard;
 
-pub use cluster::{run_worker, ClusterCoordinator, NetStats};
-pub use frame::{Channel, Frame, FrameError};
-pub use shard::{RemoteShardModel, ShardServer};
+pub use chaos::{ChaosProxy, Fault, FaultPlan};
+pub use checkpoint::{Checkpoint, CheckpointError};
+pub use cluster::{run_worker, run_worker_with, CheckpointConfig, ClusterCoordinator, NetStats};
+pub use frame::{Channel, Deadlines, Frame, FrameError};
+pub use shard::{RemoteShardModel, ShardServer, ShardUnavailable};

@@ -1,6 +1,6 @@
 //! Remote serving shards: [`ShardServer`] holds one block-aligned
 //! feature range of a model behind a socket; [`RemoteShardModel`] is a
-//! [`Predictor`] that fans each batch out to N shard servers and
+//! [`Predictor`] that fans each batch out to N shard ranges and
 //! tree-reduces their [`Frame::ScorePartial`] replies.
 //!
 //! ## Bitwise equality with in-process sharding
@@ -17,21 +17,38 @@
 //! through extra arithmetic — so remote scores equal in-process sharded
 //! scores bit for bit, for any shard count (dropping zero weights
 //! cannot change any partial bitwise; see [`crate::predict::sparse`]).
+//! Failover cannot perturb scores either: a score request is stateless,
+//! every replica of a range holds the identical weight slice, so a
+//! resend to a sibling produces the same bytes.
 //!
-//! ## Staleness and failure
+//! ## Replication and failover
 //!
-//! Every `ScorePartial` carries the model version the server was
-//! started with. The client refuses (a structured error, logged by the
-//! serve layer — never a silently mixed model) any reply whose version
-//! differs from the one it was built against. A transport error on one
-//! shard triggers a bounded reconnect (fresh handshake, then the
-//! stateless request is simply resent); after the retry budget the
-//! batch fails as a whole.
+//! Each feature range may be served by several replicas
+//! (`--remote-shards A1|A2,B1|B2`: commas separate ranges, `|`
+//! separates replicas of one range). The client keeps one *active*
+//! connection per range (sticky — no per-request load balancing, which
+//! would defeat connection reuse) and opens siblings lazily. Any
+//! transport error, deadline, or protocol violation drops the active
+//! connection and sweeps the group for a replacement, resending the
+//! request on the fresh connection. All sweeps for one batch share a
+//! single budget, [`Deadlines::failover`]; when it runs out the batch
+//! fails with a [`ShardUnavailable`] error that the serve layer maps to
+//! a structured `err shard-unavailable` reply — never a NaN score.
+//!
+//! ## Staleness and rolling restarts
+//!
+//! Every handshake and every `ScorePartial` carries the model version
+//! the server was started with. A replica answering with a different
+//! version is *quarantined* (skipped for [`VERSION_QUARANTINE`], then
+//! retried) rather than failing the fleet — that is exactly the window
+//! during a rolling restart where old and new servers coexist. Scoring
+//! keeps working as long as each range has at least one current-version
+//! replica; versions are never mixed within a batch.
 
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -43,14 +60,17 @@ use crate::predict::{fold_score, sparse_block_partials, Predictor};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::{lock_ok, Arc, Mutex};
 
-use super::frame::{Channel, Frame, FrameError, ROLE_CLIENT, ROLE_SHARD};
+use super::frame::{Channel, Deadlines, Frame, FrameError, ROLE_CLIENT, ROLE_SHARD};
 
-/// Reconnect backoff schedule: one fresh connection attempt per entry.
-const RECONNECT_BACKOFF: [Duration; 3] = [
-    Duration::from_millis(10),
-    Duration::from_millis(50),
-    Duration::from_millis(250),
-];
+/// How long a version-skewed replica sits out before the failover sweep
+/// retries it. Long enough that a rolling restart isn't hammered with
+/// handshakes, short enough that a just-upgraded replica rejoins fast.
+const VERSION_QUARANTINE: Duration = Duration::from_secs(5);
+
+/// Pause between failover sweeps over a group whose every replica just
+/// failed, so a blip (replica restarting) isn't burned through the
+/// whole [`Deadlines::failover`] budget in a tight connect loop.
+const FAILOVER_PAUSE: Duration = Duration::from_millis(25);
 
 /// Poll interval of the non-blocking accept loop.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
@@ -67,6 +87,7 @@ struct ShardState {
     shards: u32,
     dim: u64,
     version: u64,
+    deadlines: Deadlines,
 }
 
 /// A server holding shard `shard` of `shards` for one model version,
@@ -89,6 +110,19 @@ impl ShardServer {
         shards: usize,
         addr: &str,
         version: u64,
+    ) -> Result<ShardServer> {
+        ShardServer::spawn_with(model, shard, shards, addr, version, Deadlines::from_env())
+    }
+
+    /// [`ShardServer::spawn`] with explicit deadlines — the fault tests
+    /// inject millisecond bounds instead of mutating the environment.
+    pub fn spawn_with(
+        model: &LinearModel,
+        shard: usize,
+        shards: usize,
+        addr: &str,
+        version: u64,
+        deadlines: Deadlines,
     ) -> Result<ShardServer> {
         ensure!(shards >= 1, "shard count must be at least 1");
         ensure!(shard < shards, "shard index {shard} out of range for {shards} shards");
@@ -113,6 +147,7 @@ impl ShardServer {
             shards: shards as u32,
             dim: dim as u64,
             version,
+            deadlines,
         });
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding shard server on {addr}"))?;
@@ -168,15 +203,20 @@ fn accept_loop(
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
+                if let Err(e) = state.deadlines.apply_to(&stream) {
+                    eprintln!("shard {}: arming accepted socket failed: {e}", state.shard);
+                    continue;
+                }
                 if let Ok(clone) = stream.try_clone() {
                     lock_ok(conns.lock()).push(clone);
                 }
                 let state = state.clone();
                 handlers.push(thread::spawn(move || {
                     match serve_conn(stream, &state) {
-                        // A peer hanging up mid-frame is the normal way
-                        // connections end; anything else is worth a line.
-                        Ok(()) | Err(FrameError::Truncated) => {}
+                        // A peer hanging up mid-frame or idling past the
+                        // reaper deadline is the normal way connections
+                        // end; anything else is worth a line.
+                        Ok(()) | Err(FrameError::Truncated | FrameError::Timeout) => {}
                         Err(e) => eprintln!("shard {}: connection ended: {e}", state.shard),
                     }
                 }));
@@ -200,7 +240,11 @@ fn accept_loop(
 
 /// One client connection: handshake, then `ScoreReq` → `ScorePartial`
 /// until `Bye` or disconnect. Malformed or unexpected frames get an
-/// `Abort` and a close — never a panic.
+/// `Abort` and a close — never a panic. The handshake runs under the
+/// `reply` read bound armed at accept; after it the read bound widens
+/// to `round`, serving as an idle reaper — a serve-layer client
+/// legitimately parks its persistent connection between requests, and
+/// reconnects statelessly if reaped.
 fn serve_conn(stream: TcpStream, state: &ShardState) -> Result<(), FrameError> {
     let mut chan = Channel::new(stream)?;
     match chan.recv()? {
@@ -234,12 +278,14 @@ fn serve_conn(stream: TcpStream, state: &ShardState) -> Result<(), FrameError> {
         version: state.version,
         penalty: String::new(),
     })?;
+    chan.set_read_deadline(state.deadlines.round)?;
     loop {
         match chan.recv() {
             Ok(Frame::ScoreReq { seq, indptr, indices, values }) => {
                 let rows = score_rows(state, &indptr, &indices, &values);
                 chan.send(&Frame::ScorePartial { seq, version: state.version, rows })?;
             }
+            Ok(Frame::Ping { nonce }) => chan.send(&Frame::Pong { nonce })?,
             Ok(Frame::Bye) => return Ok(()),
             Ok(other) => {
                 let _ = chan.send(&Frame::Abort {
@@ -278,122 +324,326 @@ fn score_rows(
 
 // ---------------------------------------------------------------- client
 
-/// One persistent connection to a shard server, with its identity for
-/// reconnects and error messages.
-struct ShardConn {
-    addr: String,
-    shard: u32,
+/// Marker error for "one feature range has no usable replica left
+/// within the failover budget". The serve layer downcasts a scoring
+/// error's chain to this to answer the structured `err
+/// shard-unavailable` token instead of the generic upstream one.
+#[derive(Debug)]
+pub struct ShardUnavailable {
+    /// Which feature-range shard ran out of replicas.
+    pub shard: u32,
+    /// The last per-replica failure (for logs; clients see the token).
+    pub detail: String,
+}
+
+impl std::fmt::Display for ShardUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard {} unavailable: {}", self.shard, self.detail)
+    }
+}
+
+impl std::error::Error for ShardUnavailable {}
+
+/// Everything a failover sweep needs to open and vet a replica: the
+/// fleet shape the handshake asserts, the model version replies must
+/// match, and the socket deadlines armed before any framed I/O.
+struct GroupCtx {
     shards: u32,
     dim: u64,
-    chan: Channel,
+    version: u64,
+    deadlines: Deadlines,
 }
 
-impl ShardConn {
-    fn open(addr: &str, shard: u32, shards: u32, dim: u64) -> Result<ShardConn> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to shard server {addr}"))?;
-        let mut chan = Channel::new(stream)?;
-        chan.send(&Frame::Hello {
-            role: ROLE_CLIENT,
-            shard,
-            shards,
-            dim,
-            examples: 0,
-            version: 0,
-            penalty: String::new(),
-        })?;
-        match chan.recv()? {
-            Frame::Hello { role, shard: s, shards: n, dim: d, .. } if role == ROLE_SHARD => {
-                ensure!(
-                    s == shard && n == shards && d == dim,
-                    "shard server {addr} identifies as shard {s}/{n} of a dim-{d} model, \
-                     expected shard {shard}/{shards} of dim {dim}"
-                );
-            }
-            Frame::Abort { reason } => bail!("shard server {addr} refused the handshake: {reason}"),
-            other => bail!("shard server {addr}: expected Hello, got {}", other.name()),
+/// One replica address of a shard group, with its lazily-opened
+/// connection and its quarantine timer (set when it answers with a
+/// skewed model version — see the module docs on rolling restarts).
+struct Replica {
+    addr: String,
+    chan: Option<Channel>,
+    quarantined_until: Option<Instant>,
+}
+
+/// The replicas serving one feature range. `active` is sticky: requests
+/// reuse one connection until it fails, then the sweep in
+/// [`ShardGroup::ensure_conn`] finds a sibling.
+struct ShardGroup {
+    shard: u32,
+    replicas: Vec<Replica>,
+    active: usize,
+    /// Whether the current request is already on the active replica's
+    /// wire (phase 1 sent it; phase 2 must not resend on that conn).
+    in_flight: bool,
+}
+
+/// Connect to one replica, arm its deadlines, and run the identity
+/// handshake. Returns the channel plus the *server's* model version so
+/// the caller can quarantine a skewed replica instead of failing.
+fn open_replica(addr: &str, shard: u32, ctx: &GroupCtx) -> Result<(Channel, u64)> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to shard server {addr}"))?;
+    ctx.deadlines.apply_to(&stream).context("arming shard socket deadlines")?;
+    let mut chan = Channel::new(stream)?;
+    chan.send(&Frame::Hello {
+        role: ROLE_CLIENT,
+        shard,
+        shards: ctx.shards,
+        dim: ctx.dim,
+        examples: 0,
+        version: 0,
+        penalty: String::new(),
+    })?;
+    match chan.recv()? {
+        Frame::Hello { role, shard: s, shards: n, dim: d, version: v, .. }
+            if role == ROLE_SHARD =>
+        {
+            ensure!(
+                s == shard && n == ctx.shards && d == ctx.dim,
+                "shard server {addr} identifies as shard {s}/{n} of a dim-{d} model, \
+                 expected shard {shard}/{} of dim {}",
+                ctx.shards,
+                ctx.dim
+            );
+            Ok((chan, v))
         }
-        Ok(ShardConn { addr: addr.to_string(), shard, shards, dim, chan })
+        Frame::Abort { reason } => bail!("shard server {addr} refused the handshake: {reason}"),
+        other => bail!("shard server {addr}: expected Hello, got {}", other.name()),
+    }
+}
+
+impl ShardGroup {
+    /// Walk replicas from the sticky `active` index until one holds (or
+    /// yields) a live, version-matching connection. Quarantined
+    /// replicas are skipped until their timer expires; a version-skewed
+    /// handshake (re)starts that timer. Sweeps repeat with a pause
+    /// until `deadline`, then fail with [`ShardUnavailable`].
+    fn ensure_conn(&mut self, ctx: &GroupCtx, deadline: Instant) -> Result<()> {
+        let mut last = format!("no replica configured for shard {}", self.shard);
+        loop {
+            let n = self.replicas.len();
+            for k in 0..n {
+                let i = (self.active + k) % n;
+                let r = &mut self.replicas[i];
+                if let Some(until) = r.quarantined_until {
+                    if Instant::now() < until {
+                        continue;
+                    }
+                    r.quarantined_until = None;
+                }
+                if r.chan.is_none() {
+                    match open_replica(&r.addr, self.shard, ctx) {
+                        Ok((chan, v)) if v == ctx.version => r.chan = Some(chan),
+                        Ok((_, v)) => {
+                            // Rolling restart in progress: this replica
+                            // already serves another model version. Sit
+                            // it out and keep sweeping — never mix
+                            // versions, never refuse the whole fleet.
+                            r.quarantined_until = Some(Instant::now() + VERSION_QUARANTINE);
+                            last = format!(
+                                "replica {} serves model version {v}, expected {} (quarantined)",
+                                r.addr, ctx.version
+                            );
+                            continue;
+                        }
+                        Err(e) => {
+                            last = format!("replica {}: {e:#}", r.addr);
+                            continue;
+                        }
+                    }
+                }
+                if i != self.active {
+                    eprintln!(
+                        "net: shard {}: failing over to replica {}",
+                        self.shard, self.replicas[i].addr
+                    );
+                }
+                self.active = i;
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                return Err(anyhow::Error::new(ShardUnavailable {
+                    shard: self.shard,
+                    detail: last,
+                }));
+            }
+            thread::sleep(FAILOVER_PAUSE);
+        }
     }
 
-    /// Replace a broken connection: close it, then retry the full
-    /// handshake once per [`RECONNECT_BACKOFF`] entry.
-    fn reopen(&mut self) -> Result<()> {
-        self.chan.shutdown();
-        let mut last: Option<anyhow::Error> = None;
-        for backoff in RECONNECT_BACKOFF {
-            thread::sleep(backoff);
-            match ShardConn::open(&self.addr, self.shard, self.shards, self.dim) {
-                Ok(fresh) => {
-                    self.chan = fresh.chan;
+    /// Drop the failed active connection, log why, and point the next
+    /// sweep at the following sibling.
+    fn drop_active(&mut self, why: &str) {
+        let r = &mut self.replicas[self.active];
+        eprintln!("net: shard {} replica {}: {why}; failing over", self.shard, r.addr);
+        if let Some(chan) = r.chan.take() {
+            chan.shutdown();
+        }
+        self.in_flight = false;
+        self.active = (self.active + 1) % self.replicas.len();
+    }
+
+    /// Phase 1: get the request onto some replica's wire so all shard
+    /// ranges compute concurrently. Stateless, so a send failure just
+    /// fails over and resends within the shared budget.
+    fn prime(&mut self, req: &Frame, ctx: &GroupCtx, deadline: Instant) -> Result<()> {
+        loop {
+            self.ensure_conn(ctx, deadline)?;
+            let sent = match self.replicas[self.active].chan.as_mut() {
+                Some(chan) => chan.send(req).map_err(|e| e.to_string()),
+                None => Err("connection vanished".to_string()),
+            };
+            match sent {
+                Ok(()) => {
+                    self.in_flight = true;
                     return Ok(());
                 }
-                Err(e) => last = Some(e),
+                Err(why) => self.drop_active(&format!("send failed ({why})")),
             }
         }
-        match last {
-            Some(e) => Err(e.context(format!(
-                "shard {} at {} unreachable after {} reconnect attempts",
-                self.shard,
-                self.addr,
-                RECONNECT_BACKOFF.len()
-            ))),
-            None => bail!("empty reconnect schedule"),
+    }
+
+    /// Phase 2: collect this group's reply. Any transport error,
+    /// deadline, or protocol violation fails over — reconnect on a
+    /// sibling, resend (bitwise-identical by the module-doc argument),
+    /// receive again — until the shared `deadline` runs out.
+    fn collect(
+        &mut self,
+        req: &Frame,
+        seq: u64,
+        nrows: usize,
+        ctx: &GroupCtx,
+        deadline: Instant,
+    ) -> Result<Vec<RowPartials>> {
+        loop {
+            if !self.in_flight {
+                self.prime(req, ctx, deadline)?;
+            }
+            self.in_flight = false;
+            // Errors carry (why, quarantine): a version-skewed reply
+            // additionally quarantines the replica like a skewed
+            // handshake would.
+            let outcome = match self.replicas[self.active].chan.as_mut() {
+                Some(chan) => match chan.recv() {
+                    Ok(Frame::ScorePartial { seq: rseq, version, rows }) => {
+                        if rseq != seq {
+                            Err((format!("answered request {rseq}, expected {seq}"), false))
+                        } else if version != ctx.version {
+                            Err((
+                                format!(
+                                    "serves model version {version}, expected {} — \
+                                     refusing to mix model versions",
+                                    ctx.version
+                                ),
+                                true,
+                            ))
+                        } else if rows.len() != nrows {
+                            Err((
+                                format!("returned {} rows for a {nrows}-row request", rows.len()),
+                                false,
+                            ))
+                        } else {
+                            Ok(rows)
+                        }
+                    }
+                    Ok(Frame::Abort { reason }) => Err((format!("aborted: {reason}"), false)),
+                    Ok(other) => Err((format!("unexpected {} reply", other.name()), false)),
+                    Err(e) => Err((format!("recv failed ({e})"), false)),
+                },
+                None => Err(("connection vanished".to_string(), false)),
+            };
+            match outcome {
+                Ok(rows) => return Ok(rows),
+                Err((why, quarantine)) => {
+                    if quarantine {
+                        self.replicas[self.active].quarantined_until =
+                            Some(Instant::now() + VERSION_QUARANTINE);
+                    }
+                    self.drop_active(&why);
+                }
+            }
         }
     }
 }
 
-/// A [`Predictor`] whose weight vector lives behind N shard-server
-/// sockets. Scores are bitwise-identical to
+/// A [`Predictor`] whose weight vector lives behind replicated
+/// shard-server sockets. Scores are bitwise-identical to
 /// [`crate::predict::ShardedModel`] over the same model and shard
-/// count; see the module docs for why. Batches are serialized through
-/// one connection set — the serve pool's coalescer already merges
-/// concurrent requests upstream of this.
+/// count, through any sequence of failovers; see the module docs for
+/// why. Batches are serialized through one connection set — the serve
+/// pool's coalescer already merges concurrent requests upstream.
 pub struct RemoteShardModel {
     dim: usize,
     bias: f64,
     loss: Loss,
-    version: u64,
-    conns: Mutex<Vec<ShardConn>>,
+    ctx: GroupCtx,
+    groups: Mutex<Vec<ShardGroup>>,
     seq: AtomicU64,
 }
 
 impl RemoteShardModel {
-    /// Connect to every address in `addrs` (shard `s` is `addrs[s]`)
-    /// and validate each server's identity against `model`'s shape.
-    /// Versions are checked per reply, not here, so a shard restarted
-    /// with a newer model is caught on the next request.
+    /// Connect with [`Deadlines::from_env`]. Each entry of `groups` is
+    /// one feature range's replica list, `|`-separated (a plain address
+    /// is a group of one); shard `s` is `groups[s]`.
     pub fn connect(
         model: &LinearModel,
-        addrs: &[String],
+        groups: &[String],
         version: u64,
     ) -> Result<RemoteShardModel> {
-        ensure!(!addrs.is_empty(), "remote shard address list is empty");
+        RemoteShardModel::connect_with(model, groups, version, Deadlines::from_env())
+    }
+
+    /// [`RemoteShardModel::connect`] with explicit deadlines — fault
+    /// tests and benches inject millisecond bounds. Startup requires
+    /// one live, version-matching replica per range (failing loudly
+    /// beats serving a range-less model); siblings open lazily on
+    /// failover.
+    pub fn connect_with(
+        model: &LinearModel,
+        groups: &[String],
+        version: u64,
+        deadlines: Deadlines,
+    ) -> Result<RemoteShardModel> {
+        ensure!(!groups.is_empty(), "remote shard address list is empty");
         let dim = model.dim();
-        let shards = addrs.len();
-        let mut conns = Vec::with_capacity(shards);
-        for (s, addr) in addrs.iter().enumerate() {
-            conns.push(ShardConn::open(addr, s as u32, shards as u32, dim as u64)?);
+        let shards = groups.len();
+        let ctx = GroupCtx { shards: shards as u32, dim: dim as u64, version, deadlines };
+        let mut parsed = Vec::with_capacity(shards);
+        for (s, spec) in groups.iter().enumerate() {
+            let replicas: Vec<Replica> = spec
+                .split('|')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .map(|a| Replica {
+                    addr: a.to_string(),
+                    chan: None,
+                    quarantined_until: None,
+                })
+                .collect();
+            ensure!(!replicas.is_empty(), "shard {s} has no replica address (spec {spec:?})");
+            let mut group = ShardGroup { shard: s as u32, replicas, active: 0, in_flight: false };
+            group
+                .ensure_conn(&ctx, Instant::now() + ctx.deadlines.failover)
+                .with_context(|| format!("connecting to replicas of shard {s} ({spec})"))?;
+            parsed.push(group);
         }
         Ok(RemoteShardModel {
             dim,
             bias: model.bias,
             loss: model.loss,
-            version,
-            conns: Mutex::new(conns),
+            ctx,
+            groups: Mutex::new(parsed),
             seq: AtomicU64::new(1),
         })
     }
 
-    /// Number of remote shards.
+    /// Number of remote feature ranges (not replicas).
     pub fn n_shards(&self) -> usize {
-        lock_ok(self.conns.lock()).len()
+        lock_ok(self.groups.lock()).len()
     }
 
-    /// Fan a batch out to every shard and fold the replies. Transport
-    /// errors reconnect and resend (score requests are stateless);
-    /// version or protocol mismatches fail the batch with a structured
-    /// error.
+    /// Fan a batch out to every shard range and fold the replies. Each
+    /// group fails over between its replicas within one shared
+    /// [`Deadlines::failover`] budget per batch; exhausting it yields a
+    /// [`ShardUnavailable`]-rooted error, never a partial result.
     fn remote_score_batch(&self, rows: &[RowView<'_>]) -> Result<Vec<f64>> {
         if rows.is_empty() {
             return Ok(Vec::new());
@@ -411,71 +661,18 @@ impl RemoteShardModel {
         }
         let seq = self.seq.fetch_add(1, Ordering::SeqCst);
         let req = Frame::ScoreReq { seq, indptr, indices, values };
-        let mut conns = lock_ok(self.conns.lock());
-        // Phase 1: send to every shard so they compute concurrently.
-        for conn in conns.iter_mut() {
-            if let Err(e) = conn.chan.send(&req) {
-                eprintln!(
-                    "net: shard {} at {}: send failed ({e}); reconnecting",
-                    conn.shard, conn.addr
-                );
-                conn.reopen()?;
-                conn.chan.send(&req)?;
-            }
+        let deadline = Instant::now() + self.ctx.deadlines.failover;
+        let mut groups = lock_ok(self.groups.lock());
+        // Phase 1: send to every range so the shards compute concurrently.
+        for group in groups.iter_mut() {
+            group.prime(&req, &self.ctx, deadline)?;
         }
         // Phase 2: collect replies in shard order.
-        let mut per_shard: Vec<Vec<RowPartials>> = Vec::with_capacity(conns.len());
-        for conn in conns.iter_mut() {
-            let reply = match conn.chan.recv() {
-                Ok(f) => f,
-                Err(e) => {
-                    eprintln!(
-                        "net: shard {} at {}: recv failed ({e}); reconnecting",
-                        conn.shard, conn.addr
-                    );
-                    conn.reopen()?;
-                    conn.chan.send(&req)?;
-                    conn.chan.recv()?
-                }
-            };
-            match reply {
-                Frame::ScorePartial { seq: rseq, version, rows: shard_rows } => {
-                    ensure!(
-                        rseq == seq,
-                        "shard {} at {} answered request {rseq}, expected {seq}",
-                        conn.shard,
-                        conn.addr
-                    );
-                    ensure!(
-                        version == self.version,
-                        "shard {} at {} serves model version {version}, expected {}; \
-                         refusing to mix model versions",
-                        conn.shard,
-                        conn.addr,
-                        self.version
-                    );
-                    ensure!(
-                        shard_rows.len() == rows.len(),
-                        "shard {} at {} returned {} rows for a {}-row request",
-                        conn.shard,
-                        conn.addr,
-                        shard_rows.len(),
-                        rows.len()
-                    );
-                    per_shard.push(shard_rows);
-                }
-                Frame::Abort { reason } => {
-                    bail!("shard {} at {} aborted: {reason}", conn.shard, conn.addr)
-                }
-                other => bail!(
-                    "shard {} at {}: unexpected {} reply",
-                    conn.shard,
-                    conn.addr,
-                    other.name()
-                ),
-            }
+        let mut per_shard: Vec<Vec<RowPartials>> = Vec::with_capacity(groups.len());
+        for group in groups.iter_mut() {
+            per_shard.push(group.collect(&req, seq, rows.len(), &self.ctx, deadline)?);
         }
-        drop(conns);
+        drop(groups);
         let merged = reduce_partials(per_shard);
         Ok(merged.into_iter().map(|ps| fold_score(self.bias, &ps)).collect())
     }
@@ -491,7 +688,7 @@ impl Predictor for RemoteShardModel {
     }
 
     fn version(&self) -> u64 {
-        self.version
+        self.ctx.version
     }
 
     fn score(&self, row: RowView<'_>) -> f64 {
@@ -499,8 +696,9 @@ impl Predictor for RemoteShardModel {
     }
 
     /// Infallible trait surface: a failed batch logs and scores NaN.
-    /// The serve request path uses [`Predictor::try_score_batch`]
-    /// instead, which surfaces the error to the client.
+    /// This never reaches a serve client — the serve request path uses
+    /// [`Predictor::try_score_batch`] / [`Predictor::try_predict_batch`]
+    /// and maps a [`ShardUnavailable`] chain to `err shard-unavailable`.
     fn score_batch(&self, rows: &[RowView<'_>]) -> Vec<f64> {
         match self.remote_score_batch(rows) {
             Ok(v) => v,

@@ -179,6 +179,19 @@ impl<P: Penalty> DpCache<P> {
         self.epoch += 1;
     }
 
+    /// Set the global schedule clock without touching the tables — for
+    /// restoring a checkpointed run on a *fresh* cache whose weights
+    /// are all current (ψ = 0, as after [`DpCache::rebase`]). Stepping
+    /// the clock forward `t` times instead would grow the tables to `t`
+    /// entries and make every ψ = 0 weight spuriously catch up through
+    /// `t` phantom steps; this sets only the point the schedule resumes
+    /// from. Panics if the tables are non-empty (k ≠ 0): restoring into
+    /// a cache that already has history is always a caller bug.
+    pub fn restore_clock(&mut self, t: u64) {
+        assert_eq!(self.k(), 0, "restore_clock requires a freshly rebased cache");
+        self.global_t = t;
+    }
+
     /// Table views (for the XLA catch-up artifact and diagnostics);
     /// empty for families that keep no pt/bt tables.
     pub fn tables(&self) -> (&[f64], &[f64]) {
@@ -348,6 +361,55 @@ mod tests {
             let flushed = c2.catchup(w_mid, 0);
             assert_close(no_flush, flushed, 1e-10, 1e-12);
         });
+    }
+
+    #[test]
+    fn restore_clock_on_fresh_cache_equals_rebased_continuation() {
+        // A fresh cache with the clock restored to t = n1 must be
+        // indistinguishable from a cache that ran n1 steps and rebased —
+        // the checkpoint-resume identity for a worker rebuilt from a
+        // flushed model.
+        property("restore_clock == rebase at flush boundary", 100, |g| {
+            let algo = *g.choose(&[Algo::Sgd, Algo::Fobos]);
+            let reg = Regularizer::elastic_net(g.f64_in(0.0, 0.02), g.f64_in(0.0, 0.5));
+            let schedule = Schedule::InvSqrtT { eta0: 0.5 };
+            let n1 = g.usize_in(1, 60);
+            let n2 = g.usize_in(1, 60);
+            let w_mid = g.f64_in(-1.5, 1.5);
+
+            let mut rebased = DpCache::new(algo, reg, schedule);
+            for _ in 0..n1 {
+                rebased.step();
+            }
+            rebased.rebase();
+
+            let mut restored = DpCache::new(algo, reg, schedule);
+            restored.restore_clock(n1 as u64);
+            assert_eq!(restored.global_t(), n1 as u64);
+            assert_eq!(restored.k(), 0);
+
+            for _ in 0..n2 {
+                assert_eq!(rebased.step().to_bits(), restored.step().to_bits());
+            }
+            // Bitwise: both caches extended identical tables from an
+            // identical clock.
+            assert_eq!(
+                rebased.catchup(w_mid, 0).to_bits(),
+                restored.catchup(w_mid, 0).to_bits()
+            );
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "freshly rebased")]
+    fn restore_clock_refuses_a_cache_with_history() {
+        let mut c = DpCache::new(
+            Algo::Sgd,
+            Regularizer::l1(0.01),
+            Schedule::Constant { eta0: 0.3 },
+        );
+        c.step();
+        c.restore_clock(10);
     }
 
     #[test]

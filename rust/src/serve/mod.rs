@@ -70,6 +70,7 @@ use crate::coordinator::BoundedQueue;
 use crate::data::RowView;
 use crate::metrics::LatencyHistogram;
 use crate::model::LinearModel;
+use crate::net::ShardUnavailable;
 use crate::predict::{self, Predictor};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::{lock_ok, mpsc, Arc, Mutex, RwLock};
@@ -141,12 +142,16 @@ pub struct ServeOptions {
     /// `fast_f32`; with `shards > 1` the sharded workers already hold
     /// compact ranges, so sharding wins.
     pub sparse: bool,
-    /// Shard-server addresses to score through over TCP
-    /// ([`crate::net::RemoteShardModel`]), one per feature shard in
-    /// shard order. Non-empty supersedes `shards` (the remote shard
-    /// count is `remote_shards.len()`), excludes `artifact`/`fast_f32`,
-    /// and makes `reload` refuse — the weights live in the shard
-    /// processes, which this server cannot swap.
+    /// Shard-server replica groups to score through over TCP
+    /// ([`crate::net::RemoteShardModel`]), one entry per feature shard
+    /// in shard order; each entry is a `|`-separated replica list
+    /// (`"A1|A2"` — a plain address is a group of one), and scoring
+    /// fails over between replicas within the
+    /// [`crate::net::Deadlines::failover`] budget. Non-empty supersedes
+    /// `shards` (the remote shard count is `remote_shards.len()`),
+    /// excludes `artifact`/`fast_f32`, and makes `reload` refuse — the
+    /// weights live in the shard processes, which this server cannot
+    /// swap.
     pub remote_shards: Vec<String>,
 }
 
@@ -259,14 +264,29 @@ struct Shared {
     opts: ServeOptions,
 }
 
-/// A single-row request parked in the [`Coalescer`].
+/// A single-row request parked in the [`Coalescer`]. The reply carries
+/// either the probability or the structured `err` token the connection
+/// should answer with (see [`failure_token`]).
 struct PendingPredict {
     indices: Vec<u32>,
     values: Vec<f32>,
     /// Request arrival, so coalesced scoring still records *per-request*
     /// latency (queue wait plus its share of the batch) in `stats`.
     t0: Instant,
-    reply: mpsc::Sender<Option<f64>>,
+    reply: mpsc::Sender<Result<f64, &'static str>>,
+}
+
+/// Map a scoring failure to its protocol token: `err shard-unavailable`
+/// when the error chain bottoms out in [`ShardUnavailable`] — every
+/// replica of some remote feature range stayed down past the failover
+/// budget — and the generic upstream token for everything else. Either
+/// way the client gets a structured error, never a NaN score.
+fn failure_token(e: &anyhow::Error) -> &'static str {
+    if e.chain().any(|c| c.downcast_ref::<ShardUnavailable>().is_some()) {
+        "err shard-unavailable"
+    } else {
+        "err upstream-unavailable"
+    }
 }
 
 /// Cross-connection request coalescing. Concurrent single-row `predict`
@@ -294,10 +314,16 @@ impl Coalescer {
         Coalescer { state: Mutex::new(CoalesceState { pending: Vec::new(), leader: false }) }
     }
 
-    /// Score one row through the funnel. `None` means the predictor
-    /// failed (remote shards unreachable or stale) or a hot reload
-    /// shrank the model out from under the already-parsed row.
-    fn submit(&self, indices: Vec<u32>, values: Vec<f32>, shared: &Shared) -> Option<f64> {
+    /// Score one row through the funnel. `Err` carries the structured
+    /// token to answer with: the predictor failed (remote shards
+    /// unreachable or stale) or a hot reload shrank the model out from
+    /// under the already-parsed row.
+    fn submit(
+        &self,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        shared: &Shared,
+    ) -> Result<f64, &'static str> {
         let (tx, rx) = mpsc::channel();
         let lead = {
             let mut st = lock_ok(self.state.lock());
@@ -308,8 +334,12 @@ impl Coalescer {
             self.drain(shared);
         }
         // Every path in `drain` either replies or drops the sender (a
-        // panicking predictor included), so this cannot hang.
-        rx.recv().ok().flatten()
+        // panicking predictor included), so this cannot hang; a dropped
+        // sender reads as the generic upstream failure.
+        match rx.recv() {
+            Ok(reply) => reply,
+            Err(_) => Err("err upstream-unavailable"),
+        }
     }
 
     fn drain(&self, shared: &Shared) {
@@ -355,13 +385,14 @@ impl Coalescer {
                     let mut hist = lock_ok(shared.hist.lock());
                     for (p, prob) in fit.iter().zip(probs) {
                         hist.record(p.t0.elapsed());
-                        let _ = p.reply.send(Some(prob));
+                        let _ = p.reply.send(Ok(prob));
                     }
                 }
                 Err(e) => {
                     eprintln!("serve: coalesced predict failed: {e:#}");
+                    let token = failure_token(&e);
                     for p in &fit {
-                        let _ = p.reply.send(None);
+                        let _ = p.reply.send(Err(token));
                     }
                 }
             }
@@ -466,7 +497,7 @@ impl Drop for Server {
 
 fn accept_loop(listener: TcpListener, shared: &Shared) {
     while !shared.stop.load(Ordering::SeqCst) {
-        match listener.accept() {
+        match listener.accept() { // lint:allow(net-deadline): armed in handle_conn after the queue handoff
             Ok((stream, _)) => {
                 // Blocks when the pool is saturated and the queue full —
                 // backpressure instead of unbounded thread spawn. Returns
@@ -585,8 +616,8 @@ fn cmd_predict(rest: &str, shared: &Shared) -> String {
         // the coalescer, batched with whatever concurrent `predict`
         // requests other connections have in flight.
         Some((indices, values)) => match shared.coalesce.submit(indices, values, shared) {
-            Some(p) => format!("ok {p:.6}"),
-            None => "err upstream-unavailable".to_string(),
+            Ok(p) => format!("ok {p:.6}"),
+            Err(token) => token.to_string(),
         },
         None => "err bad-features".to_string(),
     }
@@ -614,9 +645,11 @@ fn cmd_batch(rest: &str, shared: &Shared) -> String {
         Ok(probs) => probs,
         Err(e) => {
             // Transport detail goes to the server log; the peer learns
-            // only that scoring is down, same shape as `reload-failed`.
+            // only which kind of scoring is down (`shard-unavailable`
+            // vs the generic upstream token), same shape as
+            // `reload-failed`.
             eprintln!("serve: batch scoring failed: {e:#}");
-            return "err upstream-unavailable".to_string();
+            return failure_token(&e).to_string();
         }
     };
     // Per-example latency, once per example: `stats` percentiles stay in
@@ -777,9 +810,14 @@ pub struct Client {
 }
 
 impl Client {
-    /// Connect to a server.
+    /// Connect to a server. The socket is armed with a generous
+    /// liveness bound so a wedged server surfaces as an error instead
+    /// of parking the caller forever (replies normally arrive in
+    /// milliseconds; 30 s only ever fires on a dead peer).
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+        stream.set_write_timeout(Some(std::time::Duration::from_secs(30)))?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Client { reader, writer: BufWriter::new(stream) })
     }
@@ -1098,9 +1136,9 @@ mod tests {
         // parked requests as one batch of 2.
         *lock_ok(gated.open.lock()) = true;
         gated.cv.notify_all();
-        assert!(leader.join().unwrap().is_some());
+        assert!(leader.join().unwrap().is_ok());
         for f in followers {
-            assert!(f.join().unwrap().is_some());
+            assert!(f.join().unwrap().is_ok());
         }
         assert_eq!(*lock_ok(gated.sizes.lock()), vec![1, 2]);
 
@@ -1130,11 +1168,58 @@ mod tests {
             }
         }
         let shared = shared_with(Arc::new(Failing), ServeOptions::default());
-        assert!(shared.coalesce.submit(vec![3], vec![1.0], &shared).is_none());
+        assert_eq!(
+            shared.coalesce.submit(vec![3], vec![1.0], &shared),
+            Err("err upstream-unavailable")
+        );
         // The line protocol maps the failure to an err reply, not a NaN.
         match dispatch("predict 3:1", &shared) {
             Dispatch::Reply(r) => assert_eq!(r, "err upstream-unavailable"),
             Dispatch::Quit => panic!("predict must not quit"),
+        }
+    }
+
+    #[test]
+    fn remote_shard_failure_maps_to_shard_unavailable() {
+        /// Predictor whose failures look exactly like the remote-shard
+        /// client's: a [`ShardUnavailable`] at the root of the chain.
+        struct DeadShards;
+        impl Predictor for DeadShards {
+            fn dim(&self) -> usize {
+                10
+            }
+            fn loss(&self) -> Loss {
+                Loss::Logistic
+            }
+            fn version(&self) -> u64 {
+                1
+            }
+            fn score(&self, _row: RowView<'_>) -> f64 {
+                f64::NAN
+            }
+            fn try_predict_batch(&self, _rows: &[RowView<'_>]) -> Result<Vec<f64>> {
+                Err(anyhow::Error::new(ShardUnavailable {
+                    shard: 1,
+                    detail: "replica 127.0.0.1:1: connection refused".to_string(),
+                })
+                .context("scoring batch of 1"))
+            }
+        }
+        let shared = shared_with(Arc::new(DeadShards), ServeOptions::default());
+        // Single-row path (through the coalescer) and batch path both
+        // answer the shard-specific token — never NaN, never the
+        // generic upstream token that would hide which tier died.
+        assert_eq!(
+            shared.coalesce.submit(vec![3], vec![1.0], &shared),
+            Err("err shard-unavailable")
+        );
+        match dispatch("predict 3:1", &shared) {
+            Dispatch::Reply(r) => assert_eq!(r, "err shard-unavailable"),
+            Dispatch::Quit => panic!("predict must not quit"),
+        }
+        match dispatch("batch 3:1;7:1", &shared) {
+            Dispatch::Reply(r) => assert_eq!(r, "err shard-unavailable"),
+            Dispatch::Quit => panic!("batch must not quit"),
         }
     }
 }

@@ -215,6 +215,35 @@ impl LazyTrainer {
         self.finalized = true;
     }
 
+    /// Advance the DP clock by `steps` *without* processing examples —
+    /// including the budget-driven auto-flush [`Self::process_example`]
+    /// would perform at the same step counts. The `--net` coordinator's
+    /// checkpoint mirror uses this to keep its tables bit-identical to
+    /// every worker's (equal shards ⇒ equal per-round step counts ⇒
+    /// identical tables), then scatters each round's merged values on
+    /// top; at any flush boundary the mirror's materialized model
+    /// equals the cluster's, which is what makes round checkpoints a
+    /// pure reuse of the existing flush/materialize machinery.
+    pub fn advance_clock(&mut self, steps: u64) {
+        for _ in 0..steps {
+            self.cache.step();
+            if self.cache.needs_rebase() {
+                self.flush_and_rebase();
+            }
+        }
+    }
+
+    /// Restore the DP schedule clock after [`Self::load_weights`] — the
+    /// resume half of checkpointing. `load_weights` rebases the tables
+    /// (every weight current, ψ = 0) but leaves the clock wherever this
+    /// trainer's own history put it; a worker rebuilt from a checkpoint
+    /// has no history, so the clock must be set to the checkpointed
+    /// per-worker step count for the learning-rate schedule to continue
+    /// identically. Panics unless the tables are freshly rebased.
+    pub fn restore_clock(&mut self, global_t: u64) {
+        self.cache.restore_clock(global_t);
+    }
+
     /// The current bias. Always current — the bias is unregularized, so
     /// it is updated eagerly and has no lazy bookkeeping.
     pub fn bias(&self) -> f64 {
@@ -456,6 +485,82 @@ mod tests {
         // And the value is the penalty of the (caught-up) weights.
         let expect = opts().reg.penalty(&probed.model().weights);
         assert!((v - expect).abs() <= 1e-12 * expect.abs().max(1.0), "{v} vs {expect}");
+    }
+
+    #[test]
+    fn clock_mirror_tracks_a_live_trainer_bitwise() {
+        // The coordinator's checkpoint mirror: never sees an example,
+        // only advances the clock each round and scatters the round's
+        // merged values. At a flush boundary it must materialize the
+        // exact model of the trainer it mirrors.
+        let x = two_docs();
+        let mut worker = LazyTrainer::new(6, &opts());
+        let mut mirror = LazyTrainer::new(6, &opts());
+        let rounds = 12;
+        let per_round = 4;
+        for _ in 0..rounds {
+            let mut touched: Vec<u32> = Vec::new();
+            for i in 0..per_round {
+                let r = i % 2;
+                worker.process_example(x.row(r), (r == 0) as u8 as f64);
+                touched.extend(x.row(r).indices.iter().copied());
+            }
+            touched.sort_unstable();
+            touched.dedup();
+            let merged = worker.gather_current(&touched);
+            let bias = worker.bias();
+            // Worker scatters the "merged" (self) values like the real
+            // sync; the mirror advances its clock and scatters the same.
+            worker.scatter_merged(&touched, &merged, bias);
+            mirror.advance_clock(per_round as u64);
+            mirror.scatter_merged(&touched, &merged, bias);
+        }
+        // Checkpoint boundary: coordinated flush, then materialize.
+        worker.flush_and_rebase();
+        mirror.flush_and_rebase();
+        worker.finalize();
+        mirror.finalize();
+        assert_eq!(worker.iterations(), mirror.iterations());
+        for (j, (&a, &b)) in
+            worker.model().weights.iter().zip(mirror.model().weights.iter()).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "weight {j}: {a} vs {b}");
+        }
+        assert_eq!(worker.bias().to_bits(), mirror.bias().to_bits());
+    }
+
+    #[test]
+    fn resume_from_flush_boundary_is_bitwise_identical() {
+        // Train, flush, snapshot (weights + clock + rebases), rebuild a
+        // fresh trainer from the snapshot, continue both: bitwise equal.
+        let x = two_docs();
+        let mut full = LazyTrainer::new(6, &opts());
+        for i in 0..20 {
+            full.process_example(x.row(i % 2), (i % 2 == 0) as u8 as f64);
+        }
+        full.flush_and_rebase();
+        full.finalize();
+        let snap_w = full.model().weights.clone();
+        let snap_b = full.bias();
+        let snap_t = full.iterations();
+        let snap_rebases = full.rebases;
+
+        let mut resumed = LazyTrainer::new(6, &opts());
+        resumed.load_weights(&snap_w, snap_b);
+        resumed.restore_clock(snap_t);
+        resumed.rebases = snap_rebases;
+
+        for i in 20..45 {
+            let y = (i % 2 == 0) as u8 as f64;
+            let lf = full.process_example(x.row(i % 2), y);
+            let lr = resumed.process_example(x.row(i % 2), y);
+            assert_eq!(lf.to_bits(), lr.to_bits(), "loss diverged at step {i}");
+        }
+        full.finalize();
+        resumed.finalize();
+        assert_eq!(full.model().weights, resumed.model().weights);
+        assert_eq!(full.bias().to_bits(), resumed.bias().to_bits());
+        assert_eq!(full.rebases, resumed.rebases);
     }
 
     #[test]

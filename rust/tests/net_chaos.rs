@@ -1,0 +1,424 @@
+//! Deterministic fault injection against the cross-node stack, in one
+//! process: every failure a [`ChaosProxy`] can manufacture — dropped
+//! links, stalls longer than a deadline, header bit-flips, duplicated
+//! bytes — must end in a structured error, a successful failover, or a
+//! byte-faithful resume. Never a hang, never silent corruption.
+//!
+//! The suite proves the PR's four robustness promises end to end:
+//!
+//! * round checkpoints are semantically neutral — a `--checkpoint-every 1`
+//!   run matches an uncheckpointed run within the flush-equivalence
+//!   tolerance (1e-10, the same bound `rebase_preserves_semantics_across_flush`
+//!   holds the DP tables to);
+//! * a `--net-halt-after` drill aborts the fleet with a forced
+//!   checkpoint, and `--resume` from it is **bitwise** identical to the
+//!   uninterrupted run with the same checkpoint cadence (checkpoints
+//!   sit on flush boundaries, where restore is exact);
+//! * resume refuses a checkpoint whose recorded config disagrees with
+//!   the relaunch, instead of silently training something else;
+//! * link faults between a worker and the coordinator surface as
+//!   structured aborts within the deadline budget — including a seeded
+//!   sweep where *any* outcome other than "clean abort" or "bitwise
+//!   correct result" fails the test;
+//! * replica failover on the serving path rides through a chaotic
+//!   replica bitwise-identically to the in-process predictor.
+//!
+//! Deadlines are shrunk (see [`short_deadlines`]) so every failure
+//! resolves in milliseconds-to-seconds; the elapsed-time assertions are
+//! the no-hang guarantee.
+
+// The library is sync-facade-only under `--cfg loom`; this suite
+// needs the full crate.
+#![cfg(not(loom))]
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use lazyreg::data::CsrMatrix;
+use lazyreg::loss::Loss;
+use lazyreg::model::LinearModel;
+use lazyreg::net::frame::FrameError;
+use lazyreg::net::{
+    run_worker_with, ChaosProxy, Checkpoint, CheckpointConfig, ClusterCoordinator, Deadlines,
+    Fault, FaultPlan, NetStats, RemoteShardModel, ShardServer,
+};
+use lazyreg::optim::Regularizer;
+use lazyreg::predict::{self, Predictor};
+use lazyreg::synth::{generate, BowSpec};
+use lazyreg::train::{MergeMode, TrainOptions, TrainReport};
+use lazyreg::util::Rng;
+
+/// Tight liveness bounds so injected faults resolve fast. The stalls
+/// this suite injects are either shorter than every read bound
+/// (survivable) or longer than `silence` (must trip [`FrameError::Timeout`]).
+fn short_deadlines() -> Deadlines {
+    Deadlines {
+        reply: Duration::from_millis(500),
+        silence: Duration::from_millis(1_000),
+        round: Duration::from_millis(2_000),
+        write: Duration::from_millis(500),
+        heartbeat: Duration::from_millis(100),
+        failover: Duration::from_millis(400),
+    }
+}
+
+/// 500 examples / 2 workers / interval 50 = 5 rounds per epoch, 10
+/// rounds over the 2-epoch run — enough boundaries to checkpoint at,
+/// halt inside, and resume across an epoch edge.
+fn train_opts() -> TrainOptions {
+    TrainOptions {
+        epochs: 2,
+        workers: 2,
+        merge: MergeMode::Sparse,
+        sync_interval: Some(50),
+        reg: Regularizer::elastic_net(1e-4, 1e-4),
+        seed: 13,
+        ..Default::default()
+    }
+}
+
+fn tmp_ckpt(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lazyreg-net-chaos-{}-{name}.lzck", std::process::id()));
+    p
+}
+
+/// Run one coordinated cluster under [`short_deadlines`]. `route` maps
+/// the coordinator's bound address to the address each worker dials —
+/// identity for a healthy fleet, a [`ChaosProxy`] for a faulty link.
+/// Worker threads never panic on protocol failure; their `Result`s come
+/// back alongside the coordinator's so tests can assert *which* side
+/// saw a structured error.
+fn run_cluster<F>(
+    x: &CsrMatrix,
+    labels: &[f32],
+    opts: &TrainOptions,
+    ckpt: Option<&CheckpointConfig>,
+    route: F,
+) -> (anyhow::Result<(TrainReport, NetStats)>, Vec<anyhow::Result<()>>)
+where
+    F: FnOnce(SocketAddr) -> Vec<String>,
+{
+    let dl = short_deadlines();
+    let coord = ClusterCoordinator::bind_with("127.0.0.1:0", opts.workers, dl).expect("bind");
+    let addrs = route(coord.addr());
+    assert_eq!(addrs.len(), opts.workers, "route must address every worker");
+    std::thread::scope(|s| {
+        let handles: Vec<_> = addrs
+            .iter()
+            .map(|addr| s.spawn(move || run_worker_with(addr, x, labels, opts, &dl)))
+            .collect();
+        let coord_res = coord.run_with(x, labels, opts, ckpt);
+        let workers =
+            handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect();
+        (coord_res, workers)
+    })
+}
+
+fn direct(addr: SocketAddr) -> Vec<String> {
+    vec![addr.to_string(), addr.to_string()]
+}
+
+fn assert_bitwise_eq(a: &LinearModel, b: &LinearModel, what: &str) {
+    assert_eq!(a.bias.to_bits(), b.bias.to_bits(), "{what}: bias {} vs {}", a.bias, b.bias);
+    assert_eq!(a.weights.len(), b.weights.len(), "{what}: dim");
+    for (j, (x, y)) in a.weights.iter().zip(b.weights.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: weight {j}: {x} vs {y}");
+    }
+}
+
+fn frame_error_in_chain(err: &anyhow::Error, want: impl Fn(&FrameError) -> bool) -> bool {
+    err.chain().any(|c| c.downcast_ref::<FrameError>().is_some_and(&want))
+}
+
+// ----------------------------------------------- checkpoints and resume
+
+#[test]
+fn round_checkpoints_do_not_perturb_training() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let opts = train_opts();
+
+    let (plain, workers) = run_cluster(data.x(), data.labels(), &opts, None, direct);
+    let (plain, _) = plain.expect("plain cluster");
+    for w in workers {
+        w.expect("plain worker");
+    }
+
+    let path = tmp_ckpt("cadence");
+    let cfg = CheckpointConfig { path: path.clone(), every: 1, resume: false, halt_after: None };
+    let (ck, workers) = run_cluster(data.x(), data.labels(), &opts, Some(&cfg), direct);
+    let (ck, stats) = ck.expect("checkpointed cluster");
+    for w in workers {
+        w.expect("checkpointed worker");
+    }
+
+    // Checkpoint rounds force a flush the plain run may not take, so
+    // the bound is flush-equivalence (1e-10), not bitwise.
+    let diff = ck.model.max_weight_diff(&plain.model);
+    assert!(diff < 1e-10, "checkpoint cadence perturbed training: weight diff {diff}");
+    assert_eq!(ck.penalty, plain.penalty);
+    assert_eq!(ck.examples, plain.examples);
+    assert_eq!(stats.rounds, 10, "2 epochs x 5 rounds");
+
+    // The last snapshot on disk is from the final checkpointable round
+    // (the terminal round has no successor steps, so cadence skips it)
+    // and round-trips through the LZCK codec.
+    let snap = Checkpoint::load(&path).expect("loading the last checkpoint");
+    assert_eq!(snap.round, 9, "last cadence checkpoint restarts at the final round");
+    assert_eq!(snap.workers, 2);
+    assert_eq!(snap.seed, opts.seed);
+    assert!(!snap.indices.is_empty(), "a trained model has nonzeros to snapshot");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn halt_and_resume_is_bitwise_identical_to_the_uninterrupted_run() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let opts = train_opts();
+
+    // The reference: uninterrupted, same checkpoint cadence (cadence
+    // changes the flush schedule, so only the same-cadence run is the
+    // bitwise target).
+    let ref_path = tmp_ckpt("resume-ref");
+    let ref_cfg =
+        CheckpointConfig { path: ref_path.clone(), every: 1, resume: false, halt_after: None };
+    let (unint, workers) = run_cluster(data.x(), data.labels(), &opts, Some(&ref_cfg), direct);
+    let (unint, _) = unint.expect("uninterrupted checkpointed cluster");
+    for w in workers {
+        w.expect("uninterrupted worker");
+    }
+
+    // The drill: same job, killed after round 3 with a forced snapshot.
+    let path = tmp_ckpt("resume-drill");
+    let halt_cfg =
+        CheckpointConfig { path: path.clone(), every: 1, resume: false, halt_after: Some(3) };
+    let (halted, workers) = run_cluster(data.x(), data.labels(), &opts, Some(&halt_cfg), direct);
+    let err = halted.expect_err("halt_after must abort the coordinator");
+    assert!(
+        format!("{err:#}").contains("halting after round 3"),
+        "halt reason must name the round: {err:#}"
+    );
+    for w in &workers {
+        assert!(w.is_err(), "every worker must see the abort, not hang");
+    }
+    let snap = Checkpoint::load(&path).expect("the halt drill must leave a checkpoint");
+    assert_eq!(snap.round, 4, "a round-3 halt restarts at round 4");
+
+    // The relaunch: resume from the snapshot and finish the job.
+    let res_cfg =
+        CheckpointConfig { path: path.clone(), every: 1, resume: true, halt_after: None };
+    let (resumed, workers) = run_cluster(data.x(), data.labels(), &opts, Some(&res_cfg), direct);
+    let (resumed, stats) = resumed.expect("resumed cluster");
+    for w in workers {
+        w.expect("resumed worker");
+    }
+    assert_eq!(stats.rounds, 6, "resume replays rounds 4..10, not the whole job");
+    assert_bitwise_eq(&resumed.model, &unint.model, "resumed vs uninterrupted");
+    assert_eq!(resumed.penalty, unint.penalty);
+    std::fs::remove_file(&ref_path).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_a_different_job() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let opts = train_opts();
+
+    let path = tmp_ckpt("resume-drift");
+    let halt_cfg =
+        CheckpointConfig { path: path.clone(), every: 1, resume: false, halt_after: Some(1) };
+    let (halted, _) = run_cluster(data.x(), data.labels(), &opts, Some(&halt_cfg), direct);
+    halted.expect_err("halt_after must abort");
+
+    // Relaunch with a drifted config: the coordinator must refuse the
+    // snapshot loudly instead of resuming a different job from it.
+    let mut drifted = opts.clone();
+    drifted.seed = 14;
+    let res_cfg =
+        CheckpointConfig { path: path.clone(), every: 1, resume: true, halt_after: None };
+    let (res, workers) = run_cluster(data.x(), data.labels(), &drifted, Some(&res_cfg), direct);
+    let err = res.expect_err("config drift must refuse to resume");
+    assert!(
+        format!("{err:#}").contains("disagrees with this run"),
+        "refusal must name the drift: {err:#}"
+    );
+    for w in workers {
+        assert!(w.is_err(), "workers of a refused resume must fail, not hang");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------------- link-fault injection
+
+/// Run the cluster with worker 1's link routed through a [`ChaosProxy`]
+/// replaying `plan`; returns (coordinator result, worker results,
+/// elapsed).
+fn run_with_chaotic_link(
+    x: &CsrMatrix,
+    labels: &[f32],
+    opts: &TrainOptions,
+    plan: FaultPlan,
+) -> (anyhow::Result<(TrainReport, NetStats)>, Vec<anyhow::Result<()>>, Duration) {
+    let t0 = Instant::now();
+    let mut proxy: Option<ChaosProxy> = None;
+    let (coord_res, workers) = run_cluster(x, labels, opts, None, |addr| {
+        let p = ChaosProxy::spawn(&addr.to_string(), plan).expect("chaos proxy");
+        let via = p.addr().to_string();
+        proxy = Some(p);
+        vec![addr.to_string(), via]
+    });
+    let took = t0.elapsed();
+    if let Some(p) = proxy {
+        p.shutdown();
+    }
+    (coord_res, workers, took)
+}
+
+#[test]
+fn dropped_worker_link_is_a_structured_abort_not_a_hang() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let opts = train_opts();
+    // Sever worker 1's uplink 64 bytes in — mid-handshake or inside the
+    // first sync push, depending on frame sizes; both must abort clean.
+    let plan = FaultPlan { to_upstream: vec![Fault::Drop { after: 64 }], to_client: vec![] };
+    let (coord_res, workers, took) = run_with_chaotic_link(data.x(), data.labels(), &opts, plan);
+    assert!(took < Duration::from_secs(30), "dropped link must resolve fast, took {took:?}");
+    let err = coord_res.expect_err("a dead worker link must abort the coordinator");
+    assert!(
+        frame_error_in_chain(&err, |f| matches!(f, FrameError::Truncated | FrameError::Timeout)),
+        "abort must be rooted in a transport error: {err:#}"
+    );
+    assert!(workers.iter().any(|w| w.is_err()), "the severed worker must fail too");
+}
+
+#[test]
+fn stalled_worker_link_trips_the_read_deadline() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let opts = train_opts();
+    // Stall the uplink from byte 0 for longer than every read bound:
+    // the coordinator must diagnose a stalled peer, not wait forever.
+    let plan = FaultPlan {
+        to_upstream: vec![Fault::Stall { after: 0, pause: Duration::from_secs(3) }],
+        to_client: vec![],
+    };
+    let (coord_res, workers, took) = run_with_chaotic_link(data.x(), data.labels(), &opts, plan);
+    assert!(took < Duration::from_secs(30), "stall must resolve via deadline, took {took:?}");
+    let err = coord_res.expect_err("a stalled worker must abort the coordinator");
+    assert!(
+        frame_error_in_chain(&err, |f| matches!(f, FrameError::Timeout | FrameError::Truncated)),
+        "stall must surface as a deadline (or the proxy teardown): {err:#}"
+    );
+    assert!(workers.iter().any(|w| w.is_err()));
+}
+
+#[test]
+fn flipped_header_bit_is_a_structured_decode_error() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let opts = train_opts();
+    // Flip one bit inside the first frame header's magic on the uplink:
+    // the coordinator must reject the bytes structurally, never panic
+    // and never act on them.
+    let plan =
+        FaultPlan { to_upstream: vec![Fault::Flip { at: 2, bit: 0 }], to_client: vec![] };
+    let (coord_res, workers, took) = run_with_chaotic_link(data.x(), data.labels(), &opts, plan);
+    assert!(took < Duration::from_secs(30), "bit flip must resolve fast, took {took:?}");
+    let err = coord_res.expect_err("corrupted magic must abort the handshake");
+    assert!(
+        frame_error_in_chain(&err, |f| matches!(f, FrameError::BadMagic(_))),
+        "a flipped magic byte must decode as BadMagic: {err:#}"
+    );
+    assert!(workers.iter().any(|w| w.is_err()));
+}
+
+#[test]
+fn seeded_fault_sweep_never_hangs_and_never_corrupts() {
+    let data = generate(&BowSpec::tiny(), 97);
+    let mut opts = train_opts();
+    opts.epochs = 1; // 5 rounds per run keeps the sweep quick
+
+    let (reference, workers) = run_cluster(data.x(), data.labels(), &opts, None, direct);
+    let (reference, _) = reference.expect("reference cluster");
+    for w in workers {
+        w.expect("reference worker");
+    }
+
+    // Survivable stalls only (shorter than the 500 ms reply bound):
+    // a seeded Stall must ride through; Drop/Flip/Duplicate must abort.
+    // Either way the run ends inside the deadline budget, and an Ok run
+    // must be *bitwise* the reference — a fault can delay training or
+    // kill it, but never change what it computes.
+    for seed in 0..6u64 {
+        let plan = FaultPlan::seeded(seed, Duration::from_millis(200));
+        let (coord_res, workers, took) =
+            run_with_chaotic_link(data.x(), data.labels(), &opts, plan);
+        assert!(took < Duration::from_secs(30), "seed {seed}: run took {took:?}");
+        match coord_res {
+            Ok((report, _)) => {
+                assert_bitwise_eq(
+                    &report.model,
+                    &reference.model,
+                    &format!("seed {seed}: survived run"),
+                );
+                for w in workers {
+                    assert!(w.is_ok(), "seed {seed}: coordinator succeeded, workers must too");
+                }
+            }
+            Err(err) => {
+                // Structured abort — any anyhow chain is fine, but the
+                // severed worker must have failed as well, not hung.
+                assert!(
+                    workers.iter().any(|w| w.is_err()),
+                    "seed {seed}: abort without a failed worker: {err:#}"
+                );
+            }
+        }
+    }
+}
+
+// --------------------------------------------- serving-path failover
+
+#[test]
+fn replica_failover_rides_through_a_chaotic_replica_bitwise() {
+    let dim = 512usize;
+    let mut model = LinearModel::zeros(dim, Loss::Logistic);
+    let mut rng = Rng::new(5);
+    for w in model.weights.iter_mut() {
+        if rng.bool(0.3) {
+            *w = rng.normal();
+        }
+    }
+    model.bias = 0.25;
+    let spec = BowSpec { n_examples: 24, n_features: dim, avg_nnz: 12.0, ..Default::default() };
+    let data = generate(&spec, 11);
+    let local = predict::build(model.clone(), 1, 1);
+
+    let dl = short_deadlines();
+    // Replica A sits behind a proxy that severs its first connection
+    // 200 bytes into the downlink — past the handshake, inside an early
+    // scoring reply. Replica B is healthy and direct.
+    let a = ShardServer::spawn_with(&model, 0, 1, "127.0.0.1:0", 1, dl).expect("replica a");
+    let plan = FaultPlan { to_upstream: vec![], to_client: vec![Fault::Drop { after: 200 }] };
+    let proxy = ChaosProxy::spawn(&a.addr().to_string(), plan).expect("chaos proxy");
+    let b = ShardServer::spawn_with(&model, 0, 1, "127.0.0.1:0", 1, dl).expect("replica b");
+
+    let group = vec![format!("{}|{}", proxy.addr(), b.addr())];
+    let remote = RemoteShardModel::connect_with(&model, &group, 1, dl).expect("connect");
+
+    // Every batch must come back, and bitwise equal to the in-process
+    // predictor — the failover resend is stateless, so the client
+    // cannot tell which replica scored it.
+    let rows: Vec<_> = (0..data.n_examples()).map(|r| data.x().row(r)).collect();
+    for batch in rows.chunks(8) {
+        let want = local.score_batch(batch);
+        let got = remote.try_score_batch(batch).expect("failover must absorb the drop");
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(got.iter()) {
+            assert_eq!(w.to_bits(), g.to_bits(), "failover changed a score: {w} vs {g}");
+        }
+    }
+
+    proxy.shutdown();
+    a.shutdown();
+    b.shutdown();
+}

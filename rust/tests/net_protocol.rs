@@ -7,9 +7,12 @@
 //! * remote shard scoring is bitwise-identical to the in-process
 //!   predictor at shard counts {1, 2, 7} (7 > the block count, so some
 //!   shards own no blocks at all);
-//! * a stale shard (model-version mismatch) is refused, not mixed in;
-//! * a shard connection survives its server restarting (bounded
-//!   retry/backoff reconnect);
+//! * a stale shard (model-version mismatch) is refused, not mixed in —
+//!   at connect time and after a rolling restart mid-stream;
+//! * a shard connection survives its server restarting, and a replica
+//!   group survives one replica dying, bitwise-identically;
+//! * a slow-loris peer (partial header or payload, then silence) trips
+//!   the read deadline as a structured [`FrameError::Timeout`];
 //! * socket-coordinated sparse-merge training matches the in-process
 //!   `--merge sparse` engine within 1e-10.
 
@@ -17,11 +20,18 @@
 // needs the full crate.
 #![cfg(not(loom))]
 
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
 use lazyreg::data::RowView;
 use lazyreg::loss::Loss;
 use lazyreg::model::LinearModel;
 use lazyreg::net::frame::{read_frame, write_frame, Frame, FrameError, MAX_PAYLOAD};
-use lazyreg::net::{run_worker, ClusterCoordinator, RemoteShardModel, ShardServer};
+use lazyreg::net::{
+    run_worker, Channel, ClusterCoordinator, Deadlines, RemoteShardModel, ShardServer,
+    ShardUnavailable,
+};
 use lazyreg::optim::Regularizer;
 use lazyreg::predict::{self, Predictor};
 use lazyreg::synth::{generate, BowSpec};
@@ -52,6 +62,8 @@ fn random_frames(rng: &mut Rng) -> Vec<Frame> {
     let merged_vals = values_for(rng, merged_idx.len());
     let model_idx = sorted_indices(rng, 40, dim);
     let model_vals = values_for(rng, model_idx.len());
+    let resume_idx = sorted_indices(rng, 40, dim);
+    let resume_vals = values_for(rng, resume_idx.len());
 
     // A small CSR slice: sorted indices within each row.
     let n_rows = rng.index(5);
@@ -124,6 +136,18 @@ fn random_frames(rng: &mut Rng) -> Vec<Frame> {
             penalty: "tg:0.01:10:1.5".to_string(),
             indices: model_idx,
             values: model_vals,
+        },
+        Frame::Ping { nonce: rng.next_u64() },
+        Frame::Pong { nonce: rng.next_u64() },
+        Frame::Resume {
+            round: rng.below(1 << 30),
+            epoch: rng.below(1 << 10),
+            offset: rng.below(1 << 20),
+            steps: rng.below(1 << 30),
+            rebases: rng.below(100),
+            bias: rng.normal(),
+            indices: resume_idx,
+            values: resume_vals,
         },
     ]
 }
@@ -288,22 +312,65 @@ fn remote_shard_scoring_is_bitwise_identical_to_in_process() {
     }
 }
 
+/// Millisecond-scale deadlines so failure-path tests conclude fast.
+fn short_deadlines() -> Deadlines {
+    Deadlines {
+        reply: Duration::from_millis(500),
+        silence: Duration::from_millis(1_000),
+        round: Duration::from_millis(2_000),
+        write: Duration::from_millis(500),
+        heartbeat: Duration::from_millis(100),
+        failover: Duration::from_millis(400),
+    }
+}
+
 #[test]
 fn stale_shard_version_is_refused_not_mixed() {
     let d = 5_000;
     let model = random_model(d, 0x57A1E);
-    // Server believes it holds version 2; the front end expects 1.
+    // The range's only replica serves version 2; the front end expects
+    // 1. The handshake quarantines it, which leaves no current replica
+    // — startup must refuse loudly, naming the version skew.
     let server = ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 2).expect("spawn");
     let addrs = vec![server.addr().to_string()];
-    let remote = RemoteShardModel::connect(&model, &addrs, 1).expect("connect");
+    let err = RemoteShardModel::connect_with(&model, &addrs, 1, short_deadlines())
+        .err()
+        .expect("stale shard must refuse at connect");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version"), "unexpected error: {msg}");
+    server.shutdown();
+}
+
+#[test]
+fn rolling_restart_version_skew_is_quarantined_not_mixed() {
+    let d = 5_000;
+    let model = random_model(d, 0x0DD);
+    let server = ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 1).expect("spawn");
+    let addr = server.addr().to_string();
+    let remote =
+        RemoteShardModel::connect_with(&model, &[addr.clone()], 1, short_deadlines())
+            .expect("connect");
 
     let row = (vec![3u32, 17], vec![1.0f32, 2.0]);
     let rows = [RowView { indices: &row.0, values: &row.1 }];
-    let err = remote.try_score_batch(&rows).expect_err("stale shard must refuse");
-    assert!(err.to_string().contains("version"), "unexpected error: {err:#}");
-    // The infallible trait path degrades to NaN instead of panicking.
-    assert!(remote.score(rows[0]).is_nan());
+    remote.try_score_batch(&rows).expect("first score");
+
+    // Rolling restart lands a *newer* model on the same port. The
+    // failover handshake sees the skew, quarantines the replica, and —
+    // with no current sibling — the batch fails with the structured
+    // shard-unavailable error naming the version. Never a mixed score.
     server.shutdown();
+    let upgraded = ShardServer::spawn(&model, 0, 1, &addr, 2).expect("respawn v2");
+    let err = remote.try_score_batch(&rows).expect_err("skewed replica must refuse");
+    assert!(
+        err.chain().any(|c| c.downcast_ref::<ShardUnavailable>().is_some()),
+        "expected ShardUnavailable in the chain: {err:#}"
+    );
+    assert!(format!("{err:#}").contains("version"), "unexpected error: {err:#}");
+    // The infallible trait path degrades to NaN instead of panicking
+    // (the serve path uses try_* and answers `err shard-unavailable`).
+    assert!(remote.score(rows[0]).is_nan());
+    upgraded.shutdown();
 }
 
 #[test]
@@ -319,13 +386,102 @@ fn shard_connection_reconnects_after_server_restart() {
     let before = remote.try_score_batch(&rows).expect("first score");
 
     // Kill the server, restart it on the same port (std listeners set
-    // SO_REUSEADDR on unix), and score again: the per-shard reconnect
-    // with bounded backoff must recover without a new `connect`.
+    // SO_REUSEADDR on unix), and score again: the failover sweep
+    // reconnects to the same replica within its budget and resends the
+    // stateless request — no new `connect`, bitwise-identical scores.
     server.shutdown();
     let revived = ShardServer::spawn(&model, 0, 1, &addr, 1).expect("respawn");
     let after = remote.try_score_batch(&rows).expect("score after restart");
     assert_eq!(before[0].to_bits(), after[0].to_bits());
     revived.shutdown();
+}
+
+#[test]
+fn replica_failover_is_bitwise_identical() {
+    let d = 5_000;
+    let model = random_model(d, 0xFA11);
+    let a = ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 1).expect("spawn a");
+    let b = ShardServer::spawn(&model, 0, 1, "127.0.0.1:0", 1).expect("spawn b");
+    let group = vec![format!("{}|{}", a.addr(), b.addr())];
+    let remote = RemoteShardModel::connect_with(&model, &group, 1, short_deadlines())
+        .expect("connect group");
+    assert_eq!(remote.n_shards(), 1);
+
+    let examples = random_rows(d, 8, 0xCAFE);
+    let rows: Vec<RowView<'_>> =
+        examples.iter().map(|(i, v)| RowView { indices: i, values: v }).collect();
+    let before = remote.try_score_batch(&rows).expect("score via replica a");
+
+    // Kill the active replica: the next batch fails over to the
+    // sibling and — score requests being stateless resends against an
+    // identical weight slice — produces bitwise-identical scores.
+    a.shutdown();
+    let after = remote.try_score_batch(&rows).expect("score via replica b");
+    for (r, (x, y)) in before.iter().zip(after.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "row {r}: failover changed the score");
+    }
+
+    // With every replica down the budgeted sweep gives up with the
+    // structured marker the serve layer maps to `err shard-unavailable`.
+    b.shutdown();
+    let err = remote.try_score_batch(&rows).expect_err("no replicas left");
+    assert!(
+        err.chain().any(|c| c.downcast_ref::<ShardUnavailable>().is_some()),
+        "expected ShardUnavailable in the chain: {err:#}"
+    );
+}
+
+// ------------------------------------------------------- slow loris
+
+/// Spawn a listener that accepts one connection, writes `bytes`, then
+/// stalls (holding the socket open) until the test ends.
+fn stalling_peer(bytes: Vec<u8>) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind staller");
+    let addr = listener.local_addr().expect("staller addr");
+    let h = std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            s.write_all(&bytes).expect("partial write");
+            let _ = s.flush();
+            // Stall well past the client's deadline, then hang up.
+            std::thread::sleep(Duration::from_millis(400));
+        }
+    });
+    (addr, h)
+}
+
+#[test]
+fn slow_loris_partial_header_trips_the_read_deadline() {
+    let mut encoded = Vec::new();
+    write_frame(&mut encoded, &Frame::Bye).expect("encode");
+    // Five bytes of a twelve-byte header, then silence.
+    let (addr, peer) = stalling_peer(encoded[..5].to_vec());
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut chan = Channel::new(stream).expect("channel");
+    chan.set_read_deadline(Duration::from_millis(100)).expect("arm deadline");
+    match chan.recv() {
+        Err(FrameError::Timeout) => {}
+        other => panic!("expected Timeout on a stalled header, got {other:?}"),
+    }
+    let _ = peer.join();
+}
+
+#[test]
+fn slow_loris_partial_payload_trips_the_read_deadline() {
+    let mut encoded = Vec::new();
+    write_frame(&mut encoded, &Frame::Abort { reason: "stalling mid-payload".to_string() })
+        .expect("encode");
+    assert!(encoded.len() > 14, "need a payload to truncate");
+    // A complete, valid header promising a payload — then only two
+    // payload bytes before the stall.
+    let (addr, peer) = stalling_peer(encoded[..14].to_vec());
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut chan = Channel::new(stream).expect("channel");
+    chan.set_read_deadline(Duration::from_millis(100)).expect("arm deadline");
+    match chan.recv() {
+        Err(FrameError::Timeout) => {}
+        other => panic!("expected Timeout on a stalled payload, got {other:?}"),
+    }
+    let _ = peer.join();
 }
 
 // ------------------------------------------------- distributed training

@@ -31,6 +31,16 @@
 //!   that mention the `fast_f32` opt-in flag, and the pinned defaults
 //!   `fast_f32: false` in `train/options.rs` and `serve/mod.rs` must
 //!   stay present — the bitwise-pinned f64 path stays the default.
+//! * **`net-deadline`** — every socket acquired on a wire path
+//!   (`rust/src/net/` and `rust/src/serve/`, each up to its
+//!   `#[cfg(test)]` module) must be armed with explicit timeouts within
+//!   a few lines of `TcpStream::connect` / `.accept()` — via
+//!   `Deadlines::apply_to`, `set_read_timeout`/`set_write_timeout`, or
+//!   the `Channel` deadline setters. An unarmed socket turns a stalled
+//!   peer into an unbounded hang; `DISTRIBUTED.md` documents the
+//!   liveness policy this rule enforces. Designs that hand the socket
+//!   off and arm it elsewhere carry `lint:allow(net-deadline)` naming
+//!   where the arming happens.
 //!
 //! Comments and string-literal contents are blanked before matching, so
 //! prose mentioning `std::sync` or `Relaxed` is fine. A specific line
@@ -301,6 +311,21 @@ const F32_PINS: &[(&str, &str)] = &[
     ("serve/mod.rs", "fast_f32: false"),
 ];
 
+/// `net-deadline`: wire paths where every acquired socket must be armed.
+const DEADLINE_SCOPES: &[&str] = &["net/", "serve/"];
+/// Socket-acquisition sites the rule keys on.
+const DEADLINE_ACQUIRE: &[&str] = &["TcpStream::connect", ".accept()"];
+/// Any of these within the window counts as arming the socket.
+const DEADLINE_ARMS: &[&str] = &[
+    "set_read_timeout",
+    "set_write_timeout",
+    ".apply_to(",
+    "set_deadlines(",
+    "set_read_deadline(",
+];
+/// Lines after the acquisition (inclusive of it) the arming may sit in.
+const DEADLINE_WINDOW: usize = 8;
+
 /// Run every rule over `<repo_root>/rust/src`.
 pub fn run_lints(repo_root: &Path) -> io::Result<Report> {
     let src_root = repo_root.join("rust").join("src");
@@ -370,6 +395,42 @@ pub fn run_lints(repo_root: &Path) -> io::Result<Report> {
         for (i, (pin_file, pin)) in F32_PINS.iter().enumerate() {
             if rel.ends_with(pin_file) && stripped.contains(pin) {
                 pins_seen[i] = true;
+            }
+        }
+
+        // net-deadline: every socket acquired on a wire path is armed
+        // with timeouts near the acquisition site (test modules are
+        // outside the contract, like serve-unwrap).
+        if DEADLINE_SCOPES.iter().any(|s| rel.starts_with(s)) {
+            let lines: Vec<&str> = stripped.lines().collect();
+            for (idx, line) in lines.iter().enumerate() {
+                if line.contains("#[cfg(test)]") {
+                    break;
+                }
+                let Some(needle) = DEADLINE_ACQUIRE.iter().find(|n| line.contains(**n)) else {
+                    continue;
+                };
+                let raw_line = raw_lines.get(idx).copied().unwrap_or("");
+                if line_allows(raw_line, "net-deadline") {
+                    continue;
+                }
+                let end = lines.len().min(idx + 1 + DEADLINE_WINDOW);
+                if lines[idx..end].iter().any(|l| DEADLINE_ARMS.iter().any(|a| l.contains(*a))) {
+                    continue;
+                }
+                violations.push(Violation {
+                    rule: "net-deadline",
+                    file: file.clone(),
+                    line: idx + 1,
+                    message: format!(
+                        "`{}` with no read/write deadline within {} lines — an unarmed wire \
+                         socket turns a stalled peer into an unbounded hang; arm it with \
+                         `Deadlines::apply_to` / `set_read_timeout` + `set_write_timeout` / \
+                         the `Channel` deadline setters, or carry `lint:allow(net-deadline)` \
+                         naming where it is armed",
+                        needle, DEADLINE_WINDOW
+                    ),
+                });
             }
         }
     }

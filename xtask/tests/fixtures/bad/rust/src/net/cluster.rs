@@ -1,0 +1,18 @@
+//! Fixture: a wire socket acquired and used with no deadline anywhere
+//! near it — the `.accept()` named in this comment is a decoy.
+
+use std::io::Write;
+use std::net::TcpStream;
+
+pub fn dial(addr: &str) -> std::io::Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(b"hello")?;
+    let greeting = [0u8; 4];
+    let nonce = u32::from_le_bytes(greeting);
+    let frame = nonce.to_le_bytes();
+    stream.write_all(&frame)?;
+    stream.write_all(&frame)?;
+    stream.write_all(&frame)?;
+    stream.write_all(&frame)?;
+    Ok(stream)
+}

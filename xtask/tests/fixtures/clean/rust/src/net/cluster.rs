@@ -1,0 +1,17 @@
+//! Fixture: wire sockets armed at the acquisition site, and the
+//! sanctioned escape for handoff designs that arm in the handler.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+pub fn dial(addr: &str) -> std::io::Result<TcpStream> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    Ok(stream)
+}
+
+pub fn next_conn(listener: &TcpListener) -> std::io::Result<TcpStream> {
+    let (stream, _) = listener.accept()?; // lint:allow(net-deadline): armed by the pool handler after the queue handoff
+    Ok(stream)
+}

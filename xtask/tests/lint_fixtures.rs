@@ -53,6 +53,15 @@ fn bad_fixture_trips_every_rule_exactly_where_seeded() {
         .collect();
     assert_eq!(net_panics, vec![5], "exactly the pre-#[cfg(test)] expect: {hits:?}");
 
+    // net/cluster.rs: the unarmed connect; the `.accept()` in the
+    // module comment is a decoy that must not fire.
+    let deadlines: Vec<usize> = hits
+        .iter()
+        .filter(|(f, r, _)| f == "cluster.rs" && *r == "net-deadline")
+        .map(|&(_, _, l)| l)
+        .collect();
+    assert_eq!(deadlines, vec![8], "exactly the unarmed connect: {hits:?}");
+
     // Both pinned defaults are missing/flipped (line 0 = file-level).
     let pin_files: Vec<&str> = hits
         .iter()
@@ -61,7 +70,7 @@ fn bad_fixture_trips_every_rule_exactly_where_seeded() {
         .collect();
     assert_eq!(pin_files, vec!["mod.rs", "options.rs"], "{hits:?}");
 
-    assert_eq!(report.violations.len(), 9, "no extra violations: {hits:?}");
+    assert_eq!(report.violations.len(), 10, "no extra violations: {hits:?}");
 }
 
 #[test]
@@ -72,7 +81,7 @@ fn clean_fixture_passes_including_escape_marker_and_gated_f32() {
         "clean fixture must pass: {:?}",
         report.violations
     );
-    assert_eq!(report.files_scanned, 4);
+    assert_eq!(report.files_scanned, 5);
 }
 
 #[test]
